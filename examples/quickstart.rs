@@ -1,0 +1,58 @@
+//! Quickstart: quantize ONE linear layer with GPTQ and compare against
+//! round-to-nearest — no artifacts needed, pure library usage.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the paper's layer-wise objective (Eq. 1) in 40 lines: build a
+//! weight matrix and correlated calibration inputs, accumulate the Hessian
+//! H = 2XᵀX, run the GPTQ solver, and measure ‖WX − ŴX‖² for both methods.
+
+use gptq_rs::data::Rng;
+use gptq_rs::quant::{
+    accumulate_hessian, gptq_quantize, layer_sq_error, rtn_quantize, GptqConfig, PackedMatrix,
+};
+
+fn main() {
+    let (drow, dcol, n) = (256usize, 256usize, 1024usize);
+    let mut rng = Rng::new(42);
+
+    // a weight matrix and correlated calibration activations with a few
+    // outlier feature dimensions — the regime of real transformer layers
+    let w: Vec<f32> = (0..drow * dcol).map(|_| rng.unit()).collect();
+    let mut x = vec![0.0f32; n * dcol];
+    for v in x.iter_mut() {
+        *v = rng.unit();
+    }
+    for r in 0..n {
+        for c in 1..dcol {
+            x[r * dcol + c] = 0.7 * x[r * dcol + c - 1] + 0.3 * x[r * dcol + c];
+        }
+        x[r * dcol] *= 6.0; // activation outlier
+    }
+
+    let mut h = vec![0.0f64; dcol * dcol];
+    accumulate_hessian(&mut h, &x, n, dcol);
+
+    println!("layer {drow}x{dcol}, {n} calibration rows\n");
+    println!("{:<8} {:>6} {:>16} {:>14} {:>12}", "method", "bits", "||WX-WqX||^2/n", "vs RTN", "eff. bits");
+    for bits in [4u32, 3, 2] {
+        let rtn = rtn_quantize(&w, drow, dcol, bits, 0);
+        let gptq = gptq_quantize(&w, drow, dcol, &h, &GptqConfig::new(bits)).expect("gptq");
+        let e_rtn = layer_sq_error(&w, &rtn.wq, &x, drow, dcol);
+        let e_gptq = layer_sq_error(&w, &gptq.wq, &x, drow, dcol);
+        let packed = PackedMatrix::from_result(&gptq);
+        println!("{:<8} {:>6} {:>16.4} {:>14} {:>12.2}", "RTN", bits, e_rtn, "1.00x", packed.effective_bits());
+        println!(
+            "{:<8} {:>6} {:>16.4} {:>13.2}x {:>12.2}",
+            "GPTQ",
+            bits,
+            e_gptq,
+            e_rtn / e_gptq,
+            packed.effective_bits()
+        );
+    }
+    println!("\nGPTQ's second-order error compensation wins most where inputs are");
+    println!("correlated and bits are few — exactly the paper's §3 claim.");
+}

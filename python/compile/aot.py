@@ -1,0 +1,327 @@
+"""AOT compile path: corpus → trained weights → HLO-text artifacts.
+
+Runs once via `make artifacts`; the Rust coordinator is self-contained
+afterwards. Interchange is HLO TEXT, not serialized HloModuleProto —
+the crate's xla_extension 0.5.1 rejects jax≥0.5 64-bit instruction ids
+(see /opt/xla-example/README.md); the text parser reassigns ids.
+
+Emitted tree (artifacts/):
+  manifest.json                 everything Rust needs: model configs,
+                                tensor index (name/shape/offset), artifact
+                                signatures, quantization defaults
+  corpus/…                      synthetic corpora + zero-shot tasks
+  weights_<size>.bin            raw little-endian f32, tensor_index order
+  hlo/lm_fwd_<size>.hlo.txt     tokens+params → logits      (PPL eval)
+  hlo/embed_<size>.hlo.txt      tokens,embed,pos → x        (pipeline head)
+  hlo/block_capture_<size>.…    x+block params → y + 4 linear inputs
+  hlo/head_<size>.hlo.txt       x,lnf,unembed → logits
+  hlo/hessian_<d>.hlo.txt       X → 2·XᵀX                    (L1 kernel)
+  hlo/gptq_layer_<o>x<i>_b<bits>.hlo.txt   W,H → codes,scales,zeros,wq
+  hlo/packmatvec_<o>x<i>_b<bits>.hlo.txt   words,scales,zeros,x → y
+
+Incremental: artifacts are skipped when already present (make passes
+--force to rebuild). Model training dominates the cost.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from . import model as M
+from . import train as train_mod
+from .gptq_layer import gptq_quantize_layer
+from .kernels.hessian import hessian as hessian_kernel
+from .kernels.packmatvec import codes_per_word, packmatvec
+
+EVAL_BATCH = 8
+SEQ_LEN = 128
+CALIB_TOKENS = EVAL_BATCH * SEQ_LEN  # tokens per capture/hessian call
+GPTQ_ARTIFACT_BITS = (3, 4)
+PACKMATVEC_BITS = (2, 3, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the only interchange that
+    round-trips into xla_extension 0.5.1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: Path, log) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    log(f"  wrote {path.name}  ({len(text)//1024} KiB, {time.time()-t0:.1f}s)")
+    return {
+        "file": f"hlo/{path.name}",
+        "params": [list(np.shape(a)) for a in jax.tree.leaves(example_args)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# model entry points, flattened to positional tensor args (= HLO parameters)
+# ---------------------------------------------------------------------------
+
+def _flat_args(cfg: M.ModelConfig, params: dict) -> list[jnp.ndarray]:
+    flat = M.params_to_flat(cfg, params)
+    return [jnp.asarray(flat[name]) for name, _ in M.tensor_index(cfg)]
+
+
+def _args_to_params(cfg: M.ModelConfig, args) -> dict:
+    flat = {name: a for (name, _), a in zip(M.tensor_index(cfg), args)}
+    return M.flat_to_params(cfg, flat)
+
+
+def make_lm_fwd(cfg: M.ModelConfig):
+    def f(tokens, *tensors):
+        return (M.fwd(cfg, _args_to_params(cfg, tensors), tokens),)
+
+    return f
+
+
+def make_embed(cfg: M.ModelConfig):
+    def f(tokens, emb, pos):
+        seq = tokens.shape[1]
+        return (emb[tokens] + pos[:seq][None],)
+
+    return f
+
+
+BLOCK_TENSORS = [
+    "ln1_g", "ln1_b", "ln2_g", "ln2_b",
+    "wqkv", "wqkv_b", "wo", "wo_b", "wup", "wup_b", "wdn", "wdn_b",
+]
+
+
+def make_block_capture(cfg: M.ModelConfig):
+    def f(x, *tensors):
+        blk = dict(zip(BLOCK_TENSORS, tensors))
+        y, caps = M.block_capture(cfg, blk, x)
+        return (y, caps["wqkv"], caps["wo"], caps["wup"], caps["wdn"])
+
+    return f
+
+
+def make_head(cfg: M.ModelConfig):
+    def f(x, lnf_g, lnf_b, unembed):
+        return (M.head({"lnf_g": lnf_g, "lnf_b": lnf_b, "unembed": unembed}, x),)
+
+    return f
+
+
+def block_example_args(cfg: M.ModelConfig):
+    d = cfg.d_model
+    shapes = dict(cfg.linear_shapes())
+    args = [jnp.zeros((EVAL_BATCH, SEQ_LEN, d), jnp.float32)]
+    for nm in BLOCK_TENSORS:
+        if nm.startswith("ln"):
+            args.append(jnp.zeros((d,), jnp.float32))
+        elif nm.endswith("_b"):
+            args.append(jnp.zeros((shapes[nm[:-2]][0],), jnp.float32))
+        else:
+            args.append(jnp.zeros(shapes[nm], jnp.float32))
+    return args
+
+
+# ---------------------------------------------------------------------------
+# build steps
+# ---------------------------------------------------------------------------
+
+def build(out_root: Path, sizes: list[str], force: bool, log=print) -> None:
+    hlo = out_root / "hlo"
+    hlo.mkdir(parents=True, exist_ok=True)
+    corpus_dir = out_root / "corpus"
+
+    if force or not (corpus_dir / "train.bin").exists():
+        log("[aot] building corpus")
+        corpus_mod.build_corpus(corpus_dir)
+    else:
+        log("[aot] corpus up to date")
+
+    manifest: dict = {
+        "version": 1,
+        "seq_len": SEQ_LEN,
+        "eval_batch": EVAL_BATCH,
+        "calib_tokens": CALIB_TOKENS,
+        "quant": {
+            "blocksize": 128,
+            "percdamp": 0.01,
+            "gptq_artifact_bits": list(GPTQ_ARTIFACT_BITS),
+        },
+        "models": {},
+        "artifacts": {},
+    }
+
+    gptq_shapes: set[tuple[int, int]] = set()
+    hessian_dims: set[int] = set()
+
+    for size in sizes:
+        cfg = M.CONFIGS[size]
+        wpath = out_root / f"weights_{size}.bin"
+        if force or not wpath.exists():
+            log(f"[aot] training {size} ({cfg.n_params():,} params)")
+            params = train_mod.train_model(cfg, corpus_dir, log=log)
+            flat = M.params_to_flat(cfg, params)
+            with open(wpath, "wb") as f:
+                for name, _ in M.tensor_index(cfg):
+                    f.write(flat[name].astype("<f4").tobytes())
+        else:
+            log(f"[aot] weights_{size}.bin up to date")
+
+        index = []
+        offset = 0
+        for name, shape in M.tensor_index(cfg):
+            n = int(np.prod(shape))
+            index.append({"name": name, "shape": list(shape), "offset": offset, "len": n})
+            offset += n * 4
+        manifest["models"][size] = {
+            "config": {
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "d_ff": cfg.d_ff,
+                "vocab": cfg.vocab,
+                "max_seq": cfg.max_seq,
+            },
+            "n_params": cfg.n_params(),
+            "weights": f"weights_{size}.bin",
+            "tensors": index,
+        }
+
+        for (o, i) in cfg.linear_shapes().values():
+            gptq_shapes.add((o, i))
+            hessian_dims.add(i)
+
+        # -- model graphs ----------------------------------------------------
+        tokens = jnp.zeros((EVAL_BATCH, SEQ_LEN), jnp.int32)
+        zero_params = jax.tree.map(
+            jnp.zeros_like, M.init_params(cfg, jax.random.PRNGKey(0))
+        )
+        targets = {
+            f"lm_fwd_{size}": (make_lm_fwd(cfg), [tokens, *_flat_args(cfg, zero_params)]),
+            f"embed_{size}": (
+                make_embed(cfg),
+                [tokens, zero_params["embed"], zero_params["pos"]],
+            ),
+            f"block_capture_{size}": (make_block_capture(cfg), block_example_args(cfg)),
+            f"head_{size}": (
+                make_head(cfg),
+                [
+                    jnp.zeros((EVAL_BATCH, SEQ_LEN, cfg.d_model), jnp.float32),
+                    zero_params["lnf_g"],
+                    zero_params["lnf_b"],
+                    zero_params["unembed"],
+                ],
+            ),
+        }
+        for name, (fn, args) in targets.items():
+            path = hlo / f"{name}.hlo.txt"
+            if force or not path.exists():
+                manifest["artifacts"][name] = lower_to_file(fn, args, path, log)
+            else:
+                manifest["artifacts"][name] = {
+                    "file": f"hlo/{path.name}",
+                    "params": [list(np.shape(a)) for a in args],
+                }
+
+    # -- shape-keyed quantization graphs (shared across model sizes) ---------
+    for d in sorted(hessian_dims):
+        name = f"hessian_{d}"
+        path = hlo / f"{name}.hlo.txt"
+        x = jnp.zeros((CALIB_TOKENS, d), jnp.float32)
+        if force or not path.exists():
+            manifest["artifacts"][name] = lower_to_file(
+                lambda x: (hessian_kernel(x),), [x], path, log
+            )
+        else:
+            manifest["artifacts"][name] = {"file": f"hlo/{path.name}", "params": [[CALIB_TOKENS, d]]}
+
+    for (o, i) in sorted(gptq_shapes):
+        for bits in GPTQ_ARTIFACT_BITS:
+            name = f"gptq_layer_{o}x{i}_b{bits}"
+            path = hlo / f"{name}.hlo.txt"
+            if not force and path.exists():
+                manifest["artifacts"][name] = {"file": f"hlo/{path.name}", "params": [[o, i], [i, i]]}
+                continue
+
+            def gfn(w, h, bits=bits):
+                return gptq_quantize_layer(w, h, bits)
+
+            manifest["artifacts"][name] = lower_to_file(
+                gfn,
+                [jnp.zeros((o, i), jnp.float32), jnp.zeros((i, i), jnp.float32)],
+                path,
+                log,
+            )
+
+    # -- packed matvec kernel demo (one representative shape per bit width) --
+    o, i = 1024, 256
+    for bits in PACKMATVEC_BITS:
+        name = f"packmatvec_{o}x{i}_b{bits}"
+        path = hlo / f"{name}.hlo.txt"
+        nwords = (i + codes_per_word(bits) - 1) // codes_per_word(bits)
+        if not force and path.exists():
+            manifest["artifacts"][name] = {
+                "file": f"hlo/{path.name}",
+                "params": [[o, nwords], [o, 1], [o, 1], [i]],
+            }
+            continue
+
+        def pfn(words, scales, zeros, x, bits=bits):
+            return (packmatvec(words, scales, zeros, x, bits),)
+
+        manifest["artifacts"][name] = lower_to_file(
+            pfn,
+            [
+                jnp.zeros((o, nwords), jnp.uint32),
+                jnp.zeros((o, 1), jnp.float32),
+                jnp.zeros((o, 1), jnp.float32),
+                jnp.zeros((i,), jnp.float32),
+            ],
+            path,
+            log,
+        )
+
+    golden_path = out_root / "golden.json"
+    if force or not golden_path.exists():
+        from .golden import write_golden
+
+        write_golden(golden_path)
+        log("[aot] golden cross-check vectors written")
+
+    (out_root / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    log(f"[aot] manifest written: {len(manifest['artifacts'])} artifacts, "
+        f"{len(manifest['models'])} models")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default=os.environ.get("GPTQ_SIZES", ",".join(M.DEFAULT_SIZES)))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    sizes = [s for s in args.sizes.split(",") if s]
+    for s in sizes:
+        if s not in M.CONFIGS:
+            sys.exit(f"unknown size {s!r}; choose from {list(M.CONFIGS)}")
+    build(Path(args.out), sizes, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Synthetic corpus + zero-shot task generator (the WikiText2/PTB/C4 and
+LAMBADA/ARC/PIQA/StoryCloze stand-ins — DESIGN.md §Substitutions).
+
+Three styles, mirroring the paper's three perplexity datasets:
+  * narrative — templated English-like prose (the WikiText2 analog);
+  * markup    — config/markup/log-structured text (the PTB analog: a
+                distribution shift from prose);
+  * crawl     — a noisy mixture of both plus boilerplate (the C4 analog;
+                this is also what calibration samples are drawn from, as in
+                the paper).
+
+Everything is seeded and byte-level (vocab = 256). The generator also
+emits the zero-shot task files:
+  * cloze.jsonl  — last-word prediction with a discourse-determined target
+                   (LAMBADA analog);
+  * mcq.jsonl    — 4-way multiple choice scored by likelihood (ARC analog);
+  * binary.jsonl — 2-way plausibility choice (PIQA / StoryCloze analog).
+
+Task targets are template-determined (an attentive reader of the corpus
+can always answer), so a well-trained LM scores far above chance and
+quantization damage is measurable — the same property the paper's
+zero-shot suite relies on.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from pathlib import Path
+
+# -- vocabulary -------------------------------------------------------------
+
+SUBJECTS = [
+    "the archivist", "the engineer", "the cartographer", "the miller",
+    "the astronomer", "the captain", "the gardener", "the apprentice",
+    "the merchant", "the scribe", "the watchmaker", "the surveyor",
+    "the librarian", "the blacksmith", "the navigator", "the printer",
+]
+PLACES = [
+    "the harbor", "the observatory", "the old mill", "the market square",
+    "the northern valley", "the archive", "the lighthouse", "the foundry",
+    "the botanical garden", "the river delta", "the granary", "the workshop",
+]
+OBJECTS = [
+    "a brass compass", "a sealed ledger", "a worn map", "a copper lantern",
+    "a bundle of letters", "a glass prism", "a carved token", "an iron key",
+    "a silk banner", "a clay tablet", "a silver coin", "a wooden crate",
+]
+VERBS_PAST = [
+    "carried", "examined", "repaired", "catalogued", "delivered",
+    "measured", "sketched", "recovered", "traded", "inspected",
+]
+WEATHER = ["rain", "fog", "frost", "wind", "heat", "snow"]
+SEASONS = ["spring", "summer", "autumn", "winter"]
+QUALITIES = ["careful", "patient", "meticulous", "swift", "quiet", "steady"]
+MATERIALS = ["copper", "iron", "oak", "granite", "linen", "amber"]
+
+KEYS = [
+    "route", "cargo", "depth", "bearing", "signal", "ration", "ledger",
+    "tariff", "berth", "draft", "manifest", "quota",
+]
+UNITS = ["m", "kg", "kn", "deg", "pct", "hr"]
+
+
+class CorpusGen:
+    """Deterministic corpus generator over a fixed template grammar."""
+
+    def __init__(self, seed: int):
+        self.rng = random.Random(seed)
+
+    # -- narrative ----------------------------------------------------------
+
+    def sentence(self) -> str:
+        r = self.rng
+        t = r.randrange(6)
+        s, p, o = r.choice(SUBJECTS), r.choice(PLACES), r.choice(OBJECTS)
+        v, q = r.choice(VERBS_PAST), r.choice(QUALITIES)
+        if t == 0:
+            return f"In {p}, {s} {v} {o}."
+        if t == 1:
+            return f"{s.capitalize()} {v} {o} before the {r.choice(WEATHER)} arrived."
+        if t == 2:
+            return f"Every {r.choice(SEASONS)}, {s} returned to {p} with {o}."
+        if t == 3:
+            return f"The {q} work of {s.split(' ')[1]} kept {p} in order."
+        if t == 4:
+            return f"{s.capitalize()} noted that the {r.choice(MATERIALS)} fittings of {p} had weathered the {r.choice(WEATHER)}."
+        return f"By the {r.choice(SEASONS)}, {o} had been {v} twice and stored near {p}."
+
+    # -- recall patterns --------------------------------------------------
+    # These two-sentence discourse patterns are deliberately part of the
+    # TRAINING distribution; the zero-shot tasks below instantiate the same
+    # templates with held-out combinations. A trained model must COPY an
+    # entity across ~60 bytes of context to continue them — the byte-level
+    # analog of LAMBADA's "word is predictable from discourse, not from
+    # the local sentence".
+
+    def recall_object(self) -> tuple[str, str]:
+        """('In {p}, {s} {v} {o}. Later that {season}, everyone asked
+        about the', ' {noun}.') — the cloze pattern."""
+        r = self.rng
+        s, p, o = r.choice(SUBJECTS), r.choice(PLACES), r.choice(OBJECTS)
+        noun = o.split(" ")[-1]
+        ctx = (
+            f"In {p}, {s} {r.choice(VERBS_PAST)} {o}. "
+            f"Later that {r.choice(SEASONS)}, everyone asked about the"
+        )
+        return ctx, f" {noun}."
+
+    def recall_subject(self) -> tuple[str, str, list[str]]:
+        """('In {p}, {s} {v} {o}. The one seen in {p} was', ' {s}.',
+        distractors) — the MCQ pattern."""
+        r = self.rng
+        subjects = r.sample(SUBJECTS, 4)
+        s, p, o = subjects[0], r.choice(PLACES), r.choice(OBJECTS)
+        ctx = f"In {p}, {s} {r.choice(VERBS_PAST)} {o}. The one seen in {p} was"
+        return ctx, f" {s}.", [f" {d}." for d in subjects[1:]]
+
+    def recall_carry(self) -> tuple[str, str, str]:
+        """('{S} found {o1} in {p}. At dusk {s2}', good, bad) — the
+        binary-choice pattern."""
+        r = self.rng
+        s, p = r.choice(SUBJECTS), r.choice(PLACES)
+        o1, o2 = r.sample(OBJECTS, 2)
+        ctx = f"{s.capitalize()} found {o1} in {p}. At dusk {s.split(' ')[1]}"
+        return ctx, f" carried {o1} home.", f" carried {o2} home."
+
+    def paragraph(self, n_sentences: int | None = None) -> str:
+        n = n_sentences or self.rng.randrange(3, 7)
+        parts = [self.sentence() for _ in range(n)]
+        # weave the recall patterns into the training distribution
+        roll = self.rng.random()
+        if roll < 0.30:
+            ctx, tail = self.recall_object()
+            parts.append(ctx + tail)
+        elif roll < 0.50:
+            ctx, ans, _ = self.recall_subject()
+            parts.append(ctx + ans)
+        elif roll < 0.70:
+            ctx, good, _ = self.recall_carry()
+            parts.append(ctx + good)
+        return " ".join(parts)
+
+    def narrative(self, nbytes: int) -> str:
+        parts = []
+        size = 0
+        while size < nbytes:
+            p = self.paragraph() + "\n\n"
+            parts.append(p)
+            size += len(p)
+        return "".join(parts)[:nbytes]
+
+    # -- markup ---------------------------------------------------------------
+
+    def record(self) -> str:
+        r = self.rng
+        name = r.choice(KEYS)
+        lines = [f"[{name}.{r.randrange(100)}]"]
+        for _ in range(r.randrange(2, 6)):
+            k = r.choice(KEYS)
+            if r.random() < 0.5:
+                lines.append(f"  {k} = {r.randrange(1000)}{r.choice(UNITS)}")
+            else:
+                lines.append(f"  {k} = \"{r.choice(MATERIALS)}-{r.choice(SEASONS)}\"")
+        return "\n".join(lines) + "\n"
+
+    def markup(self, nbytes: int) -> str:
+        parts = []
+        size = 0
+        while size < nbytes:
+            p = self.record() + "\n"
+            parts.append(p)
+            size += len(p)
+        return "".join(parts)[:nbytes]
+
+    # -- crawl ----------------------------------------------------------------
+
+    BOILER = [
+        "subscribe to the bulletin for weekly updates.",
+        "all measurements are approximate.",
+        "contact the harbor office for details.",
+        "archive index updated nightly.",
+    ]
+
+    def crawl(self, nbytes: int) -> str:
+        parts = []
+        size = 0
+        while size < nbytes:
+            roll = self.rng.random()
+            if roll < 0.5:
+                p = self.paragraph() + "\n"
+            elif roll < 0.8:
+                p = self.record()
+            else:
+                p = self.rng.choice(self.BOILER) + "\n"
+            parts.append(p)
+            size += len(p)
+        return "".join(parts)[:nbytes]
+
+    # -- zero-shot tasks --------------------------------------------------------
+
+    def cloze_item(self) -> dict:
+        """LAMBADA analog: object recall over ~60 bytes of discourse.
+        Carries both the exact-match `target` and 4 likelihood `choices`
+        (distractor nouns), mirroring LAMBADA's two evaluation modes."""
+        r = self.rng
+        ctx, tail = self.recall_object()
+        noun_with_dot = tail[1:]  # "compass."
+        noun = noun_with_dot[:-1]
+        others = [o.split(" ")[-1] for o in OBJECTS if o.split(" ")[-1] != noun]
+        distract = r.sample(others, 3)
+        choices = [f" {noun}."] + [f" {d}." for d in distract]
+        order = list(range(4))
+        r.shuffle(order)
+        return {
+            "context": ctx,
+            "target": " " + noun,
+            "choices": [choices[i] for i in order],
+            "answer": order.index(0),
+        }
+
+    def mcq_item(self) -> dict:
+        """ARC analog: which subject was seen at a place, 4 choices."""
+        r = self.rng
+        ctx, ans, distractors = self.recall_subject()
+        choices = [ans] + distractors
+        order = list(range(4))
+        r.shuffle(order)
+        return {
+            "context": ctx,
+            "choices": [choices[i] for i in order],
+            "answer": order.index(0),
+        }
+
+    def binary_item(self) -> dict:
+        """PIQA/StoryCloze analog: pick the consistent ending."""
+        r = self.rng
+        ctx, good, bad = self.recall_carry()
+        if r.random() < 0.5:
+            return {"context": ctx, "choices": [good, bad], "answer": 0}
+        return {"context": ctx, "choices": [bad, good], "answer": 1}
+
+
+# ---------------------------------------------------------------------------
+
+STYLES = ("narrative", "markup", "crawl")
+
+
+def build_corpus(
+    out_dir: Path,
+    seed: int = 1234,
+    train_bytes: int = 2_000_000,
+    eval_bytes: int = 65_536,
+    n_tasks: int = 400,
+) -> None:
+    """Write the full corpus + task tree under `out_dir`."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    gen = CorpusGen(seed)
+    # training mixture: all three styles (like training on diverse text)
+    third = train_bytes // 3
+    train = gen.narrative(third) + gen.markup(third) + gen.crawl(third)
+    (out_dir / "train.bin").write_bytes(train.encode())
+    for i, style in enumerate(STYLES):
+        g = CorpusGen(seed + 100 + i)
+        text = getattr(g, style)(2 * eval_bytes)
+        (out_dir / f"{style}_val.bin").write_bytes(text[:eval_bytes].encode())
+        (out_dir / f"{style}_test.bin").write_bytes(text[eval_bytes:].encode())
+    # calibration pool: fresh crawl text (disjoint seed), as in the paper
+    calib = CorpusGen(seed + 999).crawl(512 * 1024)
+    (out_dir / "calib.bin").write_bytes(calib.encode())
+
+    tasks = out_dir / "tasks"
+    tasks.mkdir(exist_ok=True)
+    tg = CorpusGen(seed + 5000)
+    for name, fn in (
+        ("cloze", tg.cloze_item),
+        ("mcq", tg.mcq_item),
+        ("binary", tg.binary_item),
+    ):
+        with open(tasks / f"{name}.jsonl", "w") as f:
+            for _ in range(n_tasks):
+                f.write(json.dumps(fn()) + "\n")

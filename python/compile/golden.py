@@ -1,0 +1,57 @@
+"""Golden cross-check vectors: Python (oracle) → Rust (quant substrate).
+
+Written into artifacts/golden.json by aot.py; rust integration tests load
+it and assert the pure-Rust GPTQ/RTN/packing implementations reproduce the
+Python oracles bit-exactly (codes) / to tolerance (floats).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .kernels import ref
+
+
+def _case(rng, drow, dcol, bits, blocksize, groupsize):
+    w = rng.normal(size=(drow, dcol)).astype(np.float32)
+    # correlated calibration inputs + a few outlier feature dims, the
+    # regime where GPTQ's error compensation matters
+    mix = rng.normal(size=(dcol, dcol)).astype(np.float32) / np.sqrt(dcol)
+    x = rng.normal(size=(4 * dcol, dcol)).astype(np.float32) @ mix
+    x[:, rng.integers(0, dcol, 2)] *= 8.0
+    h = ref.hessian_ref(x)
+    codes, scales, zeros, wq = ref.gptq_ref(w, h, bits, blocksize, groupsize)
+    rcodes, rscales, rzeros, rwq = ref.rtn_ref(w, bits, groupsize)
+    words = ref.pack_codes(codes, bits)
+    return {
+        "drow": drow,
+        "dcol": dcol,
+        "bits": bits,
+        "blocksize": blocksize,
+        "groupsize": groupsize,
+        "w": w.flatten().tolist(),
+        "h": h.flatten().tolist(),
+        "gptq_codes": codes.flatten().astype(int).tolist(),
+        "gptq_scales": scales.flatten().tolist(),
+        "gptq_zeros": zeros.flatten().tolist(),
+        "gptq_wq": wq.flatten().tolist(),
+        "rtn_codes": rcodes.flatten().astype(int).tolist(),
+        "rtn_wq": rwq.flatten().tolist(),
+        "packed_words": words.flatten().astype(int).tolist(),
+    }
+
+
+def write_golden(path: Path, seed: int = 42) -> None:
+    rng = np.random.default_rng(seed)
+    cases = [
+        _case(rng, 8, 16, 4, 16, 0),
+        _case(rng, 8, 16, 3, 8, 0),
+        _case(rng, 16, 32, 4, 8, 8),
+        _case(rng, 12, 24, 2, 128, 0),
+        _case(rng, 16, 32, 3, 16, 16),
+        _case(rng, 32, 64, 4, 32, 0),
+    ]
+    path.write_text(json.dumps({"seed": seed, "cases": cases}))

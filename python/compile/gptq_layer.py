@@ -1,0 +1,191 @@
+"""L2: the per-layer GPTQ quantization graph (paper Algorithm 1).
+
+Composes the L1 `gptq_block` Pallas kernel with jnp glue:
+
+    H → dead-column fix → damping → Cholesky(H⁻¹, upper)
+      → for each column block: per-group grid params from the CURRENT
+        weights → L1 kernel (in-block solve) → batched tail update
+        W[:, i2:] −= Err · U[i1:i2, i2:]            (paper Eq. 4)
+
+The block loop is unrolled at trace time (shapes are static per AOT
+artifact; dcol/B ≤ a few dozen), so the whole layer lowers to ONE fused
+HLO program that the Rust coordinator executes per layer.
+
+All Hessian algebra is f32 here (XLA CPU path); the paper's dampening
+(λ = 1% of mean diagonal) plus the Cholesky formulation keeps this stable
+at our scales — the Rust substrate additionally offers f64 for the
+stability ablation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gptq import gptq_block
+from .kernels.ref import DEFAULT_BLOCKSIZE, DEFAULT_PERCDAMP
+
+
+def _quant_params(w: jax.Array, bits: int):
+    """jnp twin of ref.quant_params (per-row asymmetric min-max)."""
+    maxq = float(2**bits - 1)
+    wmin = jnp.minimum(w.min(axis=1), 0.0)
+    wmax = jnp.maximum(w.max(axis=1), 0.0)
+    degenerate = wmin == wmax
+    wmin = jnp.where(degenerate, wmin - 0.5, wmin)
+    wmax = jnp.where(degenerate, wmax + 0.5, wmax)
+    scale = (wmax - wmin) / maxq
+    zero = jnp.round(-wmin / scale)
+    return scale, zero
+
+
+def _cholesky_lower_jnp(a: jax.Array) -> jax.Array:
+    """Pure-jnp lower Cholesky (outer-product form, fori_loop).
+
+    jnp.linalg.cholesky/inv lower to LAPACK *custom calls* on the CPU
+    backend, which the runtime's xla_extension 0.5.1 cannot compile
+    ("Unknown custom-call API version ... TYPED_FFI"). This loop lowers to
+    a plain HLO while-loop instead — slower to solve but fully portable,
+    and the solve is a tiny fraction of layer-quantization cost.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, carry):
+        a, l = carry
+        d = jnp.sqrt(a[j, j])
+        col = jnp.where(idx > j, a[:, j] / d, 0.0)
+        col = col.at[j].set(d)
+        l = l.at[:, j].set(col)
+        a = a - jnp.outer(col, col)
+        return a, l
+
+    _, l = jax.lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def _solve_lower_jnp(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L Y = B by forward substitution (pure jnp)."""
+    n = l.shape[0]
+
+    def body(i, y):
+        row = (b[i] - l[i] @ y) / l[i, i]
+        return y.at[i].set(row)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _solve_upper_jnp(u: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve U Y = B by backward substitution (pure jnp)."""
+    n = u.shape[0]
+
+    def body(k, y):
+        i = n - 1 - k
+        row = (b[i] - u[i] @ y) / u[i, i]
+        return y.at[i].set(row)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def prepare_cholesky(h: jax.Array, w: jax.Array, percdamp: float = DEFAULT_PERCDAMP):
+    """Dead columns + damping + upper Cholesky of H⁻¹ (paper Step 3)."""
+    dcol = h.shape[0]
+    diag = jnp.diagonal(h)
+    dead = diag == 0.0
+    h = h + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    w = jnp.where(dead[None, :], 0.0, w)
+    damp = percdamp * jnp.mean(jnp.diagonal(h))
+    h = h + damp * jnp.eye(dcol, dtype=h.dtype)
+    # H⁻¹ via Cholesky solves (no LAPACK custom calls — see above)
+    l = _cholesky_lower_jnp(h)
+    eye = jnp.eye(dcol, dtype=h.dtype)
+    hinv = _solve_upper_jnp(l.T, _solve_lower_jnp(l, eye))
+    # symmetrize before the second factorization (solve drift)
+    hinv = 0.5 * (hinv + hinv.T)
+    lower = _cholesky_lower_jnp(hinv)
+    return lower.T, w
+
+
+def gptq_quantize_layer(
+    w: jax.Array,
+    h: jax.Array,
+    bits: int,
+    blocksize: int = DEFAULT_BLOCKSIZE,
+    groupsize: int = 0,
+    percdamp: float = DEFAULT_PERCDAMP,
+    row_tile: int = 256,
+):
+    """Quantize one (drow, dcol) layer. Returns (codes, scales, zeros, wq).
+
+    Semantics identical to kernels.ref.gptq_ref (the pytest oracle) and to
+    rust/src/quant/gptq.rs."""
+    drow, dcol = w.shape
+    w = w.astype(jnp.float32)
+    u, wf = prepare_cholesky(h.astype(jnp.float32), w, percdamp)
+    g = groupsize if groupsize else dcol
+    assert dcol % g == 0, (dcol, g)
+    bs = min(blocksize, g, dcol)
+    assert dcol % bs == 0, (dcol, bs)
+    ngroups = dcol // g
+    tile = min(row_tile, drow)
+    while drow % tile:
+        tile //= 2
+
+    if groupsize == 0:
+        s0, z0 = _quant_params(wf, bits)
+
+    codes_blocks, wq_blocks = [], []
+    scales = jnp.zeros((drow, ngroups), jnp.float32)
+    zeros = jnp.zeros((drow, ngroups), jnp.float32)
+    for i1 in range(0, dcol, bs):
+        i2 = i1 + bs
+        if groupsize and i1 % g == 0:
+            s0, z0 = _quant_params(
+                jax.lax.dynamic_slice_in_dim(wf, i1, g, axis=1), bits
+            )
+        gi = i1 // g
+        scales = scales.at[:, gi].set(s0)
+        zeros = zeros.at[:, gi].set(z0)
+        q, wq, err = gptq_block(
+            wf[:, i1:i2], u[i1:i2, i1:i2], s0, z0, bits, row_tile=tile
+        )
+        codes_blocks.append(q)
+        wq_blocks.append(wq)
+        if i2 < dcol:
+            # batched tail compensation across the remaining columns
+            tail = wf[:, i2:] - err @ u[i1:i2, i2:]
+            wf = jnp.concatenate([wf[:, :i2], tail], axis=1)
+    codes = jnp.concatenate(codes_blocks, axis=1)
+    wq = jnp.concatenate(wq_blocks, axis=1)
+    return codes, scales, zeros, wq
+
+
+def rtn_quantize_layer(w: jax.Array, bits: int, groupsize: int = 0):
+    """RTN on the same grid (the paper's baseline), pure jnp."""
+    drow, dcol = w.shape
+    g = groupsize if groupsize else dcol
+    ngroups = dcol // g
+    maxq = float(2**bits - 1)
+    wg = w.reshape(drow, ngroups, g)
+    wmin = jnp.minimum(wg.min(axis=2), 0.0)
+    wmax = jnp.maximum(wg.max(axis=2), 0.0)
+    degenerate = wmin == wmax
+    wmin = jnp.where(degenerate, wmin - 0.5, wmin)
+    wmax = jnp.where(degenerate, wmax + 0.5, wmax)
+    scale = (wmax - wmin) / maxq
+    zero = jnp.round(-wmin / scale)
+    q = jnp.clip(jnp.round(wg / scale[..., None]) + zero[..., None], 0.0, maxq)
+    wq = scale[..., None] * (q - zero[..., None])
+    return (
+        q.reshape(drow, dcol),
+        scale,
+        zero,
+        wq.reshape(drow, dcol),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "blocksize", "groupsize"))
+def gptq_quantize_layer_jit(w, h, bits, blocksize=DEFAULT_BLOCKSIZE, groupsize=0):
+    return gptq_quantize_layer(w, h, bits, blocksize, groupsize)

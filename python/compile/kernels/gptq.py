@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: the GPTQ blocked column solver (paper §3.3, Fig. 2).
+
+One `pallas_call` processes ONE block of `B` consecutive columns for a tile
+of rows. The sequential data dependence of GPTQ lives along columns; rows
+are independent, so the grid parallelizes over row tiles (the exact
+parallelism the paper's vectorized implementation exploits across rows).
+
+Inputs per call:
+  w      (drow, B)  current (already tail-compensated) weight block
+  u      (B, B)     the diagonal block of the upper Cholesky factor of H⁻¹
+  scale  (drow, 1)  per-row grid scale (computed by L2 at group boundaries)
+  zero   (drow, 1)  per-row grid zero point
+Outputs:
+  q      (drow, B)  integer codes (as f32)
+  wq     (drow, B)  dequantized weights
+  err    (drow, B)  per-column compensation errors (w − ŵ)/U[j,j]; the L2
+                    graph applies the batched tail update  W_tail −= err·U_tail
+                    (paper Eq. 4) after the call.
+
+The column loop is a `fori_loop`; the in-block compensation
+`W[:, j+1:] −= err ⊗ U[j, j+1:]` is expressed as a masked full-width
+rank-1 update so the kernel stays fully vectorized over the lane dimension
+(no dynamic inner slices — maps to VPU-friendly selects on TPU).
+
+`interpret=True` always: the CPU PJRT client cannot run Mosaic custom
+calls; structure (tiling, masking) is still the TPU design.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 256
+
+
+def _gptq_block_kernel(w_ref, u_ref, scale_ref, zero_ref, q_ref, wq_ref, err_ref, *, bits: int, block: int):
+    maxq = float(2**bits - 1)
+    scale = scale_ref[:, 0]
+    zero = zero_ref[:, 0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+
+    def body(j, w):
+        col = w[:, j]
+        q = jnp.clip(jnp.round(col / scale) + zero, 0.0, maxq)
+        dq = scale * (q - zero)
+        d = u_ref[j, j]
+        e = (col - dq) / d
+        # masked rank-1 update of the columns strictly right of j
+        urow = u_ref[j, :]
+        mask = (cols > j).astype(w.dtype)
+        w = w - (e[:, None] * urow[None, :]) * mask
+        q_ref[:, j] = q
+        wq_ref[:, j] = dq
+        err_ref[:, j] = e
+        return w
+
+    jax.lax.fori_loop(0, block, body, w_ref[...])
+
+
+def gptq_block(
+    w: jax.Array,
+    u: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    bits: int,
+    row_tile: int = DEFAULT_ROW_TILE,
+):
+    """Run the GPTQ solver on one column block.
+
+    w: (drow, B); u: (B, B) upper-Cholesky diagonal block; scale/zero:
+    (drow,). Returns (q, wq, err), each (drow, B)."""
+    drow, block = w.shape
+    assert u.shape == (block, block)
+    tile = min(row_tile, drow)
+    assert drow % tile == 0, f"row tile {tile} must divide drow {drow}"
+    grid = (drow // tile,)
+    kernel = functools.partial(_gptq_block_kernel, bits=bits, block=block)
+    out_shape = [jax.ShapeDtypeStruct((drow, block), jnp.float32)] * 3
+    q, wq, err = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, block), lambda i: (i, 0)),
+            pl.BlockSpec((block, block), lambda i: (0, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((tile, block), lambda i: (i, 0))] * 3,
+        out_shape=out_shape,
+        interpret=True,
+    )(w.astype(jnp.float32), u.astype(jnp.float32), scale.reshape(-1, 1), zero.reshape(-1, 1))
+    return q, wq, err

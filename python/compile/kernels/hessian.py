@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: tiled Hessian accumulation H = 2 XᵀX.
+
+The calibration pass streams activation batches through this kernel; the
+grid walks row-blocks of X and accumulates partial Gram matrices into the
+output (revisited output block + @pl.when zero-init — the standard Pallas
+reduction idiom, the analog of the paper's batched Hessian accumulation
+over calibration samples).
+
+Unlike the batch-1 matvec, this IS an MXU-shaped op on TPU: f32 (or bf16)
+Gram tiles feed the systolic array; the n-dimension tiling bounds the VMEM
+working set to 2·tile_n·dcol·4 B + dcol²·4 B.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_N_TILE = 256
+
+
+def _hessian_kernel(x_ref, h_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...]
+    h_ref[...] += 2.0 * jnp.dot(x.T, x)
+
+
+def hessian(x: jax.Array, n_tile: int = DEFAULT_N_TILE) -> jax.Array:
+    """H = 2 XᵀX for X (n, dcol), accumulated over n-tiles."""
+    n, dcol = x.shape
+    tile = min(n_tile, n)
+    assert n % tile == 0, f"n tile {tile} must divide n {n}"
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile, dcol), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((dcol, dcol), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((dcol, dcol), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: quantized-matrix × full-precision-vector product.
+
+This is the paper's inference kernel (§Practical Speedups): weights stay in
+packed b-bit form in (H)BM; each grid program stages one row-tile of packed
+words into VMEM, unpacks + dequantizes in registers, and accumulates the
+matvec. No activation quantization — x stays f32, exactly as in the paper.
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernel's
+per-threadblock shared-memory staging becomes the BlockSpec HBM→VMEM
+schedule; the unpack is a vectorized shift/mask over the lane dimension
+(VPU), and batch-1 matvec deliberately avoids the MXU (bandwidth-bound).
+
+VMEM footprint per tile (documented for the TPU path):
+  tile_r·nwords·4 B (codes) + tile_r·ngroups·8 B (scale+zero) + dcol·4 B (x)
+e.g. tile_r=256, dcol=1024, 3-bit: 256·103·4 ≈ 103 KiB ≪ 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 256
+
+
+def codes_per_word(bits: int) -> int:
+    return 32 // bits
+
+
+def _packmatvec_kernel(words_ref, scale_ref, zero_ref, x_ref, o_ref, *, bits: int, dcol: int, groupsize: int):
+    cpw = codes_per_word(bits)
+    mask = jnp.uint32(2**bits - 1)
+    words = words_ref[...]  # (tile_r, nwords) uint32
+    tile_r, nwords = words.shape
+    # vectorized unpack: (tile_r, nwords, cpw) field extraction
+    shifts = (bits * jax.lax.broadcasted_iota(jnp.uint32, (1, 1, cpw), 2)).astype(jnp.uint32)
+    fields = (words[:, :, None] >> shifts) & mask
+    codes = fields.reshape(tile_r, nwords * cpw)[:, :dcol].astype(jnp.float32)
+    g = groupsize if groupsize else dcol
+    ngroups = dcol // g
+    s = jnp.repeat(scale_ref[:, :ngroups], g, axis=1)
+    z = jnp.repeat(zero_ref[:, :ngroups], g, axis=1)
+    wq = s * (codes - z)
+    o_ref[:, 0] = wq @ x_ref[:, 0]
+
+
+def packmatvec(
+    words: jax.Array,
+    scales: jax.Array,
+    zeros: jax.Array,
+    x: jax.Array,
+    bits: int,
+    groupsize: int = 0,
+    row_tile: int = DEFAULT_ROW_TILE,
+):
+    """y = dequant(words; scales, zeros) @ x.
+
+    words: (drow, nwords) uint32; scales/zeros: (drow, ngroups); x: (dcol,).
+    Returns y: (drow,) float32."""
+    drow, nwords = words.shape
+    dcol = x.shape[0]
+    ngroups = scales.shape[1]
+    tile = min(row_tile, drow)
+    assert drow % tile == 0
+    kernel = functools.partial(
+        _packmatvec_kernel, bits=bits, dcol=dcol, groupsize=groupsize
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=(drow // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, nwords), lambda i: (i, 0)),
+            pl.BlockSpec((tile, ngroups), lambda i: (i, 0)),
+            pl.BlockSpec((tile, ngroups), lambda i: (i, 0)),
+            pl.BlockSpec((dcol, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((drow, 1), jnp.float32),
+        interpret=True,
+    )(words, scales.astype(jnp.float32), zeros.astype(jnp.float32), x.reshape(-1, 1).astype(jnp.float32))
+    return y[:, 0]

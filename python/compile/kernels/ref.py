@@ -1,0 +1,247 @@
+"""Pure-numpy oracles for every L1 kernel and the L2 GPTQ graph.
+
+These functions define the *canonical semantics* of the library: the Pallas
+kernels (gptq.py, packmatvec.py, rtn.py, hessian.py), the L2 graph
+(gptq_layer.py) and the pure-Rust implementations (rust/src/quant/) must all
+match these bit-for-bit (integer codes) / to float tolerance (dequantized
+values).
+
+Conventions (see DESIGN.md §Quantization semantics):
+  * weight matrices are (drow, dcol) = (out_features, in_features);
+  * the Hessian is over in_features: H = 2 XᵀX with X of shape (n, dcol);
+  * grids are uniform asymmetric min-max, per row or per group of G
+    consecutive in-row weights;
+  * GPTQ quantizes columns left-to-right in blocks of `blocksize`,
+    compensating the error via the upper Cholesky factor of H⁻¹.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_BLOCKSIZE = 128
+DEFAULT_PERCDAMP = 0.01
+
+
+# ---------------------------------------------------------------------------
+# grids
+# ---------------------------------------------------------------------------
+
+def quant_params(w: np.ndarray, bits: int):
+    """Per-row asymmetric min-max grid over the columns of `w`.
+
+    Returns (scale, zero) with shapes (drow,). `zero` is an integer-valued
+    float (the code that maps to 0.0). The range is always widened to
+    include 0 (so zero-valued weights dequantize exactly); degenerate rows
+    (max == min) get a symmetric unit range.
+    """
+    maxq = float(2**bits - 1)
+    wmin = np.minimum(w.min(axis=1), 0.0)
+    wmax = np.maximum(w.max(axis=1), 0.0)
+    degenerate = wmin == wmax
+    wmin = np.where(degenerate, wmin - 0.5, wmin)
+    wmax = np.where(degenerate, wmax + 0.5, wmax)
+    scale = (wmax - wmin) / maxq
+    zero = np.round(-wmin / scale)
+    return scale.astype(np.float32), zero.astype(np.float32)
+
+
+def quantize_col(w: np.ndarray, scale: np.ndarray, zero: np.ndarray, bits: int):
+    """Quantize one column (or any array broadcastable with scale/zero).
+
+    Returns (codes, dequantized)."""
+    maxq = float(2**bits - 1)
+    q = np.clip(np.round(w / scale) + zero, 0.0, maxq)
+    return q, scale * (q - zero)
+
+
+# ---------------------------------------------------------------------------
+# RTN baseline
+# ---------------------------------------------------------------------------
+
+def rtn_ref(w: np.ndarray, bits: int, groupsize: int = 0):
+    """Round-to-nearest on the min-max grid; groupsize 0 means per-row.
+
+    Returns (codes (drow, dcol) float-valued ints, scales (drow, ngroups),
+    zeros (drow, ngroups), wq (drow, dcol))."""
+    drow, dcol = w.shape
+    g = groupsize if groupsize else dcol
+    assert dcol % g == 0, f"groupsize {g} must divide dcol {dcol}"
+    ngroups = dcol // g
+    codes = np.empty_like(w, dtype=np.float32)
+    wq = np.empty_like(w, dtype=np.float32)
+    scales = np.empty((drow, ngroups), dtype=np.float32)
+    zeros = np.empty((drow, ngroups), dtype=np.float32)
+    for gi in range(ngroups):
+        sl = slice(gi * g, (gi + 1) * g)
+        s, z = quant_params(w[:, sl], bits)
+        scales[:, gi] = s
+        zeros[:, gi] = z
+        q, dq = quantize_col(w[:, sl], s[:, None], z[:, None], bits)
+        codes[:, sl] = q
+        wq[:, sl] = dq
+    return codes, scales, zeros, wq
+
+
+# ---------------------------------------------------------------------------
+# Hessian
+# ---------------------------------------------------------------------------
+
+def hessian_ref(x: np.ndarray) -> np.ndarray:
+    """H = 2 XᵀX for X of shape (n, dcol). Accumulate over batches by
+    summing results."""
+    x = x.astype(np.float32)
+    return 2.0 * (x.T @ x)
+
+
+def prepare_hinv_cholesky(
+    h: np.ndarray, w: np.ndarray, percdamp: float = DEFAULT_PERCDAMP
+):
+    """Dead-column handling + damping + upper Cholesky factor of H⁻¹.
+
+    Returns (U, w_fixed) where U is upper-triangular with UᵀU = (H + λI)⁻¹
+    (the factor GPTQ consumes) and w_fixed has dead columns zeroed.
+    """
+    h = h.astype(np.float64).copy()
+    w = w.astype(np.float64).copy()
+    dead = np.diag(h) == 0.0
+    h[dead, dead] = 1.0
+    w[:, dead] = 0.0
+    damp = percdamp * float(np.mean(np.diag(h)))
+    h[np.diag_indices_from(h)] += damp
+    hinv = np.linalg.inv(h)
+    # lower Cholesky L with L Lᵀ = Hinv; U = Lᵀ is upper with UᵀU = Hinv.
+    lower = np.linalg.cholesky(hinv)
+    return lower.T.copy(), w
+
+
+# ---------------------------------------------------------------------------
+# GPTQ (Algorithm 1 of the paper, in-place group-stat semantics)
+# ---------------------------------------------------------------------------
+
+def gptq_ref(
+    w: np.ndarray,
+    h: np.ndarray,
+    bits: int,
+    blocksize: int = DEFAULT_BLOCKSIZE,
+    groupsize: int = 0,
+    percdamp: float = DEFAULT_PERCDAMP,
+):
+    """Reference GPTQ. Returns (codes, scales, zeros, wq).
+
+    scales/zeros are (drow, ngroups) with ngroups = dcol/groupsize (1 if
+    groupsize == 0; then computed once from the original weights, the
+    paper's per-row default). With grouping, grid parameters are recomputed
+    at every group boundary from the *current, error-compensated* weights
+    ("always using the most current updated weights", §Additional Tricks).
+    Group boundaries are processing-block boundaries too (the effective
+    block size is min(blocksize, groupsize)), which makes the in-place
+    semantics exact.
+    """
+    drow, dcol = w.shape
+    u, wf = prepare_hinv_cholesky(h, w, percdamp)
+    g = groupsize if groupsize else dcol
+    assert dcol % g == 0
+    bs = min(blocksize, g, dcol)
+    codes = np.zeros((drow, dcol), dtype=np.float64)
+    wq = np.zeros((drow, dcol), dtype=np.float64)
+    ngroups = dcol // g
+    scales = np.empty((drow, ngroups), dtype=np.float32)
+    zeros = np.empty((drow, ngroups), dtype=np.float32)
+    if groupsize == 0:
+        s, z = quant_params(wf.astype(np.float32), bits)
+        scales[:, 0] = s
+        zeros[:, 0] = z
+
+    for i1 in range(0, dcol, bs):
+        i2 = min(i1 + bs, dcol)
+        err = np.zeros((drow, i2 - i1), dtype=np.float64)
+        for j in range(i1, i2):
+            if groupsize and j % g == 0:
+                s, z = quant_params(wf[:, j : j + g].astype(np.float32), bits)
+                scales[:, j // g] = s
+                zeros[:, j // g] = z
+            gi = j // g if groupsize else 0
+            s64 = scales[:, gi].astype(np.float64)
+            z64 = zeros[:, gi].astype(np.float64)
+            col = wf[:, j]
+            q, dq = quantize_col(col, s64, z64, bits)
+            codes[:, j] = q
+            wq[:, j] = dq
+            e = (col - dq) / u[j, j]
+            # compensate the remaining columns of this block
+            if j + 1 < i2:
+                wf[:, j + 1 : i2] -= np.outer(e, u[j, j + 1 : i2])
+            err[:, j - i1] = e
+        # batched tail update (paper Eq. 4/5 via the Cholesky rows)
+        if i2 < dcol:
+            wf[:, i2:] -= err @ u[i1:i2, i2:]
+    return (
+        codes.astype(np.float32),
+        scales,
+        zeros,
+        wq.astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# packing + quantized matvec
+# ---------------------------------------------------------------------------
+
+def codes_per_word(bits: int) -> int:
+    return 32 // bits  # 2->16, 3->10 (2 pad bits), 4->8
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Little-endian field packing of integer codes into u32 words, per row.
+
+    codes: (drow, dcol) integer-valued. Returns (drow, nwords) uint32 with
+    nwords = ceil(dcol / codes_per_word)."""
+    drow, dcol = codes.shape
+    cpw = codes_per_word(bits)
+    nwords = (dcol + cpw - 1) // cpw
+    padded = np.zeros((drow, nwords * cpw), dtype=np.uint64)
+    padded[:, :dcol] = codes.astype(np.uint64)
+    padded = padded.reshape(drow, nwords, cpw)
+    shifts = (bits * np.arange(cpw, dtype=np.uint64))[None, None, :]
+    words = (padded << shifts).sum(axis=2)
+    assert (words < (1 << 32)).all()
+    return words.astype(np.uint32)
+
+
+def unpack_codes(words: np.ndarray, bits: int, dcol: int) -> np.ndarray:
+    """Inverse of pack_codes; returns float32 codes of shape (drow, dcol)."""
+    drow, nwords = words.shape
+    cpw = codes_per_word(bits)
+    shifts = (bits * np.arange(cpw, dtype=np.uint64))[None, None, :]
+    mask = np.uint64(2**bits - 1)
+    fields = (words.astype(np.uint64)[:, :, None] >> shifts) & mask
+    return fields.reshape(drow, nwords * cpw)[:, :dcol].astype(np.float32)
+
+
+def packmatvec_ref(
+    words: np.ndarray,
+    scales: np.ndarray,
+    zeros: np.ndarray,
+    x: np.ndarray,
+    bits: int,
+    groupsize: int = 0,
+) -> np.ndarray:
+    """y = Ŵ x where Ŵ is dequantized on the fly from packed codes.
+
+    words: (drow, nwords) uint32; scales/zeros: (drow, ngroups);
+    x: (dcol,) float32. The paper's inference-kernel semantics."""
+    dcol = x.shape[0]
+    codes = unpack_codes(words, bits, dcol)
+    g = groupsize if groupsize else dcol
+    ngroups = dcol // g
+    s = np.repeat(scales[:, :ngroups], g, axis=1)
+    z = np.repeat(zeros[:, :ngroups], g, axis=1)
+    wq = s * (codes - z)
+    return (wq @ x.astype(np.float32)).astype(np.float32)
+
+
+def layer_sq_error(w: np.ndarray, wq: np.ndarray, x: np.ndarray) -> float:
+    """||WX − ŴX||² / n, the objective of Eq. (1), X given as (n, dcol)."""
+    d = (w - wq) @ x.T
+    return float((d * d).sum() / x.shape[0])

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: round-to-nearest (RTN) quantization — the paper's
+baseline (the method used by ZeroQuant / LLM.int8() / nuQmm at scale).
+
+Grid parallelizes over row tiles; each program quantizes a full row tile
+against its per-row (or per-group) grid in one vectorized pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 256
+
+
+def _rtn_kernel(w_ref, scale_ref, zero_ref, q_ref, wq_ref, *, bits: int, groupsize: int, dcol: int):
+    maxq = float(2**bits - 1)
+    w = w_ref[...]
+    g = groupsize if groupsize else dcol
+    ngroups = dcol // g
+    s = jnp.repeat(scale_ref[:, :ngroups], g, axis=1)
+    z = jnp.repeat(zero_ref[:, :ngroups], g, axis=1)
+    q = jnp.clip(jnp.round(w / s) + z, 0.0, maxq)
+    q_ref[...] = q
+    wq_ref[...] = s * (q - z)
+
+
+def rtn(
+    w: jax.Array,
+    scales: jax.Array,
+    zeros: jax.Array,
+    bits: int,
+    groupsize: int = 0,
+    row_tile: int = DEFAULT_ROW_TILE,
+):
+    """RTN-quantize `w` (drow, dcol) against precomputed grids.
+
+    scales/zeros: (drow, ngroups). Returns (codes, wq)."""
+    drow, dcol = w.shape
+    ngroups = scales.shape[1]
+    tile = min(row_tile, drow)
+    assert drow % tile == 0
+    kernel = functools.partial(_rtn_kernel, bits=bits, groupsize=groupsize, dcol=dcol)
+    q, wq = pl.pallas_call(
+        kernel,
+        grid=(drow // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, dcol), lambda i: (i, 0)),
+            pl.BlockSpec((tile, ngroups), lambda i: (i, 0)),
+            pl.BlockSpec((tile, ngroups), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((tile, dcol), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((drow, dcol), jnp.float32)] * 2,
+        interpret=True,
+    )(w.astype(jnp.float32), scales.astype(jnp.float32), zeros.astype(jnp.float32))
+    return q, wq

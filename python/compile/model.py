@@ -1,0 +1,274 @@
+"""L2: the byte-level transformer LM family (the OPT/BLOOM stand-in).
+
+Pre-norm decoder-only transformer over a byte vocabulary (256), with the
+four quantizable linears per block the pipeline targets:
+
+    wqkv (3d, d)   fused q/k/v projection
+    wo   (d, d)    attention output projection
+    wup  (ff, d)   MLP up projection (GELU)
+    wdn  (d, ff)   MLP down projection
+
+Weights are stored in (out_features, in_features) layout — the same layout
+the GPTQ solver and the Rust checkpoint use — and applied as x @ W.T.
+Embedding / positional / unembedding / LayerNorm parameters stay full
+precision, as in the paper (§Practical Speedups: "embeddings and the output
+layer ... kept in full FP16 precision").
+
+Entry points lowered by aot.py:
+  * fwd            — batched logits, for perplexity evaluation;
+  * embed          — token+position embedding (start of the block-wise
+                     calibration pipeline);
+  * block_capture  — one block's forward returning the INPUTS of each of
+                     its four linears (feeds Hessian accumulation; the Rust
+                     coordinator re-runs it with quantized weights to
+                     propagate "actual layer inputs in the already
+                     partially quantized" model, paper §4 Setup);
+  * block_fwd      — one block's forward only;
+  * head           — final LN + unembedding → logits;
+  * quant_fwd      — batched logits computed from PACKED weights via the
+                     L1 packmatvec kernel (kernel-path parity check).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import packmatvec as pmv
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = 256
+    max_seq: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def linear_shapes(self) -> dict[str, tuple[int, int]]:
+        """(out, in) shape of each quantizable linear in one block."""
+        d, ff = self.d_model, self.d_ff
+        return {"wqkv": (3 * d, d), "wo": (d, d), "wup": (ff, d), "wdn": (d, ff)}
+
+    def n_params(self) -> int:
+        counts = 2 * self.vocab * self.d_model + self.max_seq * self.d_model
+        per_block = sum(o * i + o for o, i in self.linear_shapes().values())
+        per_block += 4 * self.d_model  # two LayerNorms
+        return counts + self.n_layers * per_block + 2 * self.d_model
+
+
+# The model family: the OPT-125M…175B / BLOOM ladder analog (DESIGN.md
+# §Substitutions). Sizes chosen so `make artifacts` trains the default trio
+# on CPU in minutes while preserving the size-scaling axis of Figs. 1/3/4.
+CONFIGS: dict[str, ModelConfig] = {
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=2, d_ff=256),
+    "micro": ModelConfig("micro", d_model=128, n_layers=4, n_heads=4, d_ff=512),
+    "small": ModelConfig("small", d_model=256, n_layers=4, n_heads=8, d_ff=1024),
+    "med": ModelConfig("med", d_model=384, n_layers=6, n_heads=8, d_ff=1536),
+}
+DEFAULT_SIZES = ["nano", "micro", "small"]
+
+QUANT_LINEARS = ["wqkv", "wo", "wup", "wdn"]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    keys = iter(jax.random.split(key, 64))
+
+    def dense(shape, fan_in):
+        return (jax.random.normal(next(keys), shape, jnp.float32) / np.sqrt(fan_in))
+
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(next(keys), (cfg.max_seq, cfg.d_model)) * 0.01,
+        "lnf_g": jnp.ones((cfg.d_model,)),
+        "lnf_b": jnp.zeros((cfg.d_model,)),
+        "unembed": dense((cfg.vocab, cfg.d_model), cfg.d_model),
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layers):
+        blk = {
+            "ln1_g": jnp.ones((cfg.d_model,)),
+            "ln1_b": jnp.zeros((cfg.d_model,)),
+            "ln2_g": jnp.ones((cfg.d_model,)),
+            "ln2_b": jnp.zeros((cfg.d_model,)),
+        }
+        for name, (o, i) in cfg.linear_shapes().items():
+            blk[name] = dense((o, i), i)
+            blk[name + "_b"] = jnp.zeros((o,))
+        # scale residual-path output projections down with depth (GPT-2 trick)
+        blk["wo"] = blk["wo"] / np.sqrt(2 * cfg.n_layers)
+        blk["wdn"] = blk["wdn"] / np.sqrt(2 * cfg.n_layers)
+        params["blocks"].append(blk)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, qkv: jax.Array) -> jax.Array:
+    """Causal multi-head attention from the fused qkv tensor (B, S, 3d)."""
+    bsz, seq, _ = qkv.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    causal = jnp.tril(jnp.ones((seq, seq), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(bsz, seq, h * hd)
+
+
+def block_capture(cfg: ModelConfig, blk: dict, x: jax.Array):
+    """One transformer block; returns (y, captures).
+
+    captures maps each quantizable linear to ITS INPUT activations
+    (B, S, in_features) — exactly what the Hessian H = 2XᵀX needs."""
+    x1 = layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+    qkv = x1 @ blk["wqkv"].T + blk["wqkv_b"]
+    attn = _attention(cfg, qkv)
+    x = x + attn @ blk["wo"].T + blk["wo_b"]
+    x2 = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+    hidden = jax.nn.gelu(x2 @ blk["wup"].T + blk["wup_b"])
+    y = x + hidden @ blk["wdn"].T + blk["wdn_b"]
+    captures = {"wqkv": x1, "wo": attn, "wup": x2, "wdn": hidden}
+    return y, captures
+
+
+def embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    seq = tokens.shape[1]
+    return params["embed"][tokens] + params["pos"][:seq][None]
+
+
+def head(params: dict, x: jax.Array) -> jax.Array:
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["unembed"].T
+
+
+def fwd(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Full forward: tokens (B, S) int32 → logits (B, S, vocab)."""
+    x = embed(cfg, params, tokens)
+    for blk in params["blocks"]:
+        x, _ = block_capture(cfg, blk, x)
+    return head(params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Next-byte cross-entropy."""
+    logits = fwd(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# quantized forward (L1 kernel path)
+# ---------------------------------------------------------------------------
+
+def _quant_linear(qw: dict, x: jax.Array, bits: int, groupsize: int) -> jax.Array:
+    """x (..., in) @ dequant(Ŵ).T via the packmatvec kernel, vmapped over
+    all leading positions (each position is one matvec — the batch-1
+    generative-inference shape the paper optimizes)."""
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    f = lambda v: pmv.packmatvec(qw["words"], qw["scales"], qw["zeros"], v, bits, groupsize)
+    y = jax.vmap(f)(flat)
+    return y.reshape(*lead, -1)
+
+
+def quant_block_fwd(cfg: ModelConfig, blk: dict, qblk: dict, x: jax.Array, bits: int, groupsize: int) -> jax.Array:
+    """Block forward with all four linears replaced by the packed kernel."""
+    x1 = layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+    qkv = _quant_linear(qblk["wqkv"], x1, bits, groupsize) + blk["wqkv_b"]
+    attn = _attention(cfg, qkv)
+    x = x + _quant_linear(qblk["wo"], attn, bits, groupsize) + blk["wo_b"]
+    x2 = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+    hidden = jax.nn.gelu(_quant_linear(qblk["wup"], x2, bits, groupsize) + blk["wup_b"])
+    return x + _quant_linear(qblk["wdn"], hidden, bits, groupsize) + blk["wdn_b"]
+
+
+def quant_fwd(cfg: ModelConfig, params: dict, qparams: list, tokens: jax.Array, bits: int, groupsize: int = 0) -> jax.Array:
+    """Full forward with packed quantized weights (qparams: per-block dicts
+    of {words, scales, zeros} per linear)."""
+    x = embed(cfg, params, tokens)
+    for blk, qblk in zip(params["blocks"], qparams):
+        x = quant_block_fwd(cfg, blk, qblk, x, bits, groupsize)
+    return head(params, x)
+
+
+# ---------------------------------------------------------------------------
+# flat (de)serialization — the checkpoint tensor order shared with Rust
+# ---------------------------------------------------------------------------
+
+def tensor_index(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) list defining the checkpoint layout."""
+    idx: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.max_seq, cfg.d_model)),
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("unembed", (cfg.vocab, cfg.d_model)),
+    ]
+    for li in range(cfg.n_layers):
+        for nm in ("ln1_g", "ln1_b", "ln2_g", "ln2_b"):
+            idx.append((f"blocks.{li}.{nm}", (cfg.d_model,)))
+        for nm, (o, i) in cfg.linear_shapes().items():
+            idx.append((f"blocks.{li}.{nm}", (o, i)))
+            idx.append((f"blocks.{li}.{nm}_b", (o,)))
+    return idx
+
+
+def params_to_flat(cfg: ModelConfig, params: dict) -> dict[str, np.ndarray]:
+    flat: dict[str, np.ndarray] = {}
+    for name, shape in tensor_index(cfg):
+        if name.startswith("blocks."):
+            _, li, nm = name.split(".")
+            arr = params["blocks"][int(li)][nm]
+        else:
+            arr = params[name]
+        arr = np.asarray(arr, dtype=np.float32)
+        assert arr.shape == shape, (name, arr.shape, shape)
+        flat[name] = arr
+    return flat
+
+
+def flat_to_params(cfg: ModelConfig, flat: dict[str, np.ndarray]) -> dict:
+    params: dict[str, Any] = {"blocks": [dict() for _ in range(cfg.n_layers)]}
+    for name, _ in tensor_index(cfg):
+        arr = jnp.asarray(flat[name])
+        if name.startswith("blocks."):
+            _, li, nm = name.split(".")
+            params["blocks"][int(li)][nm] = arr
+        else:
+            params[name] = arr
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def config_by_name(name: str) -> ModelConfig:
+    return CONFIGS[name]

@@ -1,0 +1,90 @@
+"""Build-time training of the model family (the "pre-trained OPT/BLOOM
+checkpoint" substitute — DESIGN.md §Substitutions).
+
+Runs ONCE inside `make artifacts`. Adam + cosine decay on next-byte
+cross-entropy over the mixed-style training corpus. Deterministic (fixed
+seeds). Step counts are modest — the point is trained (correlated,
+outlier-bearing) weight/activation statistics, not SOTA perplexity.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+# per-size training budgets (CPU-friendly)
+TRAIN_PLAN = {
+    "nano": dict(steps=400, batch=32, lr=3e-3),
+    "micro": dict(steps=350, batch=24, lr=2e-3),
+    "small": dict(steps=900, batch=16, lr=1.5e-3),
+    "med": dict(steps=220, batch=8, lr=1e-3),
+}
+SEQ_LEN = 128
+
+
+def load_tokens(corpus_dir: Path, name: str) -> np.ndarray:
+    return np.frombuffer((corpus_dir / name).read_bytes(), dtype=np.uint8).astype(np.int32)
+
+
+def sample_batch(rng: np.random.Generator, data: np.ndarray, batch: int, seq: int) -> np.ndarray:
+    starts = rng.integers(0, len(data) - seq - 1, size=batch)
+    return np.stack([data[s : s + seq + 1] for s in starts])
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train_model(cfg: M.ModelConfig, corpus_dir: Path, seed: int = 7, log=print):
+    plan = TRAIN_PLAN[cfg.name]
+    steps, batch, base_lr = plan["steps"], plan["batch"], plan["lr"]
+    data = load_tokens(corpus_dir, "train.bin")
+    val = load_tokens(corpus_dir, "narrative_val.bin")
+    rng = np.random.default_rng(seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(cfg, p, tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def eval_fn(params, tokens):
+        return M.loss_fn(cfg, params, tokens)
+
+    t0 = time.time()
+    for step in range(steps):
+        lr = base_lr * 0.5 * (1 + np.cos(np.pi * step / steps))
+        tokens = jnp.asarray(sample_batch(rng, data, batch, SEQ_LEN))
+        params, opt, loss = step_fn(params, opt, tokens, lr)
+        if step % 50 == 0 or step == steps - 1:
+            vtok = jnp.asarray(sample_batch(rng, val, 8, SEQ_LEN))
+            vloss = float(eval_fn(params, vtok))
+            log(
+                f"[train {cfg.name}] step {step:4d}/{steps} "
+                f"loss {float(loss):.3f} val {vloss:.3f} "
+                f"({time.time()-t0:.0f}s)"
+            )
+    return params

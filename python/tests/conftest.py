@@ -1,0 +1,24 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def correlated_inputs(rng, n, dcol, outliers=2, outlier_scale=8.0):
+    """Calibration-like inputs: correlated features + outlier dims (the
+    activation-outlier regime LLM.int8()/GPTQ discuss)."""
+    mix = rng.normal(size=(dcol, dcol)).astype(np.float32) / np.sqrt(dcol)
+    x = rng.normal(size=(n, dcol)).astype(np.float32) @ mix
+    if outliers:
+        idx = rng.integers(0, dcol, outliers)
+        x[:, idx] *= outlier_scale
+    return x.astype(np.float32)

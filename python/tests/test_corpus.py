@@ -1,0 +1,79 @@
+"""Corpus/task generator: determinism, byte-safety, task answerability."""
+
+import json
+
+import pytest
+
+from compile.corpus import STYLES, CorpusGen, build_corpus
+
+
+def test_deterministic():
+    a = CorpusGen(7).narrative(4096)
+    b = CorpusGen(7).narrative(4096)
+    assert a == b
+    assert CorpusGen(8).narrative(4096) != a
+
+
+def test_all_styles_ascii():
+    g = CorpusGen(1)
+    for style in STYLES:
+        text = getattr(g, style)(8192)
+        assert len(text.encode()) == len(text)  # pure ASCII → 1 byte/char
+        assert len(text) == 8192
+
+
+def test_styles_differ():
+    g = CorpusGen(2)
+    n = g.narrative(4096)
+    m = g.markup(4096)
+    assert "[" in m and "=" in m
+    assert n.count(".") > m.count(".")
+
+
+def test_cloze_target_in_context():
+    """The cloze answer is recoverable from the context (discourse-determined,
+    the LAMBADA property), and the labeled choice is the target."""
+    g = CorpusGen(3)
+    for _ in range(50):
+        item = g.cloze_item()
+        assert item["target"].strip() in item["context"]
+        assert item["choices"][item["answer"]].strip().rstrip(".") == item["target"].strip()
+
+
+def test_mcq_answer_present():
+    g = CorpusGen(4)
+    for _ in range(50):
+        item = g.mcq_item()
+        assert len(item["choices"]) == 4
+        assert item["choices"][item["answer"]].strip().rstrip(".") in item["context"]
+        assert len(set(item["choices"])) == 4
+
+
+def test_recall_patterns_in_training_text():
+    """The task templates must be part of the training distribution — the
+    property that makes the zero-shot suite learnable (and therefore
+    quantization-sensitive)."""
+    text = CorpusGen(11).narrative(200_000)
+    assert "everyone asked about the" in text
+    assert "The one seen in" in text
+    assert "At dusk" in text and "home." in text
+
+
+def test_binary_items_balanced():
+    g = CorpusGen(5)
+    answers = [g.binary_item()["answer"] for _ in range(200)]
+    assert 0.3 < sum(answers) / len(answers) < 0.7
+
+
+def test_build_corpus_tree(tmp_path):
+    build_corpus(tmp_path, train_bytes=30_000, eval_bytes=2_048, n_tasks=10)
+    assert (tmp_path / "train.bin").stat().st_size >= 29_000
+    for s in STYLES:
+        assert (tmp_path / f"{s}_val.bin").stat().st_size == 2048
+        assert (tmp_path / f"{s}_test.bin").stat().st_size == 2048
+        # val and test must be disjoint text
+        assert (tmp_path / f"{s}_val.bin").read_bytes() != (tmp_path / f"{s}_test.bin").read_bytes()
+    for t in ("cloze", "mcq", "binary"):
+        lines = (tmp_path / "tasks" / f"{t}.jsonl").read_text().splitlines()
+        assert len(lines) == 10
+        json.loads(lines[0])

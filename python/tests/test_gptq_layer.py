@@ -1,0 +1,121 @@
+"""L2 GPTQ graph (gptq_layer.py) vs the numpy oracle, plus the algorithmic
+properties the paper claims (GPTQ ≤ RTN layer error; blocking is exact)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.gptq_layer import gptq_quantize_layer, rtn_quantize_layer
+from compile.kernels import ref
+
+from conftest import correlated_inputs
+
+settings.register_profile("layer", deadline=None, max_examples=8)
+settings.load_profile("layer")
+
+
+def _case(seed, drow, dcol, outliers=2):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(drow, dcol)).astype(np.float32)
+    x = correlated_inputs(rng, 4 * dcol, dcol, outliers=outliers)
+    return w, ref.hessian_ref(x), x
+
+
+@given(
+    seed=st.integers(0, 2**31),
+    bits=st.sampled_from([3, 4]),
+    blocksize=st.sampled_from([8, 16, 64]),
+)
+def test_graph_matches_ref(seed, bits, blocksize):
+    w, h, _ = _case(seed, 16, 32)
+    codes, scales, zeros, wq = gptq_quantize_layer(
+        jnp.asarray(w), jnp.asarray(h), bits, blocksize=blocksize, row_tile=8
+    )
+    codes_r, scales_r, zeros_r, wq_r = ref.gptq_ref(w, h, bits, blocksize=blocksize)
+    np.testing.assert_array_equal(np.asarray(codes), codes_r)
+    np.testing.assert_allclose(np.asarray(scales), scales_r, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(zeros), zeros_r, atol=0)
+    np.testing.assert_allclose(np.asarray(wq), wq_r, atol=2e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31), groupsize=st.sampled_from([8, 16]))
+def test_graph_matches_ref_grouped(seed, groupsize):
+    w, h, _ = _case(seed, 8, 32)
+    codes, scales, zeros, wq = gptq_quantize_layer(
+        jnp.asarray(w), jnp.asarray(h), 3, blocksize=16, groupsize=groupsize, row_tile=8
+    )
+    codes_r, scales_r, zeros_r, wq_r = ref.gptq_ref(w, h, 3, 16, groupsize)
+    np.testing.assert_array_equal(np.asarray(codes), codes_r)
+    np.testing.assert_allclose(np.asarray(scales), scales_r, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(wq), wq_r, atol=2e-4, rtol=1e-4)
+
+
+def test_blocking_is_exact():
+    """Paper Step 2: blocking batches memory traffic but does NOT change the
+    result — blocked and unblocked solves must agree."""
+    w, h, _ = _case(5, 8, 64)
+    full = ref.gptq_ref(w, h, 4, blocksize=64)
+    blocked = ref.gptq_ref(w, h, 4, blocksize=8)
+    np.testing.assert_allclose(full[3], blocked[3], atol=1e-6)
+    np.testing.assert_array_equal(full[0], blocked[0])
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_gptq_beats_rtn_on_correlated_inputs(bits):
+    """The paper's core claim at layer level: second-order compensation
+    strictly reduces ||WX − ŴX||² vs round-to-nearest when inputs are
+    correlated (averaged over several draws)."""
+    wins, ratio = 0, []
+    for seed in range(5):
+        w, h, x = _case(100 + seed, 32, 64)
+        _, _, _, wq_g = ref.gptq_ref(w, h, bits)
+        _, _, _, wq_r = ref.rtn_ref(w, bits)
+        eg = ref.layer_sq_error(w, wq_g, x)
+        er = ref.layer_sq_error(w, wq_r, x)
+        wins += eg < er
+        ratio.append(eg / er)
+    assert wins >= 4, f"GPTQ won only {wins}/5 (ratios {ratio})"
+    assert np.mean(ratio) < 0.9
+
+
+def test_grouping_reduces_error_at_2bit():
+    """Table 6's mechanism: finer groups → lower quantization error."""
+    w, h, x = _case(7, 16, 64, outliers=4)
+    errs = []
+    for g in (0, 32, 16, 8):
+        _, _, _, wq = ref.gptq_ref(w, h, 2, groupsize=g)
+        errs.append(ref.layer_sq_error(w, wq, x))
+    assert errs[-1] < errs[0], errs
+
+
+def test_rtn_layer_matches_ref():
+    w, _, _ = _case(9, 8, 32)
+    for g in (0, 8):
+        q, s, z, wq = rtn_quantize_layer(jnp.asarray(w), 4, g)
+        q_r, s_r, z_r, wq_r = ref.rtn_ref(w, 4, g)
+        np.testing.assert_array_equal(np.asarray(q), q_r)
+        np.testing.assert_allclose(np.asarray(wq), wq_r, atol=1e-6)
+
+
+def test_dead_columns_handled():
+    """Zero-variance input dims (dead units, cf. the OPT-66B footnote) must
+    not produce NaNs and their weights must quantize to exactly 0."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(8, 16)).astype(np.float32)
+    x = correlated_inputs(rng, 64, 16, outliers=0)
+    x[:, [3, 7]] = 0.0
+    h = ref.hessian_ref(x)
+    codes, scales, zeros, wq = ref.gptq_ref(w, h, 4)
+    assert np.isfinite(wq).all()
+    np.testing.assert_allclose(wq[:, [3, 7]], 0.0, atol=1e-6)
+
+
+def test_rounding_idempotent_on_fixed_grid():
+    """Fixed point at grid level: re-quantizing dequantized values against
+    the SAME grid reproduces the codes exactly (RTN is a projection)."""
+    w, _, _ = _case(13, 8, 32)
+    codes, scales, zeros, wq = ref.rtn_ref(w, 4)
+    q2, dq2 = ref.quantize_col(wq, scales[:, :1], zeros[:, :1], 4)
+    np.testing.assert_array_equal(q2, codes)
+    np.testing.assert_allclose(dq2, wq, atol=0)

@@ -1,0 +1,52 @@
+"""Bit-packing semantics (shared with rust/src/quant/pack.rs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+settings.register_profile("packing", deadline=None, max_examples=50)
+settings.load_profile("packing")
+
+
+@given(
+    bits=st.sampled_from([2, 3, 4]),
+    drow=st.integers(1, 8),
+    dcol=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_unpack_roundtrip(bits, drow, dcol, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2**bits, size=(drow, dcol)).astype(np.float32)
+    words = ref.pack_codes(codes, bits)
+    out = ref.unpack_codes(words, bits, dcol)
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_codes_per_word():
+    assert ref.codes_per_word(2) == 16
+    assert ref.codes_per_word(3) == 10  # 2 pad bits per word
+    assert ref.codes_per_word(4) == 8
+
+
+def test_pack_width():
+    codes = np.zeros((3, 25), dtype=np.float32)
+    assert ref.pack_codes(codes, 4).shape == (3, 4)   # ceil(25/8)
+    assert ref.pack_codes(codes, 3).shape == (3, 3)   # ceil(25/10)
+    assert ref.pack_codes(codes, 2).shape == (3, 2)   # ceil(25/16)
+
+
+def test_pack_is_little_endian_fields():
+    codes = np.array([[1, 2, 3]], dtype=np.float32)
+    w = ref.pack_codes(codes, 4)
+    assert w[0, 0] == 1 | (2 << 4) | (3 << 8)
+
+
+def test_storage_ratio():
+    """3-bit packing moves 10 codes per 4 bytes → 3.2 effective bits, the
+    overhead quoted in DESIGN.md / the memory tables."""
+    drow, dcol = 4, 640
+    codes = np.zeros((drow, dcol), dtype=np.float32)
+    words = ref.pack_codes(codes, 3)
+    eff_bits = words.size * 32 / codes.size
+    assert abs(eff_bits - 3.2) < 1e-9

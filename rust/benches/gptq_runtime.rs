@@ -1,0 +1,66 @@
+//! Bench: GPTQ solver runtime scaling vs OBQ — paper Figure 3 / Tables
+//! 8–9. GPTQ is O(dcol²·max(drow,dcol)); OBQ is O(drow·dcol³), measured
+//! while feasible and extrapolated beyond.
+//!
+//! ```bash
+//! cargo bench --bench gptq_runtime
+//! ```
+
+use gptq_rs::data::Rng;
+use gptq_rs::quant::{accumulate_hessian, gptq_quantize, obq_quantize, GptqConfig};
+use gptq_rs::util::bench::black_box;
+use std::time::Instant;
+
+fn layer(d: usize) -> (Vec<f32>, Vec<f64>) {
+    let mut rng = Rng::new(d as u64);
+    let w: Vec<f32> = (0..d * d).map(|_| rng.unit()).collect();
+    let n = 2 * d;
+    let mut x: Vec<f32> = (0..n * d).map(|_| rng.unit()).collect();
+    for r in 0..n {
+        for c in 1..d {
+            x[r * d + c] = 0.6 * x[r * d + c - 1] + 0.4 * x[r * d + c];
+        }
+    }
+    let mut h = vec![0.0f64; d * d];
+    accumulate_hessian(&mut h, &x, n, d);
+    (w, h)
+}
+
+fn main() {
+    println!("== GPTQ vs OBQ runtime scaling (paper Fig. 3 analog, square layers) ==");
+    println!(
+        "{:<8} {:>14} {:>16} {:>12} {:>18}",
+        "dcol", "GPTQ ms", "OBQ ms", "speedup", "per-weight ns"
+    );
+    let mut last_obq: Option<(usize, f64)> = None;
+    for d in [64usize, 128, 256, 512, 1024, 1536] {
+        let (w, h) = layer(d);
+        let t0 = Instant::now();
+        let r = gptq_quantize(&w, d, d, &h, &GptqConfig::new(4)).unwrap();
+        black_box(&r.wq);
+        let gptq_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let (obq_ms, extrapolated) = if d <= 256 {
+            let t1 = Instant::now();
+            let o = obq_quantize(&w, d, d, &h, 4, 0.01).unwrap();
+            black_box(&o.wq);
+            let ms = t1.elapsed().as_secs_f64() * 1e3;
+            last_obq = Some((d, ms));
+            (ms, false)
+        } else {
+            let (d0, ms0) = last_obq.unwrap();
+            (ms0 * (d as f64 / d0 as f64).powi(4), true)
+        };
+        println!(
+            "{:<8} {:>14.1} {:>15.1}{} {:>11.1}x {:>18.1}",
+            d,
+            gptq_ms,
+            obq_ms,
+            if extrapolated { "*" } else { " " },
+            obq_ms / gptq_ms,
+            gptq_ms * 1e6 / (d * d) as f64
+        );
+    }
+    println!("(* extrapolated O(d^4) for square layers; the paper estimates OBQ at");
+    println!("   months for 175B vs 4 GPU-hours for GPTQ — 3 orders of magnitude)");
+}

@@ -1,0 +1,7 @@
+//! `tables` — regenerate every paper table/figure analog (DESIGN.md
+//! experiment index). Placeholder main; rows are implemented in
+//! `gptq_rs::tables` (see that module for the experiment mapping).
+
+fn main() -> gptq_rs::Result<()> {
+    gptq_rs::tables::main_cli()
+}

@@ -1,0 +1,21 @@
+//! The L3 coordinator: the paper's quantization pipeline (§4 Setup) and
+//! its "execution harness" for generative inference (§Practical Speedups).
+//!
+//! * [`pipeline`] — block-by-block quantization: stream calibration text
+//!   through the model (XLA artifacts), accumulate per-linear Hessians,
+//!   solve each layer with GPTQ (Rust solver or the AOT `gptq_layer_*`
+//!   graph), and propagate the **quantized** block's outputs to the next
+//!   block's calibration inputs — the paper's "actual layer inputs in the
+//!   already partially quantized" trick.
+//! * [`serve`] — token-by-token generation server: request router,
+//!   dynamic batcher, KV-cache pool, per-token latency metrics (the
+//!   Table 5 measurement harness).
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod serve;
+
+pub use metrics::LatencyStats;
+pub use pipeline::{QuantEngine, QuantPipeline, PipelineConfig, PipelineReport};
+pub use serve::{GenRequest, GenResponse, Server, ServerConfig};

@@ -1,0 +1,305 @@
+//! The quantization pipeline (paper §4 Setup):
+//!
+//! > "we always load one Transformer block ... at a time into GPU memory
+//! > and then accumulate the layer-Hessians and perform quantization.
+//! > Finally, the current block inputs are sent through the fully
+//! > quantized block again to produce the new inputs for the quantization
+//! > of the next block."
+//!
+//! Stages per block (all shapes come from the manifest; the forward passes
+//! run through the AOT XLA artifacts, the solver either in pure Rust or
+//! through the AOT `gptq_layer_*` graph — both produce identical results,
+//! see the integration tests):
+//!
+//!   x ── block_capture ──► per-linear inputs ──► H += 2XᵀX per linear
+//!     └─ after quantizing all 4 linears: re-run the block with Ŵ to get
+//!        the next block's x.
+//!
+//! The embedding / head stay fp, exactly as in the paper.
+
+use crate::data::{batch_segments, sample_calibration, CorpusFile};
+use crate::model::checkpoint::{LayerStats, QuantizedCheckpoint};
+use crate::model::config::QUANT_LINEARS;
+use crate::model::{Checkpoint, ModelConfig};
+use crate::quant::{self, gptq_quantize, rtn_quantize, GptqConfig, PackedMatrix, QuantResult};
+use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32};
+use crate::runtime::Runtime;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Which solver quantizes each layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantEngine {
+    /// Pure-Rust GPTQ (f64 Cholesky) — the default.
+    GptqRust,
+    /// The AOT-lowered L2 graph (`gptq_layer_<shape>_b<bits>`), executed
+    /// through PJRT — available for bits with a lowered artifact.
+    GptqXla,
+    /// Round-to-nearest baseline.
+    Rtn,
+    /// Full greedy OBQ (slow; Table 1/7 baseline).
+    Obq,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub bits: u32,
+    pub groupsize: usize,
+    pub engine: QuantEngine,
+    pub n_calib_segments: usize,
+    pub seed: u64,
+    pub gptq: GptqConfig,
+    /// propagate quantized outputs to the next block (paper default: true)
+    pub propagate_quantized: bool,
+}
+
+impl PipelineConfig {
+    pub fn new(bits: u32, engine: QuantEngine) -> Self {
+        Self {
+            bits,
+            groupsize: 0,
+            engine,
+            n_calib_segments: 64,
+            seed: 1234,
+            gptq: GptqConfig::new(bits),
+            propagate_quantized: true,
+        }
+    }
+
+    pub fn with_groupsize(mut self, g: usize) -> Self {
+        self.groupsize = g;
+        self.gptq.groupsize = g;
+        self
+    }
+}
+
+/// Outcome of a pipeline run.
+pub struct PipelineReport {
+    pub checkpoint: QuantizedCheckpoint,
+    pub stats: Vec<LayerStats>,
+    pub total_s: f64,
+    pub mean_layer_error: f64,
+}
+
+/// The block-streaming quantization pipeline.
+pub struct QuantPipeline<'rt> {
+    rt: &'rt mut Runtime,
+    size: String,
+    cfg: PipelineConfig,
+}
+
+impl<'rt> QuantPipeline<'rt> {
+    pub fn new(rt: &'rt mut Runtime, size: &str, cfg: PipelineConfig) -> Self {
+        Self { rt, size: size.to_string(), cfg }
+    }
+
+    /// Run the full pipeline over `ckpt` (which is consumed as the working
+    /// copy — quantized weights are written back for propagation).
+    pub fn run(&mut self, ckpt: &mut Checkpoint, calib: &CorpusFile) -> Result<PipelineReport> {
+        let t0 = Instant::now();
+        let config = ckpt.config.clone();
+        let seq = self.rt.manifest.seq_len;
+        let batch = self.rt.manifest.eval_batch;
+
+        // 1. calibration batches (the paper's 128 random segments)
+        let segments = sample_calibration(calib, self.cfg.n_calib_segments, seq, self.cfg.seed);
+        let token_batches = batch_segments(&segments, batch);
+        anyhow::ensure!(!token_batches.is_empty(), "not enough calibration segments");
+
+        // 2. embed: token batches -> activations
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(token_batches.len());
+        for tokens in &token_batches {
+            let inputs = vec![
+                literal_i32(tokens, &[batch, seq])?,
+                literal_f32(&ckpt.get("embed").data, &ckpt.get("embed").shape)?,
+                literal_f32(&ckpt.get("pos").data, &ckpt.get("pos").shape)?,
+            ];
+            let out = self.rt.execute(&format!("embed_{}", self.size), &inputs)?;
+            xs.push(to_vec_f32(&out[0])?);
+        }
+
+        // 3. per block: capture -> hessians -> quantize -> propagate
+        let mut packed: BTreeMap<String, PackedMatrix> = BTreeMap::new();
+        let mut stats: Vec<LayerStats> = Vec::new();
+        for layer in 0..config.n_layers {
+            let (hessians, captures) = self.capture_block(ckpt, layer, &xs, &config)?;
+            // keep originals for the no-propagation ablation
+            let originals: Vec<Vec<f32>> = QUANT_LINEARS
+                .iter()
+                .map(|lin| ckpt.block_tensor(layer, lin).data.clone())
+                .collect();
+
+            for (li, lin) in QUANT_LINEARS.iter().enumerate() {
+                let t_l = Instant::now();
+                let w = ckpt.block_tensor(layer, lin);
+                let (drow, dcol) = w.dims2();
+                let result = self.quantize_layer(&w.data, drow, dcol, &hessians[li])?;
+                let quant_ms = t_l.elapsed().as_secs_f64() * 1e3;
+                let sq_error = quant::layer_sq_error(
+                    &w.data,
+                    &result.wq,
+                    &captures[li],
+                    drow,
+                    dcol,
+                );
+                stats.push(LayerStats { layer, name: lin.to_string(), sq_error, quant_ms });
+                packed.insert(format!("blocks.{layer}.{lin}"), PackedMatrix::from_result(&result));
+                // write back Ŵ so the propagation pass (and later layers'
+                // Hessians within this block, via re-capture) see it
+                ckpt.set_block_weight(layer, lin, result.wq);
+            }
+
+            // 4. propagate: re-run the block — with the quantized weights
+            // (paper default) or, for the ablation, with the originals
+            // (next block calibrates on full-precision activations).
+            if !self.cfg.propagate_quantized {
+                let quantized: Vec<Vec<f32>> = QUANT_LINEARS
+                    .iter()
+                    .map(|lin| ckpt.block_tensor(layer, lin).data.clone())
+                    .collect();
+                for (lin, orig) in QUANT_LINEARS.iter().zip(&originals) {
+                    ckpt.set_block_weight(layer, lin, orig.clone());
+                }
+                for x in xs.iter_mut() {
+                    *x = self.block_forward(ckpt, layer, x, &config, batch, seq)?.0;
+                }
+                for (lin, q) in QUANT_LINEARS.iter().zip(quantized) {
+                    ckpt.set_block_weight(layer, lin, q);
+                }
+            } else {
+                for x in xs.iter_mut() {
+                    *x = self.block_forward(ckpt, layer, x, &config, batch, seq)?.0;
+                }
+            }
+        }
+
+        let mean_layer_error =
+            stats.iter().map(|s| s.sq_error).sum::<f64>() / stats.len().max(1) as f64;
+        // rebuild a pristine fp checkpoint view for the non-quantized
+        // tensors (ckpt weights were overwritten with Ŵ — that is fine:
+        // packed codes are the source of truth for the linears)
+        let qc = QuantizedCheckpoint::from_parts(
+            config,
+            self.cfg.bits,
+            self.cfg.groupsize,
+            packed,
+            ckpt,
+            stats.clone(),
+        );
+        Ok(PipelineReport {
+            checkpoint: qc,
+            stats,
+            total_s: t0.elapsed().as_secs_f64(),
+            mean_layer_error,
+        })
+    }
+
+    /// Run block_capture over every calibration batch; accumulate the four
+    /// per-linear Hessians and keep one batch of captures for error
+    /// reporting. Returns (hessians, sample captures).
+    #[allow(clippy::type_complexity)]
+    fn capture_block(
+        &mut self,
+        ckpt: &Checkpoint,
+        layer: usize,
+        xs: &[Vec<f32>],
+        config: &ModelConfig,
+    ) -> Result<([Vec<f64>; 4], [Vec<f32>; 4])> {
+        let batch = self.rt.manifest.eval_batch;
+        let seq = self.rt.manifest.seq_len;
+        let n = batch * seq;
+        let dims: [usize; 4] = [config.d_model, config.d_model, config.d_model, config.d_ff];
+        let mut hessians: [Vec<f64>; 4] =
+            std::array::from_fn(|i| vec![0.0f64; dims[i] * dims[i]]);
+        let mut sample: [Vec<f32>; 4] = std::array::from_fn(|_| Vec::new());
+
+        for (bi, x) in xs.iter().enumerate() {
+            let (_, caps) = self.block_forward(ckpt, layer, x, config, batch, seq)?;
+            for (li, cap) in caps.iter().enumerate() {
+                quant::accumulate_hessian(&mut hessians[li], cap, n, dims[li]);
+                if bi == 0 {
+                    sample[li] = cap.clone();
+                }
+            }
+        }
+        Ok((hessians, sample))
+    }
+
+    /// One block forward through the `block_capture_<size>` artifact.
+    /// Returns (y, [four capture tensors]).
+    fn block_forward(
+        &mut self,
+        ckpt: &Checkpoint,
+        layer: usize,
+        x: &[f32],
+        config: &ModelConfig,
+        batch: usize,
+        seq: usize,
+    ) -> Result<(Vec<f32>, [Vec<f32>; 4])> {
+        let mut inputs = vec![literal_f32(x, &[batch, seq, config.d_model])?];
+        for name in [
+            "ln1_g", "ln1_b", "ln2_g", "ln2_b", "wqkv", "wqkv_b", "wo", "wo_b", "wup", "wup_b",
+            "wdn", "wdn_b",
+        ] {
+            let t = ckpt.block_tensor(layer, name);
+            inputs.push(literal_f32(&t.data, &t.shape)?);
+        }
+        let out = self.rt.execute(&format!("block_capture_{}", self.size), &inputs)?;
+        anyhow::ensure!(out.len() == 5, "block_capture returned {} outputs", out.len());
+        let y = to_vec_f32(&out[0])?;
+        let caps = [
+            to_vec_f32(&out[1])?,
+            to_vec_f32(&out[2])?,
+            to_vec_f32(&out[3])?,
+            to_vec_f32(&out[4])?,
+        ];
+        Ok((y, caps))
+    }
+
+    /// Solve one layer with the configured engine.
+    fn quantize_layer(
+        &mut self,
+        w: &[f32],
+        drow: usize,
+        dcol: usize,
+        h: &[f64],
+    ) -> Result<QuantResult> {
+        match self.cfg.engine {
+            QuantEngine::Rtn => Ok(rtn_quantize(w, drow, dcol, self.cfg.bits, self.cfg.groupsize)),
+            QuantEngine::GptqRust => {
+                gptq_quantize(w, drow, dcol, h, &self.cfg.gptq).map_err(|e| anyhow::anyhow!(e))
+            }
+            QuantEngine::Obq => {
+                crate::quant::obq_quantize(w, drow, dcol, h, self.cfg.bits, self.cfg.gptq.percdamp)
+                    .map_err(|e| anyhow::anyhow!(e))
+            }
+            QuantEngine::GptqXla => {
+                let name = format!("gptq_layer_{drow}x{dcol}_b{}", self.cfg.bits);
+                anyhow::ensure!(
+                    self.rt.manifest.has_artifact(&name),
+                    "no AOT artifact {name}; use the rust engine or re-run aot.py"
+                );
+                let hf: Vec<f32> = h.iter().map(|&v| v as f32).collect();
+                let inputs = vec![literal_f32(w, &[drow, dcol])?, literal_f32(&hf, &[dcol, dcol])?];
+                let out = self.rt.execute(&name, &inputs)?;
+                anyhow::ensure!(out.len() == 4, "gptq_layer returned {} outputs", out.len());
+                let codes_f = to_vec_f32(&out[0])?;
+                let scales = to_vec_f32(&out[1])?;
+                let zeros = to_vec_f32(&out[2])?;
+                let wq = to_vec_f32(&out[3])?;
+                let ngroups = scales.len() / drow;
+                Ok(QuantResult {
+                    codes: codes_f.iter().map(|&c| c as u8).collect(),
+                    scales,
+                    zeros,
+                    wq,
+                    drow,
+                    dcol,
+                    ngroups,
+                    bits: self.cfg.bits,
+                })
+            }
+        }
+    }
+}

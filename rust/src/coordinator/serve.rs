@@ -1,0 +1,299 @@
+//! Generation server — the paper's "execution harness which allows us to
+//! execute the resulting compressed models efficiently for generative
+//! tasks": a request router over worker replicas, a dynamic batcher with a
+//! linger window, per-worker KV caches, and per-token latency metrics.
+//!
+//! Each worker owns one [`CpuModel`] instance (dense = the FP16-baseline
+//! analog, packed = the GPTQ-deployed model); generation is token-by-token
+//! greedy decode at batch size 1 per request — the autoregressive,
+//! matvec-bound regime the paper targets (§Practical Speedups).
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::model::{CpuModel, KvCache};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<u8>,
+    /// per-token decode latencies, ms (prefill excluded — the paper's
+    /// per-token generation metric)
+    pub per_token_ms: Vec<f64>,
+    pub prefill_ms: f64,
+    pub worker: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub n_workers: usize,
+    /// max requests a worker drains per batching round
+    pub max_batch: usize,
+    /// how long the batcher lingers for stragglers
+    pub linger: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { n_workers: 1, max_batch: 4, linger: Duration::from_millis(2) }
+    }
+}
+
+enum Job {
+    Gen(GenRequest),
+    Stop,
+}
+
+/// Multi-worker generation server with least-loaded routing.
+pub struct Server {
+    senders: Vec<Sender<Job>>,
+    resp_rx: Receiver<GenResponse>,
+    inflight: Vec<Arc<AtomicUsize>>,
+    handles: Vec<JoinHandle<LatencyStats>>,
+    submitted: u64,
+}
+
+impl Server {
+    /// `make_model` builds one model replica per worker (each worker owns
+    /// its weights — the "model parallel replicas" shape of a router tier).
+    pub fn start<F>(cfg: ServerConfig, make_model: F) -> Self
+    where
+        F: Fn(usize) -> CpuModel,
+    {
+        let (resp_tx, resp_rx) = channel::<GenResponse>();
+        let mut senders = Vec::new();
+        let mut inflight = Vec::new();
+        let mut handles = Vec::new();
+        for wid in 0..cfg.n_workers {
+            let (tx, rx) = channel::<Job>();
+            let model = make_model(wid);
+            let resp_tx = resp_tx.clone();
+            let count = Arc::new(AtomicUsize::new(0));
+            let count_w = count.clone();
+            let max_batch = cfg.max_batch;
+            let linger = cfg.linger;
+            handles.push(std::thread::spawn(move || {
+                worker_loop(wid, model, rx, resp_tx, count_w, max_batch, linger)
+            }));
+            senders.push(tx);
+            inflight.push(count);
+        }
+        Self { senders, resp_rx, inflight, handles, submitted: 0 }
+    }
+
+    /// Route a request to the least-loaded worker. Returns the worker id.
+    pub fn submit(&mut self, req: GenRequest) -> usize {
+        let wid = self
+            .inflight
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap();
+        self.inflight[wid].fetch_add(1, Ordering::Relaxed);
+        self.submitted += 1;
+        self.senders[wid].send(Job::Gen(req)).expect("worker died");
+        wid
+    }
+
+    /// Block for the next completed response.
+    pub fn recv(&self) -> GenResponse {
+        self.resp_rx.recv().expect("all workers died")
+    }
+
+    /// Drain exactly `n` responses.
+    pub fn collect(&self, n: usize) -> Vec<GenResponse> {
+        (0..n).map(|_| self.recv()).collect()
+    }
+
+    /// Stop workers and return their merged per-token latency stats.
+    pub fn shutdown(self) -> LatencyStats {
+        for tx in &self.senders {
+            let _ = tx.send(Job::Stop);
+        }
+        let mut stats = LatencyStats::new();
+        for h in self.handles {
+            if let Ok(s) = h.join() {
+                stats.merge(&s);
+            }
+        }
+        stats
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    mut model: CpuModel,
+    rx: Receiver<Job>,
+    resp_tx: Sender<GenResponse>,
+    inflight: Arc<AtomicUsize>,
+    max_batch: usize,
+    linger: Duration,
+) -> LatencyStats {
+    let mut stats = LatencyStats::new();
+    let mut cache = KvCache::new(&model.config);
+    'outer: loop {
+        // dynamic batching: block for one job, linger for stragglers
+        let first = match rx.recv() {
+            Ok(Job::Gen(r)) => r,
+            _ => break 'outer,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + linger;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Job::Gen(r)) => batch.push(r),
+                Ok(Job::Stop) => {
+                    process_batch(wid, &mut model, &mut cache, &batch, &resp_tx, &inflight, &mut stats);
+                    break 'outer;
+                }
+                Err(_) => break,
+            }
+        }
+        process_batch(wid, &mut model, &mut cache, &batch, &resp_tx, &inflight, &mut stats);
+    }
+    stats
+}
+
+fn process_batch(
+    wid: usize,
+    model: &mut CpuModel,
+    cache: &mut KvCache,
+    batch: &[GenRequest],
+    resp_tx: &Sender<GenResponse>,
+    inflight: &Arc<AtomicUsize>,
+    stats: &mut LatencyStats,
+) {
+    for req in batch {
+        let resp = generate(wid, model, cache, req, stats);
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = resp_tx.send(resp);
+    }
+}
+
+/// Greedy generation for one request (batch-1 decode, the Table 5 setup).
+fn generate(
+    wid: usize,
+    model: &mut CpuModel,
+    cache: &mut KvCache,
+    req: &GenRequest,
+    stats: &mut LatencyStats,
+) -> GenResponse {
+    cache.reset();
+    let max_seq = model.config.max_seq;
+    let t0 = Instant::now();
+    let mut logits: Vec<f32> = Vec::new();
+    for &b in req.prompt.iter().take(max_seq.saturating_sub(1)) {
+        logits = model.decode_step(cache, b).to_vec();
+    }
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut tokens = Vec::with_capacity(req.max_new_tokens);
+    let mut per_token_ms = Vec::with_capacity(req.max_new_tokens);
+    for _ in 0..req.max_new_tokens {
+        if cache.len >= max_seq {
+            break;
+        }
+        let next = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u8)
+            .unwrap_or(0);
+        let t = Instant::now();
+        logits = model.decode_step(cache, next).to_vec();
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        per_token_ms.push(ms);
+        stats.record_ms(ms);
+        tokens.push(next);
+    }
+    GenResponse { id: req.id, tokens, per_token_ms, prefill_ms, worker: wid }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tiny_checkpoint;
+
+    fn server(n_workers: usize) -> Server {
+        let cfg = ServerConfig { n_workers, max_batch: 2, linger: Duration::from_millis(1) };
+        Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)))
+    }
+
+    #[test]
+    fn serves_one_request() {
+        let mut s = server(1);
+        s.submit(GenRequest { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 });
+        let r = s.recv();
+        assert_eq!(r.id, 1);
+        assert_eq!(r.tokens.len(), 4);
+        assert_eq!(r.per_token_ms.len(), 4);
+        let stats = s.shutdown();
+        assert_eq!(stats.count(), 4);
+    }
+
+    #[test]
+    fn no_request_lost_across_workers() {
+        let mut s = server(3);
+        let n = 20;
+        for i in 0..n {
+            s.submit(GenRequest { id: i, prompt: vec![(i % 16) as u8], max_new_tokens: 2 });
+        }
+        let mut ids: Vec<u64> = s.collect(n as usize).into_iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>());
+        s.shutdown();
+    }
+
+    #[test]
+    fn routing_spreads_load() {
+        let mut s = server(2);
+        let n = 8;
+        for i in 0..n {
+            s.submit(GenRequest { id: i, prompt: vec![0], max_new_tokens: 1 });
+        }
+        let workers: std::collections::HashSet<usize> =
+            s.collect(n as usize).into_iter().map(|r| r.worker).collect();
+        assert!(workers.len() >= 2, "all requests went to one worker");
+        s.shutdown();
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let mut s1 = server(1);
+        s1.submit(GenRequest { id: 0, prompt: vec![5, 6], max_new_tokens: 6 });
+        let r1 = s1.recv();
+        s1.shutdown();
+        let mut s2 = server(1);
+        s2.submit(GenRequest { id: 0, prompt: vec![5, 6], max_new_tokens: 6 });
+        let r2 = s2.recv();
+        s2.shutdown();
+        assert_eq!(r1.tokens, r2.tokens);
+    }
+
+    #[test]
+    fn respects_max_seq() {
+        let mut s = server(1);
+        // prompt + generation longer than max_seq (16) must truncate safely
+        s.submit(GenRequest { id: 9, prompt: vec![1; 30], max_new_tokens: 30 });
+        let r = s.recv();
+        assert!(r.tokens.len() < 16);
+        s.shutdown();
+    }
+}

@@ -1,0 +1,75 @@
+//! Calibration sampling — the paper's §4 Setup: "128 random 2048-token
+//! segments" of generic crawl text; at our scale, `n_segments` random
+//! `seq_len`-byte windows of `calib.bin`.
+
+use super::corpus::CorpusFile;
+use super::Rng;
+
+/// Draw `n_segments` random windows of `seq_len` bytes. Deterministic in
+/// `seed` (the whole pipeline is reproducible end-to-end).
+pub fn sample_calibration(
+    corpus: &CorpusFile,
+    n_segments: usize,
+    seq_len: usize,
+    seed: u64,
+) -> Vec<Vec<u8>> {
+    assert!(corpus.len() > seq_len, "calibration corpus shorter than seq_len");
+    let mut rng = Rng::new(seed);
+    (0..n_segments)
+        .map(|_| {
+            let start = rng.below(corpus.len() - seq_len);
+            corpus.bytes[start..start + seq_len].to_vec()
+        })
+        .collect()
+}
+
+/// Group segments into batches of `batch` (the shape of the capture/
+/// hessian artifacts: (batch × seq_len) token blocks).
+pub fn batch_segments(segments: &[Vec<u8>], batch: usize) -> Vec<Vec<i32>> {
+    segments
+        .chunks(batch)
+        .filter(|c| c.len() == batch)
+        .map(|chunk| {
+            chunk
+                .iter()
+                .flat_map(|seg| seg.iter().map(|&b| b as i32))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> CorpusFile {
+        CorpusFile { bytes: (0..10_000).map(|i| (i % 251) as u8).collect(), name: "c".into() }
+    }
+
+    #[test]
+    fn sampling_deterministic() {
+        let c = corpus();
+        let a = sample_calibration(&c, 8, 128, 42);
+        let b = sample_calibration(&c, 8, 128, 42);
+        assert_eq!(a, b);
+        let c2 = sample_calibration(&c, 8, 128, 43);
+        assert_ne!(a, c2);
+    }
+
+    #[test]
+    fn segments_have_requested_length() {
+        let c = corpus();
+        for seg in sample_calibration(&c, 16, 64, 1) {
+            assert_eq!(seg.len(), 64);
+        }
+    }
+
+    #[test]
+    fn batching_drops_ragged_tail() {
+        let c = corpus();
+        let segs = sample_calibration(&c, 10, 32, 1);
+        let batches = batch_segments(&segs, 4);
+        assert_eq!(batches.len(), 2); // 10/4 -> 2 full batches
+        assert_eq!(batches[0].len(), 4 * 32);
+    }
+}

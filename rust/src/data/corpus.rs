@@ -1,0 +1,65 @@
+//! Byte-level corpus files written by `python/compile/corpus.py`.
+
+use crate::Result;
+use std::path::Path;
+
+/// An in-memory byte corpus (vocab = 256, bytes are tokens).
+#[derive(Debug, Clone)]
+pub struct CorpusFile {
+    pub bytes: Vec<u8>,
+    pub name: String,
+}
+
+/// The three evaluation styles, mirroring the paper's WikiText2/PTB/C4.
+pub const EVAL_STYLES: [&str; 3] = ["narrative", "markup", "crawl"];
+
+impl CorpusFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("corpus {} missing (run `make artifacts`): {e}", path.display()))?;
+        anyhow::ensure!(!bytes.is_empty(), "empty corpus {}", path.display());
+        Ok(Self {
+            bytes,
+            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Non-overlapping evaluation segments of `seq_len + 1` bytes (inputs
+    /// plus next-byte targets), like the paper's stride-2048 perplexity
+    /// protocol.
+    pub fn eval_segments(&self, seq_len: usize, max_segments: usize) -> Vec<&[u8]> {
+        self.bytes
+            .chunks_exact(seq_len + 1)
+            .take(max_segments)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_segments_shapes() {
+        let c = CorpusFile { bytes: (0..=255u8).cycle().take(1000).collect(), name: "t".into() };
+        let segs = c.eval_segments(99, 100);
+        assert_eq!(segs.len(), 10);
+        assert!(segs.iter().all(|s| s.len() == 100));
+        // non-overlapping
+        assert_eq!(segs[1][0], c.bytes[100]);
+    }
+
+    #[test]
+    fn eval_segments_capped() {
+        let c = CorpusFile { bytes: vec![0; 1000], name: "t".into() };
+        assert_eq!(c.eval_segments(9, 3).len(), 3);
+    }
+}

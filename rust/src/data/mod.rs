@@ -1,0 +1,74 @@
+//! Data substrate: corpus access, calibration sampling (the paper's "128
+//! random 2048-token segments from C4" at our scale), and the zero-shot
+//! task files produced by the build-time generator.
+
+pub mod calib;
+pub mod corpus;
+pub mod tasks;
+
+pub use calib::{batch_segments, sample_calibration};
+pub use corpus::CorpusFile;
+pub use tasks::{load_tasks, TaskItem};
+
+/// Deterministic xoshiro-ish RNG used for all sampling in this crate —
+/// no external randomness so every table regenerates identically.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        // splitmix64
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// uniform integer in [0, bound)
+    pub fn below(&mut self, bound: usize) -> usize {
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// uniform f32 in [-1, 1)
+    pub fn unit(&mut self) -> f32 {
+        // top 24 bits -> [0, 1) -> [-1, 1)
+        ((self.next_u64() >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn rng_unit_in_range() {
+        let mut r = Rng::new(5);
+        let n = 20_000;
+        let vals: Vec<f32> = (0..n).map(|_| r.unit()).collect();
+        assert!(vals.iter().all(|&v| (-1.0..1.0).contains(&v)));
+        let mean: f32 = vals.iter().sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Zero-shot task files (`artifacts/corpus/tasks/*.jsonl`) — the LAMBADA /
+//! ARC / PIQA / StoryCloze analogs produced by the build-time generator.
+
+use crate::util::Json;
+use crate::Result;
+use anyhow::{anyhow, ensure, Context};
+use std::path::Path;
+
+/// One task item. `cloze` items carry a `target`; choice items carry
+/// `choices` + `answer`.
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub context: String,
+    pub target: Option<String>,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+impl TaskItem {
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            context: j.get("context")?.as_str()?.to_string(),
+            target: j.get("target").and_then(|t| t.as_str()).map(String::from),
+            choices: j
+                .get("choices")
+                .and_then(|c| c.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+            answer: j.get("answer").and_then(|a| a.as_usize()).unwrap_or(0),
+        })
+    }
+}
+
+pub fn load_tasks(path: &Path) -> Result<Vec<TaskItem>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("task file {} missing", path.display()))?;
+    let mut items = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        items.push(
+            TaskItem::from_json(&j).ok_or_else(|| anyhow!("{}:{}: bad item", path.display(), i + 1))?,
+        );
+    }
+    ensure!(!items.is_empty(), "no tasks in {}", path.display());
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_jsonl() {
+        let tmp = std::env::temp_dir().join("gptq_tasks_test.jsonl");
+        std::fs::write(
+            &tmp,
+            r#"{"context": "abc", "target": " d"}
+{"context": "xyz", "choices": [" a", " b"], "answer": 1}
+"#,
+        )
+        .unwrap();
+        let items = load_tasks(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].target.as_deref(), Some(" d"));
+        assert_eq!(items[1].answer, 1);
+        assert_eq!(items[1].choices.len(), 2);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load_tasks(Path::new("/nonexistent/t.jsonl")).is_err());
+    }
+}

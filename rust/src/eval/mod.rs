@@ -1,0 +1,44 @@
+//! Evaluation harnesses: perplexity (the paper's primary metric — "known
+//! to be a very stringent accuracy metric") and the zero-shot task suite.
+
+pub mod ppl;
+pub mod zeroshot;
+
+pub use ppl::{perplexity, perplexity_xla};
+pub use zeroshot::{eval_choice, eval_cloze};
+
+/// log-softmax at one position; returns log p(target).
+pub fn log_prob(logits: &[f32], target: usize) -> f64 {
+    let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut denom = 0.0f64;
+    for &l in logits {
+        denom += ((l as f64) - maxv).exp();
+    }
+    (logits[target] as f64 - maxv) - denom.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_prob_uniform() {
+        let logits = vec![0.0f32; 4];
+        assert!((log_prob(&logits, 2) - (0.25f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_prob_peaked() {
+        let mut logits = vec![0.0f32; 4];
+        logits[1] = 100.0;
+        assert!(log_prob(&logits, 1) > -1e-6);
+        assert!(log_prob(&logits, 0) < -50.0);
+    }
+
+    #[test]
+    fn log_prob_shift_invariant() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [11.0f32, 12.0, 13.0];
+        assert!((log_prob(&a, 0) - log_prob(&b, 0)).abs() < 1e-6);
+    }
+}

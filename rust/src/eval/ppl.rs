@@ -1,0 +1,107 @@
+//! Perplexity evaluation — `exp(mean NLL per byte)` over non-overlapping
+//! segments, the protocol behind every perplexity table in the paper
+//! (Tables 2–4, 10–13; Figure 1).
+
+use super::log_prob;
+use crate::data::CorpusFile;
+use crate::model::CpuModel;
+use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32};
+use crate::runtime::Runtime;
+use crate::Result;
+
+/// Perplexity of a CPU model (dense or packed) over a corpus.
+/// `max_segments` bounds the work (the tables use 24–64 segments).
+pub fn perplexity(model: &mut CpuModel, corpus: &CorpusFile, seq_len: usize, max_segments: usize) -> f64 {
+    let vocab = model.config.vocab;
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for seg in corpus.eval_segments(seq_len, max_segments) {
+        let inputs = &seg[..seq_len];
+        let targets = &seg[1..];
+        let logits = model.logits_all(inputs);
+        for (pos, &t) in targets.iter().enumerate() {
+            nll -= log_prob(&logits[pos * vocab..(pos + 1) * vocab], t as usize);
+            count += 1;
+        }
+    }
+    (nll / count as f64).exp()
+}
+
+/// Perplexity via the XLA `lm_fwd_<size>` artifact — the fast batched path
+/// (and the L2-graph parity check for the CPU forward). `weights` must be
+/// the flattened tensor literals in manifest order.
+pub fn perplexity_xla(
+    rt: &mut Runtime,
+    size: &str,
+    weights: &[xla::Literal],
+    corpus: &CorpusFile,
+    max_batches: usize,
+) -> Result<f64> {
+    let seq = rt.manifest.seq_len;
+    let batch = rt.manifest.eval_batch;
+    let vocab = 256usize;
+    let segs = corpus.eval_segments(seq, max_batches * batch);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for chunk in segs.chunks(batch) {
+        if chunk.len() < batch {
+            break;
+        }
+        let tokens: Vec<i32> = chunk.iter().flat_map(|s| s[..seq].iter().map(|&b| b as i32)).collect();
+        let mut inputs = vec![literal_i32(&tokens, &[batch, seq])?];
+        for w in weights {
+            inputs.push(w.clone());
+        }
+        let out = rt.execute(&format!("lm_fwd_{size}"), &inputs)?;
+        let logits = to_vec_f32(&out[0])?;
+        for (bi, seg) in chunk.iter().enumerate() {
+            for pos in 0..seq - 1 {
+                let target = seg[pos + 1] as usize;
+                let off = (bi * seq + pos) * vocab;
+                nll -= log_prob(&logits[off..off + vocab], target);
+                count += 1;
+            }
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// Helper for literal reuse across executions (xla::Literal is not Clone;
+/// re-marshal from f32).
+pub fn weight_literals(
+    tensors: &[(Vec<f32>, Vec<usize>)],
+) -> Result<Vec<xla::Literal>> {
+    tensors.iter().map(|(d, s)| literal_f32(d, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tiny_checkpoint;
+    use crate::model::CpuModel;
+
+    #[test]
+    fn random_model_near_uniform_ppl() {
+        let ckpt = tiny_checkpoint(1);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let corpus = CorpusFile { bytes: (0..2048u32).map(|i| (i % 32) as u8).collect(), name: "t".into() };
+        let ppl = perplexity(&mut m, &corpus, 15, 4);
+        // untrained tiny model on vocab-32 bytes: ppl should be within an
+        // order of magnitude of uniform (32) and strictly > 1
+        assert!(ppl > 1.0 && ppl < 400.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn ppl_deterministic_and_segment_count_sensitive() {
+        let ckpt = tiny_checkpoint(2);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let corpus = CorpusFile { bytes: (0..4096u32).map(|i| (i % 29) as u8).collect(), name: "c".into() };
+        let a = perplexity(&mut m, &corpus, 15, 4);
+        let b = perplexity(&mut m, &corpus, 15, 4);
+        assert_eq!(a, b, "perplexity must be deterministic");
+        assert!(a > 1.0);
+        // different coverage -> (generally) different estimate, never NaN
+        let c = perplexity(&mut m, &corpus, 15, 8);
+        assert!(c.is_finite());
+    }
+}

@@ -1,0 +1,161 @@
+//! Zero-shot evaluation (paper §4 Zero-Shot Tasks, Figure 4, Tables 14–23).
+//!
+//! * cloze (LAMBADA analog): greedy-decode the target continuation and
+//!   require an exact byte match — the LAMBADA "last word prediction"
+//!   protocol.
+//! * choice (ARC / PIQA / StoryCloze analog): score every choice by
+//!   length-normalized log-likelihood of its bytes given the context;
+//!   accuracy = fraction where the labeled answer wins.
+
+use super::log_prob;
+use crate::data::TaskItem;
+use crate::model::{CpuModel, KvCache};
+
+/// Greedy exact-match accuracy on cloze items.
+pub fn eval_cloze(model: &mut CpuModel, items: &[TaskItem], max_items: usize) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for item in items.iter().take(max_items) {
+        let Some(target) = &item.target else { continue };
+        let ctx = item.context.as_bytes();
+        let tgt = target.as_bytes();
+        if ctx.len() + tgt.len() >= model.config.max_seq {
+            continue;
+        }
+        let mut cache = KvCache::new(&model.config);
+        let mut logits: Vec<f32> = Vec::new();
+        for &b in ctx {
+            logits = model.decode_step(&mut cache, b).to_vec();
+        }
+        let mut ok = true;
+        for &want in tgt {
+            let pred = argmax(&logits) as u8;
+            if pred != want {
+                ok = false;
+                break;
+            }
+            logits = model.decode_step(&mut cache, want).to_vec();
+        }
+        correct += ok as usize;
+        total += 1;
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// Length-normalized likelihood choice accuracy on MCQ/binary items.
+pub fn eval_choice(model: &mut CpuModel, items: &[TaskItem], max_items: usize) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for item in items.iter().take(max_items) {
+        if item.choices.is_empty() {
+            continue;
+        }
+        let ctx = item.context.as_bytes();
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let cb = choice.as_bytes();
+            if ctx.len() + cb.len() >= model.config.max_seq {
+                continue;
+            }
+            let score = continuation_logprob(model, ctx, cb) / cb.len() as f64;
+            if score > best_score {
+                best_score = score;
+                best = ci;
+            }
+        }
+        correct += (best == item.answer) as usize;
+        total += 1;
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// Σ log p(continuation bytes | context) via teacher forcing.
+fn continuation_logprob(model: &mut CpuModel, ctx: &[u8], cont: &[u8]) -> f64 {
+    let mut cache = KvCache::new(&model.config);
+    let mut logits: Vec<f32> = Vec::new();
+    for &b in ctx {
+        logits = model.decode_step(&mut cache, b).to_vec();
+    }
+    let mut lp = 0.0f64;
+    for &b in cont {
+        lp += log_prob(&logits, b as usize);
+        logits = model.decode_step(&mut cache, b).to_vec();
+    }
+    lp
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tiny_checkpoint;
+    use crate::model::CpuModel;
+
+    // tiny_checkpoint has vocab 32 — keep test bytes below that
+    const CTX: &str = "\u{01}\u{02}";
+    const CH_A: &str = "\u{03}";
+    const CH_B: &str = "\u{04}";
+
+    fn items_choice() -> Vec<TaskItem> {
+        (0..8)
+            .map(|i| TaskItem {
+                context: CTX.into(),
+                target: None,
+                choices: vec![CH_A.into(), CH_B.into()],
+                answer: i % 2,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn choice_accuracy_in_unit_interval() {
+        let ckpt = tiny_checkpoint(1);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let acc = eval_choice(&mut m, &items_choice(), 8);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn cloze_skips_overlong_items() {
+        let ckpt = tiny_checkpoint(2);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let items = vec![TaskItem {
+            context: "\u{01}".repeat(1000),
+            target: Some(CH_A.into()),
+            choices: vec![],
+            answer: 0,
+        }];
+        // all items skipped -> 0.0 and no panic
+        assert_eq!(eval_cloze(&mut m, &items, 10), 0.0);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn continuation_logprob_negative() {
+        let ckpt = tiny_checkpoint(3);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let lp = continuation_logprob(&mut m, &[1, 2], &[3, 4]);
+        assert!(lp < 0.0);
+    }
+}

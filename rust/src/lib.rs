@@ -1,0 +1,51 @@
+//! # gptq-rs — GPTQ (Frantar et al., 2022) in Rust + JAX + Pallas
+//!
+//! A three-layer reproduction of *GPTQ: Accurate Post-Training Quantization
+//! for Generative Pre-trained Transformers*:
+//!
+//! * **L1** (Pallas, build-time): the blocked GPTQ column solver and the
+//!   packed dequantizing matvec kernel (`python/compile/kernels/`), lowered
+//!   into the HLO artifacts this crate executes.
+//! * **L2** (JAX, build-time): the transformer LM family, the per-layer
+//!   quantization graph, and the AOT export (`python/compile/`).
+//! * **L3** (this crate): the coordinator — calibration streaming, Hessian
+//!   accumulation, block-by-block quantization with quantized-input
+//!   propagation, packed checkpoints, perplexity / zero-shot evaluation,
+//!   and a token-by-token generation server with a quantized hot path.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation; afterwards the `gptq` binary is self-contained.
+//!
+//! Module map (see DESIGN.md for the paper-experiment index):
+//!
+//! * [`quant`] — grids, RTN, OBQ (the baseline GPTQ descends from), the
+//!   GPTQ solver itself, f64 Cholesky linear algebra, bit packing.
+//! * [`model`] — tensors, checkpoints (dense + packed), the pure-Rust
+//!   transformer forward (the serving hot path) and its packed matvec.
+//! * [`data`] — corpus access, calibration sampling, zero-shot task files.
+//! * [`eval`] — perplexity and zero-shot accuracy harnesses.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/hlo/*.hlo.txt`
+//!   (HLO **text**; see /opt/xla-example/README.md for why not protos),
+//!   compiles once, executes from the pipeline.
+//! * [`coordinator`] — the quantization pipeline and the serving stack
+//!   (router, batcher, KV-cache pool, metrics).
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tables;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifact tree produced by `make artifacts`. Overridable for
+/// tests and deployments via `GPTQ_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("GPTQ_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,164 @@
+//! `gptq` — the L3 coordinator CLI.
+//!
+//! ```text
+//! gptq quantize --size small --bits 3 [--groupsize 64] [--engine rust|xla|rtn|obq] [--out f.ckpt]
+//! gptq eval     --size small [--quantized f.ckpt] [--segments 24]
+//! gptq serve    --size small [--quantized f.ckpt] [--workers 2] [--requests 32] [--gen-tokens 64]
+//! gptq info
+//! ```
+//!
+//! Everything runs against the AOT artifact tree (`make artifacts`);
+//! Python never executes here.
+
+use gptq_rs::coordinator::{GenRequest, PipelineConfig, QuantEngine, QuantPipeline, Server, ServerConfig};
+use gptq_rs::data::{load_tasks, CorpusFile};
+use gptq_rs::eval::{eval_choice, eval_cloze, perplexity};
+use gptq_rs::model::{Checkpoint, CpuModel, QuantizedCheckpoint};
+use gptq_rs::runtime::{Manifest, Runtime};
+use gptq_rs::util::cli::Args;
+use gptq_rs::Result;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const USAGE: &str = "usage: gptq [--artifacts DIR] <info|quantize|eval|serve> [flags]
+  quantize --size S --bits B [--groupsize G] [--engine rust|xla|rtn|obq] [--calib-segments N] [--out F]
+  eval     --size S [--quantized F] [--segments N]
+  serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]";
+
+fn parse_engine(s: &str) -> Result<QuantEngine> {
+    Ok(match s {
+        "rust" => QuantEngine::GptqRust,
+        "xla" => QuantEngine::GptqXla,
+        "rtn" => QuantEngine::Rtn,
+        "obq" => QuantEngine::Obq,
+        other => anyhow::bail!("unknown engine {other} (rust|xla|rtn|obq)"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&artifacts),
+        "quantize" => quantize(&artifacts, &args),
+        "eval" => eval(&artifacts, &args),
+        "serve" => serve(&artifacts, &args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(artifacts: &Path) -> Result<()> {
+    let m = Manifest::load(artifacts)?;
+    println!("manifest v{} — seq_len {}, eval_batch {}", m.version, m.seq_len, m.eval_batch);
+    for (name, entry) in &m.models {
+        println!(
+            "  model {name:8} d={:4} L={} heads={} ff={:4}  {:>10} params",
+            entry.config.d_model, entry.config.n_layers, entry.config.n_heads, entry.config.d_ff, entry.n_params
+        );
+    }
+    println!("  {} HLO artifacts", m.artifacts.len());
+    Ok(())
+}
+
+fn quantize(artifacts: &Path, args: &Args) -> Result<()> {
+    let size = args.str_or("size", "small");
+    let bits = args.u32_or("bits", 4);
+    let groupsize = args.usize_or("groupsize", 0);
+    let engine_s = args.str_or("engine", "rust");
+    let mut rt = Runtime::from_artifacts_dir(artifacts)?;
+    let entry = rt.manifest.model(&size)?.clone();
+    let mut ckpt = Checkpoint::load(artifacts, &entry)?;
+    let calib = CorpusFile::load(&rt.manifest.corpus_path("calib.bin"))?;
+    let mut cfg = PipelineConfig::new(bits, parse_engine(&engine_s)?).with_groupsize(groupsize);
+    cfg.n_calib_segments = args.usize_or("calib-segments", 64);
+    let mut pipeline = QuantPipeline::new(&mut rt, &size, cfg);
+    let report = pipeline.run(&mut ckpt, &calib)?;
+    println!(
+        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}) in {:.2}s; mean layer sq-err {:.4e}",
+        report.total_s, report.mean_layer_error
+    );
+    for s in &report.stats {
+        println!("  layer {:2} {:5}  err {:.4e}  {:.1} ms", s.layer, s.name, s.sq_error, s.quant_ms);
+    }
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{size}_{bits}bit.ckpt")));
+    report.checkpoint.save(&out)?;
+    let n_weights = entry.config.quantizable_bytes_f32() / 4;
+    let eff_bits = report.checkpoint.packed_bytes() as f64 * 8.0 / n_weights as f64;
+    println!(
+        "saved {} ({} packed bytes, {eff_bits:.2} effective bits/weight)",
+        out.display(),
+        report.checkpoint.packed_bytes(),
+    );
+    Ok(())
+}
+
+fn eval(artifacts: &Path, args: &Args) -> Result<()> {
+    let size = args.str_or("size", "small");
+    let segments = args.usize_or("segments", 24);
+    let m = Manifest::load(artifacts)?;
+    let entry = m.model(&size)?.clone();
+    let mut model = build_model(artifacts, &entry, args.get("quantized").map(Path::new))?;
+    for style in ["narrative", "markup", "crawl"] {
+        let corpus = CorpusFile::load(&m.corpus_path(&format!("{style}_test.bin")))?;
+        let ppl = perplexity(&mut model, &corpus, m.seq_len, segments);
+        println!("{style:10} ppl {ppl:8.3}");
+    }
+    for (task, kind) in [("cloze", "cloze"), ("mcq", "choice"), ("binary", "choice")] {
+        let items = load_tasks(&m.corpus_path(&format!("tasks/{task}.jsonl")))?;
+        let acc = if kind == "cloze" {
+            eval_cloze(&mut model, &items, 200)
+        } else {
+            eval_choice(&mut model, &items, 200)
+        };
+        println!("{task:10} acc {:6.2}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn serve(artifacts: &Path, args: &Args) -> Result<()> {
+    let size = args.str_or("size", "small");
+    let workers = args.usize_or("workers", 1);
+    let requests = args.usize_or("requests", 32);
+    let gen_tokens = args.usize_or("gen-tokens", 64);
+    let m = Manifest::load(artifacts)?;
+    let entry = m.model(&size)?.clone();
+    let corpus = CorpusFile::load(&m.corpus_path("crawl_test.bin"))?;
+    let quantized = args.get("quantized").map(PathBuf::from);
+    let artifacts = artifacts.to_path_buf();
+    let cfg = ServerConfig { n_workers: workers, max_batch: 4, linger: Duration::from_millis(1) };
+    let mut server = Server::start(cfg, |_| {
+        build_model(&artifacts, &entry, quantized.as_deref()).expect("model build")
+    });
+    for i in 0..requests {
+        let start = (i * 131) % (corpus.len() - 32);
+        server.submit(GenRequest {
+            id: i as u64,
+            prompt: corpus.bytes[start..start + 16].to_vec(),
+            max_new_tokens: gen_tokens,
+        });
+    }
+    let responses = server.collect(requests);
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let stats = server.shutdown();
+    println!("served {requests} requests / {total_tokens} tokens on {workers} worker(s)");
+    println!("per-token latency: {}", stats.summary());
+    Ok(())
+}
+
+fn build_model(
+    artifacts: &Path,
+    entry: &gptq_rs::runtime::ModelEntry,
+    quantized: Option<&Path>,
+) -> Result<CpuModel> {
+    match quantized {
+        Some(path) => Ok(CpuModel::from_quantized(&QuantizedCheckpoint::load(path)?)),
+        None => Ok(CpuModel::from_checkpoint(&Checkpoint::load(artifacts, entry)?)),
+    }
+}

@@ -1,0 +1,373 @@
+//! Checkpoint formats.
+//!
+//! * [`Checkpoint`] — the dense f32 model as trained by the build-time
+//!   Python path: raw little-endian f32 blob + the manifest tensor index.
+//! * [`QuantizedCheckpoint`] — the pipeline's output: packed b-bit codes +
+//!   grids for every quantizable linear, fp tensors for everything else
+//!   (embeddings / LayerNorms / biases stay full precision, as in the
+//!   paper). Serialized as a JSON header + raw blobs in one file.
+
+use crate::model::config::QUANT_LINEARS;
+use crate::model::{ModelConfig, Tensor};
+use crate::quant::PackedMatrix;
+use crate::runtime::ModelEntry;
+use crate::util::Json;
+use crate::Result;
+use anyhow::{anyhow, ensure, Context};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Dense f32 checkpoint (name → tensor).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    /// Load from the raw weights blob described by a manifest model entry.
+    pub fn load(artifacts_dir: &Path, entry: &ModelEntry) -> Result<Self> {
+        let blob = std::fs::read(artifacts_dir.join(&entry.weights))?;
+        let mut tensors = BTreeMap::new();
+        for t in &entry.tensors {
+            let bytes = &blob[t.offset..t.offset + t.len * 4];
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.insert(t.name.clone(), Tensor::new(data, t.shape.clone()));
+        }
+        Ok(Self { config: entry.config.clone(), tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("tensor {name} missing from checkpoint"))
+    }
+
+    pub fn block_tensor(&self, layer: usize, name: &str) -> &Tensor {
+        self.get(&format!("blocks.{layer}.{name}"))
+    }
+
+    /// Replace a block linear's weights (used by the pipeline to propagate
+    /// quantized weights forward).
+    pub fn set_block_weight(&mut self, layer: usize, name: &str, data: Vec<f32>) {
+        let key = format!("blocks.{layer}.{name}");
+        let t = self.tensors.get_mut(&key).unwrap_or_else(|| panic!("{key} missing"));
+        assert_eq!(t.data.len(), data.len());
+        t.data = data;
+    }
+}
+
+/// Per-layer quantization statistics recorded by the pipeline (the data
+/// behind the Table 1 / ablation rows).
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub layer: usize,
+    pub name: String,
+    pub sq_error: f64,
+    pub quant_ms: f64,
+}
+
+impl LayerStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layer", Json::Num(self.layer as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("sq_error", Json::Num(self.sq_error)),
+            ("quant_ms", Json::Num(self.quant_ms)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            layer: j.get("layer")?.as_usize()?,
+            name: j.get("name")?.as_str()?.to_string(),
+            sq_error: j.get("sq_error")?.as_f64()?,
+            quant_ms: j.get("quant_ms")?.as_f64()?,
+        })
+    }
+}
+
+/// Quantized model: packed linears + the untouched fp tensors.
+#[derive(Debug, Clone)]
+pub struct QuantizedCheckpoint {
+    pub config: ModelConfig,
+    pub bits: u32,
+    pub groupsize: usize,
+    /// `packed["blocks.{l}.{name}"]`
+    pub packed: BTreeMap<String, PackedMatrix>,
+    /// everything that stays fp: embeddings, LN, biases, unembed
+    pub fp: BTreeMap<String, Tensor>,
+    pub stats: Vec<LayerStats>,
+}
+
+struct QHeader {
+    config: ModelConfig,
+    bits: u32,
+    groupsize: usize,
+    packed_meta: Vec<(String, usize, usize, usize, usize, u32)>, // name, drow, dcol, nwords, ngroups, bits
+    fp_meta: Vec<(String, Vec<usize>)>,
+    stats: Vec<LayerStats>,
+}
+
+impl QHeader {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("bits", Json::Num(self.bits as f64)),
+            ("groupsize", Json::Num(self.groupsize as f64)),
+            (
+                "packed_meta",
+                Json::Arr(
+                    self.packed_meta
+                        .iter()
+                        .map(|(n, a, b, c, d, e)| {
+                            Json::Arr(vec![
+                                Json::Str(n.clone()),
+                                Json::Num(*a as f64),
+                                Json::Num(*b as f64),
+                                Json::Num(*c as f64),
+                                Json::Num(*d as f64),
+                                Json::Num(*e as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "fp_meta",
+                Json::Arr(
+                    self.fp_meta
+                        .iter()
+                        .map(|(n, s)| Json::Arr(vec![Json::Str(n.clone()), Json::arr_usize(s)]))
+                        .collect(),
+                ),
+            ),
+            ("stats", Json::Arr(self.stats.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let bad = || anyhow!("malformed checkpoint header");
+        let packed_meta = j
+            .get("packed_meta")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(bad)?
+            .iter()
+            .map(|e| {
+                let a = e.as_arr()?;
+                Some((
+                    a[0].as_str()?.to_string(),
+                    a[1].as_usize()?,
+                    a[2].as_usize()?,
+                    a[3].as_usize()?,
+                    a[4].as_usize()?,
+                    a[5].as_u32()?,
+                ))
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(bad)?;
+        let fp_meta = j
+            .get("fp_meta")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(bad)?
+            .iter()
+            .map(|e| {
+                let a = e.as_arr()?;
+                Some((a[0].as_str()?.to_string(), a[1].usize_vec()?))
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(bad)?;
+        let stats = j
+            .get("stats")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(bad)?
+            .iter()
+            .map(LayerStats::from_json)
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(bad)?;
+        Ok(Self {
+            config: j.get("config").and_then(ModelConfig::from_json).ok_or_else(bad)?,
+            bits: j.get("bits").and_then(|b| b.as_u32()).ok_or_else(bad)?,
+            groupsize: j.get("groupsize").and_then(|g| g.as_usize()).ok_or_else(bad)?,
+            packed_meta,
+            fp_meta,
+            stats,
+        })
+    }
+}
+
+impl QuantizedCheckpoint {
+    /// Build from a dense checkpoint, keeping non-quantized tensors fp.
+    pub fn from_parts(
+        config: ModelConfig,
+        bits: u32,
+        groupsize: usize,
+        packed: BTreeMap<String, PackedMatrix>,
+        source: &Checkpoint,
+        stats: Vec<LayerStats>,
+    ) -> Self {
+        let mut fp = BTreeMap::new();
+        for (name, t) in &source.tensors {
+            if !packed.contains_key(name) {
+                fp.insert(name.clone(), t.clone());
+            }
+        }
+        Self { config, bits, groupsize, packed, fp, stats }
+    }
+
+    /// Total bytes of quantized weight storage (codes + grids), the
+    /// "memory footprint" column of the Table 5 analog.
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.values().map(|p| p.storage_bytes()).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = QHeader {
+            config: self.config.clone(),
+            bits: self.bits,
+            groupsize: self.groupsize,
+            packed_meta: self
+                .packed
+                .iter()
+                .map(|(n, p)| (n.clone(), p.drow, p.dcol, p.nwords, p.ngroups, p.bits))
+                .collect(),
+            fp_meta: self.fp.iter().map(|(n, t)| (n.clone(), t.shape.clone())).collect(),
+            stats: self.stats.clone(),
+        };
+        let hjson = header.to_json().to_string().into_bytes();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"GPTQCKPT")?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for (_, p) in &self.packed {
+            for w in &p.words {
+                f.write_all(&w.to_le_bytes())?;
+            }
+            for s in p.scales.iter().chain(&p.zeros) {
+                f.write_all(&s.to_le_bytes())?;
+            }
+        }
+        for (_, t) in &self.fp {
+            for v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        ensure!(&magic == b"GPTQCKPT", "bad checkpoint magic");
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hjson = vec![0u8; hlen];
+        f.read_exact(&mut hjson)?;
+        let htext = std::str::from_utf8(&hjson).context("checkpoint header utf8")?;
+        let header = QHeader::from_json(&Json::parse(htext).map_err(|e| anyhow!("header: {e}"))?)?;
+
+        let read_u32s = |n: usize, f: &mut dyn Read| -> Result<Vec<u32>> {
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            Ok(buf.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+        };
+        let mut packed = BTreeMap::new();
+        for (name, drow, dcol, nwords, ngroups, bits) in &header.packed_meta {
+            let words = read_u32s(drow * nwords, &mut f)?;
+            let grids = read_u32s(2 * drow * ngroups, &mut f)?;
+            let scales: Vec<f32> = grids[..drow * ngroups].iter().map(|&u| f32::from_bits(u)).collect();
+            let zeros: Vec<f32> = grids[drow * ngroups..].iter().map(|&u| f32::from_bits(u)).collect();
+            packed.insert(
+                name.clone(),
+                PackedMatrix {
+                    words,
+                    scales,
+                    zeros,
+                    drow: *drow,
+                    dcol: *dcol,
+                    nwords: *nwords,
+                    ngroups: *ngroups,
+                    bits: *bits,
+                },
+            );
+        }
+        let mut fp = BTreeMap::new();
+        for (name, shape) in &header.fp_meta {
+            let n: usize = shape.iter().product();
+            let raw = read_u32s(n, &mut f)?;
+            let data: Vec<f32> = raw.iter().map(|&u| f32::from_bits(u)).collect();
+            fp.insert(name.clone(), Tensor::new(data, shape.clone()));
+        }
+        Ok(Self {
+            config: header.config,
+            bits: header.bits,
+            groupsize: header.groupsize,
+            packed,
+            fp,
+            stats: header.stats,
+        })
+    }
+}
+
+/// Keys of the quantizable linears of a config, in pipeline order.
+pub fn quantizable_keys(config: &ModelConfig) -> Vec<String> {
+    let mut keys = Vec::new();
+    for l in 0..config.n_layers {
+        for name in QUANT_LINEARS {
+            keys.push(format!("blocks.{l}.{name}"));
+        }
+    }
+    keys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+
+    fn tiny_config() -> ModelConfig {
+        ModelConfig { d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16, vocab: 16, max_seq: 8 }
+    }
+
+    #[test]
+    fn quantized_checkpoint_roundtrip() {
+        let cfg = tiny_config();
+        let w: Vec<f32> = (0..24 * 8).map(|i| (i as f32).cos()).collect();
+        let r = rtn_quantize(&w, 24, 8, 3, 0);
+        let mut packed = BTreeMap::new();
+        packed.insert("blocks.0.wqkv".to_string(), PackedMatrix::from_result(&r));
+        let mut fp = BTreeMap::new();
+        fp.insert("embed".to_string(), Tensor::new(vec![0.5; 16 * 8], vec![16, 8]));
+        let q = QuantizedCheckpoint {
+            config: cfg,
+            bits: 3,
+            groupsize: 0,
+            packed,
+            fp,
+            stats: vec![LayerStats { layer: 0, name: "wqkv".into(), sq_error: 0.1, quant_ms: 1.0 }],
+        };
+        let tmp = std::env::temp_dir().join("gptq_test_ckpt.bin");
+        q.save(&tmp).unwrap();
+        let q2 = QuantizedCheckpoint::load(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(q2.bits, 3);
+        assert_eq!(q2.packed["blocks.0.wqkv"].words, q.packed["blocks.0.wqkv"].words);
+        assert_eq!(q2.packed["blocks.0.wqkv"].scales, q.packed["blocks.0.wqkv"].scales);
+        assert_eq!(q2.fp["embed"].data, q.fp["embed"].data);
+        assert_eq!(q2.stats.len(), 1);
+        // dequantization identical across the roundtrip
+        assert_eq!(q2.packed["blocks.0.wqkv"].dequantize(), q.packed["blocks.0.wqkv"].dequantize());
+    }
+
+    #[test]
+    fn quantizable_keys_order() {
+        let keys = quantizable_keys(&tiny_config());
+        assert_eq!(keys, vec!["blocks.0.wqkv", "blocks.0.wo", "blocks.0.wup", "blocks.0.wdn"]);
+    }
+}

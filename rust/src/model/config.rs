@@ -1,0 +1,109 @@
+//! Model configuration — mirrors `python/compile/model.py::ModelConfig`
+//! and is deserialized from `artifacts/manifest.json`.
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+/// The four quantizable linears per block, in pipeline order.
+pub const QUANT_LINEARS: [&str; 4] = ["wqkv", "wo", "wup", "wdn"];
+
+impl ModelConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("max_seq", Json::Num(self.max_seq as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// (out, in) shape of each quantizable linear.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let (d, ff) = (self.d_model, self.d_ff);
+        match name {
+            "wqkv" => (3 * d, d),
+            "wo" => (d, d),
+            "wup" => (ff, d),
+            "wdn" => (d, ff),
+            other => panic!("unknown linear {other}"),
+        }
+    }
+
+    /// Total parameter count (must equal the python side's n_params()).
+    pub fn n_params(&self) -> usize {
+        let mut n = 2 * self.vocab * self.d_model + self.max_seq * self.d_model + 2 * self.d_model;
+        for _ in 0..self.n_layers {
+            n += 4 * self.d_model; // two LayerNorms
+            for l in QUANT_LINEARS {
+                let (o, i) = self.linear_shape(l);
+                n += o * i + o;
+            }
+        }
+        n
+    }
+
+    /// f32 bytes of the quantizable weights only (the Table 5 memory story
+    /// excludes embeddings, which stay fp).
+    pub fn quantizable_bytes_f32(&self) -> usize {
+        self.n_layers
+            * QUANT_LINEARS
+                .iter()
+                .map(|l| {
+                    let (o, i) = self.linear_shape(l);
+                    o * i * 4
+                })
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { d_model: 64, n_layers: 2, n_heads: 2, d_ff: 256, vocab: 256, max_seq: 128 }
+    }
+
+    #[test]
+    fn shapes() {
+        let c = cfg();
+        assert_eq!(c.linear_shape("wqkv"), (192, 64));
+        assert_eq!(c.linear_shape("wdn"), (64, 256));
+        assert_eq!(c.head_dim(), 32);
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let c = cfg();
+        // embed+unembed 2*256*64, pos 128*64, lnf 2*64
+        let expected_base = 2 * 256 * 64 + 128 * 64 + 2 * 64;
+        let per_block = 4 * 64 + (192 * 64 + 192) + (64 * 64 + 64) + (256 * 64 + 256) + (64 * 256 + 64);
+        assert_eq!(c.n_params(), expected_base + 2 * per_block);
+    }
+}

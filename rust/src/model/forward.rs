@@ -1,0 +1,497 @@
+//! Pure-Rust transformer forward — the serving hot path (token-by-token
+//! decode with a KV cache) and the reference evaluation path.
+//!
+//! Mirrors `python/compile/model.py` exactly (pre-norm blocks, fused qkv,
+//! GELU-tanh MLP, weights in (out, in) layout applied as W·x); parity with
+//! the XLA `lm_fwd_*` artifacts is asserted by the integration tests.
+//!
+//! Linear weights are either dense f32 (the FP16-baseline analog) or
+//! [`PackedMatrix`] (the quantized model) — the ONLY difference between
+//! baseline and quantized serving is which matvec kernel runs, exactly the
+//! paper's deployment story.
+
+use crate::model::checkpoint::{Checkpoint, QuantizedCheckpoint};
+use crate::model::matvec::{matvec_f32_bias, matvec_packed_bias};
+use crate::model::ModelConfig;
+use crate::quant::PackedMatrix;
+
+/// A linear layer's weights on the decode path.
+#[derive(Debug, Clone)]
+pub enum LinearWeight {
+    Dense { w: Vec<f32>, drow: usize, dcol: usize },
+    Packed(PackedMatrix),
+}
+
+impl LinearWeight {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearWeight::Dense { drow, .. } => *drow,
+            LinearWeight::Packed(p) => p.drow,
+        }
+    }
+
+    /// y = W x + b.
+    pub fn apply(&self, x: &[f32], b: &[f32], y: &mut [f32]) {
+        match self {
+            LinearWeight::Dense { w, drow, dcol } => matvec_f32_bias(w, x, b, *drow, *dcol, y),
+            LinearWeight::Packed(p) => matvec_packed_bias(p, x, b, y),
+        }
+    }
+
+    /// Weight bytes touched per matvec (Table 5 traffic accounting).
+    pub fn traffic_bytes(&self) -> usize {
+        match self {
+            LinearWeight::Dense { w, .. } => w.len() * 4,
+            LinearWeight::Packed(p) => p.storage_bytes(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct BlockWeights {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    wqkv: LinearWeight,
+    wqkv_b: Vec<f32>,
+    wo: LinearWeight,
+    wo_b: Vec<f32>,
+    wup: LinearWeight,
+    wup_b: Vec<f32>,
+    wdn: LinearWeight,
+    wdn_b: Vec<f32>,
+}
+
+/// Per-sequence KV cache: `k[layer]`/`v[layer]` hold (max_seq × d_model)
+/// rows (head-major within a row), `len` positions filled.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    pub len: usize,
+    max_seq: usize,
+    d_model: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            k: (0..cfg.n_layers).map(|_| vec![0.0; cfg.max_seq * cfg.d_model]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; cfg.max_seq * cfg.d_model]).collect(),
+            len: 0,
+            max_seq: cfg.max_seq,
+            d_model: cfg.d_model,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes held (the "+9 GB of keys and values" accounting of §Practical
+    /// Speedups, at our scale).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * self.max_seq * self.d_model * 4
+    }
+}
+
+/// CPU model instance (dense or packed weights).
+pub struct CpuModel {
+    pub config: ModelConfig,
+    embed: Vec<f32>,   // vocab × d
+    pos: Vec<f32>,     // max_seq × d
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    unembed: Vec<f32>, // vocab × d
+    blocks: Vec<BlockWeights>,
+    // scratch buffers (decode is single-threaded per model instance)
+    scratch: Scratch,
+}
+
+struct Scratch {
+    x: Vec<f32>,
+    x1: Vec<f32>,
+    qkv: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    hidden: Vec<f32>,
+    logits: Vec<f32>,
+    att_w: Vec<f32>,
+}
+
+fn layer_norm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mu: f32 = x.iter().sum::<f32>() / n;
+    let var: f32 = x.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mu) * inv * g[i] + b[i];
+    }
+}
+
+/// jax.nn.gelu default (tanh approximation) — must match the L2 graph.
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+impl CpuModel {
+    /// Build with dense f32 weights (the FP16-baseline analog).
+    pub fn from_checkpoint(ckpt: &Checkpoint) -> Self {
+        let cfg = ckpt.config.clone();
+        let blocks = (0..cfg.n_layers)
+            .map(|l| {
+                let lin = |name: &str| {
+                    let t = ckpt.block_tensor(l, name);
+                    let (drow, dcol) = t.dims2();
+                    LinearWeight::Dense { w: t.data.clone(), drow, dcol }
+                };
+                BlockWeights {
+                    ln1_g: ckpt.block_tensor(l, "ln1_g").data.clone(),
+                    ln1_b: ckpt.block_tensor(l, "ln1_b").data.clone(),
+                    ln2_g: ckpt.block_tensor(l, "ln2_g").data.clone(),
+                    ln2_b: ckpt.block_tensor(l, "ln2_b").data.clone(),
+                    wqkv: lin("wqkv"),
+                    wqkv_b: ckpt.block_tensor(l, "wqkv_b").data.clone(),
+                    wo: lin("wo"),
+                    wo_b: ckpt.block_tensor(l, "wo_b").data.clone(),
+                    wup: lin("wup"),
+                    wup_b: ckpt.block_tensor(l, "wup_b").data.clone(),
+                    wdn: lin("wdn"),
+                    wdn_b: ckpt.block_tensor(l, "wdn_b").data.clone(),
+                }
+            })
+            .collect();
+        Self::assemble(
+            cfg,
+            ckpt.get("embed").data.clone(),
+            ckpt.get("pos").data.clone(),
+            ckpt.get("lnf_g").data.clone(),
+            ckpt.get("lnf_b").data.clone(),
+            ckpt.get("unembed").data.clone(),
+            blocks,
+        )
+    }
+
+    /// Build with packed quantized linears (the GPTQ-deployed model).
+    pub fn from_quantized(q: &QuantizedCheckpoint) -> Self {
+        let cfg = q.config.clone();
+        let blocks = (0..cfg.n_layers)
+            .map(|l| {
+                let lin = |name: &str| {
+                    LinearWeight::Packed(q.packed[&format!("blocks.{l}.{name}")].clone())
+                };
+                let fp = |name: &str| q.fp[&format!("blocks.{l}.{name}")].data.clone();
+                BlockWeights {
+                    ln1_g: fp("ln1_g"),
+                    ln1_b: fp("ln1_b"),
+                    ln2_g: fp("ln2_g"),
+                    ln2_b: fp("ln2_b"),
+                    wqkv: lin("wqkv"),
+                    wqkv_b: fp("wqkv_b"),
+                    wo: lin("wo"),
+                    wo_b: fp("wo_b"),
+                    wup: lin("wup"),
+                    wup_b: fp("wup_b"),
+                    wdn: lin("wdn"),
+                    wdn_b: fp("wdn_b"),
+                }
+            })
+            .collect();
+        Self::assemble(
+            cfg,
+            q.fp["embed"].data.clone(),
+            q.fp["pos"].data.clone(),
+            q.fp["lnf_g"].data.clone(),
+            q.fp["lnf_b"].data.clone(),
+            q.fp["unembed"].data.clone(),
+            blocks,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        config: ModelConfig,
+        embed: Vec<f32>,
+        pos: Vec<f32>,
+        lnf_g: Vec<f32>,
+        lnf_b: Vec<f32>,
+        unembed: Vec<f32>,
+        blocks: Vec<BlockWeights>,
+    ) -> Self {
+        let d = config.d_model;
+        let scratch = Scratch {
+            x: vec![0.0; d],
+            x1: vec![0.0; d],
+            qkv: vec![0.0; 3 * d],
+            attn: vec![0.0; d],
+            proj: vec![0.0; d.max(config.d_ff)],
+            hidden: vec![0.0; config.d_ff],
+            logits: vec![0.0; config.vocab],
+            att_w: vec![0.0; config.max_seq],
+        };
+        Self { config, embed, pos, lnf_g, lnf_b, unembed, blocks, scratch }
+    }
+
+    /// Total weight bytes the decode path touches per token (all linears) —
+    /// the bandwidth model behind the paper's Table 5.
+    pub fn traffic_bytes_per_token(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| {
+                b.wqkv.traffic_bytes() + b.wo.traffic_bytes() + b.wup.traffic_bytes() + b.wdn.traffic_bytes()
+            })
+            .sum()
+    }
+
+    /// One decode step: consume `token` at position `cache.len`, return the
+    /// next-token logits. This is the paper's generative-inference loop.
+    pub fn decode_step(&mut self, cache: &mut KvCache, token: u8) -> &[f32] {
+        let cfg = &self.config;
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let pos = cache.len;
+        assert!(pos < cfg.max_seq, "sequence overflow");
+        let s = &mut self.scratch;
+
+        // embedding + positional
+        for i in 0..d {
+            s.x[i] = self.embed[token as usize * d + i] + self.pos[pos * d + i];
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            // attention
+            layer_norm(&s.x, &blk.ln1_g, &blk.ln1_b, &mut s.x1);
+            blk.wqkv.apply(&s.x1, &blk.wqkv_b, &mut s.qkv);
+            let (q, kv) = s.qkv.split_at(d);
+            let (k_new, v_new) = kv.split_at(d);
+            cache.k[l][pos * d..(pos + 1) * d].copy_from_slice(k_new);
+            cache.v[l][pos * d..(pos + 1) * d].copy_from_slice(v_new);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for head in 0..h {
+                let qh = &q[head * hd..(head + 1) * hd];
+                // scores over positions 0..=pos
+                let att = &mut s.att_w[..=pos];
+                let mut maxv = f32::NEG_INFINITY;
+                for (p, av) in att.iter_mut().enumerate() {
+                    let kh = &cache.k[l][p * d + head * hd..p * d + (head + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for i in 0..hd {
+                        dot += qh[i] * kh[i];
+                    }
+                    *av = dot * scale;
+                    maxv = maxv.max(*av);
+                }
+                let mut denom = 0.0f32;
+                for av in att.iter_mut() {
+                    *av = (*av - maxv).exp();
+                    denom += *av;
+                }
+                let out = &mut s.attn[head * hd..(head + 1) * hd];
+                out.fill(0.0);
+                for (p, &av) in att.iter().enumerate() {
+                    let wgt = av / denom;
+                    let vh = &cache.v[l][p * d + head * hd..p * d + (head + 1) * hd];
+                    for i in 0..hd {
+                        out[i] += wgt * vh[i];
+                    }
+                }
+            }
+            blk.wo.apply(&s.attn, &blk.wo_b, &mut s.proj[..d]);
+            for i in 0..d {
+                s.x[i] += s.proj[i];
+            }
+            // MLP
+            layer_norm(&s.x, &blk.ln2_g, &blk.ln2_b, &mut s.x1);
+            blk.wup.apply(&s.x1, &blk.wup_b, &mut s.hidden);
+            for v in s.hidden.iter_mut() {
+                *v = gelu(*v);
+            }
+            blk.wdn.apply(&s.hidden, &blk.wdn_b, &mut s.proj[..d]);
+            for i in 0..d {
+                s.x[i] += s.proj[i];
+            }
+        }
+
+        layer_norm(&s.x, &self.lnf_g, &self.lnf_b, &mut s.x1);
+        // unembed: vocab × d
+        for v in 0..cfg.vocab {
+            let row = &self.unembed[v * d..(v + 1) * d];
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += row[i] * s.x1[i];
+            }
+            s.logits[v] = acc;
+        }
+        cache.len += 1;
+        &s.logits
+    }
+
+    /// Next-token logits for every position of `tokens` (teacher-forced) —
+    /// the perplexity-evaluation path. Returns (seq × vocab) row-major.
+    pub fn logits_all(&mut self, tokens: &[u8]) -> Vec<f32> {
+        let vocab = self.config.vocab;
+        let mut cache = KvCache::new(&self.config);
+        let mut out = Vec::with_capacity(tokens.len() * vocab);
+        for &t in tokens {
+            let logits = self.decode_step(&mut cache, t);
+            out.extend_from_slice(logits);
+        }
+        out
+    }
+}
+
+/// A deterministic random tiny checkpoint for tests across the crate.
+#[cfg(test)]
+pub(crate) fn tiny_checkpoint(seed: u64) -> Checkpoint {
+    tests_support::tiny_checkpoint(seed)
+}
+
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+    use crate::model::checkpoint::Checkpoint;
+    use crate::model::config::QUANT_LINEARS;
+    use crate::model::Tensor;
+    use std::collections::BTreeMap;
+
+    pub(crate) fn tiny_checkpoint(seed: u64) -> Checkpoint {
+        let cfg = ModelConfig { d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, vocab: 32, max_seq: 16 };
+        let mut s = seed;
+        let mut lcg = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32 * 0.3
+        };
+        let mut tensors = BTreeMap::new();
+        let mut add = |name: &str, shape: Vec<usize>, tensors: &mut BTreeMap<String, Tensor>, f: &mut dyn FnMut() -> f32| {
+            let n: usize = shape.iter().product();
+            tensors.insert(name.to_string(), Tensor::new((0..n).map(|_| f()).collect(), shape));
+        };
+        add("embed", vec![32, 16], &mut tensors, &mut lcg);
+        add("pos", vec![16, 16], &mut tensors, &mut lcg);
+        add("unembed", vec![32, 16], &mut tensors, &mut lcg);
+        tensors.insert("lnf_g".into(), Tensor::new(vec![1.0; 16], vec![16]));
+        tensors.insert("lnf_b".into(), Tensor::new(vec![0.0; 16], vec![16]));
+        for l in 0..2 {
+            for nm in ["ln1_g", "ln2_g"] {
+                tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![1.0; 16], vec![16]));
+            }
+            for nm in ["ln1_b", "ln2_b"] {
+                tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![0.0; 16], vec![16]));
+            }
+            for nm in QUANT_LINEARS {
+                let (o, i) = cfg.linear_shape(nm);
+                add(&format!("blocks.{l}.{nm}"), vec![o, i], &mut tensors, &mut lcg);
+                tensors.insert(format!("blocks.{l}.{nm}_b"), Tensor::new(vec![0.0; o], vec![o]));
+            }
+        }
+        Checkpoint { config: cfg, tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::tests_support::tiny_checkpoint;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn decode_deterministic_and_finite() {
+        let ckpt = tiny_checkpoint(1);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let mut cache = KvCache::new(&m.config);
+        let l1 = m.decode_step(&mut cache, 5).to_vec();
+        assert!(l1.iter().all(|v| v.is_finite()));
+        let mut m2 = CpuModel::from_checkpoint(&ckpt);
+        let mut cache2 = KvCache::new(&m2.config);
+        let l2 = m2.decode_step(&mut cache2, 5).to_vec();
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn kv_cache_consistent_with_fresh_replay() {
+        // decode(t0, t1, t2) incrementally == logits_all over the prefix
+        let ckpt = tiny_checkpoint(2);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let tokens = [3u8, 14, 15, 9, 2];
+        let all = m.logits_all(&tokens);
+        let mut cache = KvCache::new(&m.config);
+        for (i, &t) in tokens.iter().enumerate() {
+            let step = m.decode_step(&mut cache, t).to_vec();
+            let want = &all[i * 32..(i + 1) * 32];
+            for (a, b) in step.iter().zip(want) {
+                assert!((a - b).abs() < 1e-5, "pos {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn causality_past_logits_stable() {
+        let ckpt = tiny_checkpoint(3);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let a = m.logits_all(&[1, 2, 3, 4]);
+        let b = m.logits_all(&[1, 2, 3, 31]);
+        // positions 0..3 identical (causal); position 3 differs
+        for i in 0..3 * 32 {
+            assert!((a[i] - b[i]).abs() < 1e-6);
+        }
+        let last_a = &a[3 * 32..];
+        let last_b = &b[3 * 32..];
+        assert!(last_a.iter().zip(last_b).any(|(x, y)| (x - y).abs() > 1e-4));
+    }
+
+    #[test]
+    fn packed_model_close_to_dense_dequant() {
+        use crate::model::checkpoint::{quantizable_keys, QuantizedCheckpoint};
+        use crate::quant::{rtn_quantize, PackedMatrix};
+        let ckpt = tiny_checkpoint(4);
+        let mut packed = BTreeMap::new();
+        let mut dense = ckpt.clone();
+        for key in quantizable_keys(&ckpt.config) {
+            let t = ckpt.get(&key);
+            let (o, i) = t.dims2();
+            let r = rtn_quantize(&t.data, o, i, 4, 0);
+            packed.insert(key.clone(), PackedMatrix::from_result(&r));
+            dense.tensors.get_mut(&key).unwrap().data = r.wq;
+        }
+        let q = QuantizedCheckpoint::from_parts(ckpt.config.clone(), 4, 0, packed, &ckpt, vec![]);
+        let mut qm = CpuModel::from_quantized(&q);
+        let mut dm = CpuModel::from_checkpoint(&dense);
+        let tokens = [7u8, 21, 0, 13];
+        let lq = qm.logits_all(&tokens);
+        let ld = dm.logits_all(&tokens);
+        for (a, b) in lq.iter().zip(&ld) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn traffic_shrinks_when_packed() {
+        use crate::model::checkpoint::{quantizable_keys, QuantizedCheckpoint};
+        use crate::quant::{rtn_quantize, PackedMatrix};
+        let ckpt = tiny_checkpoint(5);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let dense_traffic = m.traffic_bytes_per_token();
+        let mut packed = BTreeMap::new();
+        for key in quantizable_keys(&ckpt.config) {
+            let t = ckpt.get(&key);
+            let (o, i) = t.dims2();
+            packed.insert(key.clone(), PackedMatrix::from_result(&rtn_quantize(&t.data, o, i, 3, 0)));
+        }
+        let q = QuantizedCheckpoint::from_parts(ckpt.config.clone(), 3, 0, packed, &ckpt, vec![]);
+        let mut qm = CpuModel::from_quantized(&q);
+        // tiny layers carry proportionally large per-row grid overhead;
+        // still expect >3x traffic reduction at 3-bit even here (real
+        // model shapes reach ~10x — see the matvec bench)
+        let qt = qm.traffic_bytes_per_token();
+        assert!(qt * 3 < dense_traffic, "packed {qt} vs dense {dense_traffic}");
+        // silence unused-mut warnings via actual decode
+        let mut c1 = KvCache::new(&m.config);
+        let mut c2 = KvCache::new(&qm.config);
+        m.decode_step(&mut c1, 1);
+        qm.decode_step(&mut c2, 1);
+    }
+}

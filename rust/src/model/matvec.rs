@@ -1,0 +1,304 @@
+//! The serving hot path: matrix-vector products.
+//!
+//! Generative decode at batch 1 reduces to one matvec per linear layer;
+//! the paper's observation is that these are memory-bandwidth-bound, so
+//! keeping weights packed at 2–4 bits and dequantizing in registers wins
+//! roughly (32 / effective-bits)× on weight traffic. [`matvec_f32`] is the
+//! FP16-baseline analog, [`matvec_packed`] the CUDA-kernel analog (and the
+//! Rust twin of the L1 `packmatvec.py` Pallas kernel).
+//!
+//! §Perf notes (see EXPERIMENTS.md §Perf for measurements): the packed
+//! inner loop decodes one u32 word at a time with compile-time-known field
+//! counts (monomorphized per bit width), accumulates `Σ code·x` and `Σ x`
+//! separately per group, and applies scale/zero once per group:
+//! `y += s·(Σ code·x) − s·z·(Σ x)` — no per-element multiply by the grid.
+
+use crate::quant::pack::PackedMatrix;
+
+/// y = W x for dense row-major W (drow × dcol). 4-way unrolled dot.
+pub fn matvec_f32(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
+    assert_eq!(w.len(), drow * dcol);
+    assert_eq!(x.len(), dcol);
+    assert_eq!(y.len(), drow);
+    for (r, yr) in y.iter_mut().enumerate() {
+        let row = &w[r * dcol..(r + 1) * dcol];
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut acc2 = 0.0f32;
+        let mut acc3 = 0.0f32;
+        let chunks = dcol / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc0 += row[i] * x[i];
+            acc1 += row[i + 1] * x[i + 1];
+            acc2 += row[i + 2] * x[i + 2];
+            acc3 += row[i + 3] * x[i + 3];
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        for i in chunks * 4..dcol {
+            acc += row[i] * x[i];
+        }
+        *yr = acc;
+    }
+}
+
+/// y = W x + b (dense), the convenience used by the dense forward.
+pub fn matvec_f32_bias(w: &[f32], x: &[f32], b: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
+    matvec_f32(w, x, drow, dcol, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// General (unaligned) packed row dot — handles any dcol/group layout.
+/// The aligned fast path below is what real shapes hit.
+#[inline(always)]
+fn dot_packed_row_general<const BITS: u32>(
+    words: &[u32],
+    x: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    dcol: usize,
+    group: usize,
+) -> f32 {
+    let cpw = (32 / BITS) as usize;
+    let mask = (1u32 << BITS) - 1;
+    let mut y = 0.0f32;
+    let mut col = 0usize;
+    let mut gi = 0usize;
+    // per-group partial sums: Σ code·x and Σ x
+    let mut acc_cx = 0.0f32;
+    let mut acc_x = 0.0f32;
+    let mut in_group = 0usize;
+    for &w in words {
+        let mut wbits = w;
+        let fields = cpw.min(dcol - col);
+        for _ in 0..fields {
+            let code = (wbits & mask) as f32;
+            wbits >>= BITS;
+            let xv = unsafe { *x.get_unchecked(col) };
+            acc_cx += code * xv;
+            acc_x += xv;
+            col += 1;
+            in_group += 1;
+            if in_group == group {
+                let s = unsafe { *scales.get_unchecked(gi) };
+                let z = unsafe { *zeros.get_unchecked(gi) };
+                y += s * acc_cx - s * z * acc_x;
+                acc_cx = 0.0;
+                acc_x = 0.0;
+                in_group = 0;
+                gi += 1;
+            }
+        }
+        if col == dcol {
+            break;
+        }
+    }
+    if in_group > 0 {
+        let s = scales[gi];
+        let z = zeros[gi];
+        y += s * acc_cx - s * z * acc_x;
+    }
+    y
+}
+
+/// Aligned fast path: whole words only, group size a multiple of the
+/// codes-per-word. §Perf design (see EXPERIMENTS.md §Perf):
+/// * Σx per group is ROW-INDEPENDENT — precomputed once per matvec in
+///   `xsum` and folded in as `−s·z·Σx`, halving the per-element FMAs;
+/// * each u32 decodes into a fixed-length `[f32; CPW]` array with
+///   independent shift/mask lanes — no loop-carried `wbits >>= B`
+///   dependency, so LLVM vectorizes the decode + dot;
+/// * no per-element group branch: groups advance in whole words.
+#[inline(always)]
+fn dot_packed_row_aligned<const BITS: u32, const CPW: usize>(
+    words: &[u32],
+    x: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    xsum: &[f32],
+    words_per_group: usize,
+) -> f32 {
+    let mask = (1u32 << BITS) - 1;
+    let mut y = 0.0f32;
+    for (gi, gwords) in words.chunks_exact(words_per_group).enumerate() {
+        // CPW persistent accumulators: lane k always uses shift k·BITS, so
+        // the word loop is CPW independent FMA streams (no serial add
+        // chain) — measured ~2x over the per-word horizontal sum.
+        let mut accs = [0.0f32; CPW];
+        let xg = &x[gi * words_per_group * CPW..];
+        for (wi, &w) in gwords.iter().enumerate() {
+            let xs = &xg[wi * CPW..wi * CPW + CPW];
+            for k in 0..CPW {
+                accs[k] += ((w >> (BITS as usize * k)) & mask) as f32 * xs[k];
+            }
+        }
+        let acc: f32 = accs.iter().sum();
+        let s = unsafe { *scales.get_unchecked(gi) };
+        let z = unsafe { *zeros.get_unchecked(gi) };
+        y += s * acc - s * z * unsafe { *xsum.get_unchecked(gi) };
+    }
+    y
+}
+
+/// y = dequant(P) x — the quantized-matrix × fp-vector kernel (the Rust
+/// twin of the L1 `packmatvec` Pallas kernel and the paper's CUDA kernel).
+pub fn matvec_packed(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), p.dcol);
+    assert_eq!(y.len(), p.drow);
+    let group = p.dcol / p.ngroups;
+    let cpw = (32 / p.bits) as usize;
+    // Fast path: either one grid per row (pad x so the ragged last word
+    // multiplies zeros — packed pad fields are 0 by construction), or
+    // grouped with whole-word groups (then dcol is word-aligned too).
+    // Real layer shapes always land here; odd shapes use the general path.
+    let aligned = p.ngroups == 1 || (group % cpw == 0 && p.nwords * cpw == p.dcol);
+    if aligned {
+        let padded_len = p.nwords * cpw;
+        let mut xpad_store;
+        let xeff: &[f32] = if padded_len == p.dcol {
+            x
+        } else {
+            xpad_store = vec![0.0f32; padded_len];
+            xpad_store[..p.dcol].copy_from_slice(x);
+            &xpad_store
+        };
+        // per-group Σx, shared by every row (row-independent term);
+        // pad zeros don't perturb the sums
+        let mut xsum = vec![0.0f32; p.ngroups];
+        for (gi, xs) in x.chunks_exact(group).enumerate() {
+            xsum[gi] = xs.iter().sum();
+        }
+        let wpg = p.nwords / p.ngroups;
+        for r in 0..p.drow {
+            let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+            let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+            let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+            y[r] = match p.bits {
+                2 => dot_packed_row_aligned::<2, 16>(words, xeff, scales, zeros, &xsum, wpg),
+                3 => dot_packed_row_aligned::<3, 10>(words, xeff, scales, zeros, &xsum, wpg),
+                4 => dot_packed_row_aligned::<4, 8>(words, xeff, scales, zeros, &xsum, wpg),
+                b => panic!("unsupported bit width {b}"),
+            };
+        }
+        return;
+    }
+    for r in 0..p.drow {
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        y[r] = match p.bits {
+            2 => dot_packed_row_general::<2>(words, x, scales, zeros, p.dcol, group),
+            3 => dot_packed_row_general::<3>(words, x, scales, zeros, p.dcol, group),
+            4 => dot_packed_row_general::<4>(words, x, scales, zeros, p.dcol, group),
+            b => panic!("unsupported bit width {b}"),
+        };
+    }
+}
+
+/// y = dequant(P) x + b.
+pub fn matvec_packed_bias(p: &PackedMatrix, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_packed(p, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Weight bytes touched by one matvec — the quantity the paper's speedup
+/// model is built on (used by the Table 5 analog to report the traffic
+/// reduction alongside measured latency).
+pub fn weight_traffic_bytes(p: &PackedMatrix) -> usize {
+    p.storage_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        let (drow, dcol) = (7, 13);
+        let w = rand_vec(drow * dcol, 1);
+        let x = rand_vec(dcol, 2);
+        let mut y = vec![0.0; drow];
+        matvec_f32(&w, &x, drow, dcol, &mut y);
+        for r in 0..drow {
+            let want: f32 = (0..dcol).map(|c| w[r * dcol + c] * x[c]).sum();
+            assert!((y[r] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn packed_matches_dense_dequant() {
+        for (bits, g) in [(2u32, 0usize), (3, 0), (4, 0), (3, 16), (4, 8), (2, 32)] {
+            let (drow, dcol) = (16, 64);
+            let w = rand_vec(drow * dcol, bits as u64 * 31 + g as u64);
+            let r = rtn_quantize(&w, drow, dcol, bits, g);
+            let p = PackedMatrix::from_result(&r);
+            let dense = p.dequantize();
+            let x = rand_vec(dcol, 99);
+            let mut yp = vec![0.0; drow];
+            let mut yd = vec![0.0; drow];
+            matvec_packed(&p, &x, &mut yp);
+            matvec_f32(&dense, &x, drow, dcol, &mut yd);
+            for (a, b) in yp.iter().zip(&yd) {
+                assert!((a - b).abs() < 1e-3, "bits={bits} g={g}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_handles_unaligned_dcol() {
+        // dcol not a multiple of codes-per-word exercises the tail path
+        let (drow, dcol) = (4, 37);
+        let w = rand_vec(drow * dcol, 5);
+        let r = rtn_quantize(&w, drow, dcol, 3, 0);
+        let p = PackedMatrix::from_result(&r);
+        let x = rand_vec(dcol, 6);
+        let mut yp = vec![0.0; drow];
+        let mut yd = vec![0.0; drow];
+        matvec_packed(&p, &x, &mut yp);
+        matvec_f32(&p.dequantize(), &x, drow, dcol, &mut yd);
+        for (a, b) in yp.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn bias_variant() {
+        let w = rand_vec(6 * 8, 7);
+        let x = rand_vec(8, 8);
+        let b = rand_vec(6, 9);
+        let mut y1 = vec![0.0; 6];
+        let mut y2 = vec![0.0; 6];
+        matvec_f32(&w, &x, 6, 8, &mut y1);
+        matvec_f32_bias(&w, &x, &b, 6, 8, &mut y2);
+        for i in 0..6 {
+            assert!((y2[i] - y1[i] - b[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn traffic_reduction_ratios() {
+        let w = rand_vec(64 * 640, 11);
+        let f32_bytes = 64 * 640 * 4;
+        for (bits, min_ratio) in [(4u32, 7.0f64), (3, 9.0), (2, 14.0)] {
+            let r = rtn_quantize(&w, 64, 640, bits, 0);
+            let p = PackedMatrix::from_result(&r);
+            let ratio = f32_bytes as f64 / weight_traffic_bytes(&p) as f64;
+            assert!(ratio > min_ratio, "bits={bits}: ratio {ratio}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Model substrate: tensors, configs, checkpoints (dense + packed), and
+//! the pure-Rust transformer forward that is the serving hot path.
+//!
+//! The decode path is matvec-dominated (the paper's observation that
+//! generative inference is memory-bandwidth-bound), so [`matvec`] carries
+//! both the f32 baseline and the packed dequantizing matvec — the Rust
+//! twin of the L1 `packmatvec` Pallas kernel and the analog of the paper's
+//! CUDA kernel (§Practical Speedups).
+
+pub mod checkpoint;
+pub mod config;
+pub mod forward;
+pub mod matvec;
+pub mod tensor;
+
+pub use checkpoint::{Checkpoint, QuantizedCheckpoint};
+pub use config::ModelConfig;
+pub use forward::{CpuModel, KvCache, LinearWeight};
+pub use tensor::Tensor;

@@ -1,0 +1,126 @@
+//! Uniform asymmetric min-max quantization grids (paper §4 Setup:
+//! "standard uniform per-row asymmetric quantization on the min-max grid").
+//!
+//! Semantics mirror `ref.quant_params` / `ref.quantize_col` exactly,
+//! including numpy's round-half-to-even (`round_ties_even`).
+
+/// A per-row grid for one group of consecutive columns: `scale`/`zero`
+/// have one entry per output row. `zero` is the integer-valued code that
+/// dequantizes to 0.0.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub bits: u32,
+}
+
+impl Grid {
+    pub fn maxq(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// Compute the per-row asymmetric min-max grid over a (drow × dcol)
+/// row-major slice. The range is widened to include 0 and degenerate rows
+/// (min == max) get a symmetric unit range — identical to the oracle.
+pub fn quant_params(w: &[f32], drow: usize, dcol: usize, bits: u32) -> Grid {
+    assert_eq!(w.len(), drow * dcol);
+    let maxq = ((1u32 << bits) - 1) as f32;
+    let mut scale = Vec::with_capacity(drow);
+    let mut zero = Vec::with_capacity(drow);
+    for row in w.chunks_exact(dcol) {
+        let mut wmin = 0.0f32;
+        let mut wmax = 0.0f32;
+        for &v in row {
+            wmin = wmin.min(v);
+            wmax = wmax.max(v);
+        }
+        if wmin == wmax {
+            wmin -= 0.5;
+            wmax += 0.5;
+        }
+        let s = (wmax - wmin) / maxq;
+        scale.push(s);
+        zero.push((-wmin / s).round_ties_even());
+    }
+    Grid { scale, zero, bits }
+}
+
+/// Quantize a single value against (scale, zero); returns (code, dequant).
+/// f64 arithmetic, matching the oracle's float64 path inside GPTQ.
+#[inline]
+pub fn quantize_value(w: f64, scale: f64, zero: f64, maxq: f64) -> (f64, f64) {
+    let q = ((w / scale).round_ties_even() + zero).clamp(0.0, maxq);
+    (q, scale * (q - zero))
+}
+
+/// f32 twin of [`quantize_value`] (the RTN fast path).
+#[inline]
+pub fn quantize_value_f32(w: f32, scale: f32, zero: f32, maxq: f32) -> (f32, f32) {
+    let q = ((w / scale).round_ties_even() + zero).clamp(0.0, maxq);
+    (q, scale * (q - zero))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_range() {
+        let w = [-1.0f32, 0.0, 0.5, 2.0];
+        let g = quant_params(&w, 1, 4, 4);
+        assert_eq!(g.scale.len(), 1);
+        // grid must represent both extremes with ≤ half-step error
+        for &v in &w {
+            let (_, dq) = quantize_value_f32(v, g.scale[0], g.zero[0], g.maxq());
+            assert!((dq - v).abs() <= g.scale[0] / 2.0 + 1e-6, "{v} -> {dq}");
+        }
+    }
+
+    #[test]
+    fn zero_is_exact() {
+        // the grid always contains exactly 0.0 (zero-point quantization)
+        let w = [-0.73f32, 0.41, 0.02, 1.3, -0.9, 0.88];
+        let g = quant_params(&w, 2, 3, 3);
+        for r in 0..2 {
+            let (_, dq) = quantize_value_f32(0.0, g.scale[r], g.zero[r], g.maxq());
+            assert_eq!(dq, 0.0);
+        }
+    }
+
+    #[test]
+    fn degenerate_row_unit_range() {
+        let w = [0.0f32; 4];
+        let g = quant_params(&w, 1, 4, 4);
+        assert!((g.scale[0] - 1.0 / 15.0).abs() < 1e-7);
+        let (_, dq) = quantize_value_f32(0.0, g.scale[0], g.zero[0], 15.0);
+        assert_eq!(dq, 0.0);
+    }
+
+    #[test]
+    fn positive_only_row_still_contains_zero() {
+        let w = [0.5f32, 1.0, 2.0, 3.0];
+        let g = quant_params(&w, 1, 4, 2);
+        assert_eq!(g.zero[0], 0.0); // wmin widened to 0
+        let (q, dq) = quantize_value_f32(3.0, g.scale[0], g.zero[0], 3.0);
+        assert_eq!(q, 3.0);
+        assert!((dq - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn codes_clamped() {
+        let g = Grid { scale: vec![0.1], zero: vec![1.0], bits: 2 };
+        let (q, _) = quantize_value_f32(100.0, 0.1, 1.0, g.maxq());
+        assert_eq!(q, 3.0);
+        let (q, _) = quantize_value_f32(-100.0, 0.1, 1.0, g.maxq());
+        assert_eq!(q, 0.0);
+    }
+
+    #[test]
+    fn round_ties_even_matches_numpy() {
+        // numpy rounds 0.5 -> 0, 1.5 -> 2, 2.5 -> 2
+        assert_eq!(0.5f32.round_ties_even(), 0.0);
+        assert_eq!(1.5f32.round_ties_even(), 2.0);
+        assert_eq!(2.5f32.round_ties_even(), 2.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Quantization substrate: the paper's algorithms as pure Rust.
+//!
+//! Everything here mirrors `python/compile/kernels/ref.py` (the canonical
+//! semantics) and is cross-checked against it bit-exactly through the
+//! golden vectors in `artifacts/golden.json`.
+//!
+//! * [`grid`] — uniform asymmetric min-max grids, per-row and grouped.
+//! * [`linalg`] — f64 Cholesky factorization / SPD inverse (paper Step 3).
+//! * [`rtn`] — round-to-nearest, the baseline of every prior LLM
+//!   quantization work the paper compares to (§2 Large-model Quantization).
+//! * [`obq`] — full greedy Optimal Brain Quantization (paper §3.2), the
+//!   accurate-but-cubic method GPTQ accelerates; used for Table 1/7 and
+//!   the Fig. 3 runtime extrapolation.
+//! * [`gptq`] — the paper's contribution (§3.3): fixed column order,
+//!   blocked compensation, Cholesky-factored inverse Hessian, with
+//!   ablation switches (greedy order, naive inverse, no damping).
+//! * [`pack`] — 2/3/4-bit code packing into `u32` words (the storage
+//!   format of the inference kernel).
+
+pub mod gptq;
+pub mod grid;
+pub mod linalg;
+pub mod obq;
+pub mod pack;
+pub mod rtn;
+
+pub use gptq::{gptq_quantize, GptqConfig, Order, QuantResult};
+pub use grid::{quant_params, quantize_value, Grid};
+pub use obq::obq_quantize;
+pub use pack::PackedMatrix;
+pub use rtn::rtn_quantize;
+
+/// Hessian accumulation: `H += 2 XᵀX` for a batch of rows `x` (n × dcol),
+/// row-major, into the f64 accumulator `h` (dcol × dcol).
+///
+/// The f64 accumulator mirrors the paper's numerical-stability care; the
+/// XLA-side twin is the L1 Pallas kernel `kernels/hessian.py`.
+pub fn accumulate_hessian(h: &mut [f64], x: &[f32], n: usize, dcol: usize) {
+    assert_eq!(h.len(), dcol * dcol);
+    assert_eq!(x.len(), n * dcol);
+    for row in x.chunks_exact(dcol) {
+        for i in 0..dcol {
+            let xi = 2.0 * row[i] as f64;
+            let hrow = &mut h[i * dcol..(i + 1) * dcol];
+            for (hj, &xj) in hrow.iter_mut().zip(row) {
+                *hj += xi * xj as f64;
+            }
+        }
+    }
+}
+
+/// Layer-wise objective of paper Eq. (1): `||WX − ŴX||² / n` with X given
+/// row-major (n × dcol); `w`/`wq` are (drow × dcol) row-major.
+pub fn layer_sq_error(w: &[f32], wq: &[f32], x: &[f32], drow: usize, dcol: usize) -> f64 {
+    let n = x.len() / dcol;
+    let mut total = 0.0f64;
+    let mut diff = vec![0.0f32; dcol];
+    for r in 0..drow {
+        for c in 0..dcol {
+            diff[c] = w[r * dcol + c] - wq[r * dcol + c];
+        }
+        for xr in x.chunks_exact(dcol) {
+            let mut dot = 0.0f64;
+            for c in 0..dcol {
+                dot += (diff[c] * xr[c]) as f64;
+            }
+            total += dot * dot;
+        }
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hessian_matches_naive() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 rows x 2 cols
+        let mut h = vec![0.0f64; 4];
+        accumulate_hessian(&mut h, &x, 3, 2);
+        // H = 2 XtX
+        let xtx = [
+            1.0 + 9.0 + 25.0,
+            2.0 + 12.0 + 30.0,
+            2.0 + 12.0 + 30.0,
+            4.0 + 16.0 + 36.0,
+        ];
+        for (a, b) in h.iter().zip(xtx) {
+            assert!((a - 2.0 * b).abs() < 1e-9, "{a} vs {}", 2.0 * b);
+        }
+    }
+
+    #[test]
+    fn hessian_accumulates_over_batches() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut h1 = vec![0.0f64; 4];
+        accumulate_hessian(&mut h1, &x, 2, 2);
+        let mut h2 = vec![0.0f64; 4];
+        accumulate_hessian(&mut h2, &x[..2], 1, 2);
+        accumulate_hessian(&mut h2, &x[2..], 1, 2);
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn sq_error_zero_for_identical() {
+        let w = [1.0f32, -2.0, 0.5, 3.0];
+        let x = [0.3f32, -0.7, 1.1, 0.2];
+        assert_eq!(layer_sq_error(&w, &w, &x, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn sq_error_positive_and_scales() {
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        let wq = [0.0f32, 0.0, 0.0, 0.0];
+        let x = [1.0f32, 0.0, 0.0, 1.0];
+        let e = layer_sq_error(&w, &wq, &x, 2, 2);
+        assert!((e - 1.0).abs() < 1e-12, "{e}");
+    }
+}

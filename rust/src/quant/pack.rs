@@ -1,0 +1,163 @@
+//! Bit-packing of quantization codes into `u32` words — the storage format
+//! of the paper's inference kernel, shared bit-for-bit with
+//! `kernels/ref.py::pack_codes` and the L1 `packmatvec` Pallas kernel.
+//!
+//! Little-endian field packing, `⌊32/bits⌋` codes per word:
+//! 4-bit → 8/word, 3-bit → 10/word (2 pad bits, 3.2 effective bits),
+//! 2-bit → 16/word.
+
+use super::gptq::QuantResult;
+
+pub fn codes_per_word(bits: u32) -> usize {
+    (32 / bits) as usize
+}
+
+pub fn words_per_row(dcol: usize, bits: u32) -> usize {
+    dcol.div_ceil(codes_per_word(bits))
+}
+
+/// Pack one row of integer codes.
+pub fn pack_row(codes: &[u8], bits: u32, out: &mut Vec<u32>) {
+    let cpw = codes_per_word(bits);
+    for chunk in codes.chunks(cpw) {
+        let mut word = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            debug_assert!((c as u32) < (1 << bits));
+            word |= (c as u32) << (bits as usize * i);
+        }
+        out.push(word);
+    }
+}
+
+/// Unpack one row back into codes (inverse of [`pack_row`]).
+pub fn unpack_row(words: &[u32], bits: u32, dcol: usize, out: &mut Vec<u8>) {
+    let cpw = codes_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    out.clear();
+    'outer: for &w in words {
+        for i in 0..cpw {
+            if out.len() == dcol {
+                break 'outer;
+            }
+            out.push(((w >> (bits as usize * i)) & mask) as u8);
+        }
+    }
+    assert_eq!(out.len(), dcol);
+}
+
+/// A packed quantized weight matrix: codes in u32 words plus the per-group
+/// grids — everything the dequantizing matvec needs, and what the packed
+/// checkpoint stores. Weight bytes moved per matvec shrink by
+/// `32/codes_per_word/bits… ≈ 32/bits / (f32=32)` vs dense f32: 8× at
+/// 4-bit, 10× at 3-bit (3.2 eff), 16× at 2-bit — the paper's speedup
+/// mechanism.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub words: Vec<u32>,
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    pub drow: usize,
+    pub dcol: usize,
+    pub nwords: usize,
+    pub ngroups: usize,
+    pub bits: u32,
+}
+
+impl PackedMatrix {
+    /// Pack a [`QuantResult`] (codes row-major drow × dcol).
+    pub fn from_result(r: &QuantResult) -> Self {
+        let nwords = words_per_row(r.dcol, r.bits);
+        let mut words = Vec::with_capacity(r.drow * nwords);
+        for row in r.codes.chunks_exact(r.dcol) {
+            pack_row(row, r.bits, &mut words);
+        }
+        Self {
+            words,
+            scales: r.scales.clone(),
+            zeros: r.zeros.clone(),
+            drow: r.drow,
+            dcol: r.dcol,
+            nwords,
+            ngroups: r.ngroups,
+            bits: r.bits,
+        }
+    }
+
+    /// Dequantize back to a dense row-major f32 matrix.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.drow * self.dcol];
+        let g = self.dcol / self.ngroups;
+        let mut codes = Vec::with_capacity(self.dcol);
+        for r in 0..self.drow {
+            unpack_row(&self.words[r * self.nwords..(r + 1) * self.nwords], self.bits, self.dcol, &mut codes);
+            for c in 0..self.dcol {
+                let gi = c / g;
+                let s = self.scales[r * self.ngroups + gi];
+                let z = self.zeros[r * self.ngroups + gi];
+                out[r * self.dcol + c] = s * (codes[c] as f32 - z);
+            }
+        }
+        out
+    }
+
+    /// Bytes of weight storage (words + grids) — the memory-footprint
+    /// numbers of Table 5's "GPU reduction" column analog.
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 4 + (self.scales.len() + self.zeros.len()) * 4
+    }
+
+    /// Effective bits per weight including grid overhead.
+    pub fn effective_bits(&self) -> f64 {
+        self.storage_bytes() as f64 * 8.0 / (self.drow * self.dcol) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::rtn_quantize;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        for bits in [2u32, 3, 4] {
+            let dcol = 37; // deliberately not word-aligned
+            let codes: Vec<u8> = (0..dcol).map(|i| (i % (1 << bits)) as u8).collect();
+            let mut words = Vec::new();
+            pack_row(&codes, bits, &mut words);
+            assert_eq!(words.len(), words_per_row(dcol, bits));
+            let mut out = Vec::new();
+            unpack_row(&words, bits, dcol, &mut out);
+            assert_eq!(out, codes);
+        }
+    }
+
+    #[test]
+    fn field_layout_is_little_endian() {
+        let mut words = Vec::new();
+        pack_row(&[1, 2, 3], 4, &mut words);
+        assert_eq!(words, vec![1 | (2 << 4) | (3 << 8)]);
+    }
+
+    #[test]
+    fn packed_matrix_dequant_matches_quantresult() {
+        let w: Vec<f32> = (0..256).map(|i| ((i * 31 % 97) as f32 - 48.0) / 20.0).collect();
+        for (bits, g) in [(4u32, 0usize), (3, 8), (2, 16)] {
+            let r = rtn_quantize(&w, 8, 32, bits, g);
+            let p = PackedMatrix::from_result(&r);
+            let dq = p.dequantize();
+            for (a, b) in dq.iter().zip(&r.wq) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn effective_bits_accounting() {
+        let w: Vec<f32> = (0..64 * 640).map(|i| (i as f32).sin()).collect();
+        let r = rtn_quantize(&w, 64, 640, 3, 0);
+        let p = PackedMatrix::from_result(&r);
+        // 3-bit fields, 10 per word => 3.2 bits, plus the per-row grid:
+        // (scale+zero) = 8 B/row = 64 bits / 640 weights = 0.1 bits
+        assert!((p.effective_bits() - 3.3).abs() < 0.02, "{}", p.effective_bits());
+    }
+}

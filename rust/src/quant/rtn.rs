@@ -1,0 +1,97 @@
+//! Round-to-nearest (RTN) quantization — the baseline used by all prior
+//! giant-model work the paper compares against (ZeroQuant, LLM.int8(),
+//! nuQmm): independent per-row (or per-group) min-max grids, one rounding
+//! pass, no error compensation.
+
+use super::gptq::QuantResult;
+use super::grid::{quant_params, quantize_value_f32};
+
+/// RTN-quantize a (drow × dcol) row-major matrix. `groupsize == 0` means
+/// one grid per row. Output layout matches [`super::gptq::gptq_quantize`].
+pub fn rtn_quantize(w: &[f32], drow: usize, dcol: usize, bits: u32, groupsize: usize) -> QuantResult {
+    assert_eq!(w.len(), drow * dcol);
+    let g = if groupsize == 0 { dcol } else { groupsize };
+    assert_eq!(dcol % g, 0, "groupsize must divide dcol");
+    let ngroups = dcol / g;
+    let maxq = ((1u32 << bits) - 1) as f32;
+
+    let mut codes = vec![0u8; drow * dcol];
+    let mut wq = vec![0.0f32; drow * dcol];
+    let mut scales = vec![0.0f32; drow * ngroups];
+    let mut zeros = vec![0.0f32; drow * ngroups];
+    let mut buf = vec![0.0f32; drow * g];
+
+    for gi in 0..ngroups {
+        for r in 0..drow {
+            buf[r * g..(r + 1) * g].copy_from_slice(&w[r * dcol + gi * g..r * dcol + (gi + 1) * g]);
+        }
+        let grid = quant_params(&buf, drow, g, bits);
+        for r in 0..drow {
+            scales[r * ngroups + gi] = grid.scale[r];
+            zeros[r * ngroups + gi] = grid.zero[r];
+            for c in 0..g {
+                let (q, dq) = quantize_value_f32(buf[r * g + c], grid.scale[r], grid.zero[r], maxq);
+                codes[r * dcol + gi * g + c] = q as u8;
+                wq[r * dcol + gi * g + c] = dq;
+            }
+        }
+    }
+    QuantResult { codes, scales, zeros, wq, drow, dcol, ngroups, bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconstruction_bounded_by_half_step() {
+        let w: Vec<f32> = (0..64).map(|i| ((i * 37 % 100) as f32 - 50.0) / 25.0).collect();
+        let r = rtn_quantize(&w, 4, 16, 4, 0);
+        for row in 0..4 {
+            let s = r.scales[row];
+            for c in 0..16 {
+                let err = (w[row * 16 + c] - r.wq[row * 16 + c]).abs();
+                assert!(err <= s / 2.0 + 1e-6, "row {row} col {c}: {err} vs step {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_equals_per_row_when_group_is_row() {
+        let w: Vec<f32> = (0..48).map(|i| (i as f32).sin()).collect();
+        let a = rtn_quantize(&w, 3, 16, 3, 0);
+        let b = rtn_quantize(&w, 3, 16, 3, 16);
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.scales, b.scales);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w: Vec<f32> = (0..128).map(|i| ((i * 17 % 31) as f32 / 7.0) - 2.0).collect();
+        let errs: Vec<f32> = [2u32, 3, 4]
+            .iter()
+            .map(|&b| {
+                let r = rtn_quantize(&w, 8, 16, b, 0);
+                w.iter().zip(&r.wq).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+            })
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn finer_groups_monotone_error() {
+        let mut s = 9u64;
+        let mut lcg = || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
+        };
+        let w: Vec<f32> = (0..16 * 64).map(|_| lcg()).collect();
+        let mut prev = f32::INFINITY;
+        for g in [0usize, 32, 16, 8] {
+            let r = rtn_quantize(&w, 16, 64, 2, g);
+            let e: f32 = w.iter().zip(&r.wq).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(e <= prev * 1.05, "g={g}: {e} vs prev {prev}");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT client wrapper: HLO-text artifact loading, executable caching, and
+//! literal marshalling. Adapted from /opt/xla-example/load_hlo/.
+
+use crate::runtime::Manifest;
+use crate::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// A loaded PJRT CPU runtime with an executable cache keyed by artifact
+/// name — artifacts compile once per process and are reused across the
+/// whole pipeline (no retrace/recompile on the hot path).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative (compile_ms, exec_calls) telemetry
+    pub compile_ms: f64,
+    pub exec_calls: u64,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, manifest, executables: HashMap::new(), compile_ms: 0.0, exec_calls: 0 })
+    }
+
+    pub fn from_artifacts_dir(dir: &std::path::Path) -> Result<Self> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        self.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are literals in the AOT parameter order;
+    /// outputs are the flattened result-tuple literals.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_loaded(name)?;
+        let exe = &self.executables[name];
+        self.exec_calls += 1;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        let tuple = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("{name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name} fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple
+        tuple.to_tuple().map_err(|e| anyhow::anyhow!("{name} untuple: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal marshalling
+// ---------------------------------------------------------------------------
+
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal_f32: {dims:?} vs {} elements", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+pub fn literal_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+pub fn literal_f64_as_f32(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    literal_f32(&f32s, dims)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn literal_u32_roundtrip() {
+        let data = vec![7u32, 0xFFFF_FFFF, 3];
+        let lit = literal_u32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), data);
+    }
+}

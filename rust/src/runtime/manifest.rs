@@ -1,0 +1,197 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path (aot.py) and this crate. Parsed with the crate's own JSON
+//! substrate (offline environment; see util::json).
+
+use crate::model::ModelConfig;
+use crate::util::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// byte offset into the weights file
+    pub offset: usize,
+    /// element count
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub n_params: usize,
+    pub weights: String,
+    pub tensors: Vec<TensorEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// parameter shapes, in call order
+    pub params: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantDefaults {
+    pub blocksize: usize,
+    pub percdamp: f64,
+    pub gptq_artifact_bits: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub seq_len: usize,
+    pub eval_batch: usize,
+    pub calib_tokens: usize,
+    pub quant: QuantDefaults,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub root: PathBuf,
+}
+
+fn je(e: String) -> anyhow::Error {
+    anyhow!("manifest: {e}")
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str, root: &Path) -> Result<Self> {
+        let j = Json::parse(text).map_err(je)?;
+        let quant = j.req("quant").map_err(je)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").map_err(je)?.as_obj().context("models not an object")? {
+            let c = m.req("config").map_err(je)?;
+            let config = ModelConfig {
+                d_model: c.req("d_model").map_err(je)?.as_usize().context("d_model")?,
+                n_layers: c.req("n_layers").map_err(je)?.as_usize().context("n_layers")?,
+                n_heads: c.req("n_heads").map_err(je)?.as_usize().context("n_heads")?,
+                d_ff: c.req("d_ff").map_err(je)?.as_usize().context("d_ff")?,
+                vocab: c.req("vocab").map_err(je)?.as_usize().context("vocab")?,
+                max_seq: c.req("max_seq").map_err(je)?.as_usize().context("max_seq")?,
+            };
+            let tensors = m
+                .req("tensors")
+                .map_err(je)?
+                .as_arr()
+                .context("tensors")?
+                .iter()
+                .map(|t| -> Result<TensorEntry> {
+                    Ok(TensorEntry {
+                        name: t.req("name").map_err(je)?.as_str().context("name")?.to_string(),
+                        shape: t.req("shape").map_err(je)?.usize_vec().context("shape")?,
+                        offset: t.req("offset").map_err(je)?.as_usize().context("offset")?,
+                        len: t.req("len").map_err(je)?.as_usize().context("len")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    config,
+                    n_params: m.req("n_params").map_err(je)?.as_usize().context("n_params")?,
+                    weights: m.req("weights").map_err(je)?.as_str().context("weights")?.to_string(),
+                    tensors,
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts").map_err(je)?.as_obj().context("artifacts")? {
+            let params = a
+                .req("params")
+                .map_err(je)?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| p.usize_vec().context("param shape"))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    file: a.req("file").map_err(je)?.as_str().context("file")?.to_string(),
+                    params,
+                },
+            );
+        }
+        Ok(Self {
+            version: j.req("version").map_err(je)?.as_u32().context("version")?,
+            seq_len: j.req("seq_len").map_err(je)?.as_usize().context("seq_len")?,
+            eval_batch: j.req("eval_batch").map_err(je)?.as_usize().context("eval_batch")?,
+            calib_tokens: j.req("calib_tokens").map_err(je)?.as_usize().context("calib_tokens")?,
+            quant: QuantDefaults {
+                blocksize: quant.req("blocksize").map_err(je)?.as_usize().context("blocksize")?,
+                percdamp: quant.req("percdamp").map_err(je)?.as_f64().context("percdamp")?,
+                gptq_artifact_bits: quant
+                    .req("gptq_artifact_bits")
+                    .map_err(je)?
+                    .as_arr()
+                    .context("bits")?
+                    .iter()
+                    .filter_map(|b| b.as_u32())
+                    .collect(),
+            },
+            models,
+            artifacts,
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("cannot read {} (run `make artifacts` first)", path.display())
+        })?;
+        Self::from_json_text(&text, artifacts_dir)
+    }
+
+    pub fn model(&self, size: &str) -> Result<&ModelEntry> {
+        self.models.get(size).ok_or_else(|| {
+            anyhow!("model size {size:?} not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let entry = self.artifacts.get(name).ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        Ok(self.root.join(&entry.file))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn corpus_path(&self, file: &str) -> PathBuf {
+        self.root.join("corpus").join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+            "version": 1, "seq_len": 128, "eval_batch": 8, "calib_tokens": 1024,
+            "quant": {"blocksize": 128, "percdamp": 0.01, "gptq_artifact_bits": [3, 4]},
+            "models": {"nano": {"config": {"d_model": 64, "n_layers": 2, "n_heads": 2,
+                "d_ff": 256, "vocab": 256, "max_seq": 128}, "n_params": 1000,
+                "weights": "weights_nano.bin",
+                "tensors": [{"name": "embed", "shape": [256, 64], "offset": 0, "len": 16384}]}},
+            "artifacts": {"lm_fwd_nano": {"file": "hlo/lm_fwd_nano.hlo.txt", "params": [[8, 128]]}}
+        }"#;
+        let m = Manifest::from_json_text(json, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.models["nano"].config.d_model, 64);
+        assert_eq!(m.models["nano"].tensors[0].len, 16384);
+        assert_eq!(m.artifacts["lm_fwd_nano"].params[0], vec![8, 128]);
+        assert!(m.quant.gptq_artifact_bits.contains(&4));
+        assert_eq!(m.artifact_path("lm_fwd_nano").unwrap(), PathBuf::from("/tmp/a/hlo/lm_fwd_nano.hlo.txt"));
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_errors() {
+        assert!(Manifest::from_json_text("{}", Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/hlo/*.hlo.txt`,
+//! HLO **text** — see /opt/xla-example/README.md for why not serialized
+//! protos) and executes them on the XLA CPU client from the coordinator's
+//! pipeline. Compiled executables are cached per artifact name.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactEntry, Manifest, ModelEntry, TensorEntry};

@@ -1,0 +1,578 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md experiment index maps each to its paper counterpart).
+//!
+//! ```text
+//! tables table1     RTN/OBQ/GPTQ accuracy comparison      (paper Tables 1 & 7)
+//! tables fig1       PPL vs model size, GPTQ vs RTN        (paper Figure 1)
+//! tables table2     PPL on the PTB-analog corpus          (paper Tables 2–3)
+//! tables fig3       quantization runtime scaling          (paper Figure 3, Tables 8–9)
+//! tables table4     largest-model summary                 (paper Table 4)
+//! tables table5     per-token latency + memory            (paper Table 5)
+//! tables table6     2-bit group-size sweep                (paper Table 6)
+//! tables fig4       zero-shot accuracy                    (paper Figure 4, Tables 14–23)
+//! tables ablations  order/Cholesky/damping/propagation    (paper §3.3 design choices)
+//! tables all        everything above
+//! ```
+//!
+//! Flags: `--sizes nano,micro,small` `--segments N` `--calib N`.
+//! Absolute numbers are testbed-specific; the *shape* (who wins, by what
+//! factor, where RTN collapses) is the reproduction target.
+
+use crate::coordinator::{PipelineConfig, QuantEngine, QuantPipeline};
+use crate::data::{load_tasks, CorpusFile};
+use crate::eval::{eval_choice, eval_cloze, perplexity};
+use crate::model::{Checkpoint, CpuModel, KvCache, QuantizedCheckpoint};
+use crate::quant::{self, gptq_quantize, obq_quantize, GptqConfig, Order};
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct Ctx {
+    rt: Runtime,
+    sizes: Vec<String>,
+    segments: usize,
+    calib_segments: usize,
+    /// (size, bits, groupsize, engine-tag) -> quantized checkpoint + runtime
+    cache: HashMap<(String, u32, usize, &'static str), (QuantizedCheckpoint, f64)>,
+}
+
+impl Ctx {
+    fn new(args: &Args) -> Result<Self> {
+        let rt = Runtime::from_artifacts_dir(&crate::artifacts_dir())?;
+        let all: Vec<String> = rt.manifest.models.keys().cloned().collect();
+        let sizes: Vec<String> = match args.get("sizes") {
+            Some(s) => s.split(',').map(String::from).filter(|s| !s.is_empty()).collect(),
+            None => all,
+        };
+        Ok(Self {
+            rt,
+            sizes,
+            segments: args.usize_or("segments", 16),
+            calib_segments: args.usize_or("calib", 32),
+            cache: HashMap::new(),
+        })
+    }
+
+    fn fp_model(&self, size: &str) -> Result<CpuModel> {
+        let entry = self.rt.manifest.model(size)?.clone();
+        Ok(CpuModel::from_checkpoint(&Checkpoint::load(&crate::artifacts_dir(), &entry)?))
+    }
+
+    fn engine_tag(e: QuantEngine) -> &'static str {
+        match e {
+            QuantEngine::GptqRust => "gptq",
+            QuantEngine::GptqXla => "gptq-xla",
+            QuantEngine::Rtn => "rtn",
+            QuantEngine::Obq => "obq",
+        }
+    }
+
+    /// Quantize (cached) and return (checkpoint, pipeline seconds).
+    fn quantized(
+        &mut self,
+        size: &str,
+        bits: u32,
+        groupsize: usize,
+        engine: QuantEngine,
+    ) -> Result<(QuantizedCheckpoint, f64)> {
+        let key = (size.to_string(), bits, groupsize, Self::engine_tag(engine));
+        if let Some(v) = self.cache.get(&key) {
+            return Ok(v.clone_pair());
+        }
+        let entry = self.rt.manifest.model(size)?.clone();
+        let mut ckpt = Checkpoint::load(&crate::artifacts_dir(), &entry)?;
+        let calib = CorpusFile::load(&self.rt.manifest.corpus_path("calib.bin"))?;
+        let mut cfg = PipelineConfig::new(bits, engine).with_groupsize(groupsize);
+        cfg.n_calib_segments = self.calib_segments;
+        let report = QuantPipeline::new(&mut self.rt, size, cfg).run(&mut ckpt, &calib)?;
+        let out = (report.checkpoint, report.total_s);
+        self.cache.insert(key, out.clone_pair());
+        Ok(out)
+    }
+
+    fn ppl(&self, model: &mut CpuModel, style: &str) -> Result<f64> {
+        let corpus = CorpusFile::load(&self.rt.manifest.corpus_path(&format!("{style}_test.bin")))?;
+        Ok(perplexity(model, &corpus, self.rt.manifest.seq_len, self.segments))
+    }
+
+    fn ppl_quantized(&mut self, size: &str, bits: u32, g: usize, e: QuantEngine, style: &str) -> Result<f64> {
+        let (qc, _) = self.quantized(size, bits, g, e)?;
+        let mut m = CpuModel::from_quantized(&qc);
+        self.ppl(&mut m, style)
+    }
+
+    fn zeroshot(&self, model: &mut CpuModel) -> Result<(f64, f64, f64, f64)> {
+        let cloze = load_tasks(&self.rt.manifest.corpus_path("tasks/cloze.jsonl"))?;
+        let mcq = load_tasks(&self.rt.manifest.corpus_path("tasks/mcq.jsonl"))?;
+        let binary = load_tasks(&self.rt.manifest.corpus_path("tasks/binary.jsonl"))?;
+        let n = 120;
+        Ok((
+            eval_cloze(model, &cloze, n),
+            eval_choice(model, &cloze, n),
+            eval_choice(model, &mcq, n),
+            eval_choice(model, &binary, n),
+        ))
+    }
+}
+
+trait ClonePair {
+    fn clone_pair(&self) -> (QuantizedCheckpoint, f64);
+}
+impl ClonePair for (QuantizedCheckpoint, f64) {
+    fn clone_pair(&self) -> (QuantizedCheckpoint, f64) {
+        (self.0.clone(), self.1)
+    }
+}
+
+fn hline(w: usize) {
+    println!("{}", "-".repeat(w));
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 / Table 7 — method comparison
+// ---------------------------------------------------------------------------
+
+pub fn table1(ctx: &mut Ctx) -> Result<()> {
+    println!("\n== Table 1/7 analog: PTQ method comparison (RTN vs OBQ vs GPTQ) ==");
+    println!("paper: GPTQ ≈ accurate-but-slow methods, ≫ fast RTN; ~60x faster than OBQ");
+    let size = ctx.sizes.first().cloned().unwrap_or_else(|| "nano".into());
+    println!("model {size}; per-method: mean layer ‖WX−ŴX‖²/n, total solver ms, val PPL (narrative)");
+    hline(74);
+    println!("{:<8} {:>4} {:>14} {:>12} {:>10}", "method", "bits", "mean sq-err", "solver ms", "ppl");
+    hline(74);
+    for bits in [4u32, 3] {
+        for engine in [QuantEngine::Rtn, QuantEngine::Obq, QuantEngine::GptqRust] {
+            let t0 = Instant::now();
+            let (qc, _) = ctx.quantized(&size, bits, 0, engine)?;
+            let _elapsed = t0.elapsed();
+            let solver_ms: f64 = qc.stats.iter().map(|s| s.quant_ms).sum();
+            let err = qc.stats.iter().map(|s| s.sq_error).sum::<f64>() / qc.stats.len() as f64;
+            let mut m = CpuModel::from_quantized(&qc);
+            let ppl = ctx.ppl(&mut m, "narrative")?;
+            println!(
+                "{:<8} {:>4} {:>14.4e} {:>12.1} {:>10.3}",
+                Ctx::engine_tag(engine),
+                bits,
+                err,
+                solver_ms,
+                ppl
+            );
+        }
+    }
+    let mut fp = ctx.fp_model(&size)?;
+    println!("{:<8} {:>4} {:>14} {:>12} {:>10.3}", "fp32", 32, "-", "-", ctx.ppl(&mut fp, "narrative")?);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 + Tables 2/3 + appendix tables — PPL grids
+// ---------------------------------------------------------------------------
+
+fn ppl_grid(ctx: &mut Ctx, style: &str, paper_ref: &str) -> Result<()> {
+    println!("\n== {paper_ref}: perplexity on `{style}` ==");
+    println!("paper shape: GPTQ ≈ fp at 4-bit; RTN degrades at 4-bit and collapses at 3-bit;");
+    println!("gaps shrink with model size (larger models quantize more easily)");
+    hline(78);
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "model", "fp32", "RTN-4", "GPTQ-4", "RTN-3", "GPTQ-3"
+    );
+    hline(78);
+    for size in ctx.sizes.clone() {
+        let mut fp = ctx.fp_model(&size)?;
+        let p_fp = ctx.ppl(&mut fp, style)?;
+        let r4 = ctx.ppl_quantized(&size, 4, 0, QuantEngine::Rtn, style)?;
+        let g4 = ctx.ppl_quantized(&size, 4, 0, QuantEngine::GptqRust, style)?;
+        let r3 = ctx.ppl_quantized(&size, 3, 0, QuantEngine::Rtn, style)?;
+        let g3 = ctx.ppl_quantized(&size, 3, 0, QuantEngine::GptqRust, style)?;
+        println!(
+            "{size:<8} {p_fp:>10.3} {r4:>10.3} {g4:>10.3} {r3:>10.3} {g3:>10.3}"
+        );
+    }
+    Ok(())
+}
+
+pub fn fig1(ctx: &mut Ctx) -> Result<()> {
+    ppl_grid(ctx, "narrative", "Figure 1 / Tables 10–11 analog (WikiText2 stand-in)")
+}
+
+pub fn table2(ctx: &mut Ctx) -> Result<()> {
+    ppl_grid(ctx, "markup", "Tables 2–3 analog (PTB stand-in)")?;
+    ppl_grid(ctx, "crawl", "Tables 12–13 analog (C4 stand-in; calibration domain)")
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 / Tables 8–9 — runtime scaling
+// ---------------------------------------------------------------------------
+
+pub fn fig3(ctx: &mut Ctx) -> Result<()> {
+    println!("\n== Figure 3 / Tables 8–9 analog: quantization runtime scaling ==");
+    println!("paper shape: GPTQ full-model minutes–hours; OBQ infeasible (extrapolated)");
+    hline(70);
+    println!("{:<8} {:>12} {:>16} {:>18}", "model", "params", "GPTQ (s)", "OBQ est. (s)");
+    hline(70);
+    for size in ctx.sizes.clone() {
+        let entry = ctx.rt.manifest.model(&size)?.clone();
+        let (_, gptq_s) = ctx.quantized(&size, 4, 0, QuantEngine::GptqRust)?;
+        // OBQ measured on the smallest layer, extrapolated by the paper's
+        // complexity ratio O(drow·dcol³) vs O(dcol²·max(drow,dcol))
+        let obq_est = estimate_obq_seconds(&entry.config);
+        println!("{:<8} {:>12} {:>16.2} {:>18.1}", size, entry.n_params, gptq_s, obq_est);
+    }
+
+    println!("\nsynthetic single-layer sweep (square drow=dcol layers):");
+    hline(70);
+    println!("{:<8} {:>14} {:>14} {:>14}", "dcol", "GPTQ ms", "OBQ ms", "speedup");
+    hline(70);
+    let mut obq_ms_by_d: Vec<(usize, f64)> = Vec::new();
+    for d in [64usize, 128, 256, 512] {
+        let (w, h) = synthetic_layer(d, d);
+        let t0 = Instant::now();
+        let _ = gptq_quantize(&w, d, d, &h, &GptqConfig::new(4)).unwrap();
+        let gptq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let obq_ms = if d <= 256 {
+            let t1 = Instant::now();
+            let _ = obq_quantize(&w, d, d, &h, 4, 0.01).unwrap();
+            t1.elapsed().as_secs_f64() * 1e3
+        } else {
+            // extrapolate cubically from the last measured point
+            let (d0, ms0) = *obq_ms_by_d.last().unwrap();
+            ms0 * ((d as f64 / d0 as f64).powi(4))
+        };
+        obq_ms_by_d.push((d, obq_ms));
+        println!(
+            "{:<8} {:>14.1} {:>14.1}{} {:>13.1}x",
+            d,
+            gptq_ms,
+            obq_ms,
+            if d > 256 { "*" } else { " " },
+            obq_ms / gptq_ms
+        );
+    }
+    println!("(* extrapolated, O(drow·dcol³); paper estimates OBQ at months for 175B)");
+    Ok(())
+}
+
+fn estimate_obq_seconds(cfg: &crate::model::ModelConfig) -> f64 {
+    // measured OBQ throughput on this machine: ~calibrated from the 128-dim
+    // layer at startup, then complexity-scaled per layer
+    let (w, h) = synthetic_layer(64, 64);
+    let t0 = Instant::now();
+    let _ = obq_quantize(&w, 64, 64, &h, 4, 0.01).unwrap();
+    let per_unit = t0.elapsed().as_secs_f64() / (64.0 * 64f64.powi(3));
+    let mut total = 0.0;
+    for l in crate::model::config::QUANT_LINEARS {
+        let (o, i) = cfg.linear_shape(l);
+        total += per_unit * o as f64 * (i as f64).powi(3);
+    }
+    total * cfg.n_layers as f64
+}
+
+fn synthetic_layer(drow: usize, dcol: usize) -> (Vec<f32>, Vec<f64>) {
+    let mut rng = crate::data::Rng::new(drow as u64 * 31 + dcol as u64);
+    let w: Vec<f32> = (0..drow * dcol).map(|_| rng.unit()).collect();
+    let n = 2 * dcol;
+    let mut x = vec![0.0f32; n * dcol];
+    for v in x.iter_mut() {
+        *v = rng.unit();
+    }
+    // correlate adjacent features (cheap stand-in for real activations)
+    for r in 0..n {
+        for c in 1..dcol {
+            x[r * dcol + c] = 0.6 * x[r * dcol + c - 1] + 0.4 * x[r * dcol + c];
+        }
+    }
+    let mut h = vec![0.0f64; dcol * dcol];
+    quant::accumulate_hessian(&mut h, &x, n, dcol);
+    (w, h)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — largest-model summary
+// ---------------------------------------------------------------------------
+
+pub fn table4(ctx: &mut Ctx) -> Result<()> {
+    let size = ctx.sizes.last().cloned().unwrap_or_else(|| "small".into());
+    println!("\n== Table 4 analog: {size} summary across all corpora + cloze ==");
+    println!("paper shape: 4-bit GPTQ within ~0.2 ppl of fp; 3-bit RTN collapses, GPTQ holds;");
+    println!("grouping (3G row) recovers most of the remaining 3-bit gap");
+    hline(86);
+    println!(
+        "{:<10} {:>5} {:>10} {:>10} {:>10} {:>10}",
+        "method", "bits", "narrative", "markup", "crawl", "cloze%"
+    );
+    hline(86);
+    let rows: Vec<(&str, u32, usize, Option<QuantEngine>)> = vec![
+        ("baseline", 32, 0, None),
+        ("RTN", 4, 0, Some(QuantEngine::Rtn)),
+        ("GPTQ", 4, 0, Some(QuantEngine::GptqRust)),
+        ("RTN", 3, 0, Some(QuantEngine::Rtn)),
+        ("GPTQ", 3, 0, Some(QuantEngine::GptqRust)),
+        ("GPTQ-3G", 3, 32, Some(QuantEngine::GptqRust)),
+    ];
+    for (name, bits, g, engine) in rows {
+        let mut model = match engine {
+            None => ctx.fp_model(&size)?,
+            Some(e) => {
+                let (qc, _) = ctx.quantized(&size, bits, g, e)?;
+                CpuModel::from_quantized(&qc)
+            }
+        };
+        let p1 = ctx.ppl(&mut model, "narrative")?;
+        let p2 = ctx.ppl(&mut model, "markup")?;
+        let p3 = ctx.ppl(&mut model, "crawl")?;
+        let (_, cloze_choice, _, _) = ctx.zeroshot(&mut model)?;
+        println!(
+            "{:<10} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.1}",
+            name,
+            bits,
+            p1,
+            p2,
+            p3,
+            cloze_choice * 100.0
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — per-token latency + memory
+// ---------------------------------------------------------------------------
+
+pub fn table5(ctx: &mut Ctx) -> Result<()> {
+    let size = ctx.sizes.last().cloned().unwrap_or_else(|| "small".into());
+    println!("\n== Table 5 analog: per-token generation latency, batch 1 ({size}) ==");
+    println!("paper: 3-bit OPT-175B 1.9–4.5x faster per token than FP16 (bandwidth-bound);");
+    println!("'GPU reduction' column becomes quantizable-weight memory reduction");
+    let gen_tokens = 96usize;
+    hline(86);
+    println!(
+        "{:<10} {:>12} {:>12} {:>10} {:>14} {:>10}",
+        "weights", "ms/token", "tokens/s", "speedup", "weight bytes", "mem red."
+    );
+    hline(86);
+    let mut fp = ctx.fp_model(&size)?;
+    let (fp_ms, fp_bytes) = decode_latency(&mut fp, gen_tokens);
+    println!(
+        "{:<10} {:>12.3} {:>12.1} {:>10} {:>14} {:>10}",
+        "fp32", fp_ms, 1e3 / fp_ms, "1.00x", fp_bytes, "1.0x"
+    );
+    for bits in [4u32, 3, 2] {
+        let (qc, _) = ctx.quantized(&size, bits, 0, QuantEngine::GptqRust)?;
+        let mut qm = CpuModel::from_quantized(&qc);
+        let (ms, bytes) = decode_latency(&mut qm, gen_tokens);
+        println!(
+            "{:<10} {:>12.3} {:>12.1} {:>9.2}x {:>14} {:>9.1}x",
+            format!("{bits}-bit"),
+            ms,
+            1e3 / ms,
+            fp_ms / ms,
+            bytes,
+            fp_bytes as f64 / bytes as f64
+        );
+    }
+    Ok(())
+}
+
+fn decode_latency(model: &mut CpuModel, gen_tokens: usize) -> (f64, usize) {
+    let mut cache = KvCache::new(&model.config);
+    // warm prefill
+    for b in [10u8, 32, 97, 101] {
+        model.decode_step(&mut cache, b);
+    }
+    let t0 = Instant::now();
+    let mut tok = 101u8;
+    for _ in 0..gen_tokens.min(model.config.max_seq - cache.len) {
+        let logits = model.decode_step(&mut cache, tok);
+        // greedy argmax to keep the loop honest
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        tok = best as u8;
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / gen_tokens.min(model.config.max_seq) as f64;
+    (ms, model.traffic_bytes_per_token())
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — 2-bit group sweep
+// ---------------------------------------------------------------------------
+
+pub fn table6(ctx: &mut Ctx) -> Result<()> {
+    let size = ctx.sizes.last().cloned().unwrap_or_else(|| "small".into());
+    println!("\n== Table 6 analog: 2-bit GPTQ with varying group size ({size}, narrative) ==");
+    println!("paper shape: 2-bit collapses per-row; smaller groups recover monotonically,");
+    println!("g=32 at 2-bit ≈ vanilla 3-bit");
+    let mut fp = ctx.fp_model(&size)?;
+    let p_fp = ctx.ppl(&mut fp, "narrative")?;
+    hline(52);
+    println!("{:<12} {:>12} {:>14}", "group", "ppl", "eff. bits");
+    hline(52);
+    println!("{:<12} {:>12.3} {:>14}", "fp32", p_fp, "32");
+    for g in [0usize, 128, 64, 32, 16] {
+        let (qc, _) = ctx.quantized(&size, 2, g, QuantEngine::GptqRust)?;
+        let mut m = CpuModel::from_quantized(&qc);
+        let ppl = ctx.ppl(&mut m, "narrative")?;
+        let n_weights: usize = qc.packed.values().map(|p| p.drow * p.dcol).sum();
+        let eff = qc.packed_bytes() as f64 * 8.0 / n_weights as f64;
+        let label = if g == 0 { "per-row".to_string() } else { format!("g={g}") };
+        println!("{:<12} {:>12.3} {:>14.2}", label, ppl, eff);
+    }
+    let g3 = ctx.ppl_quantized(&size, 3, 0, QuantEngine::GptqRust, "narrative")?;
+    println!("{:<12} {:>12.3} {:>14.2}", "3-bit row", g3, 3.2);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 / Tables 14–23 — zero-shot
+// ---------------------------------------------------------------------------
+
+pub fn fig4(ctx: &mut Ctx) -> Result<()> {
+    println!("\n== Figure 4 / Tables 14–23 analog: zero-shot accuracy ==");
+    println!("tasks: cloze-exact & cloze-choice (LAMBADA), mcq (ARC), binary (PIQA/StoryCloze)");
+    println!("paper shape: 4-bit near-fp even for RTN; at 3-bit RTN breaks, GPTQ holds");
+    hline(96);
+    println!(
+        "{:<8} {:<8} {:>5} {:>12} {:>13} {:>10} {:>10}",
+        "model", "method", "bits", "cloze-exact%", "cloze-choice%", "mcq%", "binary%"
+    );
+    hline(96);
+    for size in ctx.sizes.clone() {
+        let rows: Vec<(&str, u32, Option<QuantEngine>)> = vec![
+            ("fp32", 32, None),
+            ("RTN", 4, Some(QuantEngine::Rtn)),
+            ("GPTQ", 4, Some(QuantEngine::GptqRust)),
+            ("RTN", 3, Some(QuantEngine::Rtn)),
+            ("GPTQ", 3, Some(QuantEngine::GptqRust)),
+        ];
+        for (name, bits, engine) in rows {
+            let mut model = match engine {
+                None => ctx.fp_model(&size)?,
+                Some(e) => {
+                    let (qc, _) = ctx.quantized(&size, bits, 0, e)?;
+                    CpuModel::from_quantized(&qc)
+                }
+            };
+            let (ce, cc, mcq, bin) = ctx.zeroshot(&mut model)?;
+            println!(
+                "{:<8} {:<8} {:>5} {:>12.1} {:>13.1} {:>10.1} {:>10.1}",
+                size,
+                name,
+                bits,
+                ce * 100.0,
+                cc * 100.0,
+                mcq * 100.0,
+                bin * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Ablations — §3.3 design choices
+// ---------------------------------------------------------------------------
+
+pub fn ablations(ctx: &mut Ctx) -> Result<()> {
+    println!("\n== Ablations: the paper's §3.3 design choices, measured ==");
+    let size = ctx.sizes.first().cloned().unwrap_or_else(|| "nano".into());
+    let entry = ctx.rt.manifest.model(&size)?.clone();
+    let dir = crate::artifacts_dir();
+    let calib = CorpusFile::load(&ctx.rt.manifest.corpus_path("calib.bin"))?;
+
+    let run = |label: &str, cfg: PipelineConfig, ctx: &mut Ctx| -> Result<()> {
+        let mut ckpt = Checkpoint::load(&dir, &entry)?;
+        let report = QuantPipeline::new(&mut ctx.rt, &size, cfg).run(&mut ckpt, &calib)?;
+        let mut m = CpuModel::from_quantized(&report.checkpoint);
+        let ppl = ctx.ppl(&mut m, "narrative")?;
+        println!(
+            "{:<34} ppl {:>8.3}  mean-err {:>10.4e}  {:>7.2}s",
+            label, ppl, report.mean_layer_error, report.total_s
+        );
+        Ok(())
+    };
+
+    let calib_segments = ctx.calib_segments;
+    let base = move |bits| {
+        let mut c = PipelineConfig::new(bits, QuantEngine::GptqRust);
+        c.n_calib_segments = calib_segments;
+        c
+    };
+
+    println!("--- column order (paper Step 1: fixed order loses little) ---");
+    run("natural order (GPTQ)", base(3), ctx)?;
+    let mut act = base(3);
+    act.gptq.order = Order::ActOrder;
+    run("act-order (greedy-ish)", act, ctx)?;
+
+    println!("--- inverse maintenance (paper Step 3: Cholesky) ---");
+    run("cholesky (GPTQ)", base(3), ctx)?;
+    let mut naive = base(3);
+    naive.gptq.use_cholesky = false;
+    run("naive Eq.(3) updates", naive, ctx)?;
+
+    println!("--- dampening (paper: 1% of mean diag) ---");
+    run("damp 1% (GPTQ)", base(3), ctx)?;
+    let mut nodamp = base(3);
+    nodamp.gptq.percdamp = 1e-8;
+    run("damp ~0", nodamp, ctx)?;
+
+    println!("--- quantized-input propagation (paper §4 Setup trick) ---");
+    run("propagate quantized (GPTQ)", base(3), ctx)?;
+    let mut noprop = base(3);
+    noprop.propagate_quantized = false;
+    run("propagate full-precision", noprop, ctx)?;
+
+    println!("--- lazy batching (paper Step 2: blocking changes speed, not result) ---");
+    let (w, h) = synthetic_layer(512, 512);
+    for bs in [1usize, 16, 128, 512] {
+        let cfg = GptqConfig { blocksize: bs, ..GptqConfig::new(4) };
+        let t0 = Instant::now();
+        let r = gptq_quantize(&w, 512, 512, &h, &cfg).unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let checksum: f64 = r.wq.iter().map(|&v| v as f64).sum();
+        println!("blocksize {bs:>4}: {ms:>9.1} ms   (wq checksum {checksum:+.4} — identical across rows)");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+
+pub fn main_cli() -> Result<()> {
+    let args = Args::from_env();
+    let which = args.positional.first().map(String::as_str).unwrap_or("all").to_string();
+    let mut ctx = Ctx::new(&args)?;
+    let t0 = Instant::now();
+    match which.as_str() {
+        "table1" => table1(&mut ctx)?,
+        "fig1" => fig1(&mut ctx)?,
+        "table2" => table2(&mut ctx)?,
+        "fig3" => fig3(&mut ctx)?,
+        "table4" => table4(&mut ctx)?,
+        "table5" => table5(&mut ctx)?,
+        "table6" => table6(&mut ctx)?,
+        "fig4" => fig4(&mut ctx)?,
+        "ablations" => ablations(&mut ctx)?,
+        "all" => {
+            table1(&mut ctx)?;
+            fig1(&mut ctx)?;
+            table2(&mut ctx)?;
+            fig3(&mut ctx)?;
+            table4(&mut ctx)?;
+            table5(&mut ctx)?;
+            table6(&mut ctx)?;
+            fig4(&mut ctx)?;
+            ablations(&mut ctx)?;
+        }
+        other => anyhow::bail!(
+            "unknown table {other}; one of table1|fig1|table2|fig3|table4|table5|table6|fig4|ablations|all"
+        ),
+    }
+    eprintln!("\n[{which} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}

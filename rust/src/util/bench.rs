@@ -1,0 +1,93 @@
+//! Micro-benchmark harness (the criterion stand-in): warmup, repeated
+//! timed runs, mean / stddev / min, and aligned table printing for the
+//! paper-table benches.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10.4} ms ±{:>8.4}  (min {:>10.4}, n={})",
+            self.name, self.mean_ms, self.std_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, &times)
+}
+
+/// Auto-calibrating variant: picks an iteration count so total measured
+/// time is ≈ `budget_ms` (criterion-style), with at least `min_iters`.
+pub fn bench_auto<F: FnMut()>(name: &str, budget_ms: f64, min_iters: usize, mut f: F) -> BenchResult {
+    let t = Instant::now();
+    f();
+    let probe_ms = (t.elapsed().as_secs_f64() * 1e3).max(1e-6);
+    let iters = ((budget_ms / probe_ms) as usize).clamp(min_iters, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+fn summarize(name: &str, times: &[f64]) -> BenchResult {
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        mean_ms: mean,
+        std_ms: var.sqrt(),
+        min_ms: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters: times.len(),
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..50_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms > 0.0);
+        assert!(r.min_ms <= r.mean_ms);
+    }
+
+    #[test]
+    fn bench_auto_scales_iters() {
+        let r = bench_auto("noop", 5.0, 3, || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+}

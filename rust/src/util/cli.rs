@@ -1,0 +1,91 @@
+//! Tiny CLI argument parser (`--flag value` / `--flag` / positionals) —
+//! the clap stand-in for the offline environment.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `std::env::args().skip(1)`-style iterators. `--key value`
+    /// pairs become flags; `--key` followed by another `--…` (or nothing)
+    /// becomes a boolean flag with value "true".
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let takes_value = iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                let value = if takes_value { iter.next().unwrap() } else { "true".to_string() };
+                out.flags.insert(key.to_string(), value);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("quantize extra --bits 3 --size small --force");
+        assert_eq!(a.positional, vec!["quantize", "extra"]);
+        assert_eq!(a.u32_or("bits", 4), 3);
+        assert_eq!(a.str_or("size", "nano"), "small");
+        assert!(a.flag("force"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("--verbose --bits 2");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.u32_or("bits", 0), 2);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("x", "d"), "d");
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained substrate the offline environment forces us to carry:
+//! a JSON parser/writer ([`json`]), a small CLI argument parser ([`cli`]),
+//! and a criterion-style micro-benchmark harness ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,117 @@
+//! Cross-language golden test: the pure-Rust quant substrate must
+//! reproduce the Python oracle (`kernels/ref.py`) on the vectors emitted
+//! into `artifacts/golden.json` by `make artifacts`.
+//!
+//! Codes are compared exactly (allowing a tiny razor-edge budget for the
+//! different-but-equivalent SPD inverse algorithms: numpy LU vs our
+//! Cholesky); dequantized weights to float tolerance.
+
+use gptq_rs::quant::{gptq_quantize, pack::pack_row, rtn_quantize, GptqConfig};
+use gptq_rs::util::Json;
+
+fn load_golden() -> Option<Json> {
+    let path = gptq_rs::artifacts_dir().join("golden.json");
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(Json::parse(&text).expect("golden.json parse"))
+}
+
+macro_rules! require_golden {
+    () => {
+        match load_golden() {
+            Some(g) => g,
+            None => {
+                eprintln!("SKIP: artifacts/golden.json missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn f32s(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key).unwrap().f32_vec().unwrap()
+}
+
+fn usizes(j: &Json, key: &str) -> Vec<usize> {
+    j.get(key).unwrap().usize_vec().unwrap()
+}
+
+#[test]
+fn gptq_matches_python_oracle() {
+    let golden = require_golden!();
+    let mut total_codes = 0usize;
+    let mut mismatched = 0usize;
+    for case in golden.get("cases").unwrap().as_arr().unwrap() {
+        let drow = case.get("drow").unwrap().as_usize().unwrap();
+        let dcol = case.get("dcol").unwrap().as_usize().unwrap();
+        let bits = case.get("bits").unwrap().as_u32().unwrap();
+        let blocksize = case.get("blocksize").unwrap().as_usize().unwrap();
+        let groupsize = case.get("groupsize").unwrap().as_usize().unwrap();
+        let w = f32s(case, "w");
+        let h: Vec<f64> = case.get("h").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+
+        let cfg = GptqConfig { bits, blocksize, groupsize, ..GptqConfig::new(bits) };
+        let r = gptq_quantize(&w, drow, dcol, &h, &cfg).unwrap();
+
+        let want_codes = usizes(case, "gptq_codes");
+        total_codes += want_codes.len();
+        mismatched += r
+            .codes
+            .iter()
+            .zip(&want_codes)
+            .filter(|(a, b)| (**a as usize) != **b)
+            .count();
+
+        let want_wq = f32s(case, "gptq_wq");
+        let mut max_err = 0.0f32;
+        for (a, b) in r.wq.iter().zip(&want_wq) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 5e-3, "bits={bits} g={groupsize}: wq max err {max_err}");
+
+        let want_scales = f32s(case, "gptq_scales");
+        for (a, b) in r.scales.iter().zip(&want_scales) {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-3), "scale {a} vs {b}");
+        }
+    }
+    // allow ≤0.2% razor-edge rounding flips from LU-vs-Cholesky inverses
+    assert!(
+        (mismatched as f64) <= 0.002 * total_codes as f64,
+        "{mismatched}/{total_codes} GPTQ codes differ from the Python oracle"
+    );
+}
+
+#[test]
+fn rtn_matches_python_oracle_exactly() {
+    let golden = require_golden!();
+    for case in golden.get("cases").unwrap().as_arr().unwrap() {
+        let drow = case.get("drow").unwrap().as_usize().unwrap();
+        let dcol = case.get("dcol").unwrap().as_usize().unwrap();
+        let bits = case.get("bits").unwrap().as_u32().unwrap();
+        let groupsize = case.get("groupsize").unwrap().as_usize().unwrap();
+        let w = f32s(case, "w");
+        let r = rtn_quantize(&w, drow, dcol, bits, groupsize);
+        let want: Vec<usize> = usizes(case, "rtn_codes");
+        let got: Vec<usize> = r.codes.iter().map(|&c| c as usize).collect();
+        assert_eq!(got, want, "RTN codes must match bit-exactly (bits={bits})");
+        let want_wq = f32s(case, "rtn_wq");
+        for (a, b) in r.wq.iter().zip(&want_wq) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn packing_matches_python_oracle_exactly() {
+    let golden = require_golden!();
+    for case in golden.get("cases").unwrap().as_arr().unwrap() {
+        let dcol = case.get("dcol").unwrap().as_usize().unwrap();
+        let bits = case.get("bits").unwrap().as_u32().unwrap();
+        let codes: Vec<u8> = usizes(case, "gptq_codes").iter().map(|&c| c as u8).collect();
+        let want: Vec<u32> = usizes(case, "packed_words").iter().map(|&w| w as u32).collect();
+        let mut words = Vec::new();
+        for row in codes.chunks_exact(dcol) {
+            pack_row(row, bits, &mut words);
+        }
+        assert_eq!(words, want, "bits={bits}: packed words differ from python");
+    }
+}

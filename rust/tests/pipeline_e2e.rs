@@ -1,0 +1,131 @@
+//! End-to-end pipeline tests on the real artifacts: quantize the nano
+//! model through the full block-streaming pipeline, evaluate, and verify
+//! the paper's qualitative claims hold at this scale:
+//!   * 4-bit GPTQ ppl ≈ fp32 ppl (small gap);
+//!   * GPTQ ≤ RTN ppl at every bit width;
+//!   * the checkpoint round-trips through disk.
+
+use gptq_rs::coordinator::{PipelineConfig, QuantEngine, QuantPipeline};
+use gptq_rs::data::CorpusFile;
+use gptq_rs::eval::perplexity;
+use gptq_rs::model::{Checkpoint, CpuModel, QuantizedCheckpoint};
+use gptq_rs::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = gptq_rs::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::from_artifacts_dir(&dir).expect("runtime"))
+}
+
+fn quantized_ppl(rt: &mut Runtime, size: &str, cfg: PipelineConfig) -> (f64, QuantizedCheckpoint) {
+    let dir = gptq_rs::artifacts_dir();
+    let entry = rt.manifest.model(size).unwrap().clone();
+    let mut ckpt = Checkpoint::load(&dir, &entry).unwrap();
+    let calib = CorpusFile::load(&rt.manifest.corpus_path("calib.bin")).unwrap();
+    let report = QuantPipeline::new(rt, size, cfg).run(&mut ckpt, &calib).unwrap();
+    let corpus = CorpusFile::load(&rt.manifest.corpus_path("narrative_test.bin")).unwrap();
+    let mut m = CpuModel::from_quantized(&report.checkpoint);
+    let seq = rt.manifest.seq_len;
+    (perplexity(&mut m, &corpus, seq, 8), report.checkpoint)
+}
+
+#[test]
+fn gptq4_close_to_fp_and_beats_rtn() {
+    let Some(mut rt) = runtime() else { return };
+    let size = "nano";
+    let dir = gptq_rs::artifacts_dir();
+    let entry = rt.manifest.model(size).unwrap().clone();
+    let ckpt = Checkpoint::load(&dir, &entry).unwrap();
+    let corpus = CorpusFile::load(&rt.manifest.corpus_path("narrative_test.bin")).unwrap();
+    let mut fp = CpuModel::from_checkpoint(&ckpt);
+    let ppl_fp = perplexity(&mut fp, &corpus, rt.manifest.seq_len, 8);
+
+    let mut cfg = PipelineConfig::new(4, QuantEngine::GptqRust);
+    cfg.n_calib_segments = 32;
+    let (ppl_gptq, qc) = quantized_ppl(&mut rt, size, cfg);
+
+    let mut cfg_rtn = PipelineConfig::new(4, QuantEngine::Rtn);
+    cfg_rtn.n_calib_segments = 32;
+    let (ppl_rtn, _) = quantized_ppl(&mut rt, size, cfg_rtn);
+
+    eprintln!("nano 4-bit: fp {ppl_fp:.3}  gptq {ppl_gptq:.3}  rtn {ppl_rtn:.3}");
+    assert!(ppl_gptq < ppl_rtn * 1.02, "GPTQ {ppl_gptq} should beat/match RTN {ppl_rtn}");
+    assert!(
+        ppl_gptq < ppl_fp * 1.5,
+        "4-bit GPTQ ppl {ppl_gptq} too far above fp {ppl_fp}"
+    );
+
+    // checkpoint round-trip preserves the model
+    let tmp = std::env::temp_dir().join("gptq_e2e_nano4.ckpt");
+    qc.save(&tmp).unwrap();
+    let qc2 = QuantizedCheckpoint::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let mut m2 = CpuModel::from_quantized(&qc2);
+    let ppl2 = perplexity(&mut m2, &corpus, rt.manifest.seq_len, 8);
+    assert!((ppl2 - ppl_gptq).abs() < 1e-6 * ppl_gptq.max(1.0));
+}
+
+#[test]
+fn gptq_beats_rtn_at_3bit_by_larger_margin() {
+    // The paper's headline: the GPTQ/RTN gap WIDENS as bits shrink.
+    let Some(mut rt) = runtime() else { return };
+    let size = "nano";
+    let mut g4 = PipelineConfig::new(4, QuantEngine::GptqRust);
+    g4.n_calib_segments = 32;
+    let mut r4 = PipelineConfig::new(4, QuantEngine::Rtn);
+    r4.n_calib_segments = 32;
+    let mut g3 = PipelineConfig::new(3, QuantEngine::GptqRust);
+    g3.n_calib_segments = 32;
+    let mut r3 = PipelineConfig::new(3, QuantEngine::Rtn);
+    r3.n_calib_segments = 32;
+    let (p_g4, _) = quantized_ppl(&mut rt, size, g4);
+    let (p_r4, _) = quantized_ppl(&mut rt, size, r4);
+    let (p_g3, _) = quantized_ppl(&mut rt, size, g3);
+    let (p_r3, _) = quantized_ppl(&mut rt, size, r3);
+    eprintln!("4-bit: gptq {p_g4:.3} rtn {p_r4:.3}; 3-bit: gptq {p_g3:.3} rtn {p_r3:.3}");
+    assert!(p_g3 < p_r3, "3-bit: GPTQ {p_g3} !< RTN {p_r3}");
+    // gap in log-ppl space grows when dropping to 3 bits
+    let gap4 = (p_r4.ln() - p_g4.ln()).max(0.0);
+    let gap3 = p_r3.ln() - p_g3.ln();
+    assert!(gap3 >= gap4 * 0.8, "3-bit gap {gap3} vs 4-bit gap {gap4}");
+}
+
+#[test]
+fn xla_engine_agrees_with_rust_engine() {
+    // Same pipeline, solver swapped for the AOT L2 graph: perplexities
+    // must agree tightly.
+    let Some(mut rt) = runtime() else { return };
+    let size = "nano";
+    if !rt.manifest.has_artifact("gptq_layer_192x64_b4") {
+        eprintln!("SKIP: gptq_layer artifacts not lowered");
+        return;
+    }
+    let mut rust_cfg = PipelineConfig::new(4, QuantEngine::GptqRust);
+    rust_cfg.n_calib_segments = 16;
+    let mut xla_cfg = PipelineConfig::new(4, QuantEngine::GptqXla);
+    xla_cfg.n_calib_segments = 16;
+    let (p_rust, _) = quantized_ppl(&mut rt, size, rust_cfg);
+    let (p_xla, _) = quantized_ppl(&mut rt, size, xla_cfg);
+    let rel = (p_rust - p_xla).abs() / p_rust;
+    eprintln!("engines: rust {p_rust:.4} vs xla {p_xla:.4} (rel {rel:.4})");
+    assert!(rel < 0.05, "engine disagreement: rust {p_rust} vs xla {p_xla}");
+}
+
+#[test]
+fn grouping_helps_at_2bit() {
+    // Table 6's story end-to-end: 2-bit per-row collapses; groups recover.
+    let Some(mut rt) = runtime() else { return };
+    let size = "nano";
+    let mut coarse = PipelineConfig::new(2, QuantEngine::GptqRust);
+    coarse.n_calib_segments = 32;
+    let mut fine = PipelineConfig::new(2, QuantEngine::GptqRust).with_groupsize(16);
+    fine.n_calib_segments = 32;
+    let (p_coarse, _) = quantized_ppl(&mut rt, size, coarse);
+    let (p_fine, qc) = quantized_ppl(&mut rt, size, fine);
+    eprintln!("2-bit: per-row {p_coarse:.2}, g=16 {p_fine:.2}");
+    assert!(p_fine < p_coarse, "grouping should reduce 2-bit ppl");
+    assert_eq!(qc.groupsize, 16);
+}
