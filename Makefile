@@ -1,0 +1,15 @@
+# Top-level targets. `artifacts` is the ONLY Python invocation in the
+# project (build time); everything after it is the self-contained Rust
+# coordinator (see README.md).
+
+.PHONY: artifacts check
+
+# Train the default model ladder, generate corpora + zero-shot tasks, and
+# lower the L1/L2 graphs to HLO text under ./artifacts.
+# Override sizes with: make artifacts GPTQ_SIZES=nano,micro
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+# Tier-1 gate (delegates to rust/Makefile).
+check:
+	$(MAKE) -C rust check

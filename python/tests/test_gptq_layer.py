@@ -4,6 +4,7 @@ properties the paper claims (GPTQ ≤ RTN layer error; blocking is exact)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # property sweeps need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from compile.gptq_layer import gptq_quantize_layer, rtn_quantize_layer

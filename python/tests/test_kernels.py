@@ -8,6 +8,7 @@ that get lowered into the AOT artifacts.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # property sweeps need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

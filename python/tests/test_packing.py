@@ -1,6 +1,8 @@
 """Bit-packing semantics (shared with rust/src/quant/pack.rs)."""
 
 import numpy as np
+import pytest
+hypothesis = pytest.importorskip("hypothesis")  # property sweeps need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

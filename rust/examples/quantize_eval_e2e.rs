@@ -1,9 +1,11 @@
 //! END-TO-END driver (the repo's full-system proof): load a real trained
 //! checkpoint, run the complete block-streaming quantization pipeline
-//! through the XLA artifacts (L2 graphs + L1 Pallas kernels, AOT), pack
-//! the weights, and evaluate perplexity + zero-shot accuracy for
-//! fp32 / RTN / GPTQ at 4 and 3 bits — the paper's Figure 1 story on one
-//! model, produced by every layer of the stack working together.
+//! through the runtime's execution backend (the pure-Rust reference
+//! engine by default; the AOT XLA artifacts — L2 graphs + L1 Pallas
+//! kernels — under `--features pjrt`), pack the weights, and evaluate
+//! perplexity + zero-shot accuracy for fp32 / RTN / GPTQ at 4 and 3 bits
+//! — the paper's Figure 1 story on one model, produced by every layer of
+//! the stack working together.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quantize_eval_e2e [-- --size micro]

@@ -9,7 +9,9 @@
 //!   already partially quantized" trick.
 //! * [`serve`] — token-by-token generation server: request router,
 //!   dynamic batcher, KV-cache pool, per-token latency metrics (the
-//!   Table 5 measurement harness).
+//!   Table 5 measurement harness), plus the [`serve::verify_parity`]
+//!   pre-flight check that compares the serving decode path against the
+//!   runtime's execution backend before workers start.
 //! * [`metrics`] — latency/throughput accounting.
 
 pub mod metrics;
@@ -18,4 +20,4 @@ pub mod serve;
 
 pub use metrics::LatencyStats;
 pub use pipeline::{QuantEngine, QuantPipeline, PipelineConfig, PipelineReport};
-pub use serve::{GenRequest, GenResponse, Server, ServerConfig};
+pub use serve::{verify_parity, GenRequest, GenResponse, Server, ServerConfig};

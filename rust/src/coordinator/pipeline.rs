@@ -7,8 +7,10 @@
 //! > of the next block."
 //!
 //! Stages per block (all shapes come from the manifest; the forward passes
-//! run through the AOT XLA artifacts, the solver either in pure Rust or
-//! through the AOT `gptq_layer_*` graph — both produce identical results,
+//! run through the [`Runtime`]'s execution backend — the pure-Rust
+//! reference engine by default, the AOT XLA artifacts under
+//! `--features pjrt` — and the solver either in pure Rust or through the
+//! `gptq_layer_*` artifact contract; all paths produce matching results,
 //! see the integration tests):
 //!
 //!   x ── block_capture ──► per-linear inputs ──► H += 2XᵀX per linear
@@ -22,8 +24,7 @@ use crate::model::checkpoint::{LayerStats, QuantizedCheckpoint};
 use crate::model::config::QUANT_LINEARS;
 use crate::model::{Checkpoint, ModelConfig};
 use crate::quant::{self, gptq_quantize, rtn_quantize, GptqConfig, PackedMatrix, QuantResult};
-use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32};
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, Value, BLOCK_TENSORS};
 use crate::Result;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -33,9 +34,10 @@ use std::time::Instant;
 pub enum QuantEngine {
     /// Pure-Rust GPTQ (f64 Cholesky) — the default.
     GptqRust,
-    /// The AOT-lowered L2 graph (`gptq_layer_<shape>_b<bits>`), executed
-    /// through PJRT — available for bits with a lowered artifact.
-    GptqXla,
+    /// The `gptq_layer_<shape>_b<bits>` artifact contract, executed through
+    /// the runtime's backend (the L2 graph under PJRT, the reference solver
+    /// otherwise) — available where the backend supports the artifact.
+    GptqArtifact,
     /// Round-to-nearest baseline.
     Rtn,
     /// Full greedy OBQ (slow; Table 1/7 baseline).
@@ -107,16 +109,20 @@ impl<'rt> QuantPipeline<'rt> {
         let token_batches = batch_segments(&segments, batch);
         anyhow::ensure!(!token_batches.is_empty(), "not enough calibration segments");
 
-        // 2. embed: token batches -> activations
+        // 2. embed: token batches -> activations (embed/pos marshalled
+        // once; only the tokens slot changes per batch)
         let mut xs: Vec<Vec<f32>> = Vec::with_capacity(token_batches.len());
+        let mut inputs = vec![
+            Value::i32(vec![0; batch * seq], &[batch, seq])?,
+            Value::f32(ckpt.get("embed").data.clone(), &ckpt.get("embed").shape)?,
+            Value::f32(ckpt.get("pos").data.clone(), &ckpt.get("pos").shape)?,
+        ];
+        let embed_name = format!("embed_{}", self.size);
         for tokens in &token_batches {
-            let inputs = vec![
-                literal_i32(tokens, &[batch, seq])?,
-                literal_f32(&ckpt.get("embed").data, &ckpt.get("embed").shape)?,
-                literal_f32(&ckpt.get("pos").data, &ckpt.get("pos").shape)?,
-            ];
-            let out = self.rt.execute(&format!("embed_{}", self.size), &inputs)?;
-            xs.push(to_vec_f32(&out[0])?);
+            inputs[0] = Value::i32(tokens.clone(), &[batch, seq])?;
+            let out = self.rt.execute(&embed_name, &inputs)?;
+            anyhow::ensure!(!out.is_empty(), "embed returned no outputs");
+            xs.push(out.into_iter().next().unwrap().into_f32()?);
         }
 
         // 3. per block: capture -> hessians -> quantize -> propagate
@@ -237,22 +243,20 @@ impl<'rt> QuantPipeline<'rt> {
         batch: usize,
         seq: usize,
     ) -> Result<(Vec<f32>, [Vec<f32>; 4])> {
-        let mut inputs = vec![literal_f32(x, &[batch, seq, config.d_model])?];
-        for name in [
-            "ln1_g", "ln1_b", "ln2_g", "ln2_b", "wqkv", "wqkv_b", "wo", "wo_b", "wup", "wup_b",
-            "wdn", "wdn_b",
-        ] {
+        let mut inputs = vec![Value::f32(x.to_vec(), &[batch, seq, config.d_model])?];
+        for name in BLOCK_TENSORS {
             let t = ckpt.block_tensor(layer, name);
-            inputs.push(literal_f32(&t.data, &t.shape)?);
+            inputs.push(Value::f32(t.data.clone(), &t.shape)?);
         }
         let out = self.rt.execute(&format!("block_capture_{}", self.size), &inputs)?;
         anyhow::ensure!(out.len() == 5, "block_capture returned {} outputs", out.len());
-        let y = to_vec_f32(&out[0])?;
+        let mut it = out.into_iter();
+        let y = it.next().unwrap().into_f32()?;
         let caps = [
-            to_vec_f32(&out[1])?,
-            to_vec_f32(&out[2])?,
-            to_vec_f32(&out[3])?,
-            to_vec_f32(&out[4])?,
+            it.next().unwrap().into_f32()?,
+            it.next().unwrap().into_f32()?,
+            it.next().unwrap().into_f32()?,
+            it.next().unwrap().into_f32()?,
         ];
         Ok((y, caps))
     }
@@ -274,20 +278,29 @@ impl<'rt> QuantPipeline<'rt> {
                 crate::quant::obq_quantize(w, drow, dcol, h, self.cfg.bits, self.cfg.gptq.percdamp)
                     .map_err(|e| anyhow::anyhow!(e))
             }
-            QuantEngine::GptqXla => {
+            QuantEngine::GptqArtifact => {
+                // the gptq_layer contract takes only (W, H): per-row grids
+                anyhow::ensure!(
+                    self.cfg.groupsize == 0,
+                    "the artifact engine quantizes per-row (the gptq_layer contract carries no \
+                     group size); use --engine rust for grouped grids"
+                );
                 let name = format!("gptq_layer_{drow}x{dcol}_b{}", self.cfg.bits);
                 anyhow::ensure!(
-                    self.rt.manifest.has_artifact(&name),
-                    "no AOT artifact {name}; use the rust engine or re-run aot.py"
+                    self.rt.supports(&name),
+                    "backend {} cannot execute {name}; use the rust engine or re-run aot.py",
+                    self.rt.backend_name()
                 );
                 let hf: Vec<f32> = h.iter().map(|&v| v as f32).collect();
-                let inputs = vec![literal_f32(w, &[drow, dcol])?, literal_f32(&hf, &[dcol, dcol])?];
+                let inputs =
+                    vec![Value::f32(w.to_vec(), &[drow, dcol])?, Value::f32(hf, &[dcol, dcol])?];
                 let out = self.rt.execute(&name, &inputs)?;
                 anyhow::ensure!(out.len() == 4, "gptq_layer returned {} outputs", out.len());
-                let codes_f = to_vec_f32(&out[0])?;
-                let scales = to_vec_f32(&out[1])?;
-                let zeros = to_vec_f32(&out[2])?;
-                let wq = to_vec_f32(&out[3])?;
+                let mut it = out.into_iter();
+                let codes_f = it.next().unwrap().into_f32()?;
+                let scales = it.next().unwrap().into_f32()?;
+                let zeros = it.next().unwrap().into_f32()?;
+                let wq = it.next().unwrap().into_f32()?;
                 let ngroups = scales.len() / drow;
                 Ok(QuantResult {
                     codes: codes_f.iter().map(|&c| c as u8).collect(),

@@ -9,7 +9,11 @@
 //! matvec-bound regime the paper targets (§Practical Speedups).
 
 use crate::coordinator::metrics::LatencyStats;
-use crate::model::{CpuModel, KvCache};
+use crate::data::CorpusFile;
+use crate::eval::{perplexity, perplexity_artifact};
+use crate::model::{Checkpoint, CpuModel, KvCache};
+use crate::runtime::Runtime;
+use crate::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -133,6 +137,31 @@ impl Server {
     }
 }
 
+/// Pre-flight deployment check: evaluate a few segments through BOTH the
+/// serving decode path (`CpuModel`, KV-cached) and the runtime's execution
+/// backend (`lm_fwd_<size>` artifact contract), and return the relative
+/// perplexity difference. A healthy deployment is ≈0 on the reference
+/// backend and <2% against the lowered XLA graph; anything larger means
+/// the checkpoint and the artifact tree disagree (stale `make artifacts`,
+/// wrong size flag, corrupted weights).
+///
+/// `segments` should be a multiple of the manifest's `eval_batch`.
+pub fn verify_parity(
+    rt: &mut Runtime,
+    size: &str,
+    ckpt: &Checkpoint,
+    corpus: &CorpusFile,
+    segments: usize,
+) -> Result<f64> {
+    let seq = rt.manifest.seq_len;
+    let batch = rt.manifest.eval_batch;
+    let batches = (segments / batch).max(1);
+    let mut cpu = CpuModel::from_checkpoint(ckpt);
+    let ppl_cpu = perplexity(&mut cpu, corpus, seq, batches * batch);
+    let ppl_art = perplexity_artifact(rt, size, ckpt, corpus, batches)?;
+    Ok((ppl_cpu - ppl_art).abs() / ppl_art.max(1e-12))
+}
+
 fn worker_loop(
     wid: usize,
     mut model: CpuModel,
@@ -229,7 +258,7 @@ fn generate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::forward::tiny_checkpoint;
+    use crate::model::testkit::tiny_checkpoint;
 
     fn server(n_workers: usize) -> Server {
         let cfg = ServerConfig { n_workers, max_batch: 2, linger: Duration::from_millis(1) };
@@ -295,5 +324,16 @@ mod tests {
         let r = s.recv();
         assert!(r.tokens.len() < 16);
         s.shutdown();
+    }
+
+    #[test]
+    fn parity_check_passes_on_reference_backend() {
+        use crate::model::testkit::{tiny_corpus, tiny_manifest, TINY_SIZE};
+        let (seq, batch) = (12usize, 2usize);
+        let mut rt = crate::runtime::Runtime::new(tiny_manifest(seq, batch)).unwrap();
+        let ckpt = tiny_checkpoint(11);
+        let corpus = tiny_corpus(1024, 7);
+        let rel = verify_parity(&mut rt, TINY_SIZE, &ckpt, &corpus, 4).unwrap();
+        assert!(rel < 1e-3, "decode path vs reference backend: rel {rel}");
     }
 }

@@ -4,7 +4,7 @@
 pub mod ppl;
 pub mod zeroshot;
 
-pub use ppl::{perplexity, perplexity_xla};
+pub use ppl::{perplexity, perplexity_artifact};
 pub use zeroshot::{eval_choice, eval_cloze};
 
 /// log-softmax at one position; returns log p(target).

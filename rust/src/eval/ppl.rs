@@ -4,9 +4,8 @@
 
 use super::log_prob;
 use crate::data::CorpusFile;
-use crate::model::CpuModel;
-use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32};
-use crate::runtime::Runtime;
+use crate::model::{Checkpoint, CpuModel};
+use crate::runtime::{Runtime, Value};
 use crate::Result;
 
 /// Perplexity of a CPU model (dense or packed) over a corpus.
@@ -27,19 +26,35 @@ pub fn perplexity(model: &mut CpuModel, corpus: &CorpusFile, seq_len: usize, max
     (nll / count as f64).exp()
 }
 
-/// Perplexity via the XLA `lm_fwd_<size>` artifact — the fast batched path
-/// (and the L2-graph parity check for the CPU forward). `weights` must be
-/// the flattened tensor literals in manifest order.
-pub fn perplexity_xla(
+/// Perplexity via the `lm_fwd_<size>` artifact contract on the runtime's
+/// execution backend — the batched path, and the graph-parity check for
+/// the CPU forward (reference backend: same math, different code path;
+/// PJRT backend: the lowered L2 graph).
+///
+/// Evaluates the same segment/target protocol as [`perplexity`], so the
+/// two are directly comparable (see `coordinator::serve::verify_parity`).
+pub fn perplexity_artifact(
     rt: &mut Runtime,
     size: &str,
-    weights: &[xla::Literal],
+    ckpt: &Checkpoint,
     corpus: &CorpusFile,
     max_batches: usize,
 ) -> Result<f64> {
     let seq = rt.manifest.seq_len;
     let batch = rt.manifest.eval_batch;
-    let vocab = 256usize;
+    let entry = rt.manifest.model(size)?;
+    let vocab = entry.config.vocab;
+    // inputs built ONCE: tokens placeholder + weight values in manifest
+    // tensor order (the AOT parameter order); only the tokens slot is
+    // rewritten per batch — the weights are multi-MB and never change
+    let mut inputs = Vec::with_capacity(1 + entry.tensors.len());
+    inputs.push(Value::i32(vec![0; batch * seq], &[batch, seq])?);
+    for t in &entry.tensors {
+        let tensor = ckpt.get(&t.name);
+        inputs.push(Value::f32(tensor.data.clone(), &tensor.shape)?);
+    }
+    let name = format!("lm_fwd_{size}");
+
     let segs = corpus.eval_segments(seq, max_batches * batch);
     let mut nll = 0.0f64;
     let mut count = 0usize;
@@ -47,15 +62,16 @@ pub fn perplexity_xla(
         if chunk.len() < batch {
             break;
         }
-        let tokens: Vec<i32> = chunk.iter().flat_map(|s| s[..seq].iter().map(|&b| b as i32)).collect();
-        let mut inputs = vec![literal_i32(&tokens, &[batch, seq])?];
-        for w in weights {
-            inputs.push(w.clone());
-        }
-        let out = rt.execute(&format!("lm_fwd_{size}"), &inputs)?;
-        let logits = to_vec_f32(&out[0])?;
+        let tokens: Vec<i32> =
+            chunk.iter().flat_map(|s| s[..seq].iter().map(|&b| b as i32)).collect();
+        inputs[0] = Value::i32(tokens, &[batch, seq])?;
+        let out = rt.execute(&name, &inputs)?;
+        anyhow::ensure!(!out.is_empty(), "{name} returned no outputs");
+        let logits = out.into_iter().next().unwrap().into_f32()?;
         for (bi, seg) in chunk.iter().enumerate() {
-            for pos in 0..seq - 1 {
+            // same targets as `perplexity`: every position of the segment
+            // (segments carry seq_len + 1 bytes)
+            for pos in 0..seq {
                 let target = seg[pos + 1] as usize;
                 let off = (bi * seq + pos) * vocab;
                 nll -= log_prob(&logits[off..off + vocab], target);
@@ -63,21 +79,14 @@ pub fn perplexity_xla(
             }
         }
     }
+    anyhow::ensure!(count > 0, "no full evaluation batches (corpus too small?)");
     Ok((nll / count as f64).exp())
-}
-
-/// Helper for literal reuse across executions (xla::Literal is not Clone;
-/// re-marshal from f32).
-pub fn weight_literals(
-    tensors: &[(Vec<f32>, Vec<usize>)],
-) -> Result<Vec<xla::Literal>> {
-    tensors.iter().map(|(d, s)| literal_f32(d, s)).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::forward::tiny_checkpoint;
+    use crate::model::testkit::{tiny_checkpoint, tiny_corpus, tiny_manifest, TINY_SIZE};
     use crate::model::CpuModel;
 
     #[test]
@@ -103,5 +112,21 @@ mod tests {
         // different coverage -> (generally) different estimate, never NaN
         let c = perplexity(&mut m, &corpus, 15, 8);
         assert!(c.is_finite());
+    }
+
+    #[test]
+    fn artifact_ppl_matches_cpu_ppl() {
+        // The lm_fwd contract on the reference backend and the KV-cached
+        // CPU decode must produce (near-)identical perplexity.
+        let (seq, batch) = (12usize, 2usize);
+        let mut rt = Runtime::new(tiny_manifest(seq, batch)).unwrap();
+        let ckpt = tiny_checkpoint(4);
+        let corpus = tiny_corpus(seq.max(16) * 40, 5);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let batches = 2usize;
+        let ppl_cpu = perplexity(&mut m, &corpus, seq, batches * batch);
+        let ppl_art = perplexity_artifact(&mut rt, TINY_SIZE, &ckpt, &corpus, batches).unwrap();
+        let rel = (ppl_cpu - ppl_art).abs() / ppl_art;
+        assert!(rel < 1e-3, "cpu {ppl_cpu} vs artifact {ppl_art} (rel {rel})");
     }
 }

@@ -104,7 +104,7 @@ fn argmax(v: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::forward::tiny_checkpoint;
+    use crate::model::testkit::tiny_checkpoint;
     use crate::model::CpuModel;
 
     // tiny_checkpoint has vocab 32 — keep test bytes below that

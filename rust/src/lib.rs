@@ -24,9 +24,12 @@
 //!   transformer forward (the serving hot path) and its packed matvec.
 //! * [`data`] — corpus access, calibration sampling, zero-shot task files.
 //! * [`eval`] — perplexity and zero-shot accuracy harnesses.
-//! * [`runtime`] — PJRT client wrapper: loads `artifacts/hlo/*.hlo.txt`
-//!   (HLO **text**; see /opt/xla-example/README.md for why not protos),
-//!   compiles once, executes from the pipeline.
+//! * [`runtime`] — the pluggable execution backend (`ExecBackend`): the
+//!   pure-Rust reference engine (default, runs everywhere) and, under
+//!   `--features pjrt`, the PJRT client that loads
+//!   `artifacts/hlo/*.hlo.txt` (HLO **text**; see
+//!   /opt/xla-example/README.md for why not protos), compiles once, and
+//!   executes from the pipeline. DESIGN.md §Backends has the full story.
 //! * [`coordinator`] — the quantization pipeline and the serving stack
 //!   (router, batcher, KV-cache pool, metrics).
 

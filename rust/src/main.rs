@@ -1,18 +1,23 @@
 //! `gptq` — the L3 coordinator CLI.
 //!
 //! ```text
-//! gptq quantize --size small --bits 3 [--groupsize 64] [--engine rust|xla|rtn|obq] [--out f.ckpt]
-//! gptq eval     --size small [--quantized f.ckpt] [--segments 24]
+//! gptq quantize --size small --bits 3 [--groupsize 64] [--engine rust|artifact|rtn|obq] [--out f.ckpt]
+//! gptq eval     --size small [--quantized f.ckpt] [--segments 24] [--via cpu|artifact]
 //! gptq serve    --size small [--quantized f.ckpt] [--workers 2] [--requests 32] [--gen-tokens 64]
 //! gptq info
 //! ```
 //!
-//! Everything runs against the AOT artifact tree (`make artifacts`);
-//! Python never executes here.
+//! Every subcommand accepts `--backend reference|pjrt` to pick the
+//! execution engine behind the artifact contracts (default: the pure-Rust
+//! reference backend, which runs everywhere; `pjrt` needs
+//! `--features pjrt` and the XLA toolchain). Everything runs against the
+//! AOT artifact tree (`make artifacts`); Python never executes here.
 
-use gptq_rs::coordinator::{GenRequest, PipelineConfig, QuantEngine, QuantPipeline, Server, ServerConfig};
+use gptq_rs::coordinator::{
+    verify_parity, GenRequest, PipelineConfig, QuantEngine, QuantPipeline, Server, ServerConfig,
+};
 use gptq_rs::data::{load_tasks, CorpusFile};
-use gptq_rs::eval::{eval_choice, eval_cloze, perplexity};
+use gptq_rs::eval::{eval_choice, eval_cloze, perplexity, perplexity_artifact};
 use gptq_rs::model::{Checkpoint, CpuModel, QuantizedCheckpoint};
 use gptq_rs::runtime::{Manifest, Runtime};
 use gptq_rs::util::cli::Args;
@@ -20,30 +25,32 @@ use gptq_rs::Result;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-const USAGE: &str = "usage: gptq [--artifacts DIR] <info|quantize|eval|serve> [flags]
-  quantize --size S --bits B [--groupsize G] [--engine rust|xla|rtn|obq] [--calib-segments N] [--out F]
-  eval     --size S [--quantized F] [--segments N]
-  serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]";
+const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] <info|quantize|eval|serve> [flags]
+  quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq] [--calib-segments N] [--out F]
+  eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
+  serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N] [--skip-parity]";
 
 fn parse_engine(s: &str) -> Result<QuantEngine> {
     Ok(match s {
         "rust" => QuantEngine::GptqRust,
-        "xla" => QuantEngine::GptqXla,
+        // "xla" kept as an alias from the pre-backend CLI
+        "artifact" | "xla" => QuantEngine::GptqArtifact,
         "rtn" => QuantEngine::Rtn,
         "obq" => QuantEngine::Obq,
-        other => anyhow::bail!("unknown engine {other} (rust|xla|rtn|obq)"),
+        other => anyhow::bail!("unknown engine {other} (rust|artifact|rtn|obq)"),
     })
 }
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let backend = args.str_or("backend", "reference");
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
-        "info" => info(&artifacts),
-        "quantize" => quantize(&artifacts, &args),
-        "eval" => eval(&artifacts, &args),
-        "serve" => serve(&artifacts, &args),
+        "info" => info(&artifacts, &backend),
+        "quantize" => quantize(&artifacts, &backend, &args),
+        "eval" => eval(&artifacts, &backend, &args),
+        "serve" => serve(&artifacts, &backend, &args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -51,9 +58,16 @@ fn main() -> Result<()> {
     }
 }
 
-fn info(artifacts: &Path) -> Result<()> {
-    let m = Manifest::load(artifacts)?;
-    println!("manifest v{} — seq_len {}, eval_batch {}", m.version, m.seq_len, m.eval_batch);
+fn info(artifacts: &Path, backend: &str) -> Result<()> {
+    let rt = Runtime::from_artifacts_dir_with(artifacts, backend)?;
+    let m = &rt.manifest;
+    println!(
+        "manifest v{} — seq_len {}, eval_batch {}, backend {}",
+        m.version,
+        m.seq_len,
+        m.eval_batch,
+        rt.backend_name()
+    );
     for (name, entry) in &m.models {
         println!(
             "  model {name:8} d={:4} L={} heads={} ff={:4}  {:>10} params",
@@ -64,12 +78,12 @@ fn info(artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn quantize(artifacts: &Path, args: &Args) -> Result<()> {
+fn quantize(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let size = args.str_or("size", "small");
     let bits = args.u32_or("bits", 4);
     let groupsize = args.usize_or("groupsize", 0);
     let engine_s = args.str_or("engine", "rust");
-    let mut rt = Runtime::from_artifacts_dir(artifacts)?;
+    let mut rt = Runtime::from_artifacts_dir_with(artifacts, backend)?;
     let entry = rt.manifest.model(&size)?.clone();
     let mut ckpt = Checkpoint::load(artifacts, &entry)?;
     let calib = CorpusFile::load(&rt.manifest.corpus_path("calib.bin"))?;
@@ -78,7 +92,7 @@ fn quantize(artifacts: &Path, args: &Args) -> Result<()> {
     let mut pipeline = QuantPipeline::new(&mut rt, &size, cfg);
     let report = pipeline.run(&mut ckpt, &calib)?;
     println!(
-        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}) in {:.2}s; mean layer sq-err {:.4e}",
+        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, backend {backend}) in {:.2}s; mean layer sq-err {:.4e}",
         report.total_s, report.mean_layer_error
     );
     for s in &report.stats {
@@ -99,38 +113,76 @@ fn quantize(artifacts: &Path, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn eval(artifacts: &Path, args: &Args) -> Result<()> {
+fn eval(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let size = args.str_or("size", "small");
     let segments = args.usize_or("segments", 24);
+    let via = args.str_or("via", "cpu");
     let m = Manifest::load(artifacts)?;
     let entry = m.model(&size)?.clone();
-    let mut model = build_model(artifacts, &entry, args.get("quantized").map(Path::new))?;
-    for style in ["narrative", "markup", "crawl"] {
-        let corpus = CorpusFile::load(&m.corpus_path(&format!("{style}_test.bin")))?;
-        let ppl = perplexity(&mut model, &corpus, m.seq_len, segments);
-        println!("{style:10} ppl {ppl:8.3}");
-    }
-    for (task, kind) in [("cloze", "cloze"), ("mcq", "choice"), ("binary", "choice")] {
-        let items = load_tasks(&m.corpus_path(&format!("tasks/{task}.jsonl")))?;
-        let acc = if kind == "cloze" {
-            eval_cloze(&mut model, &items, 200)
-        } else {
-            eval_choice(&mut model, &items, 200)
-        };
-        println!("{task:10} acc {:6.2}%", acc * 100.0);
+    match via.as_str() {
+        "cpu" => {
+            let mut model = build_model(artifacts, &entry, args.get("quantized").map(Path::new))?;
+            for style in ["narrative", "markup", "crawl"] {
+                let corpus = CorpusFile::load(&m.corpus_path(&format!("{style}_test.bin")))?;
+                let ppl = perplexity(&mut model, &corpus, m.seq_len, segments);
+                println!("{style:10} ppl {ppl:8.3}");
+            }
+            for (task, kind) in [("cloze", "cloze"), ("mcq", "choice"), ("binary", "choice")] {
+                let items = load_tasks(&m.corpus_path(&format!("tasks/{task}.jsonl")))?;
+                let acc = if kind == "cloze" {
+                    eval_cloze(&mut model, &items, 200)
+                } else {
+                    eval_choice(&mut model, &items, 200)
+                };
+                println!("{task:10} acc {:6.2}%", acc * 100.0);
+            }
+        }
+        "artifact" => {
+            // batched dense evaluation through the execution backend's
+            // lm_fwd contract (no KV cache; the graph-parity path)
+            anyhow::ensure!(
+                args.get("quantized").is_none(),
+                "--via artifact evaluates the dense checkpoint (lm_fwd takes fp weights)"
+            );
+            let mut rt = Runtime::with_backend(m, gptq_rs::runtime::backend_by_name(backend)?);
+            let ckpt = Checkpoint::load(artifacts, &entry)?;
+            let batches = segments.div_ceil(rt.manifest.eval_batch).max(1);
+            for style in ["narrative", "markup", "crawl"] {
+                let corpus = CorpusFile::load(&rt.manifest.corpus_path(&format!("{style}_test.bin")))?;
+                let ppl = perplexity_artifact(&mut rt, &size, &ckpt, &corpus, batches)?;
+                println!("{style:10} ppl {ppl:8.3}  (backend {})", rt.backend_name());
+            }
+        }
+        other => anyhow::bail!("unknown eval path {other:?} (cpu|artifact)"),
     }
     Ok(())
 }
 
-fn serve(artifacts: &Path, args: &Args) -> Result<()> {
+fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let size = args.str_or("size", "small");
     let workers = args.usize_or("workers", 1);
     let requests = args.usize_or("requests", 32);
     let gen_tokens = args.usize_or("gen-tokens", 64);
-    let m = Manifest::load(artifacts)?;
-    let entry = m.model(&size)?.clone();
-    let corpus = CorpusFile::load(&m.corpus_path("crawl_test.bin"))?;
+    let mut rt = Runtime::from_artifacts_dir_with(artifacts, backend)?;
+    let entry = rt.manifest.model(&size)?.clone();
+    let corpus = CorpusFile::load(&rt.manifest.corpus_path("crawl_test.bin"))?;
     let quantized = args.get("quantized").map(PathBuf::from);
+
+    // pre-flight: the serving hot path must agree with the execution
+    // backend before taking traffic (dense deployments only — lm_fwd
+    // takes fp weights)
+    if quantized.is_none() && !args.flag("skip-parity") {
+        let ckpt = Checkpoint::load(artifacts, &entry)?;
+        let parity_segments = rt.manifest.eval_batch;
+        let rel = verify_parity(&mut rt, &size, &ckpt, &corpus, parity_segments)?;
+        anyhow::ensure!(
+            rel < 0.02,
+            "serving parity check failed: decode path vs {} backend differ by {rel:.4} rel ppl",
+            rt.backend_name()
+        );
+        println!("parity check vs {} backend: rel ppl diff {rel:.2e}", rt.backend_name());
+    }
+
     let artifacts = artifacts.to_path_buf();
     let cfg = ServerConfig { n_workers: workers, max_batch: 4, linger: Duration::from_millis(1) };
     let mut server = Server::start(cfg, |_| {

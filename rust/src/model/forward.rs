@@ -120,7 +120,9 @@ struct Scratch {
     att_w: Vec<f32>,
 }
 
-fn layer_norm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+/// LayerNorm over one row (eps 1e-5, matching the L2 graph). Shared with
+/// the reference execution backend.
+pub(crate) fn layer_norm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
     let n = x.len() as f32;
     let mu: f32 = x.iter().sum::<f32>() / n;
     let var: f32 = x.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
@@ -131,8 +133,9 @@ fn layer_norm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
 }
 
 /// jax.nn.gelu default (tanh approximation) — must match the L2 graph.
+/// Shared with the reference execution backend.
 #[inline]
-fn gelu(x: f32) -> f32 {
+pub(crate) fn gelu(x: f32) -> f32 {
     const C: f32 = 0.7978845608028654; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
@@ -344,58 +347,10 @@ impl CpuModel {
     }
 }
 
-/// A deterministic random tiny checkpoint for tests across the crate.
-#[cfg(test)]
-pub(crate) fn tiny_checkpoint(seed: u64) -> Checkpoint {
-    tests_support::tiny_checkpoint(seed)
-}
-
-#[cfg(test)]
-pub(crate) mod tests_support {
-    use super::*;
-    use crate::model::checkpoint::Checkpoint;
-    use crate::model::config::QUANT_LINEARS;
-    use crate::model::Tensor;
-    use std::collections::BTreeMap;
-
-    pub(crate) fn tiny_checkpoint(seed: u64) -> Checkpoint {
-        let cfg = ModelConfig { d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, vocab: 32, max_seq: 16 };
-        let mut s = seed;
-        let mut lcg = move || {
-            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-            (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32 * 0.3
-        };
-        let mut tensors = BTreeMap::new();
-        let mut add = |name: &str, shape: Vec<usize>, tensors: &mut BTreeMap<String, Tensor>, f: &mut dyn FnMut() -> f32| {
-            let n: usize = shape.iter().product();
-            tensors.insert(name.to_string(), Tensor::new((0..n).map(|_| f()).collect(), shape));
-        };
-        add("embed", vec![32, 16], &mut tensors, &mut lcg);
-        add("pos", vec![16, 16], &mut tensors, &mut lcg);
-        add("unembed", vec![32, 16], &mut tensors, &mut lcg);
-        tensors.insert("lnf_g".into(), Tensor::new(vec![1.0; 16], vec![16]));
-        tensors.insert("lnf_b".into(), Tensor::new(vec![0.0; 16], vec![16]));
-        for l in 0..2 {
-            for nm in ["ln1_g", "ln2_g"] {
-                tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![1.0; 16], vec![16]));
-            }
-            for nm in ["ln1_b", "ln2_b"] {
-                tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![0.0; 16], vec![16]));
-            }
-            for nm in QUANT_LINEARS {
-                let (o, i) = cfg.linear_shape(nm);
-                add(&format!("blocks.{l}.{nm}"), vec![o, i], &mut tensors, &mut lcg);
-                tensors.insert(format!("blocks.{l}.{nm}_b"), Tensor::new(vec![0.0; o], vec![o]));
-            }
-        }
-        Checkpoint { config: cfg, tensors }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use super::tests_support::tiny_checkpoint;
+    use crate::model::testkit::tiny_checkpoint;
     use std::collections::BTreeMap;
 
     #[test]

@@ -12,6 +12,7 @@ pub mod config;
 pub mod forward;
 pub mod matvec;
 pub mod tensor;
+pub mod testkit;
 
 pub use checkpoint::{Checkpoint, QuantizedCheckpoint};
 pub use config::ModelConfig;

@@ -1,0 +1,163 @@
+//! Deterministic tiny fixtures shared by unit tests, integration tests,
+//! and benches: a random `tiny` checkpoint and a matching in-memory
+//! manifest. With these plus the reference backend, the ENTIRE pipeline
+//! (calibrate → Hessian → GPTQ → pack → eval → serve) runs without
+//! `make artifacts` — see `tests/reference_backend.rs`.
+
+use crate::model::checkpoint::Checkpoint;
+use crate::model::config::QUANT_LINEARS;
+use crate::model::{ModelConfig, Tensor};
+use crate::runtime::manifest::{Manifest, ModelEntry, QuantDefaults, TensorEntry};
+use std::collections::BTreeMap;
+
+/// Manifest model name used by [`tiny_checkpoint`] / [`tiny_manifest`].
+pub const TINY_SIZE: &str = "tiny";
+
+/// The tiny config: 2 blocks, d=16, ff=32, vocab 32, max_seq 16.
+pub fn tiny_config() -> ModelConfig {
+    ModelConfig { d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, vocab: 32, max_seq: 16 }
+}
+
+/// A deterministic random tiny checkpoint (seeded LCG weights; LayerNorms
+/// at identity, biases zero).
+pub fn tiny_checkpoint(seed: u64) -> Checkpoint {
+    let cfg = tiny_config();
+    let mut s = seed;
+    let mut lcg = move || {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32 * 0.3
+    };
+    let mut tensors = BTreeMap::new();
+    let mut add = |name: &str,
+                   shape: Vec<usize>,
+                   tensors: &mut BTreeMap<String, Tensor>,
+                   f: &mut dyn FnMut() -> f32| {
+        let n: usize = shape.iter().product();
+        tensors.insert(name.to_string(), Tensor::new((0..n).map(|_| f()).collect(), shape));
+    };
+    add("embed", vec![32, 16], &mut tensors, &mut lcg);
+    add("pos", vec![16, 16], &mut tensors, &mut lcg);
+    add("unembed", vec![32, 16], &mut tensors, &mut lcg);
+    tensors.insert("lnf_g".into(), Tensor::new(vec![1.0; 16], vec![16]));
+    tensors.insert("lnf_b".into(), Tensor::new(vec![0.0; 16], vec![16]));
+    for l in 0..2 {
+        for nm in ["ln1_g", "ln2_g"] {
+            tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![1.0; 16], vec![16]));
+        }
+        for nm in ["ln1_b", "ln2_b"] {
+            tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![0.0; 16], vec![16]));
+        }
+        for nm in QUANT_LINEARS {
+            let (o, i) = cfg.linear_shape(nm);
+            add(&format!("blocks.{l}.{nm}"), vec![o, i], &mut tensors, &mut lcg);
+            tensors.insert(format!("blocks.{l}.{nm}_b"), Tensor::new(vec![0.0; o], vec![o]));
+        }
+    }
+    Checkpoint { config: cfg, tensors }
+}
+
+/// The checkpoint tensor order shared with the Python side
+/// (`model.py::tensor_index`): head tensors, then per block the LN vectors
+/// followed by each linear and its bias.
+pub fn tiny_tensor_index() -> Vec<(String, Vec<usize>)> {
+    let cfg = tiny_config();
+    let d = cfg.d_model;
+    let mut idx: Vec<(String, Vec<usize>)> = vec![
+        ("embed".into(), vec![cfg.vocab, d]),
+        ("pos".into(), vec![cfg.max_seq, d]),
+        ("lnf_g".into(), vec![d]),
+        ("lnf_b".into(), vec![d]),
+        ("unembed".into(), vec![cfg.vocab, d]),
+    ];
+    for l in 0..cfg.n_layers {
+        for nm in ["ln1_g", "ln1_b", "ln2_g", "ln2_b"] {
+            idx.push((format!("blocks.{l}.{nm}"), vec![d]));
+        }
+        for nm in QUANT_LINEARS {
+            let (o, i) = cfg.linear_shape(nm);
+            idx.push((format!("blocks.{l}.{nm}"), vec![o, i]));
+            idx.push((format!("blocks.{l}.{nm}_b"), vec![o]));
+        }
+    }
+    idx
+}
+
+/// An in-memory manifest describing the tiny model — enough for the
+/// reference backend to run the full pipeline without any artifact tree
+/// on disk (artifact map left empty: the reference backend executes
+/// contracts by name).
+pub fn tiny_manifest(seq_len: usize, eval_batch: usize) -> Manifest {
+    let cfg = tiny_config();
+    assert!(seq_len < cfg.max_seq, "tiny seq_len must stay below max_seq");
+    let mut offset = 0usize;
+    let tensors: Vec<TensorEntry> = tiny_tensor_index()
+        .into_iter()
+        .map(|(name, shape)| {
+            let len: usize = shape.iter().product();
+            let e = TensorEntry { name, shape, offset, len };
+            offset += len * 4;
+            e
+        })
+        .collect();
+    let mut models = BTreeMap::new();
+    models.insert(
+        TINY_SIZE.to_string(),
+        ModelEntry {
+            n_params: cfg.n_params(),
+            config: cfg,
+            weights: format!("weights_{TINY_SIZE}.bin"),
+            tensors,
+        },
+    );
+    Manifest {
+        version: 1,
+        seq_len,
+        eval_batch,
+        calib_tokens: seq_len * eval_batch,
+        quant: QuantDefaults { blocksize: 128, percdamp: 0.01, gptq_artifact_bits: vec![3, 4] },
+        models,
+        artifacts: BTreeMap::new(),
+        root: std::path::PathBuf::from("."),
+    }
+}
+
+/// A deterministic synthetic byte corpus (vocab-32 bytes, mildly
+/// structured) for calibration/eval in artifact-free tests.
+pub fn tiny_corpus(n_bytes: usize, seed: u64) -> crate::data::CorpusFile {
+    let mut rng = crate::data::Rng::new(seed);
+    let bytes: Vec<u8> = (0..n_bytes)
+        .map(|i| (((i / 3) % 16) as u8 + (rng.below(16) as u8)).min(31))
+        .collect();
+    crate::data::CorpusFile { bytes, name: "tiny".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_index_covers_checkpoint() {
+        let ckpt = tiny_checkpoint(1);
+        let idx = tiny_tensor_index();
+        assert_eq!(idx.len(), ckpt.tensors.len());
+        for (name, shape) in &idx {
+            assert_eq!(&ckpt.get(name).shape, shape, "{name}");
+        }
+    }
+
+    #[test]
+    fn manifest_is_consistent() {
+        let m = tiny_manifest(12, 2);
+        let entry = m.model(TINY_SIZE).unwrap();
+        assert_eq!(entry.config.d_model, 16);
+        assert_eq!(entry.tensors[0].name, "embed");
+        assert_eq!(m.calib_tokens, 24);
+    }
+
+    #[test]
+    fn corpus_in_vocab() {
+        let c = tiny_corpus(500, 3);
+        assert_eq!(c.len(), 500);
+        assert!(c.bytes.iter().all(|&b| b < 32));
+    }
+}

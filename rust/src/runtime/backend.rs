@@ -1,0 +1,246 @@
+//! The pluggable execution backend: host-side tensor values, the
+//! [`ExecBackend`] trait every engine implements, and the [`Runtime`] the
+//! coordinator drives.
+//!
+//! An artifact (named in `artifacts/manifest.json`) is a *contract*: a
+//! fixed parameter list in AOT order and a fixed result tuple. Backends
+//! differ only in how they honor it:
+//!
+//! * [`super::ReferenceBackend`] (default) — executes the contracts in
+//!   pure Rust against the crate's own `model::`/`quant::` code paths; no
+//!   external toolchain, works everywhere, and is the semantic oracle the
+//!   integration tests compare other engines against.
+//! * `PjrtBackend` (`--features pjrt`) — compiles the AOT HLO-text
+//!   artifacts through the XLA PJRT CPU client (the L1 Pallas kernels and
+//!   L2 graphs, lowered at build time). Requires the XLA toolchain; the
+//!   vendored `xla` stub lets the path typecheck offline (DESIGN.md
+//!   §Backends).
+//!
+//! Later scaling work (sharded executors, remote pools, batched servers)
+//! plugs in here: implement [`ExecBackend`], register it in
+//! [`backend_by_name`], and the whole pipeline — calibrate → Hessian →
+//! GPTQ → pack → eval → serve — runs on it unchanged.
+
+use crate::runtime::Manifest;
+use crate::Result;
+
+/// The 12 per-block tensors following `x` in the `block_capture_<size>`
+/// contract, in AOT parameter order — shared by the producer
+/// (`aot.py::BLOCK_TENSORS`), the pipeline's call site, and the reference
+/// backend's decoder. Order is load-bearing: parameters are positional.
+pub const BLOCK_TENSORS: [&str; 12] = [
+    "ln1_g", "ln1_b", "ln2_g", "ln2_b", "wqkv", "wqkv_b", "wo", "wo_b", "wup", "wup_b", "wdn",
+    "wdn_b",
+];
+
+/// A host-side tensor value passed to / returned from artifact execution —
+/// the backend-neutral replacement for `xla::Literal` on the coordinator
+/// side.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+    U32 { data: Vec<u32>, dims: Vec<usize> },
+}
+
+fn check_dims(len: usize, dims: &[usize]) -> Result<()> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == len, "value shape {dims:?} does not hold {len} elements");
+    Ok(())
+}
+
+impl Value {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Result<Value> {
+        check_dims(data.len(), dims)?;
+        Ok(Value::F32 { data, dims: dims.to_vec() })
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Result<Value> {
+        check_dims(data.len(), dims)?;
+        Ok(Value::I32 { data, dims: dims.to_vec() })
+    }
+
+    pub fn u32(data: Vec<u32>, dims: &[usize]) -> Result<Value> {
+        check_dims(data.len(), dims)?;
+        Ok(Value::U32 { data, dims: dims.to_vec() })
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "f32",
+            Value::I32 { .. } => "i32",
+            Value::U32 { .. } => "u32",
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32 { dims, .. } | Value::I32 { dims, .. } | Value::U32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+            Value::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected f32 value, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected i32 value, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Value::U32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected u32 value, got {}", other.dtype()),
+        }
+    }
+
+    /// Consume into the f32 buffer (the common output path — avoids a copy
+    /// on multi-megabyte activations).
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            other => anyhow::bail!("expected f32 value, got {}", other.dtype()),
+        }
+    }
+}
+
+/// An execution engine for manifest artifacts.
+pub trait ExecBackend {
+    /// Stable name, as accepted by [`backend_by_name`] / `--backend`.
+    fn name(&self) -> &'static str;
+
+    /// Can this backend execute `name`? The default requires the artifact
+    /// to be lowered (listed in the manifest); synthetic backends may
+    /// accept any name matching a known contract.
+    fn supports(&self, manifest: &Manifest, name: &str) -> bool {
+        manifest.has_artifact(name)
+    }
+
+    /// Execute artifact `name`. `inputs` are in the AOT parameter order;
+    /// the return is the flattened result tuple.
+    fn execute(&mut self, manifest: &Manifest, name: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+
+    /// Cumulative setup/compile time, ms (0 for backends that don't
+    /// compile).
+    fn compile_ms(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Construct a backend from its CLI name.
+pub fn backend_by_name(name: &str) -> Result<Box<dyn ExecBackend>> {
+    match name {
+        "reference" | "rust" => Ok(Box::new(crate::runtime::ReferenceBackend::new())),
+        "pjrt" | "xla" => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(crate::runtime::pjrt::PjrtBackend::new()?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                Err(anyhow::anyhow!(
+                    "backend {name:?} requires `--features pjrt` (and the XLA toolchain — \
+                     see README.md)"
+                ))
+            }
+        }
+        other => anyhow::bail!("unknown backend {other:?} (reference|pjrt)"),
+    }
+}
+
+/// The manifest plus a pluggable execution backend — what the pipeline,
+/// evaluation, and serving layers drive.
+pub struct Runtime {
+    pub manifest: Manifest,
+    backend: Box<dyn ExecBackend>,
+    /// cumulative execute() calls (telemetry)
+    pub exec_calls: u64,
+}
+
+impl Runtime {
+    /// Wrap a manifest with an explicit backend.
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn ExecBackend>) -> Self {
+        Self { manifest, backend, exec_calls: 0 }
+    }
+
+    /// Default backend (reference — runs everywhere).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        Ok(Self::with_backend(manifest, Box::new(crate::runtime::ReferenceBackend::new())))
+    }
+
+    pub fn from_artifacts_dir(dir: &std::path::Path) -> Result<Self> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    pub fn from_artifacts_dir_with(dir: &std::path::Path, backend: &str) -> Result<Self> {
+        Ok(Self::with_backend(Manifest::load(dir)?, backend_by_name(backend)?))
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn compile_ms(&self) -> f64 {
+        self.backend.compile_ms()
+    }
+
+    /// Whether the current backend can execute `name`.
+    pub fn supports(&self, name: &str) -> bool {
+        self.backend.supports(&self.manifest, name)
+    }
+
+    /// Execute an artifact by manifest name.
+    pub fn execute(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.exec_calls += 1;
+        self.backend.execute(&self.manifest, name, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shape_validated() {
+        assert!(Value::f32(vec![1.0, 2.0], &[3]).is_err());
+        let v = Value::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(v.dims(), &[2, 3]);
+        assert_eq!(v.element_count(), 6);
+        assert_eq!(v.as_f32().unwrap().len(), 6);
+        assert!(v.as_i32().is_err());
+    }
+
+    #[test]
+    fn value_typed_accessors() {
+        let v = Value::u32(vec![7, 0xFFFF_FFFF, 3], &[3]).unwrap();
+        assert_eq!(v.as_u32().unwrap(), &[7, 0xFFFF_FFFF, 3]);
+        assert_eq!(v.dtype(), "u32");
+        let v = Value::i32(vec![-1, 2], &[2, 1]).unwrap();
+        assert_eq!(v.as_i32().unwrap(), &[-1, 2]);
+    }
+
+    #[test]
+    fn backend_factory_names() {
+        assert_eq!(backend_by_name("reference").unwrap().name(), "reference");
+        assert!(backend_by_name("no-such-backend").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let err = backend_by_name("pjrt").unwrap_err().to_string();
+            assert!(err.contains("pjrt"), "{err}");
+        }
+    }
+}

@@ -1,10 +1,23 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/hlo/*.hlo.txt`,
-//! HLO **text** — see /opt/xla-example/README.md for why not serialized
-//! protos) and executes them on the XLA CPU client from the coordinator's
-//! pipeline. Compiled executables are cached per artifact name.
+//! The runtime layer: the artifact manifest (the Python↔Rust contract) and
+//! the pluggable execution backend behind it.
+//!
+//! * [`backend`] — [`Value`] host tensors, the [`ExecBackend`] trait, and
+//!   the [`Runtime`] the coordinator drives.
+//! * [`reference`] — the default pure-Rust engine: executes every artifact
+//!   contract against this crate's own model/quant code; no toolchain.
+//! * `pjrt` (`--features pjrt`) — compiles `artifacts/hlo/*.hlo.txt` (HLO
+//!   **text**; see /opt/xla-example/README.md for why not protos) on the
+//!   XLA PJRT CPU client; executables are cached per artifact name.
+//! * [`manifest`] — `artifacts/manifest.json` parsing.
 
-pub mod client;
+pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 
-pub use client::Runtime;
+pub use backend::{backend_by_name, ExecBackend, Runtime, Value, BLOCK_TENSORS};
 pub use manifest::{ArtifactEntry, Manifest, ModelEntry, TensorEntry};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use reference::ReferenceBackend;

@@ -1,39 +1,40 @@
-//! PJRT client wrapper: HLO-text artifact loading, executable caching, and
-//! literal marshalling. Adapted from /opt/xla-example/load_hlo/.
+//! PJRT execution backend (`--features pjrt`): loads the AOT artifacts
+//! (`artifacts/hlo/*.hlo.txt`, HLO **text** — see /opt/xla-example/README.md
+//! for why not serialized protos), compiles them once on the XLA CPU
+//! client, and executes them behind the [`ExecBackend`] trait.
+//!
+//! Builds offline against the vendored `xla` stub (typecheck + literal
+//! marshalling only); real execution needs the XLA toolchain — swap the
+//! path dependency in `rust/Cargo.toml` for the real binding.
 
+use crate::runtime::backend::{ExecBackend, Value};
 use crate::runtime::Manifest;
 use crate::Result;
 use std::collections::HashMap;
 use std::time::Instant;
 
-/// A loaded PJRT CPU runtime with an executable cache keyed by artifact
+/// A loaded PJRT CPU backend with an executable cache keyed by artifact
 /// name — artifacts compile once per process and are reused across the
 /// whole pipeline (no retrace/recompile on the hot path).
-pub struct Runtime {
+pub struct PjrtBackend {
     client: xla::PjRtClient,
-    pub manifest: Manifest,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// cumulative (compile_ms, exec_calls) telemetry
-    pub compile_ms: f64,
-    pub exec_calls: u64,
+    /// cumulative compile time, ms
+    compile_ms: f64,
 }
 
-impl Runtime {
-    pub fn new(manifest: Manifest) -> Result<Self> {
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Self { client, manifest, executables: HashMap::new(), compile_ms: 0.0, exec_calls: 0 })
-    }
-
-    pub fn from_artifacts_dir(dir: &std::path::Path) -> Result<Self> {
-        Self::new(Manifest::load(dir)?)
+        Ok(Self { client, executables: HashMap::new(), compile_ms: 0.0 })
     }
 
     /// Compile (or fetch from cache) an artifact by manifest name.
-    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+    fn ensure_loaded(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
         if self.executables.contains_key(name) {
             return Ok(());
         }
-        let path = self.manifest.artifact_path(name)?;
+        let path = manifest.artifact_path(name)?;
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
@@ -46,15 +47,26 @@ impl Runtime {
         self.executables.insert(name.to_string(), exe);
         Ok(())
     }
+}
 
-    /// Execute an artifact. Inputs are literals in the AOT parameter order;
-    /// outputs are the flattened result-tuple literals.
-    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.ensure_loaded(name)?;
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.compile_ms
+    }
+
+    /// Execute an artifact. Inputs are marshalled to literals in the AOT
+    /// parameter order; outputs are the flattened result-tuple literals.
+    fn execute(&mut self, manifest: &Manifest, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.ensure_loaded(manifest, name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
         let exe = &self.executables[name];
-        self.exec_calls += 1;
         let result = exe
-            .execute::<xla::Literal>(inputs)
+            .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
         let tuple = result
             .into_iter()
@@ -64,13 +76,32 @@ impl Runtime {
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("{name} fetch: {e}"))?;
         // aot.py lowers with return_tuple=True: unwrap the tuple
-        tuple.to_tuple().map_err(|e| anyhow::anyhow!("{name} untuple: {e}"))
+        let parts = tuple.to_tuple().map_err(|e| anyhow::anyhow!("{name} untuple: {e}"))?;
+        parts.iter().map(from_literal).collect()
     }
 }
 
 // ---------------------------------------------------------------------------
 // literal marshalling
 // ---------------------------------------------------------------------------
+
+fn to_literal(v: &Value) -> Result<xla::Literal> {
+    match v {
+        Value::F32 { data, dims } => literal_f32(data, dims),
+        Value::I32 { data, dims } => literal_i32(data, dims),
+        Value::U32 { data, dims } => literal_u32(data, dims),
+    }
+}
+
+/// Graph outputs are f32 tensors; dims come from the literal so both
+/// backends return identically-shaped [`Value`]s for the same contract.
+/// (The vendored stub exposes `dims()` directly; a real `xla` binding may
+/// need a one-line adapter via its `shape()` accessor.)
+fn from_literal(lit: &xla::Literal) -> Result<Value> {
+    let data = to_vec_f32(lit)?;
+    let dims: Vec<usize> = lit.dims().iter().map(|&d| d as usize).collect();
+    Value::f32(data, &dims)
+}
 
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
@@ -126,5 +157,14 @@ mod tests {
         let data = vec![7u32, 0xFFFF_FFFF, 3];
         let lit = literal_u32(&data, &[3]).unwrap();
         assert_eq!(lit.to_vec::<u32>().unwrap(), data);
+    }
+
+    #[test]
+    fn value_to_literal_marshalling() {
+        let v = Value::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let lit = to_literal(&v).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), v.as_f32().unwrap());
     }
 }

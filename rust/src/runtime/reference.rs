@@ -1,0 +1,667 @@
+//! The pure-Rust reference backend: executes every artifact *contract*
+//! (aot.py's entry points) against this crate's own `model::`/`quant::`
+//! code paths, with no external toolchain.
+//!
+//! This is the default engine — `cargo build` with default features gives
+//! a fully working pipeline (calibrate → Hessian → GPTQ → pack → eval →
+//! serve) — and the semantic oracle: the PJRT integration tests compare
+//! the lowered L1/L2 graphs against exactly these functions.
+//!
+//! Contracts implemented (see `python/compile/aot.py` for the producers):
+//!
+//! | artifact                     | inputs (AOT order)                   | outputs                    |
+//! |------------------------------|--------------------------------------|----------------------------|
+//! | `embed_<size>`               | tokens i32 (B,S); embed; pos         | x (B,S,d)                  |
+//! | `block_capture_<size>`       | x; 4 LN vecs; 4 linears + biases     | y; 4 per-linear inputs     |
+//! | `lm_fwd_<size>`              | tokens; all tensors, manifest order  | logits (B,S,V)             |
+//! | `head_<size>`                | x; lnf_g; lnf_b; unembed             | logits (B,S,V)             |
+//! | `hessian_<d>`                | X (n,d)                              | 2·XᵀX (d,d)                |
+//! | `gptq_layer_<o>x<i>_b<bits>` | W (o,i); H (i,i)                     | codes; scales; zeros; wq   |
+//! | `packmatvec_<o>x<i>_b<bits>` | words u32; scales; zeros; x          | y (o)                      |
+
+use crate::model::forward::{gelu, layer_norm};
+use crate::model::matvec::{matvec_f32_bias, matvec_packed};
+use crate::model::ModelConfig;
+use crate::quant::pack::{words_per_row, PackedMatrix};
+use crate::quant::{accumulate_hessian, gptq_quantize, GptqConfig};
+use crate::runtime::backend::{ExecBackend, Value, BLOCK_TENSORS};
+use crate::runtime::Manifest;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Parse the `<o>x<i>_b<bits>` suffix of shape-keyed artifact names.
+fn parse_shape_bits(s: &str) -> Option<(usize, usize, u32)> {
+    let (shape, bits) = s.split_once("_b")?;
+    let (o, i) = shape.split_once('x')?;
+    Some((o.parse().ok()?, i.parse().ok()?, bits.parse().ok()?))
+}
+
+/// The pure-Rust execution engine.
+#[derive(Debug, Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend
+    }
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    /// Any name matching a known contract is executable — no lowered HLO
+    /// needed, so pipelines run even before `make artifacts` has produced
+    /// the XLA tree (the manifest must still name the model sizes).
+    fn supports(&self, manifest: &Manifest, name: &str) -> bool {
+        for prefix in ["embed_", "block_capture_", "lm_fwd_", "head_"] {
+            if let Some(size) = name.strip_prefix(prefix) {
+                return manifest.models.contains_key(size);
+            }
+        }
+        if let Some(d) = name.strip_prefix("hessian_") {
+            return d.parse::<usize>().is_ok();
+        }
+        if let Some(rest) = name.strip_prefix("gptq_layer_") {
+            // same bit widths the packed format (and the lowered artifacts)
+            // support — anything else must fail fast at the engine check
+            return parse_shape_bits(rest).map(|(_, _, b)| matches!(b, 2 | 3 | 4)).unwrap_or(false);
+        }
+        if let Some(rest) = name.strip_prefix("packmatvec_") {
+            return parse_shape_bits(rest).map(|(_, _, b)| matches!(b, 2 | 3 | 4)).unwrap_or(false);
+        }
+        false
+    }
+
+    fn execute(&mut self, manifest: &Manifest, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        if let Some(size) = name.strip_prefix("embed_") {
+            let _ = manifest.model(size)?;
+            return exec_embed(inputs);
+        }
+        if let Some(size) = name.strip_prefix("block_capture_") {
+            let cfg = manifest.model(size)?.config.clone();
+            return exec_block_capture(&cfg, inputs);
+        }
+        if let Some(size) = name.strip_prefix("lm_fwd_") {
+            return exec_lm_fwd(manifest, size, inputs);
+        }
+        if let Some(size) = name.strip_prefix("head_") {
+            let _ = manifest.model(size)?;
+            return exec_head(inputs);
+        }
+        if name.strip_prefix("hessian_").is_some() {
+            return exec_hessian(inputs);
+        }
+        if let Some(rest) = name.strip_prefix("gptq_layer_") {
+            let (o, i, bits) = parse_shape_bits(rest)
+                .ok_or_else(|| anyhow::anyhow!("malformed gptq_layer artifact name {name}"))?;
+            return exec_gptq_layer(manifest, o, i, bits, inputs);
+        }
+        if let Some(rest) = name.strip_prefix("packmatvec_") {
+            let (o, i, bits) = parse_shape_bits(rest)
+                .ok_or_else(|| anyhow::anyhow!("malformed packmatvec artifact name {name}"))?;
+            return exec_packmatvec(o, i, bits, inputs);
+        }
+        anyhow::bail!("reference backend: no contract for artifact {name:?}")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// model contracts
+// ---------------------------------------------------------------------------
+
+fn exec_embed(inputs: &[Value]) -> Result<Vec<Value>> {
+    anyhow::ensure!(inputs.len() == 3, "embed expects (tokens, embed, pos), got {}", inputs.len());
+    let tokens = inputs[0].as_i32()?;
+    let (batch, seq) = dims2(&inputs[0])?;
+    let emb = inputs[1].as_f32()?;
+    let (vocab, d) = dims2(&inputs[1])?;
+    let pos = inputs[2].as_f32()?;
+    let (max_seq, pd) = dims2(&inputs[2])?;
+    anyhow::ensure!(pd == d, "embed/pos width mismatch: {d} vs {pd}");
+    anyhow::ensure!(seq <= max_seq, "seq {seq} exceeds positional table {max_seq}");
+    let mut x = vec![0.0f32; batch * seq * d];
+    for bi in 0..batch {
+        for si in 0..seq {
+            let t = tokens[bi * seq + si];
+            anyhow::ensure!(
+                (0..vocab as i32).contains(&t),
+                "token {t} out of vocab {vocab}"
+            );
+            let erow = &emb[t as usize * d..(t as usize + 1) * d];
+            let prow = &pos[si * d..(si + 1) * d];
+            let out = &mut x[(bi * seq + si) * d..(bi * seq + si + 1) * d];
+            for i in 0..d {
+                out[i] = erow[i] + prow[i];
+            }
+        }
+    }
+    Ok(vec![Value::f32(x, &[batch, seq, d])?])
+}
+
+struct BlockIn<'a> {
+    ln1_g: &'a [f32],
+    ln1_b: &'a [f32],
+    ln2_g: &'a [f32],
+    ln2_b: &'a [f32],
+    wqkv: &'a [f32],
+    wqkv_b: &'a [f32],
+    wo: &'a [f32],
+    wo_b: &'a [f32],
+    wup: &'a [f32],
+    wup_b: &'a [f32],
+    wdn: &'a [f32],
+    wdn_b: &'a [f32],
+}
+
+impl<'a> BlockIn<'a> {
+    fn from_values(vals: &'a [Value]) -> Result<Self> {
+        anyhow::ensure!(vals.len() == 12, "block expects 12 tensors, got {}", vals.len());
+        Ok(Self {
+            ln1_g: vals[0].as_f32()?,
+            ln1_b: vals[1].as_f32()?,
+            ln2_g: vals[2].as_f32()?,
+            ln2_b: vals[3].as_f32()?,
+            wqkv: vals[4].as_f32()?,
+            wqkv_b: vals[5].as_f32()?,
+            wo: vals[6].as_f32()?,
+            wo_b: vals[7].as_f32()?,
+            wup: vals[8].as_f32()?,
+            wup_b: vals[9].as_f32()?,
+            wdn: vals[10].as_f32()?,
+            wdn_b: vals[11].as_f32()?,
+        })
+    }
+
+    fn from_named(layer: usize, by_name: &BTreeMap<&str, &'a [f32]>) -> Result<Self> {
+        let get = |nm: &str| -> Result<&'a [f32]> {
+            named(by_name, &format!("blocks.{layer}.{nm}"))
+        };
+        Ok(Self {
+            ln1_g: get("ln1_g")?,
+            ln1_b: get("ln1_b")?,
+            ln2_g: get("ln2_g")?,
+            ln2_b: get("ln2_b")?,
+            wqkv: get("wqkv")?,
+            wqkv_b: get("wqkv_b")?,
+            wo: get("wo")?,
+            wo_b: get("wo_b")?,
+            wup: get("wup")?,
+            wup_b: get("wup_b")?,
+            wdn: get("wdn")?,
+            wdn_b: get("wdn_b")?,
+        })
+    }
+}
+
+/// Batched teacher-forced block forward — the reference twin of the L2
+/// `block_capture` graph. Returns (y, [inputs of wqkv, wo, wup, wdn]).
+fn block_forward_batched(
+    cfg: &ModelConfig,
+    x: &[f32],
+    batch: usize,
+    seq: usize,
+    w: &BlockIn,
+) -> (Vec<f32>, [Vec<f32>; 4]) {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let n = batch * seq;
+    assert_eq!(x.len(), n * d);
+
+    // LN1 → capture for wqkv
+    let mut x1 = vec![0.0f32; n * d];
+    for row in 0..n {
+        layer_norm(&x[row * d..(row + 1) * d], w.ln1_g, w.ln1_b, &mut x1[row * d..(row + 1) * d]);
+    }
+    // fused qkv projection
+    let mut qkv = vec![0.0f32; n * 3 * d];
+    for row in 0..n {
+        matvec_f32_bias(
+            w.wqkv,
+            &x1[row * d..(row + 1) * d],
+            w.wqkv_b,
+            3 * d,
+            d,
+            &mut qkv[row * 3 * d..(row + 1) * 3 * d],
+        );
+    }
+    // causal multi-head attention → capture for wo
+    let mut attn = vec![0.0f32; n * d];
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; seq];
+    for bi in 0..batch {
+        for head in 0..heads {
+            let hoff = head * hd;
+            for qs in 0..seq {
+                let qrow = (bi * seq + qs) * 3 * d;
+                let q = &qkv[qrow + hoff..qrow + hoff + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for ks in 0..=qs {
+                    let krow = (bi * seq + ks) * 3 * d + d;
+                    let k = &qkv[krow + hoff..krow + hoff + hd];
+                    let mut dot = 0.0f32;
+                    for i in 0..hd {
+                        dot += q[i] * k[i];
+                    }
+                    scores[ks] = dot * scale;
+                    maxv = maxv.max(scores[ks]);
+                }
+                let mut denom = 0.0f32;
+                for s in scores[..=qs].iter_mut() {
+                    *s = (*s - maxv).exp();
+                    denom += *s;
+                }
+                let out = &mut attn[(bi * seq + qs) * d + hoff..(bi * seq + qs) * d + hoff + hd];
+                for ks in 0..=qs {
+                    let vrow = (bi * seq + ks) * 3 * d + 2 * d;
+                    let v = &qkv[vrow + hoff..vrow + hoff + hd];
+                    let wgt = scores[ks] / denom;
+                    for i in 0..hd {
+                        out[i] += wgt * v[i];
+                    }
+                }
+            }
+        }
+    }
+    // attention residual
+    let mut xr = x.to_vec();
+    let mut proj = vec![0.0f32; d.max(ff)];
+    for row in 0..n {
+        matvec_f32_bias(w.wo, &attn[row * d..(row + 1) * d], w.wo_b, d, d, &mut proj[..d]);
+        for i in 0..d {
+            xr[row * d + i] += proj[i];
+        }
+    }
+    // LN2 → capture for wup
+    let mut x2 = vec![0.0f32; n * d];
+    for row in 0..n {
+        layer_norm(&xr[row * d..(row + 1) * d], w.ln2_g, w.ln2_b, &mut x2[row * d..(row + 1) * d]);
+    }
+    // GELU MLP hidden → capture for wdn
+    let mut hidden = vec![0.0f32; n * ff];
+    for row in 0..n {
+        let h = &mut hidden[row * ff..(row + 1) * ff];
+        matvec_f32_bias(w.wup, &x2[row * d..(row + 1) * d], w.wup_b, ff, d, h);
+        for v in h.iter_mut() {
+            *v = gelu(*v);
+        }
+    }
+    // MLP residual
+    let mut y = xr;
+    for row in 0..n {
+        matvec_f32_bias(w.wdn, &hidden[row * ff..(row + 1) * ff], w.wdn_b, d, ff, &mut proj[..d]);
+        for i in 0..d {
+            y[row * d + i] += proj[i];
+        }
+    }
+    (y, [x1, attn, x2, hidden])
+}
+
+fn exec_block_capture(cfg: &ModelConfig, inputs: &[Value]) -> Result<Vec<Value>> {
+    anyhow::ensure!(
+        inputs.len() == 1 + BLOCK_TENSORS.len(),
+        "block_capture expects x + {} tensors, got {}",
+        BLOCK_TENSORS.len(),
+        inputs.len()
+    );
+    let x = inputs[0].as_f32()?;
+    let (batch, seq, d) = dims3(&inputs[0])?;
+    anyhow::ensure!(d == cfg.d_model, "x width {d} != d_model {}", cfg.d_model);
+    let w = BlockIn::from_values(&inputs[1..])?;
+    let (y, [c_qkv, c_wo, c_wup, c_wdn]) = block_forward_batched(cfg, x, batch, seq, &w);
+    Ok(vec![
+        Value::f32(y, &[batch, seq, d])?,
+        Value::f32(c_qkv, &[batch, seq, d])?,
+        Value::f32(c_wo, &[batch, seq, d])?,
+        Value::f32(c_wup, &[batch, seq, d])?,
+        Value::f32(c_wdn, &[batch, seq, cfg.d_ff])?,
+    ])
+}
+
+fn head_logits(x: &[f32], n: usize, d: usize, lnf_g: &[f32], lnf_b: &[f32], unembed: &[f32]) -> Vec<f32> {
+    let vocab = unembed.len() / d;
+    let mut x1 = vec![0.0f32; d];
+    let mut logits = vec![0.0f32; n * vocab];
+    for row in 0..n {
+        layer_norm(&x[row * d..(row + 1) * d], lnf_g, lnf_b, &mut x1);
+        let lrow = &mut logits[row * vocab..(row + 1) * vocab];
+        for (v, lv) in lrow.iter_mut().enumerate() {
+            let urow = &unembed[v * d..(v + 1) * d];
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += urow[i] * x1[i];
+            }
+            *lv = acc;
+        }
+    }
+    logits
+}
+
+fn exec_head(inputs: &[Value]) -> Result<Vec<Value>> {
+    anyhow::ensure!(inputs.len() == 4, "head expects (x, lnf_g, lnf_b, unembed)");
+    let x = inputs[0].as_f32()?;
+    let (batch, seq, d) = dims3(&inputs[0])?;
+    let lnf_g = inputs[1].as_f32()?;
+    let lnf_b = inputs[2].as_f32()?;
+    let unembed = inputs[3].as_f32()?;
+    let (vocab, ud) = dims2(&inputs[3])?;
+    anyhow::ensure!(ud == d, "unembed width {ud} != d_model {d}");
+    let logits = head_logits(x, batch * seq, d, lnf_g, lnf_b, unembed);
+    Ok(vec![Value::f32(logits, &[batch, seq, vocab])?])
+}
+
+fn exec_lm_fwd(manifest: &Manifest, size: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+    let entry = manifest.model(size)?;
+    let cfg = entry.config.clone();
+    anyhow::ensure!(
+        inputs.len() == 1 + entry.tensors.len(),
+        "lm_fwd_{size} expects tokens + {} tensors (manifest order), got {}",
+        entry.tensors.len(),
+        inputs.len()
+    );
+    let mut by_name: BTreeMap<&str, &[f32]> = BTreeMap::new();
+    for (t, v) in entry.tensors.iter().zip(&inputs[1..]) {
+        let data = v.as_f32()?;
+        anyhow::ensure!(
+            data.len() == t.shape.iter().product::<usize>(),
+            "lm_fwd_{size}: tensor {} has {} elements, manifest says {:?}",
+            t.name,
+            data.len(),
+            t.shape
+        );
+        by_name.insert(t.name.as_str(), data);
+    }
+
+    // embed
+    let embedded = exec_embed(&[
+        inputs[0].clone(),
+        Value::f32(named(&by_name, "embed")?.to_vec(), &[cfg.vocab, cfg.d_model])?,
+        Value::f32(named(&by_name, "pos")?.to_vec(), &[cfg.max_seq, cfg.d_model])?,
+    ])?;
+    let (batch, seq, d) = dims3(&embedded[0])?;
+    let mut x = embedded.into_iter().next().unwrap().into_f32()?;
+
+    // blocks
+    for layer in 0..cfg.n_layers {
+        let w = BlockIn::from_named(layer, &by_name)?;
+        let (y, _) = block_forward_batched(&cfg, &x, batch, seq, &w);
+        x = y;
+    }
+
+    // head
+    let logits = head_logits(
+        &x,
+        batch * seq,
+        d,
+        named(&by_name, "lnf_g")?,
+        named(&by_name, "lnf_b")?,
+        named(&by_name, "unembed")?,
+    );
+    Ok(vec![Value::f32(logits, &[batch, seq, cfg.vocab])?])
+}
+
+/// Look up a tensor by manifest name in the borrowed input map.
+fn named<'a>(map: &BTreeMap<&str, &'a [f32]>, nm: &str) -> Result<&'a [f32]> {
+    map.get(nm).copied().ok_or_else(|| anyhow::anyhow!("lm_fwd: tensor {nm} missing"))
+}
+
+// ---------------------------------------------------------------------------
+// quantization contracts
+// ---------------------------------------------------------------------------
+
+fn exec_hessian(inputs: &[Value]) -> Result<Vec<Value>> {
+    anyhow::ensure!(inputs.len() == 1, "hessian expects (x,)");
+    let x = inputs[0].as_f32()?;
+    let (n, d) = dims2(&inputs[0])?;
+    let mut h64 = vec![0.0f64; d * d];
+    accumulate_hessian(&mut h64, x, n, d);
+    let h: Vec<f32> = h64.iter().map(|&v| v as f32).collect();
+    Ok(vec![Value::f32(h, &[d, d])?])
+}
+
+fn exec_gptq_layer(
+    manifest: &Manifest,
+    drow: usize,
+    dcol: usize,
+    bits: u32,
+    inputs: &[Value],
+) -> Result<Vec<Value>> {
+    anyhow::ensure!(inputs.len() == 2, "gptq_layer expects (w, h)");
+    let w = inputs[0].as_f32()?;
+    anyhow::ensure!(w.len() == drow * dcol, "gptq_layer: w has {} elements", w.len());
+    let hf = inputs[1].as_f32()?;
+    anyhow::ensure!(hf.len() == dcol * dcol, "gptq_layer: h has {} elements", hf.len());
+    let h: Vec<f64> = hf.iter().map(|&v| v as f64).collect();
+    let cfg = GptqConfig {
+        bits,
+        blocksize: manifest.quant.blocksize,
+        percdamp: manifest.quant.percdamp,
+        ..GptqConfig::new(bits)
+    };
+    let r = gptq_quantize(w, drow, dcol, &h, &cfg).map_err(|e| anyhow::anyhow!(e))?;
+    let codes: Vec<f32> = r.codes.iter().map(|&c| c as f32).collect();
+    Ok(vec![
+        Value::f32(codes, &[drow, dcol])?,
+        Value::f32(r.scales, &[drow, r.ngroups])?,
+        Value::f32(r.zeros, &[drow, r.ngroups])?,
+        Value::f32(r.wq, &[drow, dcol])?,
+    ])
+}
+
+fn exec_packmatvec(drow: usize, dcol: usize, bits: u32, inputs: &[Value]) -> Result<Vec<Value>> {
+    anyhow::ensure!(inputs.len() == 4, "packmatvec expects (words, scales, zeros, x)");
+    let words = inputs[0].as_u32()?;
+    let scales = inputs[1].as_f32()?;
+    let zeros = inputs[2].as_f32()?;
+    let x = inputs[3].as_f32()?;
+    let nwords = words_per_row(dcol, bits);
+    anyhow::ensure!(
+        words.len() == drow * nwords,
+        "packmatvec: {} words for shape {drow}x{dcol} b{bits} (want {})",
+        words.len(),
+        drow * nwords
+    );
+    anyhow::ensure!(scales.len() % drow == 0 && scales.len() == zeros.len(), "grid shape mismatch");
+    anyhow::ensure!(x.len() == dcol, "x has {} elements, want {dcol}", x.len());
+    let p = PackedMatrix {
+        words: words.to_vec(),
+        scales: scales.to_vec(),
+        zeros: zeros.to_vec(),
+        drow,
+        dcol,
+        nwords,
+        ngroups: scales.len() / drow,
+        bits,
+    };
+    let mut y = vec![0.0f32; drow];
+    matvec_packed(&p, x, &mut y);
+    Ok(vec![Value::f32(y, &[drow])?])
+}
+
+// ---------------------------------------------------------------------------
+
+fn dims2(v: &Value) -> Result<(usize, usize)> {
+    let d = v.dims();
+    anyhow::ensure!(d.len() == 2, "expected rank-2 value, got {d:?}");
+    Ok((d[0], d[1]))
+}
+
+fn dims3(v: &Value) -> Result<(usize, usize, usize)> {
+    let d = v.dims();
+    anyhow::ensure!(d.len() == 3, "expected rank-3 value, got {d:?}");
+    Ok((d[0], d[1], d[2]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::{tiny_checkpoint, tiny_manifest, TINY_SIZE};
+    use crate::model::CpuModel;
+    use crate::quant::rtn_quantize;
+
+    fn rng_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::data::Rng::new(seed);
+        (0..n).map(|_| rng.unit()).collect()
+    }
+
+    #[test]
+    fn supports_known_contracts() {
+        let m = tiny_manifest(12, 2);
+        let b = ReferenceBackend::new();
+        assert!(b.supports(&m, &format!("embed_{TINY_SIZE}")));
+        assert!(b.supports(&m, &format!("block_capture_{TINY_SIZE}")));
+        assert!(b.supports(&m, &format!("lm_fwd_{TINY_SIZE}")));
+        assert!(b.supports(&m, "hessian_64"));
+        assert!(b.supports(&m, "gptq_layer_48x16_b4"));
+        assert!(b.supports(&m, "packmatvec_64x32_b3"));
+        assert!(!b.supports(&m, "embed_unknown-size"));
+        assert!(!b.supports(&m, "gptq_layer_bogus"));
+        assert!(!b.supports(&m, "something_else"));
+    }
+
+    #[test]
+    fn embed_contract_matches_manual() {
+        let m = tiny_manifest(12, 2);
+        let mut b = ReferenceBackend::new();
+        let ckpt = tiny_checkpoint(3);
+        let (batch, seq) = (2usize, 4usize);
+        let tokens: Vec<i32> = vec![1, 5, 9, 2, 0, 31, 7, 7];
+        let out = b
+            .execute(
+                &m,
+                &format!("embed_{TINY_SIZE}"),
+                &[
+                    Value::i32(tokens.clone(), &[batch, seq]).unwrap(),
+                    Value::f32(ckpt.get("embed").data.clone(), &ckpt.get("embed").shape).unwrap(),
+                    Value::f32(ckpt.get("pos").data.clone(), &ckpt.get("pos").shape).unwrap(),
+                ],
+            )
+            .unwrap();
+        let x = out[0].as_f32().unwrap();
+        let d = ckpt.config.d_model;
+        for bi in 0..batch {
+            for si in 0..seq {
+                let t = tokens[bi * seq + si] as usize;
+                for i in 0..d {
+                    let want = ckpt.get("embed").data[t * d + i] + ckpt.get("pos").data[si * d + i];
+                    let got = x[(bi * seq + si) * d + i];
+                    assert!((got - want).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hessian_contract_matches_rust_accumulator() {
+        let m = tiny_manifest(12, 2);
+        let mut b = ReferenceBackend::new();
+        let (n, d) = (24usize, 8usize);
+        let x = rng_vec(n * d, 7);
+        let out = b
+            .execute(&m, "hessian_8", &[Value::f32(x.clone(), &[n, d]).unwrap()])
+            .unwrap();
+        let h = out[0].as_f32().unwrap();
+        let mut want = vec![0.0f64; d * d];
+        accumulate_hessian(&mut want, &x, n, d);
+        for (a, b) in h.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn packmatvec_contract_matches_kernel() {
+        let m = tiny_manifest(12, 2);
+        let mut b = ReferenceBackend::new();
+        let (drow, dcol, bits) = (16usize, 64usize, 3u32);
+        let w = rng_vec(drow * dcol, 11);
+        let r = rtn_quantize(&w, drow, dcol, bits, 0);
+        let p = PackedMatrix::from_result(&r);
+        let x = rng_vec(dcol, 13);
+        let out = b
+            .execute(
+                &m,
+                &format!("packmatvec_{drow}x{dcol}_b{bits}"),
+                &[
+                    Value::u32(p.words.clone(), &[drow, p.nwords]).unwrap(),
+                    Value::f32(p.scales.clone(), &[drow, 1]).unwrap(),
+                    Value::f32(p.zeros.clone(), &[drow, 1]).unwrap(),
+                    Value::f32(x.clone(), &[dcol]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let mut want = vec![0.0f32; drow];
+        matvec_packed(&p, &x, &mut want);
+        assert_eq!(out[0].as_f32().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn gptq_layer_contract_matches_solver() {
+        let m = tiny_manifest(12, 2);
+        let mut b = ReferenceBackend::new();
+        let (drow, dcol) = (8usize, 16usize);
+        let w = rng_vec(drow * dcol, 5);
+        let x = rng_vec(4 * dcol * dcol, 6);
+        let mut h64 = vec![0.0f64; dcol * dcol];
+        accumulate_hessian(&mut h64, &x, 4 * dcol, dcol);
+        let hf: Vec<f32> = h64.iter().map(|&v| v as f32).collect();
+        let out = b
+            .execute(
+                &m,
+                &format!("gptq_layer_{drow}x{dcol}_b4"),
+                &[
+                    Value::f32(w.clone(), &[drow, dcol]).unwrap(),
+                    Value::f32(hf.clone(), &[dcol, dcol]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        // the contract runs on the f32 Hessian it was handed
+        let h32: Vec<f64> = hf.iter().map(|&v| v as f64).collect();
+        let cfg = GptqConfig {
+            blocksize: m.quant.blocksize,
+            percdamp: m.quant.percdamp,
+            ..GptqConfig::new(4)
+        };
+        let want = gptq_quantize(&w, drow, dcol, &h32, &cfg).unwrap();
+        let codes = out[0].as_f32().unwrap();
+        for (a, b) in codes.iter().zip(&want.codes) {
+            assert_eq!(*a as u8, *b);
+        }
+        for (a, b) in out[3].as_f32().unwrap().iter().zip(&want.wq) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lm_fwd_contract_matches_cpu_decode() {
+        // The strongest no-artifact parity check: the batched reference
+        // forward must agree with the KV-cached CPU decode path.
+        let manifest = tiny_manifest(12, 2);
+        let mut b = ReferenceBackend::new();
+        let ckpt = tiny_checkpoint(9);
+        let entry = manifest.model(TINY_SIZE).unwrap().clone();
+        let (batch, seq) = (2usize, 6usize);
+        let tokens: Vec<i32> = (0..batch * seq).map(|i| ((i * 7 + 3) % 32) as i32).collect();
+        let mut inputs = vec![Value::i32(tokens.clone(), &[batch, seq]).unwrap()];
+        for t in &entry.tensors {
+            let tensor = ckpt.get(&t.name);
+            inputs.push(Value::f32(tensor.data.clone(), &tensor.shape).unwrap());
+        }
+        let out = b.execute(&manifest, &format!("lm_fwd_{TINY_SIZE}"), &inputs).unwrap();
+        let logits = out[0].as_f32().unwrap();
+        assert_eq!(out[0].dims(), &[batch, seq, 32]);
+
+        let mut cpu = CpuModel::from_checkpoint(&ckpt);
+        for bi in 0..batch {
+            let row: Vec<u8> = tokens[bi * seq..(bi + 1) * seq].iter().map(|&t| t as u8).collect();
+            let want = cpu.logits_all(&row);
+            let got = &logits[bi * seq * 32..(bi + 1) * seq * 32];
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+}

@@ -63,7 +63,7 @@ impl Ctx {
     fn engine_tag(e: QuantEngine) -> &'static str {
         match e {
             QuantEngine::GptqRust => "gptq",
-            QuantEngine::GptqXla => "gptq-xla",
+            QuantEngine::GptqArtifact => "gptq-artifact",
             QuantEngine::Rtn => "rtn",
             QuantEngine::Obq => "obq",
         }

@@ -1,0 +1,131 @@
+//! End-to-end pipeline tests that need NO artifact tree: the reference
+//! execution backend runs every contract in pure Rust against an
+//! in-memory manifest (`model::testkit`), so the complete flow —
+//! calibrate → embed → block capture → Hessian → GPTQ → pack → eval →
+//! serve — is exercised in plain `cargo test` on any machine.
+
+use gptq_rs::coordinator::{verify_parity, PipelineConfig, QuantEngine, QuantPipeline};
+use gptq_rs::model::testkit::{tiny_checkpoint, tiny_corpus, tiny_manifest, TINY_SIZE};
+use gptq_rs::model::{CpuModel, QuantizedCheckpoint};
+use gptq_rs::runtime::{backend_by_name, Runtime};
+use gptq_rs::eval::perplexity;
+
+const SEQ: usize = 12;
+const BATCH: usize = 2;
+
+fn tiny_runtime() -> Runtime {
+    Runtime::new(tiny_manifest(SEQ, BATCH)).unwrap()
+}
+
+fn run_pipeline(
+    rt: &mut Runtime,
+    cfg: PipelineConfig,
+    seed: u64,
+) -> gptq_rs::coordinator::PipelineReport {
+    let mut ckpt = tiny_checkpoint(seed);
+    let calib = tiny_corpus(4096, 21);
+    QuantPipeline::new(rt, TINY_SIZE, cfg).run(&mut ckpt, &calib).unwrap()
+}
+
+#[test]
+fn full_pipeline_runs_without_artifacts() {
+    let mut rt = tiny_runtime();
+    let mut cfg = PipelineConfig::new(4, QuantEngine::GptqRust);
+    cfg.n_calib_segments = 8;
+    let report = run_pipeline(&mut rt, cfg, 1);
+
+    // one stat per quantizable linear
+    assert_eq!(report.stats.len(), 2 * 4);
+    assert!(report.mean_layer_error.is_finite() && report.mean_layer_error >= 0.0);
+    assert!(rt.exec_calls > 0, "pipeline must exercise the backend");
+    assert_eq!(rt.backend_name(), "reference");
+
+    // the packed model evaluates to a finite perplexity
+    let corpus = tiny_corpus(2048, 33);
+    let mut qm = CpuModel::from_quantized(&report.checkpoint);
+    let ppl = perplexity(&mut qm, &corpus, SEQ, 4);
+    assert!(ppl.is_finite() && ppl > 1.0, "quantized ppl {ppl}");
+
+    // checkpoint round-trips through disk byte-exactly (same eval result)
+    let tmp = std::env::temp_dir().join("gptq_reference_backend_tiny.ckpt");
+    report.checkpoint.save(&tmp).unwrap();
+    let back = QuantizedCheckpoint::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let mut qm2 = CpuModel::from_quantized(&back);
+    let ppl2 = perplexity(&mut qm2, &corpus, SEQ, 4);
+    assert_eq!(ppl, ppl2);
+}
+
+#[test]
+fn gptq_beats_rtn_on_layer_objective() {
+    // The paper's Eq. (1) claim, end-to-end through the pipeline: GPTQ's
+    // mean layer-wise squared error is no worse than RTN's at every bit
+    // width (both solvers see identical Hessians via the same backend).
+    let mut rt = tiny_runtime();
+    for bits in [3u32, 4] {
+        let mut g = PipelineConfig::new(bits, QuantEngine::GptqRust);
+        g.n_calib_segments = 8;
+        let mut r = PipelineConfig::new(bits, QuantEngine::Rtn);
+        r.n_calib_segments = 8;
+        let eg = run_pipeline(&mut rt, g, 2).mean_layer_error;
+        let er = run_pipeline(&mut rt, r, 2).mean_layer_error;
+        assert!(eg <= er * 1.001, "bits={bits}: gptq err {eg} !<= rtn err {er}");
+    }
+}
+
+#[test]
+fn artifact_engine_matches_rust_engine() {
+    // The gptq_layer artifact contract (reference backend) against the
+    // directly-driven Rust solver: identical pipeline, near-identical
+    // outcome (the contract sees an f32-truncated Hessian).
+    let mut rt = tiny_runtime();
+    let mut rust_cfg = PipelineConfig::new(4, QuantEngine::GptqRust);
+    rust_cfg.n_calib_segments = 8;
+    let mut art_cfg = PipelineConfig::new(4, QuantEngine::GptqArtifact);
+    art_cfg.n_calib_segments = 8;
+    let er = run_pipeline(&mut rt, rust_cfg, 3).mean_layer_error;
+    let ea = run_pipeline(&mut rt, art_cfg, 3).mean_layer_error;
+    let rel = (er - ea).abs() / er.max(1e-12);
+    assert!(rel < 0.05, "engines disagree: rust {er} vs artifact {ea} (rel {rel})");
+}
+
+#[test]
+fn grouping_reduces_error_at_2bit() {
+    let mut rt = tiny_runtime();
+    let mut coarse = PipelineConfig::new(2, QuantEngine::GptqRust);
+    coarse.n_calib_segments = 8;
+    let mut fine = PipelineConfig::new(2, QuantEngine::GptqRust).with_groupsize(8);
+    fine.n_calib_segments = 8;
+    let ec = run_pipeline(&mut rt, coarse, 4).mean_layer_error;
+    let report = run_pipeline(&mut rt, fine, 4);
+    assert!(report.mean_layer_error < ec, "grouping: {} !< {ec}", report.mean_layer_error);
+    assert_eq!(report.checkpoint.groupsize, 8);
+}
+
+#[test]
+fn serving_parity_check_via_backend() {
+    // serve::verify_parity drives the lm_fwd contract — the deployment
+    // pre-flight works with zero artifacts on disk.
+    let mut rt = tiny_runtime();
+    let ckpt = tiny_checkpoint(5);
+    let corpus = tiny_corpus(2048, 9);
+    let rel = verify_parity(&mut rt, TINY_SIZE, &ckpt, &corpus, BATCH * 2).unwrap();
+    assert!(rel < 1e-3, "decode path vs reference backend: rel {rel}");
+}
+
+#[test]
+fn pjrt_backend_unavailable_without_feature() {
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let err = backend_by_name("pjrt").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        // with the vendored stub the backend constructs only if a real
+        // XLA runtime is present; either way the name must resolve to a
+        // proper outcome rather than a panic
+        let _ = backend_by_name("pjrt");
+    }
+    assert!(backend_by_name("reference").is_ok());
+}

@@ -1,18 +1,20 @@
-//! Integration tests over the REAL artifact tree: loads HLO-text programs
-//! through PJRT and checks numerics against the pure-Rust twins. These are
-//! the tests that prove the three layers compose (L1 Pallas kernels and
-//! the L2 graphs, AOT-lowered, executed from the L3 runtime).
+//! Integration tests over the REAL artifact tree: executes the manifest's
+//! artifact contracts through the runtime's execution backend and checks
+//! numerics against the pure-Rust twins. On the default (reference)
+//! backend this validates the contract layer itself; under
+//! `--features pjrt` with the XLA toolchain the same tests prove the
+//! three layers compose (L1 Pallas kernels and the L2 graphs, AOT-lowered,
+//! executed from the L3 runtime).
 //!
 //! All tests skip gracefully (with a notice) when `make artifacts` has not
 //! been run.
 
 use gptq_rs::data::CorpusFile;
-use gptq_rs::eval::{perplexity, perplexity_xla};
+use gptq_rs::eval::{perplexity, perplexity_artifact};
 use gptq_rs::model::{Checkpoint, CpuModel};
 use gptq_rs::quant::pack::{pack_row, words_per_row};
 use gptq_rs::quant::{gptq_quantize, rtn_quantize, GptqConfig};
-use gptq_rs::runtime::client::{literal_f32, literal_u32, to_vec_f32};
-use gptq_rs::runtime::Runtime;
+use gptq_rs::runtime::{Runtime, Value};
 
 fn runtime() -> Option<Runtime> {
     let dir = gptq_rs::artifacts_dir();
@@ -35,8 +37,10 @@ fn hessian_artifact_matches_rust() {
     let n = rt.manifest.calib_tokens;
     let mut seed = 7u64;
     let x: Vec<f32> = (0..n * d).map(|_| lcg(&mut seed)).collect();
-    let out = rt.execute(&format!("hessian_{d}"), &[literal_f32(&x, &[n, d]).unwrap()]).unwrap();
-    let h_xla = to_vec_f32(&out[0]).unwrap();
+    let out = rt
+        .execute(&format!("hessian_{d}"), &[Value::f32(x.clone(), &[n, d]).unwrap()])
+        .unwrap();
+    let h_xla = out[0].as_f32().unwrap();
     let mut h_rust = vec![0.0f64; d * d];
     gptq_rs::quant::accumulate_hessian(&mut h_rust, &x, n, d);
     let mut max_rel = 0.0f64;
@@ -48,13 +52,14 @@ fn hessian_artifact_matches_rust() {
 
 #[test]
 fn gptq_layer_artifact_matches_rust_solver() {
-    // The L2 graph (with the L1 Pallas kernel inside) vs the pure-Rust
-    // solver — the strongest three-layer consistency check.
+    // The artifact contract (the L2 graph with the L1 Pallas kernel inside
+    // under PJRT; the reference solver otherwise) vs the pure-Rust solver
+    // driven directly — the strongest consistency check.
     let Some(mut rt) = runtime() else { return };
     let (drow, dcol) = (192usize, 64usize);
     let name = "gptq_layer_192x64_b4";
-    if !rt.manifest.has_artifact(name) {
-        eprintln!("SKIP: {name} not lowered");
+    if !rt.supports(name) {
+        eprintln!("SKIP: {name} not executable on this backend");
         return;
     }
     let mut seed = 3u64;
@@ -74,43 +79,50 @@ fn gptq_layer_artifact_matches_rust_solver() {
 
     let hf: Vec<f32> = h.iter().map(|&v| v as f32).collect();
     let out = rt
-        .execute(name, &[literal_f32(&w, &[drow, dcol]).unwrap(), literal_f32(&hf, &[dcol, dcol]).unwrap()])
+        .execute(
+            name,
+            &[
+                Value::f32(w.clone(), &[drow, dcol]).unwrap(),
+                Value::f32(hf, &[dcol, dcol]).unwrap(),
+            ],
+        )
         .unwrap();
     assert_eq!(out.len(), 4);
-    let codes_xla = to_vec_f32(&out[0]).unwrap();
-    let wq_xla = to_vec_f32(&out[3]).unwrap();
+    let codes_art = out[0].as_f32().unwrap();
+    let wq_art = out[3].as_f32().unwrap();
 
     let r = gptq_quantize(&w, drow, dcol, &h, &GptqConfig::new(4)).unwrap();
-    let mismatched = codes_xla
+    let mismatched = codes_art
         .iter()
         .zip(&r.codes)
         .filter(|(a, b)| (**a as u8) != **b)
         .count();
-    // f32 (XLA) vs f64 (rust) Hessian algebra: a small fraction of
+    // f32 (artifact) vs f64 (rust) Hessian algebra: a small fraction of
     // razor-edge roundings may flip; the dequantized weights must agree
     // closely everywhere that matters.
     assert!(
         mismatched < drow * dcol / 100,
-        "{mismatched}/{} codes differ between XLA graph and rust solver",
+        "{mismatched}/{} codes differ between the artifact contract and rust solver",
         drow * dcol
     );
     let mut mean_abs = 0.0f64;
-    for (a, b) in wq_xla.iter().zip(&r.wq) {
+    for (a, b) in wq_art.iter().zip(&r.wq) {
         mean_abs += (a - b).abs() as f64;
     }
     mean_abs /= (drow * dcol) as f64;
-    assert!(mean_abs < 1e-3, "mean |wq_xla - wq_rust| = {mean_abs}");
+    assert!(mean_abs < 1e-3, "mean |wq_artifact - wq_rust| = {mean_abs}");
 }
 
 #[test]
 fn packmatvec_artifact_matches_rust_kernel() {
-    // The L1 inference kernel (Pallas, AOT) vs the Rust packed matvec.
+    // The packmatvec contract (the L1 inference kernel under PJRT) vs the
+    // Rust packed matvec.
     let Some(mut rt) = runtime() else { return };
     let (drow, dcol) = (1024usize, 256usize);
     for bits in [2u32, 3, 4] {
         let name = format!("packmatvec_{drow}x{dcol}_b{bits}");
-        if !rt.manifest.has_artifact(&name) {
-            eprintln!("SKIP: {name} not lowered");
+        if !rt.supports(&name) {
+            eprintln!("SKIP: {name} not executable on this backend");
             continue;
         }
         let mut seed = bits as u64 * 97;
@@ -128,26 +140,27 @@ fn packmatvec_artifact_matches_rust_kernel() {
             .execute(
                 &name,
                 &[
-                    literal_u32(&words, &[drow, nwords]).unwrap(),
-                    literal_f32(&r.scales, &[drow, 1]).unwrap(),
-                    literal_f32(&r.zeros, &[drow, 1]).unwrap(),
-                    literal_f32(&x, &[dcol]).unwrap(),
+                    Value::u32(words, &[drow, nwords]).unwrap(),
+                    Value::f32(r.scales.clone(), &[drow, 1]).unwrap(),
+                    Value::f32(r.zeros.clone(), &[drow, 1]).unwrap(),
+                    Value::f32(x.clone(), &[dcol]).unwrap(),
                 ],
             )
             .unwrap();
-        let y_xla = to_vec_f32(&out[0]).unwrap();
+        let y_art = out[0].as_f32().unwrap();
         let mut y_rust = vec![0.0f32; drow];
         gptq_rs::model::matvec::matvec_packed(&p, &x, &mut y_rust);
-        for (i, (a, b)) in y_xla.iter().zip(&y_rust).enumerate() {
+        for (i, (a, b)) in y_art.iter().zip(&y_rust).enumerate() {
             assert!((a - b).abs() < 1e-2, "bits={bits} row {i}: {a} vs {b}");
         }
     }
 }
 
 #[test]
-fn cpu_forward_matches_xla_lm_fwd() {
-    // Dense CPU decode path vs the AOT lm_fwd graph: perplexities must
-    // agree tightly (they share weights and math but not code).
+fn cpu_forward_matches_artifact_lm_fwd() {
+    // Dense CPU decode path vs the lm_fwd contract on the execution
+    // backend: perplexities must agree tightly (they share weights and
+    // math but not code).
     let Some(mut rt) = runtime() else { return };
     let size = "nano";
     let entry = rt.manifest.model(size).unwrap().clone();
@@ -156,19 +169,11 @@ fn cpu_forward_matches_xla_lm_fwd() {
     let corpus = CorpusFile::load(&rt.manifest.corpus_path("narrative_test.bin")).unwrap();
 
     let mut cpu = CpuModel::from_checkpoint(&ckpt);
-    let ppl_cpu = perplexity(&mut cpu, &corpus, rt.manifest.seq_len, 8);
+    let ppl_cpu = perplexity(&mut cpu, &corpus, rt.manifest.seq_len, rt.manifest.eval_batch);
 
-    let weights: Vec<xla::Literal> = entry
-        .tensors
-        .iter()
-        .map(|t| {
-            let tensor = ckpt.get(&t.name);
-            literal_f32(&tensor.data, &tensor.shape).unwrap()
-        })
-        .collect();
-    let ppl_xla = perplexity_xla(&mut rt, size, &weights, &corpus, 1).unwrap();
-    let rel = (ppl_cpu - ppl_xla).abs() / ppl_xla;
-    assert!(rel < 0.02, "cpu ppl {ppl_cpu} vs xla ppl {ppl_xla} (rel {rel})");
+    let ppl_art = perplexity_artifact(&mut rt, size, &ckpt, &corpus, 1).unwrap();
+    let rel = (ppl_cpu - ppl_art).abs() / ppl_art;
+    assert!(rel < 0.02, "cpu ppl {ppl_cpu} vs artifact ppl {ppl_art} (rel {rel})");
 }
 
 #[test]

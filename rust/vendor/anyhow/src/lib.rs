@@ -1,0 +1,191 @@
+//! Vendored, dependency-free subset of the `anyhow` API (the offline build
+//! environment has no crate registry — see the repo README). Implements the
+//! surface gptq-rs uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`.
+//!
+//! Context is flattened into the message (`"outer: inner"`), matching how
+//! this crate's CLIs print errors; source-chain introspection is not
+//! provided.
+
+use std::fmt;
+
+/// A string-backed error value. Deliberately does NOT implement
+/// `std::error::Error` so the blanket `From<E: std::error::Error>` below
+/// stays coherent — the same design real anyhow uses.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Errors that can absorb context. Implemented for both foreign
+/// `std::error::Error` types and [`Error`] itself via a local trait (the
+/// coherence trick from real anyhow's `ext::StdError`).
+pub trait IntoContextError {
+    fn with_ctx(self, ctx: String) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoContextError for E {
+    fn with_ctx(self, ctx: String) -> Error {
+        Error::msg(self).wrap(ctx)
+    }
+}
+
+impl IntoContextError for Error {
+    fn with_ctx(self, ctx: String) -> Error {
+        self.wrap(ctx)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: IntoContextError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.with_ctx(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.with_ctx(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(fails_io().is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 3 bad");
+        let e = anyhow!("pair {} {}", 1, 2);
+        assert_eq!(e.to_string(), "pair 1 2");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    fn ensures(v: usize) -> Result<usize> {
+        ensure!(v < 10, "v {v} too big");
+        Ok(v)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("nope {}", 7)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert_eq!(ensures(12).unwrap_err().to_string(), "v 12 too big");
+        assert_eq!(bails().unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn context_on_result_option_and_error() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+
+        let e: Result<()> = Err(anyhow!("root"));
+        assert_eq!(
+            e.with_context(|| format!("layer {}", 1)).unwrap_err().to_string(),
+            "layer 1: root"
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! Typecheck-only stub of the `xla` PJRT binding.
+//!
+//! The offline build environment carries no crate registry and no XLA C++
+//! toolchain, but the `pjrt` feature of gptq-rs must still typecheck (and
+//! the literal marshalling must still work for unit tests). This stub
+//! mirrors the API subset `runtime::pjrt` uses:
+//!
+//! * [`Literal`] is FULLY functional — an in-memory typed buffer with dims
+//!   (`vec1`, `reshape`, `to_vec`, `element_count`, `to_tuple`).
+//! * The PJRT pieces ([`PjRtClient`], [`HloModuleProto`],
+//!   [`XlaComputation`], [`PjRtLoadedExecutable`]) typecheck but return
+//!   [`Error::Unavailable`] at runtime.
+//!
+//! To run against real XLA, install the toolchain and patch this crate out
+//! in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [patch.crates-io]  # or replace the path dependency directly
+//! xla = { git = "..." }
+//! ```
+
+use std::fmt;
+
+/// Stub error. `Unavailable` marks every operation that would need the
+/// real XLA runtime.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+    Shape(String),
+    Type(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(op) => write!(
+                f,
+                "{op}: stub xla crate (vendor/xla) — install the XLA toolchain and patch in \
+                 the real binding to execute PJRT artifacts"
+            ),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Type(m) => write!(f, "type error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// literals (functional)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    fn to_data(v: &[Self]) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_data(v: &[Self]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_data(v: &[Self]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn to_data(v: &[Self]) -> Data {
+        Data::U32(v.to_vec())
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// An in-memory typed literal with dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::to_data(v), dims: vec![v.len() as i64] }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data).ok_or_else(|| Error::Type("literal dtype mismatch".into()))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Flatten a tuple literal into its elements. The stub never produces
+    /// real tuples (those come from executions), so this errs.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface (typecheck-only)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready to compile.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A PJRT device buffer returned by executions.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.element_count(), 6);
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4]).is_err());
+        assert!(r.to_vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub xla crate"), "{msg}");
+    }
+}
