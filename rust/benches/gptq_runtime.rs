@@ -1,14 +1,19 @@
 //! Bench: GPTQ solver runtime scaling vs OBQ — paper Figure 3 / Tables
 //! 8–9. GPTQ is O(dcol²·max(drow,dcol)); OBQ is O(drow·dcol³), measured
-//! while feasible and extrapolated beyond.
+//! while feasible and extrapolated beyond. A second section measures the
+//! row-parallel solver's thread scaling (quantize-path speedup).
 //!
 //! ```bash
-//! cargo bench --bench gptq_runtime
+//! cargo bench --bench gptq_runtime                               # print
+//! cargo bench --bench gptq_runtime -- --record BENCH_quantize.json
 //! ```
 
 use gptq_rs::data::Rng;
 use gptq_rs::quant::{accumulate_hessian, gptq_quantize, obq_quantize, GptqConfig};
-use gptq_rs::util::bench::black_box;
+use gptq_rs::util::bench::{black_box, write_bench_json};
+use gptq_rs::util::cli::Args;
+use gptq_rs::util::json::Json;
+use gptq_rs::util::par;
 use std::time::Instant;
 
 fn layer(d: usize) -> (Vec<f32>, Vec<f64>) {
@@ -26,7 +31,19 @@ fn layer(d: usize) -> (Vec<f32>, Vec<f64>) {
     (w, h)
 }
 
+fn time_gptq(w: &[f32], h: &[f64], d: usize) -> f64 {
+    let t0 = Instant::now();
+    let r = gptq_quantize(w, d, d, h, &GptqConfig::new(4)).unwrap();
+    black_box(&r.wq);
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
 fn main() {
+    let args = Args::from_env();
+    let record = args.get("record").map(String::from);
+
+    // -- section 1: GPTQ vs OBQ (serial, the paper's Fig. 3 analog) --------
+    par::set_threads(1);
     println!("== GPTQ vs OBQ runtime scaling (paper Fig. 3 analog, square layers) ==");
     println!(
         "{:<8} {:>14} {:>16} {:>12} {:>18}",
@@ -35,10 +52,7 @@ fn main() {
     let mut last_obq: Option<(usize, f64)> = None;
     for d in [64usize, 128, 256, 512, 1024, 1536] {
         let (w, h) = layer(d);
-        let t0 = Instant::now();
-        let r = gptq_quantize(&w, d, d, &h, &GptqConfig::new(4)).unwrap();
-        black_box(&r.wq);
-        let gptq_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let gptq_ms = time_gptq(&w, &h, d);
 
         let (obq_ms, extrapolated) = if d <= 256 {
             let t1 = Instant::now();
@@ -63,4 +77,48 @@ fn main() {
     }
     println!("(* extrapolated O(d^4) for square layers; the paper estimates OBQ at");
     println!("   months for 175B vs 4 GPU-hours for GPTQ — 3 orders of magnitude)");
+
+    // -- section 2: thread scaling of the row-parallel solver --------------
+    let ncpu = par::auto_threads();
+    let thread_counts: Vec<usize> = if ncpu > 1 { vec![1, ncpu] } else { vec![1] };
+    println!("\n== GPTQ solver thread scaling (rows × shared Cholesky factor) ==");
+    println!("{:<8} {:>9} {:>14} {:>12}", "dcol", "threads", "ms/layer", "speedup");
+    let mut results: Vec<Json> = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+    for d in [256usize, 512, 1024] {
+        let (w, h) = layer(d);
+        let mut ms_t1 = 0.0f64;
+        for &t in &thread_counts {
+            par::set_threads(t);
+            let _warm = time_gptq(&w, &h, d);
+            let ms = time_gptq(&w, &h, d);
+            let speedup = if t == 1 {
+                ms_t1 = ms;
+                1.0
+            } else {
+                ms_t1 / ms
+            };
+            println!("{d:<8} {t:>9} {ms:>14.1} {speedup:>11.2}x");
+            results.push(Json::obj(vec![
+                ("dcol", Json::Num(d as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("ms_per_layer", Json::Num(ms)),
+                ("speedup_over_t1", Json::Num(speedup)),
+            ]));
+            if t != 1 && d == 1024 {
+                summary.push((format!("quantize_speedup_d1024_t{t}_over_t1"), Json::Num(speedup)));
+            }
+            if d == 1024 {
+                summary.push((format!("ms_per_layer_d1024_t{t}"), Json::Num(ms)));
+            }
+        }
+    }
+    par::set_threads_env();
+
+    if let Some(path) = record {
+        let summary_refs: Vec<(&str, Json)> =
+            summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        write_bench_json(&path, "quantize", results, summary_refs).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

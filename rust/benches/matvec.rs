@@ -1,29 +1,57 @@
 //! Bench: quantized-matrix × fp-vector kernel vs dense f32 matvec — the
 //! kernel-level side of the paper's Table 5 (and the nuQmm comparison):
-//! throughput and effective bandwidth across layer shapes and bit widths.
+//! throughput and effective bandwidth across layer shapes, bit widths,
+//! and thread counts (the decode hot path is row-range parallel).
 //!
 //! ```bash
-//! cargo bench --bench matvec
+//! cargo bench --bench matvec                              # print only
+//! cargo bench --bench matvec -- --record BENCH_decode.json
 //! ```
+//!
+//! `--record` sweeps threads {1, ncpu} over a d=1024/ff=4096 decode layer
+//! (wqkv, wo, wup, wdn) and writes the perf-trajectory JSON
+//! (EXPERIMENTS.md §Benches): per-shape µs, GB/s, ms/layer, tokens/s,
+//! and the threads-ncpu-over-1 decode speedup.
 
 use gptq_rs::data::Rng;
 use gptq_rs::model::matvec::{matvec_f32, matvec_packed};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
-use gptq_rs::util::bench::{bench_auto, black_box};
+use gptq_rs::util::bench::{bench_auto, black_box, write_bench_json};
+use gptq_rs::util::cli::Args;
+use gptq_rs::util::json::Json;
+use gptq_rs::util::par;
 
-fn main() {
-    println!("== packed dequantizing matvec vs f32 (paper Table 5 kernel analog) ==");
+/// One decode layer of the bench model (d=1024, ff=4096):
+/// wqkv, wo, wup, wdn.
+const LAYER_SHAPES: [(usize, usize); 4] = [(3072, 1024), (1024, 1024), (4096, 1024), (1024, 4096)];
+
+struct Sweep {
+    /// per-shape rows for the JSON record
+    results: Vec<Json>,
+    /// summed mean ms over the four layer matvecs, per bits key
+    layer_ms: Vec<(String, f64)>,
+}
+
+/// Bench every shape × {f32, 4, 3, 2-bit} at the CURRENT thread count.
+fn sweep(threads: usize) -> Sweep {
+    println!("== packed dequantizing matvec vs f32 — threads={threads} ==");
     println!(
         "{:<22} {:>10} {:>12} {:>12} {:>10} {:>12}",
         "shape", "bits", "us/matvec", "speedup", "GB/s", "bytes moved"
     );
-    for (drow, dcol) in [(1024usize, 1024usize), (3072, 1024), (4096, 4096), (1024, 4096)] {
+    let mut results = Vec::new();
+    let mut layer_ms: Vec<(String, f64)> =
+        [("f32", 0.0), ("4bit", 0.0), ("3bit", 0.0), ("2bit", 0.0)]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+    for (drow, dcol) in LAYER_SHAPES {
         let mut rng = Rng::new(drow as u64 * 7 + dcol as u64);
         let w: Vec<f32> = (0..drow * dcol).map(|_| rng.unit()).collect();
         let x: Vec<f32> = (0..dcol).map(|_| rng.unit()).collect();
         let mut y = vec![0.0f32; drow];
 
-        let r_f32 = bench_auto(&format!("f32 {drow}x{dcol}"), 300.0, 10, || {
+        let r_f32 = bench_auto(&format!("f32 {drow}x{dcol} t{threads}"), 300.0, 10, || {
             matvec_f32(black_box(&w), black_box(&x), drow, dcol, &mut y);
             black_box(&y);
         });
@@ -37,11 +65,20 @@ fn main() {
             f32_bytes as f64 / (r_f32.mean_ms * 1e-3) / 1e9,
             f32_bytes
         );
+        layer_ms[0].1 += r_f32.mean_ms;
+        results.push(Json::obj(vec![
+            ("shape", Json::Str(format!("{drow}x{dcol}"))),
+            ("bits", Json::Str("f32".into())),
+            ("threads", Json::Num(threads as f64)),
+            ("us_per_matvec", Json::Num(r_f32.mean_ms * 1e3)),
+            ("gbps", Json::Num(f32_bytes as f64 / (r_f32.mean_ms * 1e-3) / 1e9)),
+            ("bytes_moved", Json::Num(f32_bytes as f64)),
+        ]));
 
-        for bits in [4u32, 3, 2] {
+        for (bi, bits) in [4u32, 3, 2].into_iter().enumerate() {
             let q = rtn_quantize(&w, drow, dcol, bits, 0);
             let p = PackedMatrix::from_result(&q);
-            let r = bench_auto(&format!("{bits}bit {drow}x{dcol}"), 300.0, 10, || {
+            let r = bench_auto(&format!("{bits}bit {drow}x{dcol} t{threads}"), 300.0, 10, || {
                 matvec_packed(black_box(&p), black_box(&x), &mut y);
                 black_box(&y);
             });
@@ -54,8 +91,63 @@ fn main() {
                 p.storage_bytes() as f64 / (r.mean_ms * 1e-3) / 1e9,
                 p.storage_bytes()
             );
+            layer_ms[1 + bi].1 += r.mean_ms;
+            results.push(Json::obj(vec![
+                ("shape", Json::Str(format!("{drow}x{dcol}"))),
+                ("bits", Json::Str(format!("{bits}bit"))),
+                ("threads", Json::Num(threads as f64)),
+                ("us_per_matvec", Json::Num(r.mean_ms * 1e3)),
+                ("speedup_vs_f32", Json::Num(r_f32.mean_ms / r.mean_ms)),
+                ("gbps", Json::Num(p.storage_bytes() as f64 / (r.mean_ms * 1e-3) / 1e9)),
+                ("bytes_moved", Json::Num(p.storage_bytes() as f64)),
+            ]));
         }
     }
-    println!("\npaper shape: speedup tracks the bytes-moved reduction once the matrix");
-    println!("exceeds cache (bandwidth-bound regime), ~2-4x end-to-end.");
+    Sweep { results, layer_ms }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let record = args.get("record").map(String::from);
+    let ncpu = par::auto_threads();
+    let thread_counts: Vec<usize> = if ncpu > 1 { vec![1, ncpu] } else { vec![1] };
+
+    let mut all_results: Vec<Json> = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+    let mut ms_layer_t1 = 0.0f64;
+    for &t in &thread_counts {
+        par::set_threads(t);
+        let s = sweep(t);
+        all_results.extend(s.results);
+        for (key, ms) in &s.layer_ms {
+            // ms per decode layer (the 4 matvecs) and the tokens/s a
+            // one-layer model would decode at — the Table 5 unit
+            println!("   threads={t} {key:>5}: {ms:.3} ms/layer  ({:.1} tokens/s·layer)", 1e3 / ms);
+            summary.push((format!("ms_per_layer_{key}_t{t}"), Json::Num(*ms)));
+            summary.push((format!("tokens_per_s_{key}_t{t}"), Json::Num(1e3 / ms)));
+            if key.as_str() == "3bit" {
+                if t == 1 {
+                    ms_layer_t1 = *ms;
+                } else if ms_layer_t1 > 0.0 {
+                    summary.push((
+                        format!("decode_speedup_3bit_t{t}_over_t1"),
+                        Json::Num(ms_layer_t1 / ms),
+                    ));
+                }
+            }
+        }
+        println!();
+    }
+    par::set_threads_env();
+
+    println!("paper shape: speedup tracks the bytes-moved reduction once the matrix");
+    println!("exceeds cache (bandwidth-bound regime), ~2-4x end-to-end; threads add");
+    println!("near-linear row-parallel scaling on top until bandwidth saturates.");
+
+    if let Some(path) = record {
+        let summary_refs: Vec<(&str, Json)> =
+            summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        write_bench_json(&path, "decode", all_results, summary_refs).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

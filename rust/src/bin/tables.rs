@@ -1,7 +1,12 @@
 //! `tables` — regenerate every paper table/figure analog (DESIGN.md
 //! experiment index). Placeholder main; rows are implemented in
 //! `gptq_rs::tables` (see that module for the experiment mapping).
+//! Accepts the global `--threads N` flag (0 = all cores).
 
 fn main() -> gptq_rs::Result<()> {
+    let args = gptq_rs::util::cli::Args::from_env();
+    if let Some(t) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        gptq_rs::util::par::set_threads(t);
+    }
     gptq_rs::tables::main_cli()
 }

@@ -28,14 +28,21 @@ impl LatencyStats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// p-th percentile (0–100) with linear interpolation between ranks
+    /// (numpy's default convention): p50 of [1, 2] is 1.5 — the old
+    /// nearest-rank rounding returned 2.0.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-        sorted[idx.min(sorted.len() - 1)]
+        let last = sorted.len() - 1;
+        let rank = (p / 100.0).clamp(0.0, 1.0) * last as f64;
+        let lo = rank.floor() as usize;
+        let hi = (lo + 1).min(last);
+        let frac = rank - lo as f64;
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
     }
 
     pub fn min(&self) -> f64 {
@@ -86,6 +93,43 @@ mod tests {
         let s = LatencyStats::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_every_percentile() {
+        let mut s = LatencyStats::new();
+        s.record_ms(7.5);
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 7.5, "p{p}");
+        }
+    }
+
+    #[test]
+    fn two_samples_interpolate() {
+        // the motivating bug: nearest-rank made p50 of [1, 2] return 2.0
+        let mut s = LatencyStats::new();
+        s.record_ms(2.0);
+        s.record_ms(1.0);
+        assert!((s.percentile(50.0) - 1.5).abs() < 1e-12);
+        assert!((s.percentile(25.0) - 1.25).abs() < 1e-12);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 2.0);
+    }
+
+    #[test]
+    fn even_length_interpolates_between_middle_ranks() {
+        let mut s = LatencyStats::new();
+        for v in [4.0, 1.0, 3.0, 2.0] {
+            s.record_ms(v);
+        }
+        // rank = 0.5 * 3 = 1.5 → halfway between 2.0 and 3.0
+        assert!((s.percentile(50.0) - 2.5).abs() < 1e-12);
+        // rank = 0.25 * 3 = 0.75 → 1.0 + 0.75
+        assert!((s.percentile(25.0) - 1.75).abs() < 1e-12);
+        // out-of-range p clamps rather than panicking
+        assert_eq!(s.percentile(-5.0), 1.0);
+        assert_eq!(s.percentile(150.0), 4.0);
     }
 
     #[test]

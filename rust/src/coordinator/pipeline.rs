@@ -25,6 +25,7 @@ use crate::model::config::QUANT_LINEARS;
 use crate::model::{Checkpoint, ModelConfig};
 use crate::quant::{self, gptq_quantize, rtn_quantize, GptqConfig, PackedMatrix, QuantResult};
 use crate::runtime::{Runtime, Value, BLOCK_TENSORS};
+use crate::util::par::{self, Pool};
 use crate::Result;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -84,6 +85,26 @@ pub struct PipelineReport {
     pub mean_layer_error: f64,
 }
 
+/// Engine dispatch for the solvers that are pure functions of
+/// `(w, H, cfg)` — everything except the artifact contract, which needs
+/// the runtime. Shared by the serial and the fan-out paths.
+fn solve_pure(
+    cfg: &PipelineConfig,
+    w: &[f32],
+    drow: usize,
+    dcol: usize,
+    h: &[f64],
+) -> std::result::Result<QuantResult, String> {
+    match cfg.engine {
+        QuantEngine::Rtn => Ok(rtn_quantize(w, drow, dcol, cfg.bits, cfg.groupsize)),
+        QuantEngine::GptqRust => gptq_quantize(w, drow, dcol, h, &cfg.gptq),
+        QuantEngine::Obq => {
+            crate::quant::obq_quantize(w, drow, dcol, h, cfg.bits, cfg.gptq.percdamp)
+        }
+        QuantEngine::GptqArtifact => Err("artifact engine is not a pure solver".into()),
+    }
+}
+
 /// The block-streaming quantization pipeline.
 pub struct QuantPipeline<'rt> {
     rt: &'rt mut Runtime,
@@ -130,25 +151,25 @@ impl<'rt> QuantPipeline<'rt> {
         let mut stats: Vec<LayerStats> = Vec::new();
         for layer in 0..config.n_layers {
             let (hessians, captures) = self.capture_block(ckpt, layer, &xs, &config)?;
-            // keep originals for the no-propagation ablation
-            let originals: Vec<Vec<f32>> = QUANT_LINEARS
+            // solve the block's four linears — independently, so the pure
+            // engines run them in parallel (layer-level parallelism).
+            // `jobs` holds the ORIGINAL weights, which the no-propagation
+            // ablation also reuses below.
+            let jobs: Vec<(Vec<f32>, usize, usize)> = QUANT_LINEARS
                 .iter()
-                .map(|lin| ckpt.block_tensor(layer, lin).data.clone())
+                .map(|lin| {
+                    let t = ckpt.block_tensor(layer, lin);
+                    let (drow, dcol) = t.dims2();
+                    (t.data.clone(), drow, dcol)
+                })
                 .collect();
-
-            for (li, lin) in QUANT_LINEARS.iter().enumerate() {
-                let t_l = Instant::now();
-                let w = ckpt.block_tensor(layer, lin);
-                let (drow, dcol) = w.dims2();
-                let result = self.quantize_layer(&w.data, drow, dcol, &hessians[li])?;
-                let quant_ms = t_l.elapsed().as_secs_f64() * 1e3;
-                let sq_error = quant::layer_sq_error(
-                    &w.data,
-                    &result.wq,
-                    &captures[li],
-                    drow,
-                    dcol,
-                );
+            let solved = self.solve_linears(&jobs, &hessians)?;
+            for (li, ((w, drow, dcol), (result, quant_ms))) in
+                jobs.iter().zip(solved.into_iter()).enumerate()
+            {
+                let lin = QUANT_LINEARS[li];
+                let sq_error =
+                    quant::layer_sq_error(w, &result.wq, &captures[li], *drow, *dcol);
                 stats.push(LayerStats { layer, name: lin.to_string(), sq_error, quant_ms });
                 packed.insert(format!("blocks.{layer}.{lin}"), PackedMatrix::from_result(&result));
                 // write back Ŵ so the propagation pass (and later layers'
@@ -164,7 +185,7 @@ impl<'rt> QuantPipeline<'rt> {
                     .iter()
                     .map(|lin| ckpt.block_tensor(layer, lin).data.clone())
                     .collect();
-                for (lin, orig) in QUANT_LINEARS.iter().zip(&originals) {
+                for (lin, (orig, _, _)) in QUANT_LINEARS.iter().zip(&jobs) {
                     ckpt.set_block_weight(layer, lin, orig.clone());
                 }
                 for x in xs.iter_mut() {
@@ -261,6 +282,49 @@ impl<'rt> QuantPipeline<'rt> {
         Ok((y, caps))
     }
 
+    /// Solve a block's linears, returning `(result, quant_ms)` per linear
+    /// in input order. The pure engines (rust / rtn / obq) fan the four
+    /// solves out across the global pool — each solve is a pure function
+    /// of `(w, H, cfg)`, so results are position-stable and bit-identical
+    /// to the serial loop. The artifact engine drives `&mut Runtime` and
+    /// stays serial.
+    fn solve_linears(
+        &mut self,
+        jobs: &[(Vec<f32>, usize, usize)],
+        hessians: &[Vec<f64>; 4],
+    ) -> Result<Vec<(QuantResult, f64)>> {
+        let pool = Pool::global();
+        let pure = !matches!(self.cfg.engine, QuantEngine::GptqArtifact);
+        if pure && pool.nthreads() > 1 && jobs.len() > 1 {
+            let cfg = self.cfg.clone();
+            let mut slots: Vec<Option<std::result::Result<(QuantResult, f64), String>>> =
+                vec![None; jobs.len()];
+            {
+                let parts = par::SliceParts::new(&mut slots);
+                pool.run(jobs.len(), |li| {
+                    let (w, drow, dcol) = &jobs[li];
+                    let t = Instant::now();
+                    let r = solve_pure(&cfg, w, *drow, *dcol, &hessians[li])
+                        .map(|q| (q, t.elapsed().as_secs_f64() * 1e3));
+                    // SAFETY: each job owns exactly slot li
+                    unsafe { parts.range(li..li + 1)[0] = Some(r) };
+                });
+            }
+            slots
+                .into_iter()
+                .map(|s| s.expect("solver job did not run").map_err(|e| anyhow::anyhow!(e)))
+                .collect()
+        } else {
+            let mut out = Vec::with_capacity(jobs.len());
+            for (li, (w, drow, dcol)) in jobs.iter().enumerate() {
+                let t = Instant::now();
+                let r = self.quantize_layer(w, *drow, *dcol, &hessians[li])?;
+                out.push((r, t.elapsed().as_secs_f64() * 1e3));
+            }
+            Ok(out)
+        }
+    }
+
     /// Solve one layer with the configured engine.
     fn quantize_layer(
         &mut self,
@@ -270,13 +334,10 @@ impl<'rt> QuantPipeline<'rt> {
         h: &[f64],
     ) -> Result<QuantResult> {
         match self.cfg.engine {
-            QuantEngine::Rtn => Ok(rtn_quantize(w, drow, dcol, self.cfg.bits, self.cfg.groupsize)),
-            QuantEngine::GptqRust => {
-                gptq_quantize(w, drow, dcol, h, &self.cfg.gptq).map_err(|e| anyhow::anyhow!(e))
-            }
-            QuantEngine::Obq => {
-                crate::quant::obq_quantize(w, drow, dcol, h, self.cfg.bits, self.cfg.gptq.percdamp)
-                    .map_err(|e| anyhow::anyhow!(e))
+            // one dispatch table for the pure engines — shared with the
+            // parallel fan-out so the two paths can never drift
+            QuantEngine::Rtn | QuantEngine::GptqRust | QuantEngine::Obq => {
+                solve_pure(&self.cfg, w, drow, dcol, h).map_err(|e| anyhow::anyhow!(e))
             }
             QuantEngine::GptqArtifact => {
                 // the gptq_layer contract takes only (W, H): per-row grids

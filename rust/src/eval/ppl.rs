@@ -6,23 +6,62 @@ use super::log_prob;
 use crate::data::CorpusFile;
 use crate::model::{Checkpoint, CpuModel};
 use crate::runtime::{Runtime, Value};
+use crate::util::par::{self, Pool};
 use crate::Result;
+
+/// NLL of one evaluation segment (`seq_len + 1` bytes: inputs + targets).
+fn segment_nll(model: &mut CpuModel, seg: &[u8], seq_len: usize, vocab: usize) -> f64 {
+    let inputs = &seg[..seq_len];
+    let targets = &seg[1..];
+    let logits = model.logits_all(inputs);
+    let mut nll = 0.0f64;
+    for (pos, &t) in targets.iter().enumerate() {
+        nll -= log_prob(&logits[pos * vocab..(pos + 1) * vocab], t as usize);
+    }
+    nll
+}
 
 /// Perplexity of a CPU model (dense or packed) over a corpus.
 /// `max_segments` bounds the work (the tables use 24–64 segments).
+///
+/// Segments are scored independently (each worker clones the model —
+/// decode state is per-instance) into per-segment NLL subtotals reduced
+/// in segment order, so the result is bit-identical at every thread
+/// count. (The subtotal-then-reduce shape is also what the serial path
+/// computes; it differs from the historical single-accumulator fold only
+/// at f64 rounding level.)
 pub fn perplexity(model: &mut CpuModel, corpus: &CorpusFile, seq_len: usize, max_segments: usize) -> f64 {
     let vocab = model.config.vocab;
-    let mut nll = 0.0f64;
-    let mut count = 0usize;
-    for seg in corpus.eval_segments(seq_len, max_segments) {
-        let inputs = &seg[..seq_len];
-        let targets = &seg[1..];
-        let logits = model.logits_all(inputs);
-        for (pos, &t) in targets.iter().enumerate() {
-            nll -= log_prob(&logits[pos * vocab..(pos + 1) * vocab], t as usize);
-            count += 1;
+    let segs = corpus.eval_segments(seq_len, max_segments);
+    let mut seg_nll = vec![0.0f64; segs.len()];
+    let pool = Pool::global();
+    if pool.nthreads() > 1 && segs.len() > 1 {
+        let parts = par::SliceParts::new(&mut seg_nll);
+        let proto: &CpuModel = model;
+        let segs_ref: &[&[u8]] = &segs;
+        pool.run_with(
+            segs_ref.len(),
+            || {
+                // segment workers already saturate the pool: pin their
+                // decode matvecs to the serial kernels (bit-identical) so
+                // every matvec doesn't nest another thread scope
+                let mut m = proto.clone();
+                m.set_serial_kernels(true);
+                m
+            },
+            |m, j| {
+                let nll = segment_nll(m, segs_ref[j], seq_len, vocab);
+                // SAFETY: each job owns exactly slot j
+                unsafe { parts.range(j..j + 1)[0] = nll };
+            },
+        );
+    } else {
+        for (j, seg) in segs.iter().enumerate() {
+            seg_nll[j] = segment_nll(model, seg, seq_len, vocab);
         }
     }
+    let nll: f64 = seg_nll.iter().sum(); // fixed segment-order reduction
+    let count = segs.len() * seq_len; // one target per input position
     (nll / count as f64).exp()
 }
 

@@ -25,7 +25,7 @@ use gptq_rs::Result;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] <info|quantize|eval|serve> [flags]
+const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [--threads N] <info|quantize|eval|serve> [flags]
   quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq] [--calib-segments N] [--out F]
   eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
   serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N] [--skip-parity]";
@@ -43,6 +43,11 @@ fn parse_engine(s: &str) -> Result<QuantEngine> {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // global intra-op thread count: --threads beats GPTQ_THREADS; 0 = all
+    // cores; unset/1 = serial (exactly the single-threaded code paths)
+    if let Some(t) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        gptq_rs::util::par::set_threads(t);
+    }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let backend = args.str_or("backend", "reference");
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -92,8 +97,10 @@ fn quantize(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let mut pipeline = QuantPipeline::new(&mut rt, &size, cfg);
     let report = pipeline.run(&mut ckpt, &calib)?;
     println!(
-        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, backend {backend}) in {:.2}s; mean layer sq-err {:.4e}",
-        report.total_s, report.mean_layer_error
+        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, backend {backend}, threads {}) in {:.2}s; mean layer sq-err {:.4e}",
+        gptq_rs::util::par::threads(),
+        report.total_s,
+        report.mean_layer_error
     );
     for s in &report.stats {
         println!("  layer {:2} {:5}  err {:.4e}  {:.1} ms", s.layer, s.name, s.sq_error, s.quant_ms);

@@ -11,7 +11,9 @@
 //! paper's deployment story.
 
 use crate::model::checkpoint::{Checkpoint, QuantizedCheckpoint};
-use crate::model::matvec::{matvec_f32_bias, matvec_packed_bias};
+use crate::model::matvec::{
+    matvec_f32_bias, matvec_f32_bias_serial, matvec_packed_bias, matvec_packed_bias_serial,
+};
 use crate::model::ModelConfig;
 use crate::quant::PackedMatrix;
 
@@ -30,12 +32,30 @@ impl LinearWeight {
         }
     }
 
-    /// y = W x + b.
-    pub fn apply(&self, x: &[f32], b: &[f32], y: &mut [f32]) {
+    /// y = W x + b. With `serial` the never-spawning kernel twins run —
+    /// for decode inside already-parallel workers (eval::perplexity).
+    pub fn apply_with(&self, x: &[f32], b: &[f32], y: &mut [f32], serial: bool) {
         match self {
-            LinearWeight::Dense { w, drow, dcol } => matvec_f32_bias(w, x, b, *drow, *dcol, y),
-            LinearWeight::Packed(p) => matvec_packed_bias(p, x, b, y),
+            LinearWeight::Dense { w, drow, dcol } => {
+                if serial {
+                    matvec_f32_bias_serial(w, x, b, *drow, *dcol, y)
+                } else {
+                    matvec_f32_bias(w, x, b, *drow, *dcol, y)
+                }
+            }
+            LinearWeight::Packed(p) => {
+                if serial {
+                    matvec_packed_bias_serial(p, x, b, y)
+                } else {
+                    matvec_packed_bias(p, x, b, y)
+                }
+            }
         }
+    }
+
+    /// y = W x + b (auto-parallel kernels).
+    pub fn apply(&self, x: &[f32], b: &[f32], y: &mut [f32]) {
+        self.apply_with(x, b, y, false)
     }
 
     /// Weight bytes touched per matvec (Table 5 traffic accounting).
@@ -96,7 +116,9 @@ impl KvCache {
     }
 }
 
-/// CPU model instance (dense or packed weights).
+/// CPU model instance (dense or packed weights). `Clone` gives each
+/// evaluation worker its own decode state (see `eval::perplexity`).
+#[derive(Clone)]
 pub struct CpuModel {
     pub config: ModelConfig,
     embed: Vec<f32>,   // vocab × d
@@ -107,8 +129,13 @@ pub struct CpuModel {
     blocks: Vec<BlockWeights>,
     // scratch buffers (decode is single-threaded per model instance)
     scratch: Scratch,
+    /// Use the never-spawning matvec twins on the decode path — set by
+    /// callers whose workers are already parallel (eval::perplexity), so
+    /// matvecs don't nest thread scopes inside every worker.
+    serial_kernels: bool,
 }
 
+#[derive(Clone)]
 struct Scratch {
     x: Vec<f32>,
     x1: Vec<f32>,
@@ -235,7 +262,13 @@ impl CpuModel {
             logits: vec![0.0; config.vocab],
             att_w: vec![0.0; config.max_seq],
         };
-        Self { config, embed, pos, lnf_g, lnf_b, unembed, blocks, scratch }
+        Self { config, embed, pos, lnf_g, lnf_b, unembed, blocks, scratch, serial_kernels: false }
+    }
+
+    /// Pin the decode path to the serial matvec kernels (bit-identical to
+    /// the auto-parallel ones; see DESIGN.md §Parallelism).
+    pub fn set_serial_kernels(&mut self, on: bool) {
+        self.serial_kernels = on;
     }
 
     /// Total weight bytes the decode path touches per token (all linears) —
@@ -258,6 +291,7 @@ impl CpuModel {
         let hd = cfg.head_dim();
         let pos = cache.len;
         assert!(pos < cfg.max_seq, "sequence overflow");
+        let serial = self.serial_kernels;
         let s = &mut self.scratch;
 
         // embedding + positional
@@ -268,7 +302,7 @@ impl CpuModel {
         for (l, blk) in self.blocks.iter().enumerate() {
             // attention
             layer_norm(&s.x, &blk.ln1_g, &blk.ln1_b, &mut s.x1);
-            blk.wqkv.apply(&s.x1, &blk.wqkv_b, &mut s.qkv);
+            blk.wqkv.apply_with(&s.x1, &blk.wqkv_b, &mut s.qkv, serial);
             let (q, kv) = s.qkv.split_at(d);
             let (k_new, v_new) = kv.split_at(d);
             cache.k[l][pos * d..(pos + 1) * d].copy_from_slice(k_new);
@@ -303,17 +337,17 @@ impl CpuModel {
                     }
                 }
             }
-            blk.wo.apply(&s.attn, &blk.wo_b, &mut s.proj[..d]);
+            blk.wo.apply_with(&s.attn, &blk.wo_b, &mut s.proj[..d], serial);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
             // MLP
             layer_norm(&s.x, &blk.ln2_g, &blk.ln2_b, &mut s.x1);
-            blk.wup.apply(&s.x1, &blk.wup_b, &mut s.hidden);
+            blk.wup.apply_with(&s.x1, &blk.wup_b, &mut s.hidden, serial);
             for v in s.hidden.iter_mut() {
                 *v = gelu(*v);
             }
-            blk.wdn.apply(&s.hidden, &blk.wdn_b, &mut s.proj[..d]);
+            blk.wdn.apply_with(&s.hidden, &blk.wdn_b, &mut s.proj[..d], serial);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }

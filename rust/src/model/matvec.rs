@@ -2,7 +2,7 @@
 //!
 //! Generative decode at batch 1 reduces to one matvec per linear layer;
 //! the paper's observation is that these are memory-bandwidth-bound, so
-//! keeping weights packed at 2–4 bits and dequantizing in registers wins
+//! keeping weights packed at 2–8 bits and dequantizing in registers wins
 //! roughly (32 / effective-bits)× on weight traffic. [`matvec_f32`] is the
 //! FP16-baseline analog, [`matvec_packed`] the CUDA-kernel analog (and the
 //! Rust twin of the L1 `packmatvec.py` Pallas kernel).
@@ -14,13 +14,28 @@
 //! `y += s·(Σ code·x) − s·z·(Σ x)` — no per-element multiply by the grid.
 
 use crate::quant::pack::PackedMatrix;
+use crate::util::par::{self, Pool};
 
-/// y = W x for dense row-major W (drow × dcol). 4-way unrolled dot.
-pub fn matvec_f32(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
-    assert_eq!(w.len(), drow * dcol);
-    assert_eq!(x.len(), dcol);
-    assert_eq!(y.len(), drow);
-    for (r, yr) in y.iter_mut().enumerate() {
+/// Below this many weight elements a matvec stays serial: thread spawn
+/// costs tens of µs per region, which only amortises once the matrix is
+/// past L2-resident sizes (DESIGN.md §Parallelism, threshold rationale).
+pub const MATVEC_PAR_MIN_ELEMS: usize = 1 << 16;
+
+fn pool_for(elems: usize) -> Pool {
+    if elems >= MATVEC_PAR_MIN_ELEMS {
+        Pool::global()
+    } else {
+        Pool::serial()
+    }
+}
+
+/// Rows `row0..row0+y.len()` of y = W x. 4-way unrolled dot; the shared
+/// serial core of [`matvec_f32`] — per-row arithmetic is independent of
+/// how rows are chunked, which is what makes the parallel wrapper
+/// bit-identical at any thread count.
+fn matvec_f32_rows(w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
         let row = &w[r * dcol..(r + 1) * dcol];
         let mut acc0 = 0.0f32;
         let mut acc1 = 0.0f32;
@@ -42,9 +57,47 @@ pub fn matvec_f32(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32])
     }
 }
 
+/// y = W x for dense row-major W (drow × dcol). Row-range parallel on the
+/// global pool above [`MATVEC_PAR_MIN_ELEMS`]; bit-identical to
+/// [`matvec_f32_serial`] at every thread count.
+pub fn matvec_f32(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
+    assert_eq!(w.len(), drow * dcol);
+    assert_eq!(x.len(), dcol);
+    assert_eq!(y.len(), drow);
+    let pool = pool_for(drow * dcol);
+    par::for_rows_mut(&pool, y, drow, 1, |rows, ys| {
+        matvec_f32_rows(w, x, dcol, rows.start, ys);
+    });
+}
+
+/// Serial twin of [`matvec_f32`]: same arithmetic, never spawns. Used
+/// inside loops that are already parallel over rows/samples (reference
+/// backend) to avoid nested thread scopes.
+pub fn matvec_f32_serial(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
+    assert_eq!(w.len(), drow * dcol);
+    assert_eq!(x.len(), dcol);
+    assert_eq!(y.len(), drow);
+    matvec_f32_rows(w, x, dcol, 0, y);
+}
+
 /// y = W x + b (dense), the convenience used by the dense forward.
 pub fn matvec_f32_bias(w: &[f32], x: &[f32], b: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
     matvec_f32(w, x, drow, dcol, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Serial twin of [`matvec_f32_bias`] (see [`matvec_f32_serial`]).
+pub fn matvec_f32_bias_serial(
+    w: &[f32],
+    x: &[f32],
+    b: &[f32],
+    drow: usize,
+    dcol: usize,
+    y: &mut [f32],
+) {
+    matvec_f32_serial(w, x, drow, dcol, y);
     for (yv, &bv) in y.iter_mut().zip(b) {
         *yv += bv;
     }
@@ -142,9 +195,61 @@ fn dot_packed_row_aligned<const BITS: u32, const CPW: usize>(
     y
 }
 
+/// Aligned fast path over rows `row0..row0+y.len()` (serial core).
+fn packed_rows_aligned(
+    p: &PackedMatrix,
+    xeff: &[f32],
+    xsum: &[f32],
+    wpg: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        *yr = match p.bits {
+            2 => dot_packed_row_aligned::<2, 16>(words, xeff, scales, zeros, xsum, wpg),
+            3 => dot_packed_row_aligned::<3, 10>(words, xeff, scales, zeros, xsum, wpg),
+            4 => dot_packed_row_aligned::<4, 8>(words, xeff, scales, zeros, xsum, wpg),
+            8 => dot_packed_row_aligned::<8, 4>(words, xeff, scales, zeros, xsum, wpg),
+            b => panic!("unsupported bit width {b}"),
+        };
+    }
+}
+
+/// General (ragged) path over rows `row0..row0+y.len()` (serial core).
+fn packed_rows_general(p: &PackedMatrix, x: &[f32], group: usize, row0: usize, y: &mut [f32]) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        *yr = match p.bits {
+            2 => dot_packed_row_general::<2>(words, x, scales, zeros, p.dcol, group),
+            3 => dot_packed_row_general::<3>(words, x, scales, zeros, p.dcol, group),
+            4 => dot_packed_row_general::<4>(words, x, scales, zeros, p.dcol, group),
+            8 => dot_packed_row_general::<8>(words, x, scales, zeros, p.dcol, group),
+            b => panic!("unsupported bit width {b}"),
+        };
+    }
+}
+
 /// y = dequant(P) x — the quantized-matrix × fp-vector kernel (the Rust
 /// twin of the L1 `packmatvec` Pallas kernel and the paper's CUDA kernel).
+/// Row-range parallel above [`MATVEC_PAR_MIN_ELEMS`] logical elements;
+/// bit-identical at every thread count (rows are independent).
 pub fn matvec_packed(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
+    matvec_packed_with(p, x, y, pool_for(p.drow * p.dcol));
+}
+
+/// Serial twin of [`matvec_packed`] (see [`matvec_f32_serial`]).
+pub fn matvec_packed_serial(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
+    matvec_packed_with(p, x, y, Pool::serial());
+}
+
+fn matvec_packed_with(p: &PackedMatrix, x: &[f32], y: &mut [f32], pool: Pool) {
     assert_eq!(x.len(), p.dcol);
     assert_eq!(y.len(), p.drow);
     let group = p.dcol / p.ngroups;
@@ -171,35 +276,27 @@ pub fn matvec_packed(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
             xsum[gi] = xs.iter().sum();
         }
         let wpg = p.nwords / p.ngroups;
-        for r in 0..p.drow {
-            let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
-            let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
-            let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
-            y[r] = match p.bits {
-                2 => dot_packed_row_aligned::<2, 16>(words, xeff, scales, zeros, &xsum, wpg),
-                3 => dot_packed_row_aligned::<3, 10>(words, xeff, scales, zeros, &xsum, wpg),
-                4 => dot_packed_row_aligned::<4, 8>(words, xeff, scales, zeros, &xsum, wpg),
-                b => panic!("unsupported bit width {b}"),
-            };
-        }
+        par::for_rows_mut(&pool, y, p.drow, 1, |rows, ys| {
+            packed_rows_aligned(p, xeff, &xsum, wpg, rows.start, ys);
+        });
         return;
     }
-    for r in 0..p.drow {
-        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
-        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
-        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
-        y[r] = match p.bits {
-            2 => dot_packed_row_general::<2>(words, x, scales, zeros, p.dcol, group),
-            3 => dot_packed_row_general::<3>(words, x, scales, zeros, p.dcol, group),
-            4 => dot_packed_row_general::<4>(words, x, scales, zeros, p.dcol, group),
-            b => panic!("unsupported bit width {b}"),
-        };
-    }
+    par::for_rows_mut(&pool, y, p.drow, 1, |rows, ys| {
+        packed_rows_general(p, x, group, rows.start, ys);
+    });
 }
 
 /// y = dequant(P) x + b.
 pub fn matvec_packed_bias(p: &PackedMatrix, x: &[f32], b: &[f32], y: &mut [f32]) {
     matvec_packed(p, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Serial twin of [`matvec_packed_bias`] (see [`matvec_f32_serial`]).
+pub fn matvec_packed_bias_serial(p: &PackedMatrix, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_packed_serial(p, x, y);
     for (yv, &bv) in y.iter_mut().zip(b) {
         *yv += bv;
     }
@@ -242,7 +339,9 @@ mod tests {
 
     #[test]
     fn packed_matches_dense_dequant() {
-        for (bits, g) in [(2u32, 0usize), (3, 0), (4, 0), (3, 16), (4, 8), (2, 32)] {
+        for (bits, g) in
+            [(2u32, 0usize), (3, 0), (4, 0), (8, 0), (3, 16), (4, 8), (2, 32), (8, 16)]
+        {
             let (drow, dcol) = (16, 64);
             let w = rand_vec(drow * dcol, bits as u64 * 31 + g as u64);
             let r = rtn_quantize(&w, drow, dcol, bits, g);

@@ -16,6 +16,12 @@
 
 use super::grid::{quant_params, quantize_value};
 use super::linalg::{cholesky_upper, matmul_acc, spd_inverse};
+use crate::util::par::{self, Pool};
+
+/// Below this many weight elements (`drow · dcol`) the solver stays
+/// serial (DESIGN.md §Parallelism, threshold rationale). Low on purpose:
+/// per-row solver work is O(dcol²), so even small layers amortise spawn.
+pub const GPTQ_PAR_MIN_ELEMS: usize = 512;
 
 /// Column processing order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -129,26 +135,113 @@ pub fn gptq_quantize(
     }
     let ngroups = dcol / g;
     let bs = cfg.blocksize.min(g).min(dcol).max(1);
-    let maxq = ((1u32 << cfg.bits) - 1) as f64;
 
     let (u, mut wf) = prepare(w, drow, dcol, h, cfg.percdamp)?;
     let mut codes = vec![0u8; drow * dcol];
     let mut wq64 = vec![0.0f64; drow * dcol];
     let mut scales = vec![0.0f32; drow * ngroups];
     let mut zeros = vec![0.0f32; drow * ngroups];
+    let grouped = cfg.groupsize != 0;
+
+    // Rows are independent given the shared factor U: every per-row
+    // buffer (wf, codes, wq, grids, err) partitions by row, so contiguous
+    // row ranges can run on separate workers with identical arithmetic —
+    // bit-identical results at any thread count.
+    let pool = if drow >= 2 && drow * dcol >= GPTQ_PAR_MIN_ELEMS {
+        Pool::global()
+    } else {
+        Pool::serial()
+    };
+    let nw = pool.nthreads().min(drow.max(1));
+    if nw > 1 {
+        let ranges = par::split_ranges(drow, nw);
+        let wf_p = par::SliceParts::new(&mut wf);
+        let codes_p = par::SliceParts::new(&mut codes);
+        let wq_p = par::SliceParts::new(&mut wq64);
+        let sc_p = par::SliceParts::new(&mut scales);
+        let zr_p = par::SliceParts::new(&mut zeros);
+        let ranges_ref = &ranges;
+        pool.run(ranges_ref.len(), |wi| {
+            let r = ranges_ref[wi].clone();
+            let (rs, re) = (r.start, r.end);
+            // SAFETY: worker ranges are pairwise disjoint rows
+            let (wfs, cds, wqs, scs, zrs) = unsafe {
+                (
+                    wf_p.range(rs * dcol..re * dcol),
+                    codes_p.range(rs * dcol..re * dcol),
+                    wq_p.range(rs * dcol..re * dcol),
+                    sc_p.range(rs * ngroups..re * ngroups),
+                    zr_p.range(rs * ngroups..re * ngroups),
+                )
+            };
+            gptq_rows(&u, wfs, cds, wqs, scs, zrs, re - rs, dcol, g, ngroups, bs, cfg.bits, grouped);
+        });
+    } else {
+        gptq_rows(
+            &u,
+            &mut wf,
+            &mut codes,
+            &mut wq64,
+            &mut scales,
+            &mut zeros,
+            drow,
+            dcol,
+            g,
+            ngroups,
+            bs,
+            cfg.bits,
+            grouped,
+        );
+    }
+
+    Ok(QuantResult {
+        codes,
+        scales,
+        zeros,
+        wq: wq64.iter().map(|&v| v as f32).collect(),
+        drow,
+        dcol,
+        ngroups,
+        bits: cfg.bits,
+    })
+}
+
+/// The natural-order column loop over a contiguous slice of rows — the
+/// serial core of [`gptq_quantize`]. All buffers are row-sliced
+/// (`nrows × dcol` / `nrows × ngroups`); `u` is the shared Cholesky
+/// factor. Per-row arithmetic (grids included: [`quant_params`] is
+/// per-row min-max) never reads another row, so any row partition
+/// produces bit-identical output.
+#[allow(clippy::too_many_arguments)]
+fn gptq_rows(
+    u: &[f64],
+    wf: &mut [f64],
+    codes: &mut [u8],
+    wq64: &mut [f64],
+    scales: &mut [f32],
+    zeros: &mut [f32],
+    nrows: usize,
+    dcol: usize,
+    g: usize,
+    ngroups: usize,
+    bs: usize,
+    bits: u32,
+    grouped: bool,
+) {
+    let maxq = ((1u32 << bits) - 1) as f64;
 
     // per-row grid from the ORIGINAL weights when ungrouped (paper default)
-    if cfg.groupsize == 0 {
+    if !grouped {
         let wf32: Vec<f32> = wf.iter().map(|&v| v as f32).collect();
-        let grid = quant_params(&wf32, drow, dcol, cfg.bits);
-        for r in 0..drow {
+        let grid = quant_params(&wf32, nrows, dcol, bits);
+        for r in 0..nrows {
             scales[r * ngroups] = grid.scale[r];
             zeros[r * ngroups] = grid.zero[r];
         }
     }
 
-    let mut err = vec![0.0f64; drow * bs];
-    let mut group_buf = vec![0.0f32; drow * g];
+    let mut err = vec![0.0f64; nrows * bs];
+    let mut group_buf = vec![0.0f32; nrows * g];
     let mut i1 = 0;
     while i1 < dcol {
         let i2 = (i1 + bs).min(dcol);
@@ -156,15 +249,15 @@ pub fn gptq_quantize(
         for j in i1..i2 {
             // group boundary: refresh grid from the CURRENT compensated
             // weights ("always the most current updated weights")
-            if cfg.groupsize != 0 && j % g == 0 {
-                for r in 0..drow {
+            if grouped && j % g == 0 {
+                for r in 0..nrows {
                     for c in 0..g {
                         group_buf[r * g + c] = wf[r * dcol + j + c] as f32;
                     }
                 }
-                let grid = quant_params(&group_buf, drow, g, cfg.bits);
+                let grid = quant_params(&group_buf, nrows, g, bits);
                 let gi = j / g;
-                for r in 0..drow {
+                for r in 0..nrows {
                     scales[r * ngroups + gi] = grid.scale[r];
                     zeros[r * ngroups + gi] = grid.zero[r];
                 }
@@ -172,7 +265,7 @@ pub fn gptq_quantize(
             let gi = j / g;
             let d = u[j * dcol + j];
             let urow = &u[j * dcol..(j + 1) * dcol];
-            for r in 0..drow {
+            for r in 0..nrows {
                 let s = scales[r * ngroups + gi] as f64;
                 let z = zeros[r * ngroups + gi] as f64;
                 let wv = wf[r * dcol + j];
@@ -198,7 +291,7 @@ pub fn gptq_quantize(
                     .copy_from_slice(&u[(i1 + bj) * dcol + i2..(i1 + bj + 1) * dcol]);
             }
             // stride-aware accumulate into wf[:, i2..]
-            for r in 0..drow {
+            for r in 0..nrows {
                 let erow = &err[r * bs..r * bs + bw];
                 let wrow = &mut wf[r * dcol + i2..(r + 1) * dcol];
                 for (bj, &e) in erow.iter().enumerate() {
@@ -214,17 +307,6 @@ pub fn gptq_quantize(
         }
         i1 = i2;
     }
-
-    Ok(QuantResult {
-        codes,
-        scales,
-        zeros,
-        wq: wq64.iter().map(|&v| v as f32).collect(),
-        drow,
-        dcol,
-        ngroups,
-        bits: cfg.bits,
-    })
 }
 
 /// Act-order variant: quantize columns by decreasing Hessian diagonal.

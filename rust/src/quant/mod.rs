@@ -14,7 +14,7 @@
 //! * [`gptq`] — the paper's contribution (§3.3): fixed column order,
 //!   blocked compensation, Cholesky-factored inverse Hessian, with
 //!   ablation switches (greedy order, naive inverse, no damping).
-//! * [`pack`] — 2/3/4-bit code packing into `u32` words (the storage
+//! * [`pack`] — 2/3/4/8-bit code packing into `u32` words (the storage
 //!   format of the inference kernel).
 
 pub mod gptq;
@@ -30,23 +30,55 @@ pub use obq::obq_quantize;
 pub use pack::PackedMatrix;
 pub use rtn::rtn_quantize;
 
+/// Below this many input elements (`n · dcol`) Hessian accumulation
+/// stays serial (DESIGN.md §Parallelism, threshold rationale).
+pub const HESSIAN_PAR_MIN_ELEMS: usize = 1 << 12;
+
 /// Hessian accumulation: `H += 2 XᵀX` for a batch of rows `x` (n × dcol),
 /// row-major, into the f64 accumulator `h` (dcol × dcol).
 ///
 /// The f64 accumulator mirrors the paper's numerical-stability care; the
 /// XLA-side twin is the L1 Pallas kernel `kernels/hessian.py`.
+///
+/// Parallelism partitions the OUTPUT rows of H (disjoint writes), not the
+/// samples: every H entry is a left fold over samples 0..n in both the
+/// sample-major serial loop and the row-range parallel loop, so results
+/// are bit-identical at every thread count. (Per-worker partial-H
+/// reduction was rejected: summing partials reorders the f64 fold.)
 pub fn accumulate_hessian(h: &mut [f64], x: &[f32], n: usize, dcol: usize) {
     assert_eq!(h.len(), dcol * dcol);
     assert_eq!(x.len(), n * dcol);
-    for row in x.chunks_exact(dcol) {
-        for i in 0..dcol {
-            let xi = 2.0 * row[i] as f64;
-            let hrow = &mut h[i * dcol..(i + 1) * dcol];
-            for (hj, &xj) in hrow.iter_mut().zip(row) {
-                *hj += xi * xj as f64;
+    let pool = if n * dcol >= HESSIAN_PAR_MIN_ELEMS && dcol > 1 {
+        crate::util::par::Pool::global()
+    } else {
+        crate::util::par::Pool::serial()
+    };
+    if pool.nthreads() <= 1 {
+        // sample-major: one streaming pass over x (cache-friendly)
+        for row in x.chunks_exact(dcol) {
+            for i in 0..dcol {
+                let xi = 2.0 * row[i] as f64;
+                let hrow = &mut h[i * dcol..(i + 1) * dcol];
+                for (hj, &xj) in hrow.iter_mut().zip(row) {
+                    *hj += xi * xj as f64;
+                }
             }
         }
+        return;
     }
+    // H-row-major: each worker re-streams x but owns a disjoint row range;
+    // per-entry fold order over samples is identical to the serial loop
+    crate::util::par::for_rows_mut(&pool, h, dcol, dcol, |rows, hrows| {
+        for row in x.chunks_exact(dcol) {
+            for (oi, i) in rows.clone().enumerate() {
+                let xi = 2.0 * row[i] as f64;
+                let hrow = &mut hrows[oi * dcol..(oi + 1) * dcol];
+                for (hj, &xj) in hrow.iter_mut().zip(row) {
+                    *hj += xi * xj as f64;
+                }
+            }
+        }
+    });
 }
 
 /// Layer-wise objective of paper Eq. (1): `||WX − ŴX||² / n` with X given

@@ -20,8 +20,9 @@
 //! | `packmatvec_<o>x<i>_b<bits>` | words u32; scales; zeros; x          | y (o)                      |
 
 use crate::model::forward::{gelu, layer_norm};
-use crate::model::matvec::{matvec_f32_bias, matvec_packed};
+use crate::model::matvec::{matvec_f32_bias_serial, matvec_packed};
 use crate::model::ModelConfig;
+use crate::util::par::{self, Pool};
 use crate::quant::pack::{words_per_row, PackedMatrix};
 use crate::quant::{accumulate_hessian, gptq_quantize, GptqConfig};
 use crate::runtime::backend::{ExecBackend, Value, BLOCK_TENSORS};
@@ -195,8 +196,18 @@ impl<'a> BlockIn<'a> {
     }
 }
 
+/// Below this much per-stage work (≈ inner-product MACs) the batched
+/// block forward stays serial (DESIGN.md §Parallelism).
+const REF_PAR_MIN_WORK: usize = 1 << 16;
+
 /// Batched teacher-forced block forward — the reference twin of the L2
 /// `block_capture` graph. Returns (y, [inputs of wqkv, wo, wup, wdn]).
+///
+/// The per-sample loops (projections, residuals, MLP) and the per-batch
+/// attention loop are row-range parallel with disjoint writes; each
+/// row's arithmetic is unchanged from the serial loop, so results are
+/// bit-identical at every thread count. Inner matvecs use the serial
+/// kernels to avoid nested thread scopes.
 fn block_forward_batched(
     cfg: &ModelConfig,
     x: &[f32],
@@ -210,6 +221,11 @@ fn block_forward_batched(
     let hd = cfg.head_dim();
     let n = batch * seq;
     assert_eq!(x.len(), n * d);
+    let pool = if n * d * d >= REF_PAR_MIN_WORK {
+        Pool::global()
+    } else {
+        Pool::serial()
+    };
 
     // LN1 → capture for wqkv
     let mut x1 = vec![0.0f32; n * d];
@@ -218,63 +234,66 @@ fn block_forward_batched(
     }
     // fused qkv projection
     let mut qkv = vec![0.0f32; n * 3 * d];
-    for row in 0..n {
-        matvec_f32_bias(
-            w.wqkv,
-            &x1[row * d..(row + 1) * d],
-            w.wqkv_b,
-            3 * d,
-            d,
-            &mut qkv[row * 3 * d..(row + 1) * 3 * d],
-        );
-    }
-    // causal multi-head attention → capture for wo
+    par::for_rows_mut(&pool, &mut qkv, n, 3 * d, |rows, out| {
+        for (i, orow) in out.chunks_exact_mut(3 * d).enumerate() {
+            let row = rows.start + i;
+            matvec_f32_bias_serial(w.wqkv, &x1[row * d..(row + 1) * d], w.wqkv_b, 3 * d, d, orow);
+        }
+    });
+    // causal multi-head attention → capture for wo (parallel over batch:
+    // each sequence's attention rows are disjoint in `attn`)
     let mut attn = vec![0.0f32; n * d];
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; seq];
-    for bi in 0..batch {
-        for head in 0..heads {
-            let hoff = head * hd;
-            for qs in 0..seq {
-                let qrow = (bi * seq + qs) * 3 * d;
-                let q = &qkv[qrow + hoff..qrow + hoff + hd];
-                let mut maxv = f32::NEG_INFINITY;
-                for ks in 0..=qs {
-                    let krow = (bi * seq + ks) * 3 * d + d;
-                    let k = &qkv[krow + hoff..krow + hoff + hd];
-                    let mut dot = 0.0f32;
-                    for i in 0..hd {
-                        dot += q[i] * k[i];
+    par::for_rows_mut(&pool, &mut attn, batch, seq * d, |brange, aout| {
+        let mut scores = vec![0.0f32; seq];
+        for (ob, bi) in brange.clone().enumerate() {
+            for head in 0..heads {
+                let hoff = head * hd;
+                for qs in 0..seq {
+                    let qrow = (bi * seq + qs) * 3 * d;
+                    let q = &qkv[qrow + hoff..qrow + hoff + hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for ks in 0..=qs {
+                        let krow = (bi * seq + ks) * 3 * d + d;
+                        let k = &qkv[krow + hoff..krow + hoff + hd];
+                        let mut dot = 0.0f32;
+                        for i in 0..hd {
+                            dot += q[i] * k[i];
+                        }
+                        scores[ks] = dot * scale;
+                        maxv = maxv.max(scores[ks]);
                     }
-                    scores[ks] = dot * scale;
-                    maxv = maxv.max(scores[ks]);
-                }
-                let mut denom = 0.0f32;
-                for s in scores[..=qs].iter_mut() {
-                    *s = (*s - maxv).exp();
-                    denom += *s;
-                }
-                let out = &mut attn[(bi * seq + qs) * d + hoff..(bi * seq + qs) * d + hoff + hd];
-                for ks in 0..=qs {
-                    let vrow = (bi * seq + ks) * 3 * d + 2 * d;
-                    let v = &qkv[vrow + hoff..vrow + hoff + hd];
-                    let wgt = scores[ks] / denom;
-                    for i in 0..hd {
-                        out[i] += wgt * v[i];
+                    let mut denom = 0.0f32;
+                    for s in scores[..=qs].iter_mut() {
+                        *s = (*s - maxv).exp();
+                        denom += *s;
+                    }
+                    let out =
+                        &mut aout[(ob * seq + qs) * d + hoff..(ob * seq + qs) * d + hoff + hd];
+                    for ks in 0..=qs {
+                        let vrow = (bi * seq + ks) * 3 * d + 2 * d;
+                        let v = &qkv[vrow + hoff..vrow + hoff + hd];
+                        let wgt = scores[ks] / denom;
+                        for i in 0..hd {
+                            out[i] += wgt * v[i];
+                        }
                     }
                 }
             }
         }
-    }
+    });
     // attention residual
     let mut xr = x.to_vec();
-    let mut proj = vec![0.0f32; d.max(ff)];
-    for row in 0..n {
-        matvec_f32_bias(w.wo, &attn[row * d..(row + 1) * d], w.wo_b, d, d, &mut proj[..d]);
-        for i in 0..d {
-            xr[row * d + i] += proj[i];
+    par::for_rows_mut(&pool, &mut xr, n, d, |rows, out| {
+        let mut proj = vec![0.0f32; d];
+        for (i, xrow) in out.chunks_exact_mut(d).enumerate() {
+            let row = rows.start + i;
+            matvec_f32_bias_serial(w.wo, &attn[row * d..(row + 1) * d], w.wo_b, d, d, &mut proj);
+            for k in 0..d {
+                xrow[k] += proj[k];
+            }
         }
-    }
+    });
     // LN2 → capture for wup
     let mut x2 = vec![0.0f32; n * d];
     for row in 0..n {
@@ -282,21 +301,34 @@ fn block_forward_batched(
     }
     // GELU MLP hidden → capture for wdn
     let mut hidden = vec![0.0f32; n * ff];
-    for row in 0..n {
-        let h = &mut hidden[row * ff..(row + 1) * ff];
-        matvec_f32_bias(w.wup, &x2[row * d..(row + 1) * d], w.wup_b, ff, d, h);
-        for v in h.iter_mut() {
-            *v = gelu(*v);
+    par::for_rows_mut(&pool, &mut hidden, n, ff, |rows, out| {
+        for (i, h) in out.chunks_exact_mut(ff).enumerate() {
+            let row = rows.start + i;
+            matvec_f32_bias_serial(w.wup, &x2[row * d..(row + 1) * d], w.wup_b, ff, d, h);
+            for v in h.iter_mut() {
+                *v = gelu(*v);
+            }
         }
-    }
+    });
     // MLP residual
     let mut y = xr;
-    for row in 0..n {
-        matvec_f32_bias(w.wdn, &hidden[row * ff..(row + 1) * ff], w.wdn_b, d, ff, &mut proj[..d]);
-        for i in 0..d {
-            y[row * d + i] += proj[i];
+    par::for_rows_mut(&pool, &mut y, n, d, |rows, out| {
+        let mut proj = vec![0.0f32; d];
+        for (i, yrow) in out.chunks_exact_mut(d).enumerate() {
+            let row = rows.start + i;
+            matvec_f32_bias_serial(
+                w.wdn,
+                &hidden[row * ff..(row + 1) * ff],
+                w.wdn_b,
+                d,
+                ff,
+                &mut proj,
+            );
+            for k in 0..d {
+                yrow[k] += proj[k];
+            }
         }
-    }
+    });
     (y, [x1, attn, x2, hidden])
 }
 
@@ -323,20 +355,29 @@ fn exec_block_capture(cfg: &ModelConfig, inputs: &[Value]) -> Result<Vec<Value>>
 
 fn head_logits(x: &[f32], n: usize, d: usize, lnf_g: &[f32], lnf_b: &[f32], unembed: &[f32]) -> Vec<f32> {
     let vocab = unembed.len() / d;
-    let mut x1 = vec![0.0f32; d];
     let mut logits = vec![0.0f32; n * vocab];
-    for row in 0..n {
-        layer_norm(&x[row * d..(row + 1) * d], lnf_g, lnf_b, &mut x1);
-        let lrow = &mut logits[row * vocab..(row + 1) * vocab];
-        for (v, lv) in lrow.iter_mut().enumerate() {
-            let urow = &unembed[v * d..(v + 1) * d];
-            let mut acc = 0.0f32;
-            for i in 0..d {
-                acc += urow[i] * x1[i];
+    let pool = if n * vocab * d >= REF_PAR_MIN_WORK {
+        Pool::global()
+    } else {
+        Pool::serial()
+    };
+    // row-range parallel over positions: the unembed matmul dominates the
+    // eval path; per-row arithmetic is unchanged (bit-identical)
+    par::for_rows_mut(&pool, &mut logits, n, vocab, |rows, out| {
+        let mut x1 = vec![0.0f32; d];
+        for (i, lrow) in out.chunks_exact_mut(vocab).enumerate() {
+            let row = rows.start + i;
+            layer_norm(&x[row * d..(row + 1) * d], lnf_g, lnf_b, &mut x1);
+            for (v, lv) in lrow.iter_mut().enumerate() {
+                let urow = &unembed[v * d..(v + 1) * d];
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += urow[i] * x1[i];
+                }
+                *lv = acc;
             }
-            *lv = acc;
         }
-    }
+    });
     logits
 }
 

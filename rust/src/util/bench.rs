@@ -1,7 +1,9 @@
 //! Micro-benchmark harness (the criterion stand-in): warmup, repeated
-//! timed runs, mean / stddev / min, and aligned table printing for the
-//! paper-table benches.
+//! timed runs, mean / stddev / min, aligned table printing for the
+//! paper-table benches, and JSON recording (`BENCH_*.json`,
+//! EXPERIMENTS.md §Benches) so the perf trajectory is tracked in-repo.
 
+use crate::util::json::Json;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -20,6 +22,34 @@ impl BenchResult {
             self.name, self.mean_ms, self.std_ms, self.min_ms, self.iters
         )
     }
+
+    /// JSON form for the `BENCH_*.json` perf-trajectory records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("std_ms", Json::Num(self.std_ms)),
+            ("min_ms", Json::Num(self.min_ms)),
+            ("iters", Json::Num(self.iters as f64)),
+        ])
+    }
+}
+
+/// Write a bench record (`{bench, results: […], summary: {…}}`) to
+/// `path`. The `make bench` targets use this to produce
+/// `BENCH_decode.json` / `BENCH_quantize.json` (EXPERIMENTS.md §Benches).
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    results: Vec<Json>,
+    summary: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("bench", Json::Str(bench.to_string())),
+        ("results", Json::Arr(results)),
+        ("summary", Json::obj(summary)),
+    ]);
+    std::fs::write(path, doc.to_string())
 }
 
 /// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
@@ -89,5 +119,31 @@ mod tests {
             black_box(1 + 1);
         });
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let r = bench("probe", 0, 2, || {
+            black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join("gptq_bench_json_test.json");
+        let path_s = path.to_string_lossy().into_owned();
+        write_bench_json(
+            &path_s,
+            "decode",
+            vec![r.to_json()],
+            vec![("speedup", Json::Num(2.0))],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("decode"));
+        assert_eq!(doc.get("results").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        let summary = doc.get("summary").unwrap();
+        assert_eq!(summary.get("speedup").and_then(Json::as_f64), Some(2.0));
+        let first = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("probe"));
+        assert_eq!(first.get("iters").and_then(Json::as_usize), Some(2));
     }
 }

@@ -1,9 +1,11 @@
 //! Self-contained substrate the offline environment forces us to carry:
 //! a JSON parser/writer ([`json`]), a small CLI argument parser ([`cli`]),
-//! and a criterion-style micro-benchmark harness ([`bench`]).
+//! a criterion-style micro-benchmark harness ([`bench`]), and a scoped
+//! thread pool ([`par`], the rayon stand-in).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 
 pub use json::Json;

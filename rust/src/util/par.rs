@@ -1,0 +1,323 @@
+//! Vendored scoped thread pool — the rayon stand-in for the offline
+//! environment (std-only: `std::thread::scope` workers pulling chunk
+//! indices off a shared atomic counter).
+//!
+//! §Determinism contract (DESIGN.md §Parallelism): every parallel hot
+//! path in this crate partitions work so that each output element is
+//! produced by exactly one job with arithmetic that does not depend on
+//! the partition — per-row matvecs, per-H-row Hessian folds, per-row
+//! GPTQ solves, per-segment NLL subtotals. The thread count therefore
+//! only changes *which worker* owns a range, never the numbers:
+//! `threads=N` is bit-identical to `threads=1`
+//! (`tests/parallel_determinism.rs` enforces this).
+//!
+//! The global thread count comes from, in priority order: the last
+//! [`set_threads`] call (the `--threads` CLI flag), the `GPTQ_THREADS`
+//! env var, else 1 (serial — exactly the pre-parallel code). A value of
+//! 0 means "all cores" ([`auto_threads`]).
+
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of hardware threads (the `--threads 0` / `GPTQ_THREADS=0` value).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+const UNSET: usize = usize::MAX;
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(UNSET);
+
+fn env_threads() -> usize {
+    match std::env::var("GPTQ_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(0) => auto_threads(),
+        Some(n) => n,
+        None => 1,
+    }
+}
+
+/// The process-wide thread count (lazily initialised from `GPTQ_THREADS`).
+pub fn threads() -> usize {
+    let t = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if t != UNSET {
+        return t;
+    }
+    let t = env_threads();
+    GLOBAL_THREADS.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Override the process-wide thread count (0 = all cores).
+pub fn set_threads(n: usize) {
+    let t = if n == 0 { auto_threads() } else { n };
+    GLOBAL_THREADS.store(t, Ordering::Relaxed);
+}
+
+/// Reset the process-wide thread count to the `GPTQ_THREADS` default
+/// (used by tests that temporarily pin the count).
+pub fn set_threads_env() {
+    GLOBAL_THREADS.store(env_threads(), Ordering::Relaxed);
+}
+
+/// A scoped "pool": carries only a worker count — threads are spawned per
+/// parallel region via `std::thread::scope`, so there is no persistent
+/// state and nothing to shut down. Spawn cost is tens of µs per region;
+/// callers gate on a work threshold and fall back to [`Pool::serial`].
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    nthreads: usize,
+}
+
+impl Pool {
+    /// A pool with `nthreads` workers (0 = all cores).
+    pub fn new(nthreads: usize) -> Self {
+        Pool { nthreads: if nthreads == 0 { auto_threads() } else { nthreads } }
+    }
+
+    /// The pool at the process-wide thread count.
+    pub fn global() -> Self {
+        Self::new(threads())
+    }
+
+    /// The single-worker pool: runs every job inline on the caller, in
+    /// order — exactly the serial code.
+    pub fn serial() -> Self {
+        Pool { nthreads: 1 }
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Execute `f(0), …, f(njobs-1)`, work-stealing job indices off a
+    /// shared counter. With one worker (or one job) everything runs
+    /// inline in index order.
+    pub fn run<F>(&self, njobs: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run_with(njobs, || (), |_, j| f(j));
+    }
+
+    /// [`Pool::run`] with per-worker state: each worker calls `init()`
+    /// once and threads the value through its jobs (e.g. a cloned model,
+    /// a scratch buffer). Job→worker assignment is work-stealing, so
+    /// `init` must produce interchangeable states.
+    pub fn run_with<S, I, F>(&self, njobs: usize, init: I, f: F)
+    where
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) + Sync,
+    {
+        if njobs == 0 {
+            return;
+        }
+        let workers = self.nthreads.min(njobs);
+        if workers <= 1 {
+            let mut state = init();
+            for j in 0..njobs {
+                f(&mut state, j);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers - 1 {
+                scope.spawn(|| {
+                    let mut state = init();
+                    loop {
+                        let j = next.fetch_add(1, Ordering::Relaxed);
+                        if j >= njobs {
+                            break;
+                        }
+                        f(&mut state, j);
+                    }
+                });
+            }
+            // the caller participates as the last worker
+            let mut state = init();
+            loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= njobs {
+                    break;
+                }
+                f(&mut state, j);
+            }
+        });
+    }
+
+    /// Execute `f` over `0..n` split into `chunk`-sized index ranges
+    /// (last range ragged). Chunk geometry depends only on `(n, chunk)`,
+    /// never on the worker count.
+    pub fn run_chunks<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let chunk = chunk.max(1);
+        let njobs = n.div_ceil(chunk);
+        self.run(njobs, |j| {
+            let start = j * chunk;
+            f(start..(start + chunk).min(n));
+        });
+    }
+}
+
+/// Split `0..n` into `parts` contiguous balanced ranges (first `n % parts`
+/// ranges one longer). `parts` is clamped to `1..=max(n,1)`.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// A raw, shareable view of a mutable slice for disjoint-range parallel
+/// writes (the sound core under every parallel output in this crate).
+pub struct SliceParts<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<'a, T: Send> Send for SliceParts<'a, T> {}
+unsafe impl<'a, T: Send> Sync for SliceParts<'a, T> {}
+
+impl<'a, T> SliceParts<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// Reborrow `range` of the underlying slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges; the range
+    /// must lie within the original slice (debug-asserted).
+    pub unsafe fn range(&self, r: Range<usize>) -> &mut [T] {
+        debug_assert!(r.start <= r.end && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+}
+
+/// Run `f(row_range, rows_chunk)` over `out` viewed as `rows` rows of
+/// `stride` elements, one contiguous chunk per worker. The serial pool
+/// calls `f(0..rows, out)` once — callers keep per-row arithmetic
+/// independent of the chunking, which makes every thread count
+/// bit-identical (the determinism contract).
+pub fn for_rows_mut<T, F>(pool: &Pool, out: &mut [T], rows: usize, stride: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    assert_eq!(out.len(), rows * stride, "for_rows_mut: len != rows*stride");
+    let workers = pool.nthreads.min(rows.max(1));
+    if workers <= 1 {
+        f(0..rows, out);
+        return;
+    }
+    let chunk = rows.div_ceil(workers);
+    let parts = SliceParts::new(out);
+    pool.run_chunks(rows, chunk, |r| {
+        let s = unsafe { parts.range(r.start * stride..r.end * stride) };
+        f(r, s);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_job_exactly_once() {
+        for nthreads in [1usize, 4] {
+            let pool = Pool::new(nthreads);
+            let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+            pool.run(37, |j| {
+                hits[j].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "nthreads={nthreads}");
+        }
+    }
+
+    #[test]
+    fn run_chunks_tiles_the_range() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicU64> = (0..25).map(|_| AtomicU64::new(0)).collect();
+        pool.run_chunks(25, 4, |r| {
+            assert!(r.len() <= 4 && !r.is_empty());
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn split_ranges_balanced_and_contiguous() {
+        for (n, parts) in [(10usize, 3usize), (3, 8), (0, 4), (16, 4), (7, 7)] {
+            let rs = split_ranges(n, parts);
+            let mut next = 0usize;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}");
+            if n > 0 {
+                let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1, "unbalanced {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_rows_mut_writes_disjoint_rows() {
+        for nthreads in [1usize, 4] {
+            let pool = Pool::new(nthreads);
+            let (rows, stride) = (13usize, 5usize);
+            let mut out = vec![0u32; rows * stride];
+            for_rows_mut(&pool, &mut out, rows, stride, |rr, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    let row = rr.start + i / stride;
+                    *v = (row * stride + i % stride) as u32 + 1;
+                }
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "nthreads={nthreads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_with_builds_state_per_worker() {
+        let pool = Pool::new(4);
+        let total = AtomicU64::new(0);
+        pool.run_with(
+            64,
+            || 0u64,
+            |acc, j| {
+                *acc += j as u64;
+                // fold local state in at the last moment (order-free sum)
+                total.fetch_add(j as u64, Ordering::Relaxed);
+                let _ = acc;
+            },
+        );
+        assert_eq!(total.load(Ordering::Relaxed), (0..64u64).sum());
+    }
+
+    #[test]
+    fn thread_count_knobs() {
+        // set_threads(0) resolves to all cores; explicit values stick
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert_eq!(threads(), auto_threads());
+        set_threads_env(); // restore the env default for other tests
+    }
+}

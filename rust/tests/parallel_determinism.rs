@@ -1,0 +1,187 @@
+//! Parallel determinism suite: every parallelized hot path must be
+//! byte/bit-identical under `threads=4` and `threads=1` — the contract
+//! that lets `--threads N` be a pure scheduling knob (DESIGN.md
+//! §Parallelism). Shapes deliberately include odd cases: dcol not
+//! divisible by the chunk/word size, drow < nthreads, ragged tails.
+//!
+//! `make -C rust check` additionally runs this suite with
+//! `GPTQ_THREADS=1` and `GPTQ_THREADS=4` so the default-pool paths of
+//! the other suites get exercised threaded too.
+
+use gptq_rs::coordinator::{PipelineConfig, QuantEngine, QuantPipeline};
+use gptq_rs::eval::perplexity;
+use gptq_rs::model::matvec::{matvec_f32, matvec_packed};
+use gptq_rs::model::testkit::{tiny_checkpoint, tiny_corpus, tiny_manifest, TINY_SIZE};
+use gptq_rs::model::CpuModel;
+use gptq_rs::quant::{accumulate_hessian, gptq_quantize, rtn_quantize, GptqConfig, PackedMatrix};
+use gptq_rs::runtime::Runtime;
+use gptq_rs::util::par;
+use std::sync::Mutex;
+
+/// The global thread count is process state; tests that flip it
+/// serialize through this lock (ignoring poisoning — an assert in one
+/// test must not cascade).
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Evaluate `f` under a 1-thread pool and a 4-thread pool.
+fn serial_vs_parallel<T>(f: impl Fn() -> T) -> (T, T) {
+    let guard = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    par::set_threads(1);
+    let a = f();
+    par::set_threads(4);
+    let b = f();
+    par::set_threads_env();
+    drop(guard);
+    (a, b)
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
+        })
+        .collect()
+}
+
+fn bits_f32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits_f64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn matvec_f32_bit_identical() {
+    // (127, 600): odd row count; (2, 40000): drow < nthreads;
+    // (64, 1025): dcol not divisible by the 4-wide unroll or any chunk
+    for (drow, dcol) in [(127usize, 600usize), (2, 40000), (64, 1025)] {
+        let w = rand_vec(drow * dcol, 7 + drow as u64);
+        let x = rand_vec(dcol, 11 + dcol as u64);
+        let (a, b) = serial_vs_parallel(|| {
+            let mut y = vec![0.0f32; drow];
+            matvec_f32(&w, &x, drow, dcol, &mut y);
+            bits_f32(&y)
+        });
+        assert_eq!(a, b, "matvec_f32 {drow}x{dcol}");
+    }
+}
+
+#[test]
+fn matvec_packed_bit_identical_all_bit_widths() {
+    // word-aligned, ragged (997 is not a multiple of any codes-per-word),
+    // and grouped layouts, at every supported width
+    for bits in [2u32, 3, 4, 8] {
+        for (drow, dcol, g) in [(96usize, 1024usize, 0usize), (96, 997, 0), (64, 1024, 64)] {
+            let w = rand_vec(drow * dcol, bits as u64 * 131 + g as u64);
+            let q = rtn_quantize(&w, drow, dcol, bits, g);
+            let p = PackedMatrix::from_result(&q);
+            let x = rand_vec(dcol, 5 + bits as u64);
+            let (a, b) = serial_vs_parallel(|| {
+                let mut y = vec![0.0f32; drow];
+                matvec_packed(&p, &x, &mut y);
+                bits_f32(&y)
+            });
+            assert_eq!(a, b, "matvec_packed {drow}x{dcol} b{bits} g{g}");
+        }
+    }
+}
+
+#[test]
+fn hessian_accumulation_bit_identical() {
+    // (65, 67): barely past the parallel threshold, odd everything;
+    // (96, 301): several H-row chunks per worker
+    for (dcol, n) in [(65usize, 67usize), (96, 301)] {
+        let x = rand_vec(n * dcol, 3 * dcol as u64);
+        let (a, b) = serial_vs_parallel(|| {
+            let mut h = vec![0.0f64; dcol * dcol];
+            accumulate_hessian(&mut h, &x, n, dcol);
+            bits_f64(&h)
+        });
+        assert_eq!(a, b, "hessian d={dcol} n={n}");
+    }
+}
+
+#[test]
+fn gptq_solver_bit_identical() {
+    // (drow, dcol, groupsize): includes drow < nthreads (3 and 5 rows on
+    // a 4-thread pool) and grouped grids
+    for (drow, dcol, g) in
+        [(16usize, 64usize, 0usize), (5, 128, 16), (48, 96, 0), (3, 192, 8)]
+    {
+        let w = rand_vec(drow * dcol, drow as u64 * 31 + g as u64);
+        // correlated calibration inputs -> a realistic Hessian
+        let n = 4 * dcol;
+        let mut x = rand_vec(n * dcol, dcol as u64);
+        for r in 0..n {
+            for c in 1..dcol {
+                x[r * dcol + c] = 0.5 * x[r * dcol + c - 1] + 0.5 * x[r * dcol + c];
+            }
+        }
+        let mut h = vec![0.0f64; dcol * dcol];
+        accumulate_hessian(&mut h, &x, n, dcol);
+        for bits in [2u32, 3, 4] {
+            let cfg = GptqConfig { groupsize: g, ..GptqConfig::new(bits) };
+            let (a, b) = serial_vs_parallel(|| {
+                let r = gptq_quantize(&w, drow, dcol, &h, &cfg).unwrap();
+                (r.codes, bits_f32(&r.wq), bits_f32(&r.scales), bits_f32(&r.zeros))
+            });
+            assert_eq!(a, b, "gptq {drow}x{dcol} b{bits} g{g}");
+        }
+    }
+}
+
+#[test]
+fn perplexity_bit_identical() {
+    let ckpt = tiny_checkpoint(17);
+    let corpus = tiny_corpus(4096, 23);
+    let (a, b) = serial_vs_parallel(|| {
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        perplexity(&mut m, &corpus, 15, 12).to_bits()
+    });
+    assert_eq!(a, b, "perplexity");
+}
+
+/// Canonical byte view of a full pipeline run on the tiny testkit model:
+/// packed words + grid bits for every linear.
+fn pipeline_signature(groupsize: usize) -> Vec<(String, Vec<u32>, Vec<u32>, Vec<u32>)> {
+    let mut rt = Runtime::new(tiny_manifest(12, 2)).unwrap();
+    let mut cfg = PipelineConfig::new(3, QuantEngine::GptqRust).with_groupsize(groupsize);
+    cfg.n_calib_segments = 8;
+    let mut ckpt = tiny_checkpoint(29);
+    let calib = tiny_corpus(4096, 31);
+    let report = QuantPipeline::new(&mut rt, TINY_SIZE, cfg).run(&mut ckpt, &calib).unwrap();
+    report
+        .checkpoint
+        .packed
+        .iter()
+        .map(|(k, p)| (k.clone(), p.words.clone(), bits_f32(&p.scales), bits_f32(&p.zeros)))
+        .collect()
+}
+
+#[test]
+fn pipeline_end_to_end_bit_identical() {
+    // the whole flow: embed -> capture -> parallel Hessians -> parallel
+    // 4-linear GPTQ (row-parallel inside) -> pack, threads 4 vs 1
+    for groupsize in [0usize, 8] {
+        let (a, b) = serial_vs_parallel(|| pipeline_signature(groupsize));
+        assert_eq!(a, b, "pipeline g={groupsize}");
+    }
+}
+
+#[test]
+fn default_pool_matches_serial_pipeline() {
+    // meaningful when GPTQ_THREADS > 1 (make -C rust check runs this
+    // suite under GPTQ_THREADS=1 and =4): whatever the ambient default
+    // pool is, results must equal the serial run
+    let guard = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    par::set_threads_env();
+    let a = pipeline_signature(0);
+    par::set_threads(1);
+    let b = pipeline_signature(0);
+    par::set_threads_env();
+    drop(guard);
+    assert_eq!(a, b);
+}
