@@ -1,0 +1,179 @@
+//! Bench: continuous-batching serving throughput under offered load —
+//! the multi-user side of the paper's Table 5. Sweeps offered load ×
+//! {dense f32, packed 4-bit} × batch slots {1, 4, 16} through the
+//! generation server (one worker, paged KV pool) and reports wall-clock
+//! aggregate tokens/s, TTFT p50/p99, and queue wait. Batch 1 is the old
+//! drain-then-run regime; batch > 1 is where iteration-level batching
+//! amortizes each (packed) weight read over every in-flight sequence.
+//!
+//! Needs no artifacts: runs on a seeded synthetic checkpoint.
+//!
+//! ```bash
+//! cargo bench --bench serve_sweep                              # print only
+//! cargo bench --bench serve_sweep -- --record BENCH_serve.json
+//! ```
+
+use gptq_rs::coordinator::{GenRequest, SchedulerConfig, Server, ServerConfig};
+use gptq_rs::data::Rng;
+use gptq_rs::model::checkpoint::quantizable_keys;
+use gptq_rs::model::{Checkpoint, CpuModel, ModelConfig, QuantizedCheckpoint, Tensor};
+use gptq_rs::quant::{rtn_quantize, PackedMatrix};
+use gptq_rs::util::bench::write_bench_json;
+use gptq_rs::util::cli::Args;
+use gptq_rs::util::json::Json;
+use gptq_rs::util::par;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// The bench model: big enough that batched weight reads matter, small
+/// enough that a full sweep stays in seconds.
+fn bench_config() -> ModelConfig {
+    ModelConfig { d_model: 64, n_layers: 4, n_heads: 4, d_ff: 256, vocab: 64, max_seq: 128 }
+}
+
+/// Seeded random checkpoint matching `CpuModel::from_checkpoint`'s
+/// tensor naming (testkit's tiny fixture, parameterized up).
+fn synth_checkpoint(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let d = cfg.d_model;
+    let mut rand_t = |shape: Vec<usize>, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::new((0..n).map(|_| rng.unit() * 0.3).collect(), shape)
+    };
+    tensors.insert("embed".into(), rand_t(vec![cfg.vocab, d], &mut rng));
+    tensors.insert("pos".into(), rand_t(vec![cfg.max_seq, d], &mut rng));
+    tensors.insert("unembed".into(), rand_t(vec![cfg.vocab, d], &mut rng));
+    tensors.insert("lnf_g".into(), Tensor::new(vec![1.0; d], vec![d]));
+    tensors.insert("lnf_b".into(), Tensor::new(vec![0.0; d], vec![d]));
+    for l in 0..cfg.n_layers {
+        for nm in ["ln1_g", "ln2_g"] {
+            tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![1.0; d], vec![d]));
+        }
+        for nm in ["ln1_b", "ln2_b"] {
+            tensors.insert(format!("blocks.{l}.{nm}"), Tensor::new(vec![0.0; d], vec![d]));
+        }
+        for nm in ["wqkv", "wo", "wup", "wdn"] {
+            let (o, i) = cfg.linear_shape(nm);
+            tensors.insert(format!("blocks.{l}.{nm}"), rand_t(vec![o, i], &mut rng));
+            tensors.insert(format!("blocks.{l}.{nm}_b"), Tensor::new(vec![0.0; o], vec![o]));
+        }
+    }
+    Checkpoint { config: cfg.clone(), tensors }
+}
+
+fn packed_model(ckpt: &Checkpoint) -> CpuModel {
+    let mut packed = BTreeMap::new();
+    for key in quantizable_keys(&ckpt.config) {
+        let t = ckpt.get(&key);
+        let (o, i) = t.dims2();
+        packed.insert(key.clone(), PackedMatrix::from_result(&rtn_quantize(&t.data, o, i, 4, 0)));
+    }
+    let q = QuantizedCheckpoint::from_parts(ckpt.config.clone(), 4, 0, packed, ckpt, vec![]);
+    CpuModel::from_quantized(&q)
+}
+
+struct RunStats {
+    tokens_per_s: f64,
+    ttft_p50: f64,
+    ttft_p99: f64,
+    queue_p50: f64,
+    per_token_p50: f64,
+}
+
+/// One closed-loop run: `offered` requests submitted up front against a
+/// single worker with `batch` slots.
+fn run(model: &CpuModel, batch: usize, offered: usize, gen_tokens: usize) -> RunStats {
+    let cfg = ServerConfig {
+        n_workers: 1,
+        scheduler: SchedulerConfig {
+            max_batch: batch,
+            pool_pages: 128,
+            page_size: 16,
+            ..Default::default()
+        },
+    };
+    let m = model.clone();
+    let mut server = Server::start(cfg, move |_| m.clone());
+    let mut rng = Rng::new(offered as u64 * 31 + batch as u64);
+    let t0 = Instant::now();
+    for i in 0..offered {
+        let plen = 8 + rng.below(9); // ragged prompts, 8..=16
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(64) as u8).collect();
+        server.submit(GenRequest { id: i as u64, prompt, max_new_tokens: gen_tokens });
+    }
+    let responses = server.collect(offered);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let metrics = server.shutdown();
+    RunStats {
+        tokens_per_s: tokens as f64 / wall_s.max(1e-9),
+        ttft_p50: metrics.ttft.percentile(50.0),
+        ttft_p99: metrics.ttft.percentile(99.0),
+        queue_p50: metrics.queue_wait.percentile(50.0),
+        per_token_p50: metrics.per_token.percentile(50.0),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let record = args.get("record").map(String::from);
+    let gen_tokens = args.usize_or("gen-tokens", 48);
+    let cfg = bench_config();
+    let ckpt = synth_checkpoint(&cfg, 17);
+    let dense = CpuModel::from_checkpoint(&ckpt);
+    let packed = packed_model(&ckpt);
+
+    println!(
+        "== continuous-batching serve sweep — threads={} (GPTQ_THREADS) ==",
+        par::threads()
+    );
+    println!(
+        "{:<12} {:>6} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "weights", "batch", "offered", "tokens/s", "ttft p50", "ttft p99", "queue p50"
+    );
+    let mut results: Vec<Json> = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+    for (label, model) in [("f32", &dense), ("4bit", &packed)] {
+        let mut tps_b1_l32 = 0.0f64;
+        for &batch in &[1usize, 4, 16] {
+            for &offered in &[8usize, 32] {
+                let r = run(model, batch, offered, gen_tokens);
+                println!(
+                    "{:<12} {:>6} {:>8} {:>12.1} {:>10.2}ms {:>10.2}ms {:>10.2}ms",
+                    label, batch, offered, r.tokens_per_s, r.ttft_p50, r.ttft_p99, r.queue_p50
+                );
+                results.push(Json::obj(vec![
+                    ("weights", Json::Str(label.into())),
+                    ("batch", Json::Num(batch as f64)),
+                    ("offered", Json::Num(offered as f64)),
+                    ("tokens_per_s", Json::Num(r.tokens_per_s)),
+                    ("ttft_p50_ms", Json::Num(r.ttft_p50)),
+                    ("ttft_p99_ms", Json::Num(r.ttft_p99)),
+                    ("queue_wait_p50_ms", Json::Num(r.queue_p50)),
+                    ("per_token_p50_ms", Json::Num(r.per_token_p50)),
+                ]));
+                if offered == 32 {
+                    if batch == 1 {
+                        tps_b1_l32 = r.tokens_per_s;
+                    } else if batch == 16 && tps_b1_l32 > 0.0 {
+                        summary.push((
+                            format!("serve_speedup_{label}_b16_over_b1"),
+                            Json::Num(r.tokens_per_s / tps_b1_l32),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "\nshape to expect: batch>1 aggregate tokens/s beats batch=1 (shared weight\n\
+         reads); packed wins widen with batch in the bandwidth-bound regime."
+    );
+    if let Some(path) = record {
+        let summary_refs: Vec<(&str, Json)> =
+            summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        write_bench_json(&path, "serve", results, summary_refs).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

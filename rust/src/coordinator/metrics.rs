@@ -1,6 +1,8 @@
 //! Latency/throughput metrics for the serving harness — the measurement
 //! side of the Table 5 analog ("average per-token latency, batch size 1,
-//! generating sequences of length 128").
+//! generating sequences of length 128"), extended with the multi-user
+//! serving dimensions (queue wait, time-to-first-token) the
+//! continuous-batching scheduler reports per request.
 
 /// Online latency statistics over recorded samples (milliseconds).
 #[derive(Debug, Clone, Default)]
@@ -65,6 +67,51 @@ impl LatencyStats {
             self.percentile(50.0),
             self.percentile(95.0),
             self.max()
+        )
+    }
+}
+
+/// Per-worker serving metrics, one [`LatencyStats`] per dimension. The
+/// scheduler records each completed request's samples; workers' metrics
+/// merge at shutdown (`Server::shutdown`).
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// one sample per generated token: the batched decode step that
+    /// consumed it (the paper's per-token generation metric)
+    pub per_token: LatencyStats,
+    /// one sample per request: wall-clock spent consuming its prompt
+    pub prefill: LatencyStats,
+    /// one sample per request: submit → first generated token available
+    pub ttft: LatencyStats,
+    /// one sample per request: submit → admitted to a scheduler slot
+    pub queue_wait: LatencyStats,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Requests observed (every dimension but `per_token` is per-request).
+    pub fn requests(&self) -> usize {
+        self.queue_wait.count()
+    }
+
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.per_token.merge(&other.per_token);
+        self.prefill.merge(&other.prefill);
+        self.ttft.merge(&other.ttft);
+        self.queue_wait.merge(&other.queue_wait);
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "per-token {} | ttft p50={:.3}ms p99={:.3}ms | queue-wait p50={:.3}ms p99={:.3}ms",
+            self.per_token.summary(),
+            self.ttft.percentile(50.0),
+            self.ttft.percentile(99.0),
+            self.queue_wait.percentile(50.0),
+            self.queue_wait.percentile(99.0),
         )
     }
 }
@@ -141,5 +188,40 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_metrics_tracks_all_dimensions() {
+        let mut m = ServeMetrics::new();
+        m.per_token.record_ms(1.0);
+        m.per_token.record_ms(2.0);
+        m.prefill.record_ms(5.0);
+        m.ttft.record_ms(6.0);
+        m.queue_wait.record_ms(0.5);
+        assert_eq!(m.requests(), 1);
+        assert_eq!(m.per_token.count(), 2);
+        let s = m.summary();
+        assert!(s.contains("ttft"), "{s}");
+        assert!(s.contains("queue-wait"), "{s}");
+    }
+
+    #[test]
+    fn serve_metrics_merge_merges_every_dimension() {
+        let mut a = ServeMetrics::new();
+        a.per_token.record_ms(1.0);
+        a.ttft.record_ms(10.0);
+        a.queue_wait.record_ms(1.0);
+        a.prefill.record_ms(4.0);
+        let mut b = ServeMetrics::new();
+        b.per_token.record_ms(3.0);
+        b.ttft.record_ms(20.0);
+        b.queue_wait.record_ms(2.0);
+        b.prefill.record_ms(6.0);
+        a.merge(&b);
+        assert_eq!(a.per_token.count(), 2);
+        assert_eq!(a.requests(), 2);
+        assert!((a.ttft.mean() - 15.0).abs() < 1e-12);
+        assert!((a.prefill.mean() - 5.0).abs() < 1e-12);
+        assert!((a.queue_wait.mean() - 1.5).abs() < 1e-12);
     }
 }

@@ -7,17 +7,24 @@
 //!   graph), and propagate the **quantized** block's outputs to the next
 //!   block's calibration inputs — the paper's "actual layer inputs in the
 //!   already partially quantized" trick.
-//! * [`serve`] — token-by-token generation server: request router,
-//!   dynamic batcher, KV-cache pool, per-token latency metrics (the
-//!   Table 5 measurement harness), plus the [`serve::verify_parity`]
-//!   pre-flight check that compares the serving decode path against the
-//!   runtime's execution backend before workers start.
-//! * [`metrics`] — latency/throughput accounting.
+//! * [`serve`] — the generation server: request router over worker
+//!   replicas, per-request/per-token latency metrics (the Table 5
+//!   measurement harness), plus the [`serve::verify_parity`] pre-flight
+//!   check that compares the serving decode path against the runtime's
+//!   execution backend before workers start.
+//! * [`scheduler`] — the continuous-batching loop each worker runs:
+//!   iteration-level admission/eviction over a paged KV pool, one
+//!   batched decode step per iteration for all in-flight sequences,
+//!   preempt + FIFO re-queue backpressure when the pool is exhausted.
+//! * [`metrics`] — latency/throughput accounting (per-token, TTFT,
+//!   queue wait).
 
 pub mod metrics;
 pub mod pipeline;
+pub mod scheduler;
 pub mod serve;
 
-pub use metrics::LatencyStats;
+pub use metrics::{LatencyStats, ServeMetrics};
 pub use pipeline::{QuantEngine, QuantPipeline, PipelineConfig, PipelineReport};
+pub use scheduler::{Scheduler, SchedulerConfig};
 pub use serve::{verify_parity, GenRequest, GenResponse, Server, ServerConfig};

@@ -1,0 +1,510 @@
+//! Iteration-level (continuous-batching) scheduler — the multi-user
+//! serving loop that replaces drain-then-run batching.
+//!
+//! The old worker loop served requests to completion one at a time, so
+//! aggregate throughput under concurrent load was the single-stream
+//! number. This scheduler advances EVERY in-flight sequence one token per
+//! iteration through one batched [`CpuModel::decode_steps`] pass — N
+//! sequences share each read of the (packed) weights, which is where
+//! multi-user throughput comes from in the paper's bandwidth-bound
+//! regime — with KV state in pages from a bounded [`KvPool`].
+//!
+//! One `step()` (a *tick*):
+//! 1. **Admit** queued requests while slots (`max_batch`) and pool pages
+//!    allow: a request is admitted only when the pool can hold its
+//!    prompt + first token on top of what already-running sequences
+//!    still need through their own prompts, so admission bursts don't
+//!    overcommit the pool against prefill work (decode-phase growth is
+//!    not reserved — preemption handles it).
+//! 2. **Advance**: one batched decode sub-step over all running
+//!    sequences — each consumes its next prompt token (chunked prefill)
+//!    or its last generated token (decode) — then up to
+//!    `prefill_chunk − 1` extra sub-steps for sequences still in
+//!    prefill, so long prompts ramp quickly without stalling decoders
+//!    for more than one token.
+//! 3. **Reclaim**: finished sequences (max tokens, `max_seq`/pool length
+//!    cap, or the optional EOS byte) release their pages and emit a
+//!    [`GenResponse`] with queue-wait and TTFT.
+//!
+//! **Backpressure.** When [`KvPool::reserve`] fails, the youngest-admitted
+//! sequence is preempted: its pages are reclaimed and its request goes
+//! back to the FRONT of the queue (original submit time kept, so
+//! queue-wait stays honest) for a from-scratch rerun — greedy decode is
+//! deterministic, so a rerun reproduces the same tokens. A lone sequence
+//! can always finish because per-request length is capped at admission to
+//! what the whole pool can hold, which makes the loop deadlock-free.
+//!
+//! **Parity contract.** Per sequence, scheduler output is identical to
+//! the sequential single-stream decode: the batched kernels keep the
+//! single-sequence accumulation order (dense bit-identical, packed
+//! within 1e-5 — in practice also bit-identical), attention is
+//! per-sequence, and token selection copies `argmax` exactly.
+//! `tests/continuous_batching.rs` enforces this under `GPTQ_THREADS=1`
+//! and `=4`.
+
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::serve::{GenRequest, GenResponse};
+use crate::model::{CpuModel, KvPool, SeqCache};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Knobs for one worker's scheduler (embedded in `ServerConfig`).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// slot budget: max sequences in flight per worker
+    pub max_batch: usize,
+    /// KV pool budget, in pages
+    pub pool_pages: usize,
+    /// positions per page
+    pub page_size: usize,
+    /// max prompt tokens a prefilling sequence consumes per tick
+    pub prefill_chunk: usize,
+    /// optional stop byte: generation ends when it would be emitted
+    pub eos: Option<u8>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, pool_pages: 64, page_size: 16, prefill_chunk: 4, eos: None }
+    }
+}
+
+/// One in-flight sequence (admission order is preserved in
+/// `Scheduler::running`; the LAST entry is the preemption victim).
+struct Running {
+    req: GenRequest,
+    seq: SeqCache,
+    /// prompt tokens consumed so far (prefill while `consumed < plen`)
+    consumed: usize,
+    /// effective prompt length after the length cap
+    plen: usize,
+    /// hard length cap: min(max_seq, pool capacity) — guarantees a lone
+    /// sequence always fits the pool
+    limit: usize,
+    /// generated token awaiting its decode step
+    next: Option<u8>,
+    out: Vec<u8>,
+    per_token_ms: Vec<f64>,
+    prefill_ms: f64,
+    submitted: Instant,
+    admitted: Instant,
+    ttft_ms: Option<f64>,
+    done: bool,
+}
+
+/// The greedy pick (last max wins on ties, NaN panics — the historical
+/// serving semantics). This is the single production copy; the
+/// sequential oracle in `tests/continuous_batching.rs` replicates it
+/// deliberately so the parity tests stay independent of this code.
+fn argmax(logits: &[f32]) -> u8 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u8)
+        .unwrap_or(0)
+}
+
+/// Continuous-batching scheduler for one worker (see module docs).
+pub struct Scheduler {
+    wid: usize,
+    model: CpuModel,
+    pool: KvPool,
+    cfg: SchedulerConfig,
+    queue: VecDeque<(GenRequest, Instant)>,
+    running: Vec<Running>,
+    metrics: ServeMetrics,
+    preemptions: usize,
+}
+
+impl Scheduler {
+    pub fn new(wid: usize, model: CpuModel, cfg: SchedulerConfig) -> Self {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        let pool = KvPool::new(&model.config, cfg.pool_pages, cfg.page_size);
+        Self {
+            wid,
+            model,
+            pool,
+            cfg,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            metrics: ServeMetrics::new(),
+            preemptions: 0,
+        }
+    }
+
+    /// Enqueue a request (FIFO; queue-wait starts now).
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.pool.free_pages()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.pool.total_pages()
+    }
+
+    /// Pool-exhaustion preemptions so far (backpressure events).
+    pub fn preemptions(&self) -> usize {
+        self.preemptions
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    pub fn into_metrics(self) -> ServeMetrics {
+        self.metrics
+    }
+
+    /// One scheduler iteration; returns the requests completed by it.
+    pub fn step(&mut self) -> Vec<GenResponse> {
+        self.admit();
+        let mut done = Vec::new();
+        // requests that complete AT admission (empty prompt, zero tokens)
+        // never enter a sub-step — reclaim them here
+        self.harvest(&mut done);
+        for substep in 0..self.cfg.prefill_chunk.max(1) {
+            let idx = self.reserve_active(substep);
+            if idx.is_empty() {
+                break;
+            }
+            self.advance(&idx);
+            self.harvest(&mut done);
+        }
+        done
+    }
+
+    /// Drive until queue and batch are empty; returns every response.
+    pub fn run_until_idle(&mut self) -> Vec<GenResponse> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step());
+        }
+        out
+    }
+
+    /// Admission control: FIFO from the queue while a slot is free and
+    /// the pool can hold the whole prompt plus the first generated token.
+    fn admit(&mut self) {
+        while self.running.len() < self.cfg.max_batch {
+            let Some(&(ref req, _)) = self.queue.front() else { break };
+            let limit = self
+                .model
+                .config
+                .max_seq
+                .min(self.pool.total_pages() * self.pool.page_size());
+            let plen = req.prompt.len().min(limit.saturating_sub(1));
+            // pool gate: room for this prompt + first token AFTER the
+            // pages already-running sequences still need to finish their
+            // own prompts (+ next position once decoding) — so a burst of
+            // admissions can't overcommit the pool against prefill work.
+            // Decode-phase growth past the first token is not reserved;
+            // that is what preemption is for.
+            let committed: usize = self
+                .running
+                .iter()
+                .filter(|r| !r.done)
+                .map(|r| {
+                    let target = (r.plen + 1).min(r.limit).max(r.seq.len + 1);
+                    self.pool.pages_for(target).saturating_sub(r.seq.n_pages())
+                })
+                .sum();
+            if self.pool.free_pages() < committed + self.pool.pages_for(plen + 1) {
+                break; // pool pressure: admit nothing past this point
+            }
+            let (req, submitted) = self.queue.pop_front().unwrap();
+            let admitted = Instant::now();
+            let mut r = Running {
+                req,
+                seq: SeqCache::new(),
+                consumed: 0,
+                plen,
+                limit,
+                next: None,
+                out: Vec::new(),
+                per_token_ms: Vec::new(),
+                prefill_ms: 0.0,
+                submitted,
+                admitted,
+                ttft_ms: None,
+                done: false,
+            };
+            if plen == 0 {
+                // empty prompt: the sequential path feeds token 0 with no
+                // logits to pick from — mirror it (but EOS is still never
+                // emitted)
+                if r.req.max_new_tokens == 0 || self.cfg.eos == Some(0) {
+                    r.done = true;
+                } else {
+                    r.ttft_ms = Some(ms_since(submitted));
+                    r.next = Some(0);
+                }
+            }
+            self.running.push(r);
+        }
+    }
+
+    /// The indices (into `running`, ascending) active in `substep`, with
+    /// pool pages reserved for each one's next position. Pool exhaustion
+    /// preempts the youngest-admitted sequence (FIFO re-queue at the
+    /// front, original submit time kept) and retries.
+    fn reserve_active(&mut self, substep: usize) -> Vec<usize> {
+        'retry: loop {
+            let idx: Vec<usize> = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| !r.done && (substep == 0 || r.consumed < r.plen))
+                .map(|(i, _)| i)
+                .collect();
+            for &i in &idx {
+                let need = self.running[i].seq.len + 1;
+                if !self.pool.reserve(&mut self.running[i].seq, need) {
+                    if self.running.len() <= 1 {
+                        // unreachable: a lone sequence's length is capped
+                        // to the pool at admission — defensive truncation
+                        debug_assert!(false, "lone sequence exhausted the pool");
+                        self.running[i].done = true;
+                        return Vec::new();
+                    }
+                    let mut victim = self.running.pop().unwrap();
+                    self.pool.release(&mut victim.seq);
+                    self.queue.push_front((victim.req, victim.submitted));
+                    self.preemptions += 1;
+                    continue 'retry;
+                }
+            }
+            return idx;
+        }
+    }
+
+    /// One batched decode sub-step over the sequences at `idx`.
+    fn advance(&mut self, idx: &[usize]) {
+        let toks: Vec<u8> = idx
+            .iter()
+            .map(|&i| {
+                let r = &self.running[i];
+                if r.consumed < r.plen {
+                    r.req.prompt[r.consumed]
+                } else {
+                    r.next.expect("decoding sequence without a pending token")
+                }
+            })
+            .collect();
+        let mut want = idx.iter().copied().peekable();
+        let mut seqs: Vec<&mut SeqCache> = Vec::with_capacity(idx.len());
+        for (i, r) in self.running.iter_mut().enumerate() {
+            if want.peek() == Some(&i) {
+                want.next();
+                seqs.push(&mut r.seq);
+            }
+        }
+        let t0 = Instant::now();
+        let logits = self.model.decode_steps(&mut self.pool, &mut seqs, &toks);
+        drop(seqs);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let vocab = self.model.config.vocab;
+        for (k, &i) in idx.iter().enumerate() {
+            let lg = &logits[k * vocab..(k + 1) * vocab];
+            let r = &mut self.running[i];
+            if r.consumed < r.plen {
+                // prefill step
+                r.consumed += 1;
+                r.prefill_ms += ms;
+                if r.consumed == r.plen {
+                    // prompt done — these logits carry the first token
+                    if r.req.max_new_tokens == 0 {
+                        r.done = true;
+                    } else {
+                        let t = argmax(lg);
+                        if self.cfg.eos == Some(t) {
+                            r.done = true;
+                        } else {
+                            // a token will actually be emitted: TTFT
+                            r.ttft_ms = Some(ms_since(r.submitted));
+                            r.next = Some(t);
+                        }
+                    }
+                }
+            } else {
+                // decode step: consumed the pending generated token
+                let tok = r.next.take().expect("decode step without pending token");
+                r.out.push(tok);
+                r.per_token_ms.push(ms);
+                if r.out.len() >= r.req.max_new_tokens || r.seq.len >= r.limit {
+                    r.done = true;
+                } else {
+                    let t = argmax(lg);
+                    if self.cfg.eos == Some(t) {
+                        r.done = true;
+                    } else {
+                        r.next = Some(t);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move finished sequences out of the batch: release pages, record
+    /// metrics, emit responses (admission order preserved for the rest).
+    fn harvest(&mut self, done: &mut Vec<GenResponse>) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if !self.running[i].done {
+                i += 1;
+                continue;
+            }
+            let mut r = self.running.remove(i);
+            self.pool.release(&mut r.seq);
+            let queue_wait_ms = (r.admitted - r.submitted).as_secs_f64() * 1e3;
+            for &ms in &r.per_token_ms {
+                self.metrics.per_token.record_ms(ms);
+            }
+            self.metrics.prefill.record_ms(r.prefill_ms);
+            // requests that emit no token (max_new 0, EOS-first) have no
+            // first-token time — skip the sample rather than skew TTFT
+            // with prompt-processing-only measurements
+            if let Some(t) = r.ttft_ms {
+                self.metrics.ttft.record_ms(t);
+            }
+            self.metrics.queue_wait.record_ms(queue_wait_ms);
+            let ttft_ms = r.ttft_ms.unwrap_or(0.0);
+            done.push(GenResponse {
+                id: r.req.id,
+                tokens: r.out,
+                per_token_ms: r.per_token_ms,
+                prefill_ms: r.prefill_ms,
+                queue_wait_ms,
+                ttft_ms,
+                worker: self.wid,
+            });
+        }
+    }
+}
+
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::tiny_checkpoint;
+
+    fn sched(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(7)), cfg)
+    }
+
+    fn req(id: u64, prompt: Vec<u8>, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens: max_new }
+    }
+
+    #[test]
+    fn completes_one_request() {
+        let mut s = sched(SchedulerConfig::default());
+        s.submit(req(1, vec![1, 2, 3], 4));
+        let rs = s.run_until_idle();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].tokens.len(), 4);
+        assert_eq!(rs[0].per_token_ms.len(), 4);
+        assert!(rs[0].ttft_ms >= rs[0].queue_wait_ms);
+        assert_eq!(s.free_pages(), s.total_pages(), "page leak");
+        assert_eq!(s.metrics().requests(), 1);
+        assert_eq!(s.metrics().per_token.count(), 4);
+    }
+
+    #[test]
+    fn batch_advances_together_and_all_complete() {
+        let mut s = sched(SchedulerConfig { max_batch: 4, ..Default::default() });
+        for i in 0..6 {
+            s.submit(req(i, vec![(i % 16) as u8; (i as usize % 5) + 1], 3));
+        }
+        let rs = s.run_until_idle();
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        assert!(rs.iter().all(|r| r.tokens.len() == 3));
+        assert_eq!(s.free_pages(), s.total_pages());
+    }
+
+    #[test]
+    fn tiny_pool_backpressures_but_completes() {
+        // 4 pages × 2 positions = 8 cached positions shared by 4 slots:
+        // forces preemption with 6-long sequences
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            pool_pages: 4,
+            page_size: 2,
+            prefill_chunk: 2,
+            eos: None,
+        };
+        let mut s = sched(cfg);
+        for i in 0..8 {
+            s.submit(req(i, vec![3, 1, 4], 3));
+        }
+        let mut steps = 0;
+        let mut rs = Vec::new();
+        while !s.is_idle() {
+            rs.extend(s.step());
+            steps += 1;
+            assert!(steps < 10_000, "scheduler deadlocked");
+        }
+        assert_eq!(rs.len(), 8);
+        assert!(rs.iter().all(|r| r.tokens.len() == 3));
+        assert_eq!(s.free_pages(), 4, "page leak after backpressure");
+    }
+
+    #[test]
+    fn eos_stops_generation_early() {
+        // find the first greedy token, then rerun with it as EOS
+        let mut probe = sched(SchedulerConfig::default());
+        probe.submit(req(0, vec![5, 6], 4));
+        let first = probe.run_until_idle()[0].tokens[0];
+        let mut s = sched(SchedulerConfig { eos: Some(first), ..Default::default() });
+        s.submit(req(0, vec![5, 6], 4));
+        let rs = s.run_until_idle();
+        assert!(rs[0].tokens.is_empty(), "EOS should suppress generation");
+        assert_eq!(s.free_pages(), s.total_pages());
+    }
+
+    #[test]
+    fn zero_max_tokens_and_empty_prompt_complete() {
+        let mut s = sched(SchedulerConfig::default());
+        s.submit(req(0, vec![1, 2], 0));
+        s.submit(req(1, vec![], 2));
+        let rs = s.run_until_idle();
+        assert_eq!(rs.len(), 2);
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert!(by_id(0).tokens.is_empty());
+        assert_eq!(by_id(1).tokens.len(), 2);
+        // the sequential path's empty-prompt behavior: first token is 0
+        assert_eq!(by_id(1).tokens[0], 0);
+        assert_eq!(s.free_pages(), s.total_pages());
+    }
+
+    #[test]
+    fn long_prompt_truncates_to_limit() {
+        let mut s = sched(SchedulerConfig::default());
+        // tiny max_seq = 16: prompt 30 truncates to 15, one token fits
+        s.submit(req(0, vec![1; 30], 30));
+        let rs = s.run_until_idle();
+        assert_eq!(rs[0].tokens.len(), 1);
+    }
+}

@@ -1,24 +1,28 @@
 //! Generation server — the paper's "execution harness which allows us to
 //! execute the resulting compressed models efficiently for generative
-//! tasks": a request router over worker replicas, a dynamic batcher with a
-//! linger window, per-worker KV caches, and per-token latency metrics.
+//! tasks", grown into a multi-user tier: a request router over worker
+//! replicas, each worker running the continuous-batching [`Scheduler`]
+//! (iteration-level batching over a paged [`KvPool`](crate::model::KvPool)
+//! — see `coordinator::scheduler`), with per-request latency metrics.
 //!
 //! Each worker owns one [`CpuModel`] instance (dense = the FP16-baseline
-//! analog, packed = the GPTQ-deployed model); generation is token-by-token
-//! greedy decode at batch size 1 per request — the autoregressive,
-//! matvec-bound regime the paper targets (§Practical Speedups).
+//! analog, packed = the GPTQ-deployed model). Generation is greedy
+//! decode; N in-flight sequences advance one token per scheduler
+//! iteration against shared weight reads — the multi-user form of the
+//! autoregressive, matvec-bound regime the paper targets (§Practical
+//! Speedups).
 
-use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use crate::data::CorpusFile;
 use crate::eval::{perplexity, perplexity_artifact};
-use crate::model::{Checkpoint, CpuModel, KvCache};
+use crate::model::{Checkpoint, CpuModel};
 use crate::runtime::Runtime;
 use crate::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -33,25 +37,32 @@ pub struct GenRequest {
 pub struct GenResponse {
     pub id: u64,
     pub tokens: Vec<u8>,
-    /// per-token decode latencies, ms (prefill excluded — the paper's
-    /// per-token generation metric)
+    /// per-token decode latencies, ms: each sample is the batched step
+    /// that consumed the token (prefill excluded — the paper's per-token
+    /// generation metric)
     pub per_token_ms: Vec<f64>,
     pub prefill_ms: f64,
+    /// submit → admitted to a scheduler slot, ms
+    pub queue_wait_ms: f64,
+    /// submit → first generated token available, ms (0 when the request
+    /// emitted no token: `max_new_tokens` 0 or EOS as the first pick)
+    pub ttft_ms: f64,
     pub worker: usize,
 }
 
+/// Server shape: worker count plus each worker's scheduler knobs
+/// (`scheduler.max_batch`, `scheduler.pool_pages`, … — see
+/// [`SchedulerConfig`]).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub n_workers: usize,
-    /// max requests a worker drains per batching round
-    pub max_batch: usize,
-    /// how long the batcher lingers for stragglers
-    pub linger: Duration,
+    /// per-worker continuous-batching knobs (slot budget, KV pool, …)
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { n_workers: 1, max_batch: 4, linger: Duration::from_millis(2) }
+        Self { n_workers: 1, scheduler: SchedulerConfig::default() }
     }
 }
 
@@ -65,7 +76,7 @@ pub struct Server {
     senders: Vec<Sender<Job>>,
     resp_rx: Receiver<GenResponse>,
     inflight: Vec<Arc<AtomicUsize>>,
-    handles: Vec<JoinHandle<LatencyStats>>,
+    handles: Vec<JoinHandle<ServeMetrics>>,
     submitted: u64,
 }
 
@@ -86,10 +97,9 @@ impl Server {
             let resp_tx = resp_tx.clone();
             let count = Arc::new(AtomicUsize::new(0));
             let count_w = count.clone();
-            let max_batch = cfg.max_batch;
-            let linger = cfg.linger;
+            let scfg = cfg.scheduler.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(wid, model, rx, resp_tx, count_w, max_batch, linger)
+                worker_loop(wid, model, rx, resp_tx, count_w, scfg)
             }));
             senders.push(tx);
             inflight.push(count);
@@ -122,18 +132,18 @@ impl Server {
         (0..n).map(|_| self.recv()).collect()
     }
 
-    /// Stop workers and return their merged per-token latency stats.
-    pub fn shutdown(self) -> LatencyStats {
+    /// Stop workers and return their merged serving metrics.
+    pub fn shutdown(self) -> ServeMetrics {
         for tx in &self.senders {
             let _ = tx.send(Job::Stop);
         }
-        let mut stats = LatencyStats::new();
+        let mut metrics = ServeMetrics::new();
         for h in self.handles {
-            if let Ok(s) = h.join() {
-                stats.merge(&s);
+            if let Ok(m) = h.join() {
+                metrics.merge(&m);
             }
         }
-        stats
+        metrics
     }
 }
 
@@ -162,97 +172,55 @@ pub fn verify_parity(
     Ok((ppl_cpu - ppl_art).abs() / ppl_art.max(1e-12))
 }
 
+/// Worker: admit jobs into the continuous-batching scheduler (blocking
+/// only when idle), run one scheduler iteration per loop, stream
+/// completions back. On `Stop`, everything already submitted drains to
+/// completion before the worker exits (the channel is FIFO, so every
+/// `Gen` sent before the `Stop` has been admitted by then).
 fn worker_loop(
     wid: usize,
-    mut model: CpuModel,
+    model: CpuModel,
     rx: Receiver<Job>,
     resp_tx: Sender<GenResponse>,
     inflight: Arc<AtomicUsize>,
-    max_batch: usize,
-    linger: Duration,
-) -> LatencyStats {
-    let mut stats = LatencyStats::new();
-    let mut cache = KvCache::new(&model.config);
-    'outer: loop {
-        // dynamic batching: block for one job, linger for stragglers
-        let first = match rx.recv() {
-            Ok(Job::Gen(r)) => r,
-            _ => break 'outer,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + linger;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
+    scfg: SchedulerConfig,
+) -> ServeMetrics {
+    let mut sched = Scheduler::new(wid, model, scfg);
+    let mut stopping = false;
+    loop {
+        // block for work only when there is nothing to advance
+        if !stopping && sched.is_idle() {
+            match rx.recv() {
+                Ok(Job::Gen(r)) => sched.submit(r),
+                Ok(Job::Stop) | Err(_) => stopping = true,
+            }
+        }
+        // then drain whatever else is already queued, without blocking —
+        // new arrivals join the batch at the next iteration's admission
+        if !stopping {
+            loop {
+                match rx.try_recv() {
+                    Ok(Job::Gen(r)) => sched.submit(r),
+                    Ok(Job::Stop) => {
+                        stopping = true;
+                        break;
+                    }
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+        }
+        if sched.is_idle() {
+            if stopping {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Job::Gen(r)) => batch.push(r),
-                Ok(Job::Stop) => {
-                    process_batch(wid, &mut model, &mut cache, &batch, &resp_tx, &inflight, &mut stats);
-                    break 'outer;
-                }
-                Err(_) => break,
-            }
+            continue;
         }
-        process_batch(wid, &mut model, &mut cache, &batch, &resp_tx, &inflight, &mut stats);
-    }
-    stats
-}
-
-fn process_batch(
-    wid: usize,
-    model: &mut CpuModel,
-    cache: &mut KvCache,
-    batch: &[GenRequest],
-    resp_tx: &Sender<GenResponse>,
-    inflight: &Arc<AtomicUsize>,
-    stats: &mut LatencyStats,
-) {
-    for req in batch {
-        let resp = generate(wid, model, cache, req, stats);
-        inflight.fetch_sub(1, Ordering::Relaxed);
-        let _ = resp_tx.send(resp);
-    }
-}
-
-/// Greedy generation for one request (batch-1 decode, the Table 5 setup).
-fn generate(
-    wid: usize,
-    model: &mut CpuModel,
-    cache: &mut KvCache,
-    req: &GenRequest,
-    stats: &mut LatencyStats,
-) -> GenResponse {
-    cache.reset();
-    let max_seq = model.config.max_seq;
-    let t0 = Instant::now();
-    let mut logits: Vec<f32> = Vec::new();
-    for &b in req.prompt.iter().take(max_seq.saturating_sub(1)) {
-        logits = model.decode_step(cache, b).to_vec();
-    }
-    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-    let mut tokens = Vec::with_capacity(req.max_new_tokens);
-    let mut per_token_ms = Vec::with_capacity(req.max_new_tokens);
-    for _ in 0..req.max_new_tokens {
-        if cache.len >= max_seq {
-            break;
+        for resp in sched.step() {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            let _ = resp_tx.send(resp);
         }
-        let next = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i as u8)
-            .unwrap_or(0);
-        let t = Instant::now();
-        logits = model.decode_step(cache, next).to_vec();
-        let ms = t.elapsed().as_secs_f64() * 1e3;
-        per_token_ms.push(ms);
-        stats.record_ms(ms);
-        tokens.push(next);
     }
-    GenResponse { id: req.id, tokens, per_token_ms, prefill_ms, worker: wid }
+    sched.into_metrics()
 }
 
 #[cfg(test)]
@@ -261,7 +229,10 @@ mod tests {
     use crate::model::testkit::tiny_checkpoint;
 
     fn server(n_workers: usize) -> Server {
-        let cfg = ServerConfig { n_workers, max_batch: 2, linger: Duration::from_millis(1) };
+        let cfg = ServerConfig {
+            n_workers,
+            scheduler: SchedulerConfig { max_batch: 2, ..Default::default() },
+        };
         Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)))
     }
 
@@ -273,8 +244,11 @@ mod tests {
         assert_eq!(r.id, 1);
         assert_eq!(r.tokens.len(), 4);
         assert_eq!(r.per_token_ms.len(), 4);
-        let stats = s.shutdown();
-        assert_eq!(stats.count(), 4);
+        assert!(r.ttft_ms >= 0.0 && r.queue_wait_ms >= 0.0);
+        let m = s.shutdown();
+        assert_eq!(m.per_token.count(), 4);
+        assert_eq!(m.requests(), 1);
+        assert_eq!(m.ttft.count(), 1);
     }
 
     #[test]
@@ -323,6 +297,33 @@ mod tests {
         s.submit(GenRequest { id: 9, prompt: vec![1; 30], max_new_tokens: 30 });
         let r = s.recv();
         assert!(r.tokens.len() < 16);
+        s.shutdown();
+    }
+
+    #[test]
+    fn pool_limited_server_completes_all_requests() {
+        // a pool far smaller than the offered load: backpressure (preempt
+        // + re-queue) must still complete everything
+        let cfg = ServerConfig {
+            n_workers: 1,
+            scheduler: SchedulerConfig {
+                max_batch: 4,
+                pool_pages: 4,
+                page_size: 2,
+                ..Default::default()
+            },
+        };
+        let mut s =
+            Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+        let n = 10;
+        for i in 0..n {
+            s.submit(GenRequest { id: i, prompt: vec![2, 7, 1], max_new_tokens: 3 });
+        }
+        let rs = s.collect(n as usize);
+        assert!(rs.iter().all(|r| r.tokens.len() == 3));
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>());
         s.shutdown();
     }
 

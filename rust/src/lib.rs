@@ -11,7 +11,8 @@
 //! * **L3** (this crate): the coordinator — calibration streaming, Hessian
 //!   accumulation, block-by-block quantization with quantized-input
 //!   propagation, packed checkpoints, perplexity / zero-shot evaluation,
-//!   and a token-by-token generation server with a quantized hot path.
+//!   and a continuous-batching generation server (paged KV pool,
+//!   iteration-level scheduling) with a quantized hot path.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation; afterwards the `gptq` binary is self-contained.
@@ -31,7 +32,7 @@
 //!   /opt/xla-example/README.md for why not protos), compiles once, and
 //!   executes from the pipeline. DESIGN.md §Backends has the full story.
 //! * [`coordinator`] — the quantization pipeline and the serving stack
-//!   (router, batcher, KV-cache pool, metrics).
+//!   (router, continuous-batching scheduler, paged KV pool, metrics).
 
 pub mod coordinator;
 pub mod data;

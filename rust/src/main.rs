@@ -14,7 +14,8 @@
 //! AOT artifact tree (`make artifacts`); Python never executes here.
 
 use gptq_rs::coordinator::{
-    verify_parity, GenRequest, PipelineConfig, QuantEngine, QuantPipeline, Server, ServerConfig,
+    verify_parity, GenRequest, PipelineConfig, QuantEngine, QuantPipeline, SchedulerConfig, Server,
+    ServerConfig,
 };
 use gptq_rs::data::{load_tasks, CorpusFile};
 use gptq_rs::eval::{eval_choice, eval_cloze, perplexity, perplexity_artifact};
@@ -23,12 +24,13 @@ use gptq_rs::runtime::{Manifest, Runtime};
 use gptq_rs::util::cli::Args;
 use gptq_rs::Result;
 use std::path::{Path, PathBuf};
-use std::time::Duration;
+use std::time::Instant;
 
 const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [--threads N] <info|quantize|eval|serve> [flags]
   quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq] [--calib-segments N] [--out F]
   eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
-  serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N] [--skip-parity]";
+  serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]
+           [--max-batch N] [--pool-pages N] [--page-size N] [--prefill-chunk N] [--skip-parity]";
 
 fn parse_engine(s: &str) -> Result<QuantEngine> {
     Ok(match s {
@@ -191,10 +193,20 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     }
 
     let artifacts = artifacts.to_path_buf();
-    let cfg = ServerConfig { n_workers: workers, max_batch: 4, linger: Duration::from_millis(1) };
+    let cfg = ServerConfig {
+        n_workers: workers,
+        scheduler: SchedulerConfig {
+            max_batch: args.usize_or("max-batch", 8),
+            pool_pages: args.usize_or("pool-pages", 64),
+            page_size: args.usize_or("page-size", 16),
+            prefill_chunk: args.usize_or("prefill-chunk", 4),
+            eos: None,
+        },
+    };
     let mut server = Server::start(cfg, |_| {
         build_model(&artifacts, &entry, quantized.as_deref()).expect("model build")
     });
+    let t0 = Instant::now();
     for i in 0..requests {
         let start = (i * 131) % (corpus.len() - 32);
         server.submit(GenRequest {
@@ -204,10 +216,15 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
         });
     }
     let responses = server.collect(requests);
+    let wall_s = t0.elapsed().as_secs_f64();
     let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
-    let stats = server.shutdown();
-    println!("served {requests} requests / {total_tokens} tokens on {workers} worker(s)");
-    println!("per-token latency: {}", stats.summary());
+    let metrics = server.shutdown();
+    println!(
+        "served {requests} requests / {total_tokens} tokens on {workers} worker(s) in {wall_s:.2}s \
+         ({:.1} tokens/s aggregate, wall-clock)",
+        total_tokens as f64 / wall_s.max(1e-9)
+    );
+    println!("{}", metrics.summary());
     Ok(())
 }
 

@@ -11,11 +11,15 @@
 //! paper's deployment story.
 
 use crate::model::checkpoint::{Checkpoint, QuantizedCheckpoint};
+use crate::model::kvpool::{KvPool, SeqCache};
 use crate::model::matvec::{
+    matmul_f32_bias, matmul_f32_bias_serial, matmul_packed_bias, matmul_packed_bias_serial,
     matvec_f32_bias, matvec_f32_bias_serial, matvec_packed_bias, matvec_packed_bias_serial,
+    MATVEC_PAR_MIN_ELEMS,
 };
 use crate::model::ModelConfig;
 use crate::quant::PackedMatrix;
+use crate::util::par::{self, Pool};
 
 /// A linear layer's weights on the decode path.
 #[derive(Debug, Clone)]
@@ -56,6 +60,30 @@ impl LinearWeight {
     /// y = W x + b (auto-parallel kernels).
     pub fn apply(&self, x: &[f32], b: &[f32], y: &mut [f32]) {
         self.apply_with(x, b, y, false)
+    }
+
+    /// Batched Y = W·X + b over `n` stacked activations: `xs` is
+    /// sequence-major (n × in), `ys` ROW-major (out × n), so each weight
+    /// row — packed or dense — is read once for all n sequences (the
+    /// continuous-batching kernel; see `decode_steps`). Per-sequence
+    /// arithmetic is bit-identical to [`LinearWeight::apply_with`].
+    pub fn apply_batch(&self, xs: &[f32], b: &[f32], n: usize, ys: &mut [f32], serial: bool) {
+        match self {
+            LinearWeight::Dense { w, drow, dcol } => {
+                if serial {
+                    matmul_f32_bias_serial(w, xs, b, *drow, *dcol, n, ys)
+                } else {
+                    matmul_f32_bias(w, xs, b, *drow, *dcol, n, ys)
+                }
+            }
+            LinearWeight::Packed(p) => {
+                if serial {
+                    matmul_packed_bias_serial(p, xs, b, n, ys)
+                } else {
+                    matmul_packed_bias(p, xs, b, n, ys)
+                }
+            }
+        }
     }
 
     /// Weight bytes touched per matvec (Table 5 traffic accounting).
@@ -129,6 +157,8 @@ pub struct CpuModel {
     blocks: Vec<BlockWeights>,
     // scratch buffers (decode is single-threaded per model instance)
     scratch: Scratch,
+    // batched-decode scratch, grown on demand by `decode_steps`
+    bscratch: BatchScratch,
     /// Use the never-spawning matvec twins on the decode path — set by
     /// callers whose workers are already parallel (eval::perplexity), so
     /// matvecs don't nest thread scopes inside every worker.
@@ -145,6 +175,20 @@ struct Scratch {
     hidden: Vec<f32>,
     logits: Vec<f32>,
     att_w: Vec<f32>,
+}
+
+/// Scratch for the batched decode path (`decode_steps`): per-sequence
+/// activations are sequence-major (n × width); `rm` holds each batched
+/// matmul's row-major output before it is scattered back.
+#[derive(Clone, Default)]
+struct BatchScratch {
+    cap: usize,
+    xs: Vec<f32>,
+    x1s: Vec<f32>,
+    qkvs: Vec<f32>,
+    attns: Vec<f32>,
+    hiddens: Vec<f32>,
+    rm: Vec<f32>,
 }
 
 /// LayerNorm over one row (eps 1e-5, matching the L2 graph). Shared with
@@ -165,6 +209,87 @@ pub(crate) fn layer_norm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
 pub(crate) fn gelu(x: f32) -> f32 {
     const C: f32 = 0.7978845608028654; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// dst[j·rows + r] = src[r·n + j] — scatter a batched matmul's row-major
+/// output (rows × n) back to sequence-major buffers (n × rows).
+fn transpose_rows(src: &[f32], rows: usize, n: usize, dst: &mut [f32]) {
+    debug_assert!(src.len() >= rows * n && dst.len() >= rows * n);
+    for (r, srow) in src.chunks_exact(n).take(rows).enumerate() {
+        for (j, &v) in srow.iter().enumerate() {
+            dst[j * rows + r] = v;
+        }
+    }
+}
+
+/// Per-sequence causal attention for one layer of the batched decode:
+/// sequence `j` attends over positions `0..=seqs[j].len` of its OWN
+/// pages. Parallel ACROSS sequences (each output row is one sequence —
+/// disjoint, partition-independent arithmetic, so any thread count is
+/// bit-identical); within a sequence the loops match `decode_step`
+/// exactly.
+#[allow(clippy::too_many_arguments)]
+fn batched_attention(
+    pool: &KvPool,
+    seqs: &[&mut SeqCache],
+    qkvs: &[f32],
+    d: usize,
+    h: usize,
+    hd: usize,
+    layer: usize,
+    attns: &mut [f32],
+    serial: bool,
+) {
+    let n = seqs.len();
+    let maxpos = seqs.iter().map(|s| s.len).max().unwrap_or(0) + 1;
+    let tp = if serial || n * d * maxpos < MATVEC_PAR_MIN_ELEMS {
+        Pool::serial()
+    } else {
+        Pool::global()
+    };
+    par::for_rows_mut(&tp, attns, n, d, |range, chunk| {
+        // one score buffer per worker chunk (every entry is overwritten
+        // before it is read, so reuse across sequences is safe)
+        let mut att_buf: Vec<f32> = Vec::new();
+        for (jj, out_all) in chunk.chunks_exact_mut(d).enumerate() {
+            let j = range.start + jj;
+            let sc: &SeqCache = &*seqs[j];
+            let pos = sc.len;
+            let q = &qkvs[j * 3 * d..j * 3 * d + d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            if att_buf.len() < pos + 1 {
+                att_buf.resize(pos + 1, 0.0);
+            }
+            let att = &mut att_buf[..pos + 1];
+            for head in 0..h {
+                let qh = &q[head * hd..(head + 1) * hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for (p, av) in att.iter_mut().enumerate() {
+                    let kh = &pool.k_row(sc, layer, p)[head * hd..(head + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for i in 0..hd {
+                        dot += qh[i] * kh[i];
+                    }
+                    *av = dot * scale;
+                    maxv = maxv.max(*av);
+                }
+                let mut denom = 0.0f32;
+                for av in att.iter_mut() {
+                    *av = (*av - maxv).exp();
+                    denom += *av;
+                }
+                let out = &mut out_all[head * hd..(head + 1) * hd];
+                out.fill(0.0);
+                for (p, &av) in att.iter().enumerate() {
+                    let wgt = av / denom;
+                    let vh = &pool.v_row(sc, layer, p)[head * hd..(head + 1) * hd];
+                    for i in 0..hd {
+                        out[i] += wgt * vh[i];
+                    }
+                }
+            }
+        }
+    });
 }
 
 impl CpuModel {
@@ -262,7 +387,35 @@ impl CpuModel {
             logits: vec![0.0; config.vocab],
             att_w: vec![0.0; config.max_seq],
         };
-        Self { config, embed, pos, lnf_g, lnf_b, unembed, blocks, scratch, serial_kernels: false }
+        Self {
+            config,
+            embed,
+            pos,
+            lnf_g,
+            lnf_b,
+            unembed,
+            blocks,
+            scratch,
+            bscratch: BatchScratch::default(),
+            serial_kernels: false,
+        }
+    }
+
+    fn ensure_batch_scratch(&mut self, n: usize) {
+        if self.bscratch.cap >= n {
+            return;
+        }
+        let (d, ff, vocab) = (self.config.d_model, self.config.d_ff, self.config.vocab);
+        let rm_w = (3 * d).max(ff).max(vocab);
+        self.bscratch = BatchScratch {
+            cap: n,
+            xs: vec![0.0; n * d],
+            x1s: vec![0.0; n * d],
+            qkvs: vec![0.0; n * 3 * d],
+            attns: vec![0.0; n * d],
+            hiddens: vec![0.0; n * ff],
+            rm: vec![0.0; n * rm_w],
+        };
     }
 
     /// Pin the decode path to the serial matvec kernels (bit-identical to
@@ -367,6 +520,147 @@ impl CpuModel {
         &s.logits
     }
 
+    /// Batched decode: advance N sequences one token each through ONE
+    /// pass over the weights (the continuous-batching hot path). Every
+    /// linear runs as a matmul over the n stacked activations — each
+    /// weight row, packed or dense, is read once for the whole batch —
+    /// while attention stays per-sequence over that sequence's own pages
+    /// in `pool`. Returns the next-token logits, sequence-major
+    /// (n × vocab).
+    ///
+    /// Parity contract (DESIGN.md §Serving, `tests/continuous_batching.rs`):
+    /// per sequence this is bit-identical to [`CpuModel::decode_step`] on
+    /// dense linears and within 1e-5 on packed ones (in practice also
+    /// bit-identical: the batched kernels reuse the single-sequence
+    /// accumulation order).
+    ///
+    /// The caller must have reserved pool capacity for each sequence's
+    /// next position ([`KvPool::reserve`]) — admission control and
+    /// backpressure live in the scheduler, not here.
+    pub fn decode_steps(
+        &mut self,
+        pool: &mut KvPool,
+        seqs: &mut [&mut SeqCache],
+        tokens: &[u8],
+    ) -> Vec<f32> {
+        let n = seqs.len();
+        assert_eq!(n, tokens.len(), "decode_steps: one token per sequence");
+        if n == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.config;
+        let (d, h, hd, ff, vocab) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.d_ff, cfg.vocab);
+        for sc in seqs.iter() {
+            assert!(sc.len < cfg.max_seq, "sequence overflow");
+            assert!(pool.capacity_of(sc) > sc.len, "decode_steps: reserve pool pages first");
+        }
+        self.ensure_batch_scratch(n);
+        let serial = self.serial_kernels;
+        let s = &mut self.bscratch;
+
+        // embedding + positional, per sequence
+        for j in 0..n {
+            let (tok, p) = (tokens[j] as usize, seqs[j].len);
+            let x = &mut s.xs[j * d..(j + 1) * d];
+            for i in 0..d {
+                x[i] = self.embed[tok * d + i] + self.pos[p * d + i];
+            }
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            // attention: LN, fused qkv over the whole batch
+            for j in 0..n {
+                layer_norm(
+                    &s.xs[j * d..(j + 1) * d],
+                    &blk.ln1_g,
+                    &blk.ln1_b,
+                    &mut s.x1s[j * d..(j + 1) * d],
+                );
+            }
+            let qkv_rm = &mut s.rm[..3 * d * n];
+            blk.wqkv.apply_batch(&s.x1s[..n * d], &blk.wqkv_b, n, qkv_rm, serial);
+            transpose_rows(qkv_rm, 3 * d, n, &mut s.qkvs[..n * 3 * d]);
+            // append this step's K/V rows to each sequence's pages
+            for j in 0..n {
+                let sc: &SeqCache = &*seqs[j];
+                let kv = &s.qkvs[j * 3 * d + d..(j + 1) * 3 * d];
+                let (k_new, v_new) = kv.split_at(d);
+                pool.write_row(sc, l, sc.len, k_new, v_new);
+            }
+            // attention stays per-sequence over its own pages (parallel
+            // ACROSS sequences; arithmetic identical to decode_step)
+            batched_attention(pool, seqs, &s.qkvs[..n * 3 * d], d, h, hd, l, &mut s.attns[..n * d], serial);
+            let proj_rm = &mut s.rm[..d * n];
+            blk.wo.apply_batch(&s.attns[..n * d], &blk.wo_b, n, proj_rm, serial);
+            for j in 0..n {
+                for i in 0..d {
+                    s.xs[j * d + i] += proj_rm[i * n + j];
+                }
+            }
+            // MLP
+            for j in 0..n {
+                layer_norm(
+                    &s.xs[j * d..(j + 1) * d],
+                    &blk.ln2_g,
+                    &blk.ln2_b,
+                    &mut s.x1s[j * d..(j + 1) * d],
+                );
+            }
+            let up_rm = &mut s.rm[..ff * n];
+            blk.wup.apply_batch(&s.x1s[..n * d], &blk.wup_b, n, up_rm, serial);
+            for j in 0..n {
+                for r in 0..ff {
+                    s.hiddens[j * ff + r] = gelu(up_rm[r * n + j]);
+                }
+            }
+            let dn_rm = &mut s.rm[..d * n];
+            blk.wdn.apply_batch(&s.hiddens[..n * ff], &blk.wdn_b, n, dn_rm, serial);
+            for j in 0..n {
+                for i in 0..d {
+                    s.xs[j * d + i] += dn_rm[i * n + j];
+                }
+            }
+        }
+
+        for j in 0..n {
+            layer_norm(
+                &s.xs[j * d..(j + 1) * d],
+                &self.lnf_g,
+                &self.lnf_b,
+                &mut s.x1s[j * d..(j + 1) * d],
+            );
+        }
+        // unembed: each vocab row read once for all n sequences, with the
+        // same plain sequential dot as decode_step (bit-parity)
+        let head_rm = &mut s.rm[..vocab * n];
+        let x1s = &s.x1s[..n * d];
+        let tp = if serial || vocab * d < MATVEC_PAR_MIN_ELEMS {
+            Pool::serial()
+        } else {
+            Pool::global()
+        };
+        par::for_rows_mut(&tp, head_rm, vocab, n, |rows, chunk| {
+            for (i, yrow) in chunk.chunks_exact_mut(n).enumerate() {
+                let v = rows.start + i;
+                let row = &self.unembed[v * d..(v + 1) * d];
+                for (j, yv) in yrow.iter_mut().enumerate() {
+                    let x1 = &x1s[j * d..(j + 1) * d];
+                    let mut acc = 0.0f32;
+                    for k in 0..d {
+                        acc += row[k] * x1[k];
+                    }
+                    *yv = acc;
+                }
+            }
+        });
+        let mut out = vec![0.0f32; n * vocab];
+        transpose_rows(head_rm, vocab, n, &mut out);
+        for sc in seqs.iter_mut() {
+            sc.len += 1;
+        }
+        out
+    }
+
     /// Next-token logits for every position of `tokens` (teacher-forced) —
     /// the perplexity-evaluation path. Returns (seq × vocab) row-major.
     pub fn logits_all(&mut self, tokens: &[u8]) -> Vec<f32> {
@@ -430,6 +724,49 @@ mod tests {
         let last_a = &a[3 * 32..];
         let last_b = &b[3 * 32..];
         assert!(last_a.iter().zip(last_b).any(|(x, y)| (x - y).abs() > 1e-4));
+    }
+
+    #[test]
+    fn decode_steps_matches_decode_step_bitwise() {
+        use crate::model::kvpool::{KvPool, SeqCache};
+        let ckpt = tiny_checkpoint(6);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let streams: [&[u8]; 3] = [&[1, 2, 3, 4, 5], &[9, 8], &[30, 0, 7, 7]];
+        // sequential reference: per-stream logits at every step
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for st in streams {
+            let mut cache = KvCache::new(&m.config);
+            want.push(st.iter().map(|&t| m.decode_step(&mut cache, t).to_vec()).collect());
+        }
+        // batched over a paged pool, ragged lengths
+        let mut pool = KvPool::new(&m.config, 8, 2);
+        let mut seqs: Vec<SeqCache> = (0..streams.len()).map(|_| SeqCache::new()).collect();
+        let maxlen = streams.iter().map(|s| s.len()).max().unwrap();
+        for t in 0..maxlen {
+            let mut refs: Vec<&mut SeqCache> = Vec::new();
+            let mut toks = Vec::new();
+            let mut live = Vec::new();
+            for (j, sc) in seqs.iter_mut().enumerate() {
+                if t < streams[j].len() {
+                    assert!(pool.reserve(sc, t + 1));
+                    refs.push(sc);
+                    toks.push(streams[j][t]);
+                    live.push(j);
+                }
+            }
+            let logits = m.decode_steps(&mut pool, &mut refs, &toks);
+            let vocab = m.config.vocab;
+            for (k, &j) in live.iter().enumerate() {
+                let got = &logits[k * vocab..(k + 1) * vocab];
+                for (a, b) in got.iter().zip(&want[j][t]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "seq {j} step {t}");
+                }
+            }
+        }
+        for mut sc in seqs {
+            pool.release(&mut sc);
+        }
+        assert_eq!(pool.free_pages(), 8, "page leak");
     }
 
     #[test]

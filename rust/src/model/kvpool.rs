@@ -1,0 +1,241 @@
+//! Paged KV-cache pool — the memory subsystem behind continuous batching.
+//!
+//! The per-request [`KvCache`](crate::model::KvCache) of the single-stream
+//! decode path reserves `max_seq × d_model` rows per layer up front, so a
+//! worker serving B concurrent requests would pin `B × max_seq` positions
+//! of KV memory regardless of how many tokens are actually cached. This
+//! pool instead hands out fixed-size **pages** (`page_size` consecutive
+//! positions, all layers at once) from a bounded budget: memory scales
+//! with live tokens, many short sequences pack tightly, and exhaustion is
+//! an explicit signal ([`KvPool::reserve`] returning `false`) that the
+//! scheduler turns into backpressure (preempt + FIFO re-queue) instead of
+//! an allocation failure.
+//!
+//! Layout: one page id addresses every layer simultaneously — layer `l`'s
+//! K rows for page `p` live at `k[l][(p·page_size + off)·d_model ..]` —
+//! so allocation and reclaim are per-sequence-chunk, never per-layer. A
+//! sequence's [`SeqCache`] is just its page table plus the filled length;
+//! attention walks positions through [`KvPool::k_row`]/[`KvPool::v_row`].
+//! Pages are recycled through a LIFO free list; rows are always written
+//! (`write_row` at position `len`) before they are read, so stale data
+//! from a previous owner is never observed.
+
+use crate::model::ModelConfig;
+
+/// A sequence's view into the pool: the page table (indices into the
+/// pool's page array, one entry per `page_size` positions) and the number
+/// of positions filled so far. Deliberately not `Clone` — two live copies
+/// of a page table would double-free pages on release.
+#[derive(Debug, Default)]
+pub struct SeqCache {
+    pages: Vec<u32>,
+    /// positions filled (the next decode step consumes position `len`)
+    pub len: usize,
+}
+
+impl SeqCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pages currently held (capacity = `n_pages() × pool.page_size()`).
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+/// Bounded paged KV memory shared by every in-flight sequence of one
+/// worker (see module docs).
+#[derive(Debug)]
+pub struct KvPool {
+    n_layers: usize,
+    d_model: usize,
+    page_size: usize,
+    n_pages: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    free: Vec<u32>,
+}
+
+impl KvPool {
+    /// A pool of `n_pages` pages of `page_size` positions each.
+    pub fn new(cfg: &ModelConfig, n_pages: usize, page_size: usize) -> Self {
+        assert!(n_pages > 0, "KvPool needs at least one page");
+        assert!(page_size > 0, "KvPool page_size must be positive");
+        let floats = n_pages * page_size * cfg.d_model;
+        Self {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            page_size,
+            n_pages,
+            k: (0..cfg.n_layers).map(|_| vec![0.0; floats]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; floats]).collect(),
+            // reversed so fresh pools allocate page 0 first (deterministic)
+            free: (0..n_pages as u32).rev().collect(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages needed to hold `len` positions.
+    pub fn pages_for(&self, len: usize) -> usize {
+        len.div_ceil(self.page_size)
+    }
+
+    /// Positions `seq` can hold without another reserve.
+    pub fn capacity_of(&self, seq: &SeqCache) -> usize {
+        seq.pages.len() * self.page_size
+    }
+
+    /// Total KV bytes held by the pool (the bounded analog of
+    /// `KvCache::bytes` — the "+9 GB of keys and values" accounting of
+    /// §Practical Speedups, now a budget instead of a per-request cost).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.n_pages * self.page_size * self.d_model * 4
+    }
+
+    /// Grow `seq`'s page table until it can hold `len` positions. Returns
+    /// `false` — the pool-exhausted backpressure signal — when the free
+    /// list runs out. Pages granted before exhaustion stay with the
+    /// sequence (reclaimed by [`KvPool::release`]), so a failed reserve
+    /// never leaks and a later retry continues where it stopped.
+    #[must_use]
+    pub fn reserve(&mut self, seq: &mut SeqCache, len: usize) -> bool {
+        while seq.pages.len() * self.page_size < len {
+            match self.free.pop() {
+                Some(p) => seq.pages.push(p),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Return every page of `seq` to the free list and reset it.
+    pub fn release(&mut self, seq: &mut SeqCache) {
+        self.free.extend(seq.pages.drain(..));
+        seq.len = 0;
+    }
+
+    fn base(&self, seq: &SeqCache, pos: usize) -> usize {
+        let page = seq.pages[pos / self.page_size] as usize;
+        (page * self.page_size + pos % self.page_size) * self.d_model
+    }
+
+    /// Layer `layer`'s K row (d_model floats) for position `pos` of `seq`.
+    pub fn k_row(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[f32] {
+        let b = self.base(seq, pos);
+        &self.k[layer][b..b + self.d_model]
+    }
+
+    /// Layer `layer`'s V row for position `pos` of `seq`.
+    pub fn v_row(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[f32] {
+        let b = self.base(seq, pos);
+        &self.v[layer][b..b + self.d_model]
+    }
+
+    /// Store the K and V rows for position `pos` of `seq` at layer
+    /// `layer` (the caller must have reserved capacity past `pos`).
+    pub fn write_row(&mut self, seq: &SeqCache, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(pos < self.capacity_of(seq), "write past reserved pages");
+        let b = self.base(seq, pos);
+        self.k[layer][b..b + self.d_model].copy_from_slice(k);
+        self.v[layer][b..b + self.d_model].copy_from_slice(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::tiny_config;
+
+    fn pool(n_pages: usize, page_size: usize) -> KvPool {
+        KvPool::new(&tiny_config(), n_pages, page_size)
+    }
+
+    #[test]
+    fn reserve_grows_in_page_units() {
+        let mut p = pool(4, 4);
+        let mut s = SeqCache::new();
+        assert!(p.reserve(&mut s, 1));
+        assert_eq!(s.n_pages(), 1);
+        assert_eq!(p.capacity_of(&s), 4);
+        assert!(p.reserve(&mut s, 4)); // still fits the first page
+        assert_eq!(s.n_pages(), 1);
+        assert!(p.reserve(&mut s, 5));
+        assert_eq!(s.n_pages(), 2);
+        assert_eq!(p.free_pages(), 2);
+    }
+
+    #[test]
+    fn exhaustion_signals_and_release_restores() {
+        let mut p = pool(3, 2);
+        let mut a = SeqCache::new();
+        let mut b = SeqCache::new();
+        assert!(p.reserve(&mut a, 4)); // 2 pages
+        assert!(p.reserve(&mut b, 2)); // 1 page
+        assert_eq!(p.free_pages(), 0);
+        // pool exhausted: explicit backpressure signal, no panic
+        assert!(!p.reserve(&mut b, 3));
+        p.release(&mut a);
+        assert_eq!(p.free_pages(), 2);
+        assert_eq!(a.n_pages(), 0);
+        assert_eq!(a.len, 0);
+        // the failed reserve kept b's existing page; retry succeeds now
+        assert!(p.reserve(&mut b, 3));
+        p.release(&mut b);
+        assert_eq!(p.free_pages(), 3, "page leak");
+    }
+
+    #[test]
+    fn rows_round_trip_across_page_boundaries() {
+        let d = tiny_config().d_model;
+        let mut p = pool(4, 2); // 2 positions per page -> pos 2 is page 1
+        let mut s = SeqCache::new();
+        assert!(p.reserve(&mut s, 5));
+        for pos in 0..5 {
+            let k: Vec<f32> = (0..d).map(|i| (pos * d + i) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            for l in 0..2 {
+                p.write_row(&s, l, pos, &k, &v);
+            }
+        }
+        for pos in 0..5 {
+            for l in 0..2 {
+                assert_eq!(p.k_row(&s, l, pos)[1], (pos * d + 1) as f32);
+                assert_eq!(p.v_row(&s, l, pos)[1], -((pos * d + 1) as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn recycled_pages_are_rewritten_not_reread() {
+        let d = tiny_config().d_model;
+        let mut p = pool(1, 2);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 1));
+        p.write_row(&a, 0, 0, &vec![7.0; d], &vec![7.0; d]);
+        p.release(&mut a);
+        // new owner of the same page writes before reading
+        let mut b = SeqCache::new();
+        assert!(p.reserve(&mut b, 1));
+        p.write_row(&b, 0, 0, &vec![3.0; d], &vec![3.0; d]);
+        assert_eq!(p.k_row(&b, 0, 0)[0], 3.0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let cfg = tiny_config();
+        let p = KvPool::new(&cfg, 8, 4);
+        assert_eq!(p.bytes(), 2 * cfg.n_layers * 8 * 4 * cfg.d_model * 4);
+    }
+}

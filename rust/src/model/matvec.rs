@@ -29,31 +29,39 @@ fn pool_for(elems: usize) -> Pool {
     }
 }
 
-/// Rows `row0..row0+y.len()` of y = W x. 4-way unrolled dot; the shared
-/// serial core of [`matvec_f32`] — per-row arithmetic is independent of
-/// how rows are chunked, which is what makes the parallel wrapper
-/// bit-identical at any thread count.
+/// The 4-way unrolled row dot shared by the matvec and the batched
+/// matmul: one code path means the batched decode is bit-identical to
+/// the single-sequence decode on dense linears (the continuous-batching
+/// parity contract, DESIGN.md §Serving).
+#[inline(always)]
+fn dot4(row: &[f32], x: &[f32], dcol: usize) -> f32 {
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = dcol / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += row[i] * x[i];
+        acc1 += row[i + 1] * x[i + 1];
+        acc2 += row[i + 2] * x[i + 2];
+        acc3 += row[i + 3] * x[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks * 4..dcol {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+/// Rows `row0..row0+y.len()` of y = W x. The shared serial core of
+/// [`matvec_f32`] — per-row arithmetic is independent of how rows are
+/// chunked, which is what makes the parallel wrapper bit-identical at
+/// any thread count.
 fn matvec_f32_rows(w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
     for (i, yr) in y.iter_mut().enumerate() {
         let r = row0 + i;
-        let row = &w[r * dcol..(r + 1) * dcol];
-        let mut acc0 = 0.0f32;
-        let mut acc1 = 0.0f32;
-        let mut acc2 = 0.0f32;
-        let mut acc3 = 0.0f32;
-        let chunks = dcol / 4;
-        for c in 0..chunks {
-            let i = c * 4;
-            acc0 += row[i] * x[i];
-            acc1 += row[i + 1] * x[i + 1];
-            acc2 += row[i + 2] * x[i + 2];
-            acc3 += row[i + 3] * x[i + 3];
-        }
-        let mut acc = acc0 + acc1 + acc2 + acc3;
-        for i in chunks * 4..dcol {
-            acc += row[i] * x[i];
-        }
-        *yr = acc;
+        *yr = dot4(&w[r * dcol..(r + 1) * dcol], x, dcol);
     }
 }
 
@@ -100,6 +108,88 @@ pub fn matvec_f32_bias_serial(
     matvec_f32_serial(w, x, drow, dcol, y);
     for (yv, &bv) in y.iter_mut().zip(b) {
         *yv += bv;
+    }
+}
+
+/// Serial core of [`matmul_f32`]: rows `row0..` of Y = W·X over `n`
+/// stacked activations. `xs` is sequence-major (n × dcol); `ys` is
+/// ROW-major (rows × n) so a row-range parallel partition writes
+/// contiguous chunks. Each weight row is read once for all n columns —
+/// the continuous-batching win: N sequences advance per pass over the
+/// weights. Per-(row, sequence) arithmetic is exactly [`dot4`], i.e.
+/// bit-identical to n separate [`matvec_f32`] calls.
+fn matmul_f32_rows(w: &[f32], xs: &[f32], dcol: usize, n: usize, row0: usize, ys: &mut [f32]) {
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let row = &w[r * dcol..(r + 1) * dcol];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot4(row, &xs[j * dcol..(j + 1) * dcol], dcol);
+        }
+    }
+}
+
+/// Batched Y = W·X: `xs` sequence-major (n × dcol), `ys` row-major
+/// (drow × n). Row-range parallel like [`matvec_f32`]; bit-identical to
+/// n independent matvecs at every thread count.
+pub fn matmul_f32(w: &[f32], xs: &[f32], drow: usize, dcol: usize, n: usize, ys: &mut [f32]) {
+    assert_eq!(w.len(), drow * dcol);
+    assert_eq!(xs.len(), n * dcol);
+    assert_eq!(ys.len(), drow * n);
+    if n == 0 {
+        return;
+    }
+    let pool = pool_for(drow * dcol);
+    par::for_rows_mut(&pool, ys, drow, n, |rows, chunk| {
+        matmul_f32_rows(w, xs, dcol, n, rows.start, chunk);
+    });
+}
+
+/// Serial twin of [`matmul_f32`] (see [`matvec_f32_serial`]).
+pub fn matmul_f32_serial(w: &[f32], xs: &[f32], drow: usize, dcol: usize, n: usize, ys: &mut [f32]) {
+    assert_eq!(w.len(), drow * dcol);
+    assert_eq!(xs.len(), n * dcol);
+    assert_eq!(ys.len(), drow * n);
+    if n == 0 {
+        return;
+    }
+    matmul_f32_rows(w, xs, dcol, n, 0, ys);
+}
+
+/// Batched Y = W·X + b (bias broadcast over the n columns of each row).
+pub fn matmul_f32_bias(
+    w: &[f32],
+    xs: &[f32],
+    b: &[f32],
+    drow: usize,
+    dcol: usize,
+    n: usize,
+    ys: &mut [f32],
+) {
+    matmul_f32(w, xs, drow, dcol, n, ys);
+    add_bias_rows(ys, b, n);
+}
+
+/// Serial twin of [`matmul_f32_bias`].
+pub fn matmul_f32_bias_serial(
+    w: &[f32],
+    xs: &[f32],
+    b: &[f32],
+    drow: usize,
+    dcol: usize,
+    n: usize,
+    ys: &mut [f32],
+) {
+    matmul_f32_serial(w, xs, drow, dcol, n, ys);
+    add_bias_rows(ys, b, n);
+}
+
+/// ys[r*n + j] += b[r] — the batched form of the matvec bias pass (one
+/// add per element, same arithmetic as the single-sequence path).
+fn add_bias_rows(ys: &mut [f32], b: &[f32], n: usize) {
+    for (yrow, &bv) in ys.chunks_exact_mut(n).zip(b) {
+        for yv in yrow.iter_mut() {
+            *yv += bv;
+        }
     }
 }
 
@@ -234,6 +324,160 @@ fn packed_rows_general(p: &PackedMatrix, x: &[f32], group: usize, row0: usize, y
             b => panic!("unsupported bit width {b}"),
         };
     }
+}
+
+/// Aligned batched core: rows `row0..` of Y = dequant(P)·X for `n`
+/// stacked activations. Each packed u32 word is decoded ONCE into its
+/// `[f32; CPW]` lane array and FMA'd into every sequence's lane
+/// accumulators — the packed-weight read (the §Practical Speedups
+/// bottleneck) is amortized over the whole batch. Per-sequence
+/// accumulation order (lanes within words, words within groups, groups
+/// within the row) is identical to [`dot_packed_row_aligned`], so the
+/// batched result is bit-identical to n independent packed matvecs.
+fn matmul_rows_packed_aligned<const BITS: u32, const CPW: usize>(
+    p: &PackedMatrix,
+    xeffs: &[f32],
+    xsums: &[f32],
+    wpg: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    let mask = (1u32 << BITS) - 1;
+    let padded = p.nwords * CPW;
+    // per-sequence lane accumulators, reset per group
+    let mut accs = vec![0.0f32; n * CPW];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for (gi, gwords) in words.chunks_exact(wpg).enumerate() {
+            accs.fill(0.0);
+            let gbase = gi * wpg * CPW;
+            for (wi, &w) in gwords.iter().enumerate() {
+                let mut dec = [0.0f32; CPW];
+                for k in 0..CPW {
+                    dec[k] = ((w >> (BITS as usize * k)) & mask) as f32;
+                }
+                let off = gbase + wi * CPW;
+                for j in 0..n {
+                    let xg = &xeffs[j * padded + off..j * padded + off + CPW];
+                    let a = &mut accs[j * CPW..(j + 1) * CPW];
+                    for k in 0..CPW {
+                        a[k] += dec[k] * xg[k];
+                    }
+                }
+            }
+            let s = scales[gi];
+            let z = zeros[gi];
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                let acc: f32 = accs[j * CPW..(j + 1) * CPW].iter().sum();
+                *yv += s * acc - s * z * xsums[j * p.ngroups + gi];
+            }
+        }
+    }
+}
+
+/// General (ragged) batched core: falls back to the per-sequence general
+/// dot (each row re-read per sequence — only odd test shapes land here).
+fn matmul_rows_packed_general(
+    p: &PackedMatrix,
+    xs: &[f32],
+    group: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            let x = &xs[j * p.dcol..(j + 1) * p.dcol];
+            *yv = match p.bits {
+                2 => dot_packed_row_general::<2>(words, x, scales, zeros, p.dcol, group),
+                3 => dot_packed_row_general::<3>(words, x, scales, zeros, p.dcol, group),
+                4 => dot_packed_row_general::<4>(words, x, scales, zeros, p.dcol, group),
+                8 => dot_packed_row_general::<8>(words, x, scales, zeros, p.dcol, group),
+                b => panic!("unsupported bit width {b}"),
+            };
+        }
+    }
+}
+
+/// Batched Y = dequant(P)·X: `xs` sequence-major (n × dcol), `ys`
+/// row-major (drow × n). The continuous-batching kernel: packed weight
+/// rows are read once per step for ALL n sequences. Row-range parallel;
+/// bit-identical to n independent [`matvec_packed`] calls at every
+/// thread count.
+pub fn matmul_packed(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_packed_with(p, xs, n, ys, pool_for(p.drow * p.dcol));
+}
+
+/// Serial twin of [`matmul_packed`] (see [`matvec_f32_serial`]).
+pub fn matmul_packed_serial(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_packed_with(p, xs, n, ys, Pool::serial());
+}
+
+fn matmul_packed_with(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32], pool: Pool) {
+    assert_eq!(xs.len(), n * p.dcol);
+    assert_eq!(ys.len(), p.drow * n);
+    if n == 0 {
+        return;
+    }
+    let group = p.dcol / p.ngroups;
+    let cpw = (32 / p.bits) as usize;
+    // same aligned/ragged split as matvec_packed_with
+    let aligned = p.ngroups == 1 || (group % cpw == 0 && p.nwords * cpw == p.dcol);
+    if aligned {
+        let padded = p.nwords * cpw;
+        let mut xeff_store;
+        let xeffs: &[f32] = if padded == p.dcol {
+            xs
+        } else {
+            xeff_store = vec![0.0f32; n * padded];
+            for j in 0..n {
+                xeff_store[j * padded..j * padded + p.dcol]
+                    .copy_from_slice(&xs[j * p.dcol..(j + 1) * p.dcol]);
+            }
+            &xeff_store
+        };
+        // per-(sequence, group) Σx — row-independent, computed once
+        let mut xsums = vec![0.0f32; n * p.ngroups];
+        for j in 0..n {
+            let x = &xs[j * p.dcol..(j + 1) * p.dcol];
+            for (gi, xc) in x.chunks_exact(group).enumerate() {
+                xsums[j * p.ngroups + gi] = xc.iter().sum();
+            }
+        }
+        let wpg = p.nwords / p.ngroups;
+        par::for_rows_mut(&pool, ys, p.drow, n, |rows, chunk| match p.bits {
+            2 => matmul_rows_packed_aligned::<2, 16>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
+            3 => matmul_rows_packed_aligned::<3, 10>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
+            4 => matmul_rows_packed_aligned::<4, 8>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
+            8 => matmul_rows_packed_aligned::<8, 4>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
+            b => panic!("unsupported bit width {b}"),
+        });
+        return;
+    }
+    par::for_rows_mut(&pool, ys, p.drow, n, |rows, chunk| {
+        matmul_rows_packed_general(p, xs, group, n, rows.start, chunk);
+    });
+}
+
+/// Batched Y = dequant(P)·X + b.
+pub fn matmul_packed_bias(p: &PackedMatrix, xs: &[f32], b: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_packed(p, xs, n, ys);
+    add_bias_rows(ys, b, n);
+}
+
+/// Serial twin of [`matmul_packed_bias`].
+pub fn matmul_packed_bias_serial(p: &PackedMatrix, xs: &[f32], b: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_packed_serial(p, xs, n, ys);
+    add_bias_rows(ys, b, n);
 }
 
 /// y = dequant(P) x — the quantized-matrix × fp-vector kernel (the Rust
@@ -387,6 +631,72 @@ mod tests {
         for i in 0..6 {
             assert!((y2[i] - y1[i] - b[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn matmul_f32_bitwise_equals_stacked_matvecs() {
+        // includes dcol not divisible by the unroll and n > drow
+        for (drow, dcol, n) in [(7usize, 13usize, 3usize), (16, 33, 5), (3, 64, 9)] {
+            let w = rand_vec(drow * dcol, 21 + n as u64);
+            let xs = rand_vec(n * dcol, 22 + drow as u64);
+            let b = rand_vec(drow, 23);
+            let mut ys = vec![0.0f32; drow * n];
+            matmul_f32_bias(&w, &xs, &b, drow, dcol, n, &mut ys);
+            for j in 0..n {
+                let mut y = vec![0.0f32; drow];
+                matvec_f32_bias(&w, &xs[j * dcol..(j + 1) * dcol], &b, drow, dcol, &mut y);
+                for r in 0..drow {
+                    assert_eq!(
+                        ys[r * n + j].to_bits(),
+                        y[r].to_bits(),
+                        "drow={drow} dcol={dcol} n={n} r={r} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_packed_bitwise_equals_stacked_matvecs() {
+        // aligned (1024), ragged tail (37), and grouped layouts
+        for (bits, g) in [(2u32, 0usize), (3, 0), (4, 16), (8, 0), (3, 37)] {
+            let (drow, dcol, n) = (12usize, if g == 37 { 37 } else { 1024 }, 4usize);
+            let g = if g == 37 { 0 } else { g };
+            let w = rand_vec(drow * dcol, bits as u64 * 17 + g as u64);
+            let r = rtn_quantize(&w, drow, dcol, bits, g);
+            let p = PackedMatrix::from_result(&r);
+            let xs = rand_vec(n * dcol, 31 + bits as u64);
+            let b = rand_vec(drow, 32);
+            let mut ys = vec![0.0f32; drow * n];
+            matmul_packed_bias(&p, &xs, &b, n, &mut ys);
+            for j in 0..n {
+                let mut y = vec![0.0f32; drow];
+                matvec_packed_bias(&p, &xs[j * dcol..(j + 1) * dcol], &b, &mut y);
+                for row in 0..drow {
+                    assert_eq!(
+                        ys[row * n + j].to_bits(),
+                        y[row].to_bits(),
+                        "bits={bits} g={g} row={row} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_serial_twins_match() {
+        let (drow, dcol, n) = (9usize, 64usize, 3usize);
+        let w = rand_vec(drow * dcol, 41);
+        let xs = rand_vec(n * dcol, 42);
+        let (mut a, mut b) = (vec![0.0f32; drow * n], vec![0.0f32; drow * n]);
+        matmul_f32(&w, &xs, drow, dcol, n, &mut a);
+        matmul_f32_serial(&w, &xs, drow, dcol, n, &mut b);
+        assert_eq!(a, b);
+        let q = rtn_quantize(&w, drow, dcol, 4, 0);
+        let p = PackedMatrix::from_result(&q);
+        matmul_packed(&p, &xs, n, &mut a);
+        matmul_packed_serial(&p, &xs, n, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

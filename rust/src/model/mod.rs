@@ -10,6 +10,7 @@
 pub mod checkpoint;
 pub mod config;
 pub mod forward;
+pub mod kvpool;
 pub mod matvec;
 pub mod tensor;
 pub mod testkit;
@@ -17,4 +18,5 @@ pub mod testkit;
 pub use checkpoint::{Checkpoint, QuantizedCheckpoint};
 pub use config::ModelConfig;
 pub use forward::{CpuModel, KvCache, LinearWeight};
+pub use kvpool::{KvPool, SeqCache};
 pub use tensor::Tensor;

@@ -1,0 +1,350 @@
+//! Continuous-batching suite: the serving parity contract (DESIGN.md
+//! §Serving) and the scheduler's backpressure/accounting invariants.
+//!
+//! * Batched `decode_steps` over the paged pool must equal sequential
+//!   `decode_step` per sequence: dense linears BIT-identical, packed
+//!   within 1e-5 (the batched kernels keep the single-sequence
+//!   accumulation order, so packed is bit-identical too in practice).
+//! * Pool exhaustion must backpressure (preempt + FIFO re-queue), never
+//!   deadlock, and never leak pages: the free count returns to initial.
+//! * `make -C rust check` runs this suite under `GPTQ_THREADS=1` and
+//!   `=4`; the thread-flip test additionally pins bit-identity of the
+//!   batched kernels across pool sizes in-process.
+//! * The `#[ignore]`d soak test (`make -C rust soak`) drives a seeded
+//!   500-request trace asserting zero dropped/duplicated responses.
+
+use gptq_rs::coordinator::{GenRequest, Scheduler, SchedulerConfig};
+use gptq_rs::data::Rng;
+use gptq_rs::model::checkpoint::quantizable_keys;
+use gptq_rs::model::testkit::tiny_checkpoint;
+use gptq_rs::model::{CpuModel, KvCache, KvPool, QuantizedCheckpoint, SeqCache};
+use gptq_rs::quant::{rtn_quantize, PackedMatrix};
+use gptq_rs::util::par;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// The global thread count is process state; tests that flip it
+/// serialize through this lock (ignoring poisoning).
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn packed_tiny_model(seed: u64) -> CpuModel {
+    let ckpt = tiny_checkpoint(seed);
+    let mut packed = BTreeMap::new();
+    for key in quantizable_keys(&ckpt.config) {
+        let t = ckpt.get(&key);
+        let (o, i) = t.dims2();
+        packed.insert(key.clone(), PackedMatrix::from_result(&rtn_quantize(&t.data, o, i, 4, 16)));
+    }
+    let q = QuantizedCheckpoint::from_parts(ckpt.config.clone(), 4, 16, packed, &ckpt, vec![]);
+    CpuModel::from_quantized(&q)
+}
+
+/// Ragged deterministic token streams (vocab 32, lengths 2..=15).
+fn ragged_streams(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 2 + rng.below(14);
+            (0..len).map(|_| rng.below(32) as u8).collect()
+        })
+        .collect()
+}
+
+/// Per-stream logits from the sequential single-sequence decode path.
+fn sequential_logits(model: &mut CpuModel, streams: &[Vec<u8>]) -> Vec<Vec<Vec<f32>>> {
+    streams
+        .iter()
+        .map(|st| {
+            let mut cache = KvCache::new(&model.config);
+            st.iter().map(|&t| model.decode_step(&mut cache, t).to_vec()).collect()
+        })
+        .collect()
+}
+
+/// Per-stream logits from batched `decode_steps` over a paged pool;
+/// asserts no page leak on the way out.
+fn batched_logits(
+    model: &mut CpuModel,
+    streams: &[Vec<u8>],
+    pool_pages: usize,
+    page_size: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut pool = KvPool::new(&model.config, pool_pages, page_size);
+    let mut seqs: Vec<SeqCache> = (0..streams.len()).map(|_| SeqCache::new()).collect();
+    let mut out: Vec<Vec<Vec<f32>>> = streams.iter().map(|_| Vec::new()).collect();
+    let vocab = model.config.vocab;
+    let maxlen = streams.iter().map(Vec::len).max().unwrap_or(0);
+    for t in 0..maxlen {
+        let mut refs: Vec<&mut SeqCache> = Vec::new();
+        let mut toks = Vec::new();
+        let mut live = Vec::new();
+        for (j, sc) in seqs.iter_mut().enumerate() {
+            if t < streams[j].len() {
+                assert!(pool.reserve(sc, t + 1), "test pool sized too small");
+                refs.push(sc);
+                toks.push(streams[j][t]);
+                live.push(j);
+            }
+        }
+        let logits = model.decode_steps(&mut pool, &mut refs, &toks);
+        for (k, &j) in live.iter().enumerate() {
+            out[j].push(logits[k * vocab..(k + 1) * vocab].to_vec());
+        }
+    }
+    for sc in seqs.iter_mut() {
+        pool.release(sc);
+    }
+    assert_eq!(pool.free_pages(), pool.total_pages(), "page leak");
+    out
+}
+
+#[test]
+fn batched_equals_sequential_dense_bitwise() {
+    let ckpt = tiny_checkpoint(41);
+    let mut m = CpuModel::from_checkpoint(&ckpt);
+    let streams = ragged_streams(8, 43);
+    let want = sequential_logits(&mut m, &streams);
+    let got = batched_logits(&mut m, &streams, 64, 4);
+    for j in 0..streams.len() {
+        assert_eq!(want[j].len(), got[j].len());
+        for t in 0..want[j].len() {
+            for (a, b) in got[j][t].iter().zip(&want[j][t]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dense seq {j} step {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_equals_sequential_packed_within_tolerance() {
+    let mut m = packed_tiny_model(47);
+    let streams = ragged_streams(8, 53);
+    let want = sequential_logits(&mut m, &streams);
+    let got = batched_logits(&mut m, &streams, 64, 4);
+    for j in 0..streams.len() {
+        for t in 0..want[j].len() {
+            for (a, b) in got[j][t].iter().zip(&want[j][t]) {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "packed seq {j} step {t}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_thread_count_bit_identical() {
+    // batched kernels partition output rows; thread count must never
+    // move a bit (the PR-2 determinism contract extended to serving)
+    let guard = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let streams = ragged_streams(6, 61);
+    let run = |threads: usize| {
+        par::set_threads(threads);
+        let mut m = CpuModel::from_checkpoint(&tiny_checkpoint(59));
+        let dense = batched_logits(&mut m, &streams, 32, 8);
+        let mut q = packed_tiny_model(59);
+        let packed = batched_logits(&mut q, &streams, 32, 8);
+        let bits = |l: Vec<Vec<Vec<f32>>>| -> Vec<u32> {
+            l.into_iter().flatten().flatten().map(f32::to_bits).collect()
+        };
+        (bits(dense), bits(packed))
+    };
+    let a = run(1);
+    let b = run(4);
+    par::set_threads_env();
+    drop(guard);
+    assert_eq!(a, b);
+}
+
+/// The sequential single-stream generation loop (what `serve.rs` ran
+/// before continuous batching) — the scheduler's parity oracle.
+fn generate_sequential(model: &mut CpuModel, prompt: &[u8], max_new: usize) -> Vec<u8> {
+    let mut cache = KvCache::new(&model.config);
+    let max_seq = model.config.max_seq;
+    let mut logits: Vec<f32> = Vec::new();
+    for &b in prompt.iter().take(max_seq.saturating_sub(1)) {
+        logits = model.decode_step(&mut cache, b).to_vec();
+    }
+    let mut tokens = Vec::new();
+    for _ in 0..max_new {
+        if cache.len >= max_seq {
+            break;
+        }
+        let next = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u8)
+            .unwrap_or(0);
+        logits = model.decode_step(&mut cache, next).to_vec();
+        tokens.push(next);
+    }
+    tokens
+}
+
+fn requests(n: usize, seed: u64) -> Vec<GenRequest> {
+    ragged_streams(n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, prompt)| GenRequest { id: i as u64, prompt, max_new_tokens: 1 + i % 5 })
+        .collect()
+}
+
+#[test]
+fn scheduler_n8_matches_sequential_generate_dense_and_packed() {
+    for packed in [false, true] {
+        let mut model = if packed {
+            packed_tiny_model(67)
+        } else {
+            CpuModel::from_checkpoint(&tiny_checkpoint(67))
+        };
+        let reqs = requests(8, 71);
+        let want: Vec<Vec<u8>> = reqs
+            .iter()
+            .map(|r| generate_sequential(&mut model, &r.prompt, r.max_new_tokens))
+            .collect();
+        let cfg = SchedulerConfig { max_batch: 8, ..Default::default() };
+        let mut sched = Scheduler::new(0, model, cfg);
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let mut got = sched.run_until_idle();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 8);
+        for (r, w) in got.iter().zip(&want) {
+            assert_eq!(&r.tokens, w, "packed={packed} id={}", r.id);
+            assert_eq!(r.per_token_ms.len(), r.tokens.len());
+        }
+        assert_eq!(sched.free_pages(), sched.total_pages(), "page leak (packed={packed})");
+    }
+}
+
+#[test]
+fn pool_exhaustion_backpressures_and_completes() {
+    // 6 pages × 2 positions = 12 cached positions. Admission reserves
+    // prompt+1 (2 pages per request), so 3 sequences co-admit; each then
+    // grows to 8 positions (4 pages) during decode — 12 pages of demand
+    // against 6 — which forces preemption deterministically.
+    let cfg = SchedulerConfig {
+        max_batch: 8,
+        pool_pages: 6,
+        page_size: 2,
+        prefill_chunk: 3,
+        eos: None,
+    };
+    let mut model = CpuModel::from_checkpoint(&tiny_checkpoint(73));
+    let reqs: Vec<GenRequest> = (0..16u64)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: vec![(i % 32) as u8, (i * 7 % 32) as u8, (i * 13 % 32) as u8],
+            max_new_tokens: 5,
+        })
+        .collect();
+    let want: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| generate_sequential(&mut model, &r.prompt, r.max_new_tokens))
+        .collect();
+    let mut sched = Scheduler::new(0, model, cfg);
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut steps = 0;
+    let mut got = Vec::new();
+    while !sched.is_idle() {
+        got.extend(sched.step());
+        steps += 1;
+        assert!(steps < 100_000, "scheduler deadlocked under pool exhaustion");
+    }
+    assert!(sched.preemptions() > 0, "pool never backpressured — test not exercising eviction");
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 16, "dropped responses");
+    for (r, w) in got.iter().zip(&want) {
+        assert_eq!(&r.tokens, w, "id={} (restart must reproduce greedy decode)", r.id);
+    }
+    assert_eq!(sched.free_pages(), 6, "page leak after backpressure");
+}
+
+#[test]
+fn interleaved_admit_and_evict_with_ragged_prompts() {
+    let cfg = SchedulerConfig {
+        max_batch: 4,
+        pool_pages: 8,
+        page_size: 2,
+        prefill_chunk: 2,
+        eos: None,
+    };
+    let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(83)), cfg);
+    let reqs = requests(12, 89);
+    let mut submitted = 0usize;
+    let mut got = Vec::new();
+    let mut rng = Rng::new(97);
+    let mut steps = 0;
+    // trickle submissions between iterations so admission interleaves
+    // with in-flight decode and completions
+    while submitted < reqs.len() || !sched.is_idle() {
+        for _ in 0..rng.below(3) {
+            if submitted < reqs.len() {
+                sched.submit(reqs[submitted].clone());
+                submitted += 1;
+            }
+        }
+        got.extend(sched.step());
+        steps += 1;
+        assert!(steps < 100_000, "interleaved run deadlocked");
+    }
+    let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..12).collect::<Vec<u64>>(), "dropped or duplicated responses");
+    assert!(got.iter().all(|r| !r.tokens.is_empty()));
+    assert_eq!(sched.free_pages(), 8);
+}
+
+/// `make -C rust soak`: seeded 500-request trace against a deliberately
+/// tight pool — zero dropped/duplicated responses, zero leaked pages.
+#[test]
+#[ignore]
+fn soak_500_request_trace() {
+    let cfg = SchedulerConfig {
+        max_batch: 8,
+        pool_pages: 12,
+        page_size: 4,
+        prefill_chunk: 4,
+        eos: None,
+    };
+    let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(101)), cfg);
+    let total = 500usize;
+    let mut rng = Rng::new(103);
+    let mut submitted = 0usize;
+    let mut got = Vec::new();
+    let mut steps = 0usize;
+    while submitted < total || !sched.is_idle() {
+        // bursty arrivals: 0..=4 new requests per iteration
+        for _ in 0..rng.below(5) {
+            if submitted < total {
+                let plen = 1 + rng.below(14);
+                let prompt: Vec<u8> = (0..plen).map(|_| rng.below(32) as u8).collect();
+                sched.submit(GenRequest {
+                    id: submitted as u64,
+                    prompt,
+                    max_new_tokens: rng.below(9),
+                });
+                submitted += 1;
+            }
+        }
+        got.extend(sched.step());
+        steps += 1;
+        assert!(steps < 1_000_000, "soak deadlocked");
+    }
+    let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..total as u64).collect::<Vec<u64>>(), "dropped/duplicated responses");
+    assert_eq!(sched.free_pages(), 12, "page leak over the soak");
+    println!(
+        "soak: {} responses over {} iterations, {} preemptions, metrics: {}",
+        got.len(),
+        steps,
+        sched.preemptions(),
+        sched.metrics().summary()
+    );
+}
