@@ -1,0 +1,190 @@
+//! Bench: the SIMD kernel dispatch matrix — every available ISA × bits
+//! {2,3,4,8,f32} × decode batch {1,4,16} over the d=1024/ff=4096 decode
+//! layer (wqkv, wo, wup, wdn), SINGLE-threaded so the number is per-core
+//! kernel throughput (threads scale on top — see `bench matvec`).
+//!
+//! ```bash
+//! cargo bench --bench kernel_sweep                               # print
+//! cargo bench --bench kernel_sweep -- --record BENCH_kernels.json
+//! ```
+//!
+//! Reports tokens/s AND achieved GB/s against a measured streaming-read
+//! roofline (`util::bench::Roofline`): these kernels are memory-bound, so
+//! a 4-bit kernel at f32's GB/s is already the paper's ~8× traffic win,
+//! and %-of-peak says how much headroom is left. Caveat on %peak: the
+//! roofline is a DRAM-streaming ceiling, but the packed layer set (~5 MB
+//! at 4-bit vs ~37 MB f32) can sit in LLC — cache-resident widths can
+//! legitimately exceed 100% (the f32 rows are the apples-to-apples DRAM
+//! comparison). Batch 1 exercises the
+//! tiled matvec path (`LinearWeight::apply_with`), batch >1 the batched
+//! decode-once kernels (`apply_batch`) — exactly what `decode_step` /
+//! `decode_steps` run in serving.
+
+use gptq_rs::data::Rng;
+use gptq_rs::model::kernels::{self, Isa};
+use gptq_rs::model::LinearWeight;
+use gptq_rs::quant::{rtn_quantize, PackedMatrix};
+use gptq_rs::util::bench::{achieved_gbps, bench_auto, black_box, write_bench_json, Roofline};
+use gptq_rs::util::cli::Args;
+use gptq_rs::util::json::Json;
+use gptq_rs::util::par;
+
+/// One decode layer of the bench model (d=1024, ff=4096).
+const LAYER_SHAPES: [(usize, usize); 4] = [(3072, 1024), (1024, 1024), (4096, 1024), (1024, 4096)];
+const BATCHES: [usize; 3] = [1, 4, 16];
+/// 0 encodes the dense f32 baseline.
+const BITS: [u32; 5] = [0, 2, 3, 4, 8];
+
+fn bits_key(bits: u32) -> String {
+    if bits == 0 {
+        "f32".to_string()
+    } else {
+        format!("{bits}bit")
+    }
+}
+
+struct Layer {
+    lin: LinearWeight,
+    drow: usize,
+    dcol: usize,
+}
+
+/// Build the 4 layer linears at `bits` under the CURRENT global ISA (the
+/// tiled layout is built per-ISA at load time, like real model loading).
+fn build_layers(bits: u32) -> Vec<Layer> {
+    LAYER_SHAPES
+        .iter()
+        .map(|&(drow, dcol)| {
+            let mut rng = Rng::new(drow as u64 * 13 + dcol as u64 + bits as u64);
+            let w: Vec<f32> = (0..drow * dcol).map(|_| rng.unit()).collect();
+            let lin = if bits == 0 {
+                LinearWeight::Dense { w, drow, dcol }
+            } else {
+                LinearWeight::packed(PackedMatrix::from_result(&rtn_quantize(
+                    &w, drow, dcol, bits, 0,
+                )))
+            };
+            Layer { lin, drow, dcol }
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let record = args.get("record").map(String::from);
+    par::set_threads(1); // per-core kernel throughput
+    let roofline = Roofline::measure();
+    println!("streaming-read roofline (1 thread): {:.2} GB/s", roofline.peak_gbps);
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut summary: Vec<(String, Json)> = Vec::new();
+    // (bits_key, batch) -> scalar-ISA ms/layer, for the speedup summary
+    let mut scalar_ms: Vec<((String, usize), f64)> = Vec::new();
+
+    for isa in kernels::available() {
+        kernels::set_isa(isa);
+        println!("\n== isa={isa} (threads=1) ==");
+        println!(
+            "{:>6} {:>6} {:>12} {:>12} {:>10} {:>8} {:>14}",
+            "bits", "batch", "ms/layer", "tokens/s", "GB/s", "%peak", "vs scalar"
+        );
+        for bits in BITS {
+            let layers = build_layers(bits);
+            let traffic: usize = layers.iter().map(|l| l.lin.traffic_bytes()).sum();
+            for &batch in &BATCHES {
+                let xs: Vec<Vec<f32>> = layers
+                    .iter()
+                    .map(|l| {
+                        let mut rng = Rng::new(l.dcol as u64 + batch as u64);
+                        (0..batch * l.dcol).map(|_| rng.unit()).collect()
+                    })
+                    .collect();
+                let mut ys: Vec<Vec<f32>> =
+                    layers.iter().map(|l| vec![0.0f32; l.drow * batch]).collect();
+                let biases: Vec<Vec<f32>> = layers.iter().map(|l| vec![0.0f32; l.drow]).collect();
+                let key = bits_key(bits);
+                let r = bench_auto(&format!("{key} b{batch} {isa}"), 300.0, 10, || {
+                    for (i, l) in layers.iter().enumerate() {
+                        if batch == 1 {
+                            l.lin.apply_with(
+                                black_box(&xs[i]),
+                                &biases[i],
+                                &mut ys[i],
+                                false,
+                            );
+                        } else {
+                            l.lin.apply_batch(
+                                black_box(&xs[i]),
+                                &biases[i],
+                                batch,
+                                &mut ys[i],
+                                false,
+                            );
+                        }
+                        black_box(&ys[i]);
+                    }
+                });
+                let tokens_per_s = batch as f64 * 1e3 / r.mean_ms;
+                let gbps = achieved_gbps(traffic, r.mean_ms);
+                let speedup = if isa == Isa::Scalar {
+                    scalar_ms.push(((key.clone(), batch), r.mean_ms));
+                    1.0
+                } else {
+                    scalar_ms
+                        .iter()
+                        .find(|(k, _)| k.0 == key && k.1 == batch)
+                        .map(|(_, ms)| ms / r.mean_ms)
+                        .unwrap_or(1.0)
+                };
+                println!(
+                    "{:>6} {:>6} {:>12.3} {:>12.1} {:>10.2} {:>7.1}% {:>13.2}x",
+                    key,
+                    batch,
+                    r.mean_ms,
+                    tokens_per_s,
+                    gbps,
+                    roofline.fraction(gbps) * 100.0,
+                    speedup
+                );
+                results.push(Json::obj(vec![
+                    ("isa", Json::Str(isa.name().to_string())),
+                    ("bits", Json::Str(key.clone())),
+                    ("batch", Json::Num(batch as f64)),
+                    ("ms_per_layer", Json::Num(r.mean_ms)),
+                    ("tokens_per_s", Json::Num(tokens_per_s)),
+                    ("gbps", Json::Num(gbps)),
+                    ("frac_peak", Json::Num(roofline.fraction(gbps))),
+                    ("speedup_vs_scalar", Json::Num(speedup)),
+                ]));
+                if isa != Isa::Scalar && key == "4bit" && batch == 16 {
+                    // the acceptance metric: 4-bit batched decode, batch 16
+                    summary.push((
+                        format!("speedup_4bit_b16_{}_over_scalar", isa.name()),
+                        Json::Num(speedup),
+                    ));
+                }
+            }
+        }
+    }
+    kernels::set_isa_env();
+    par::set_threads_env();
+
+    summary.push(("peak_gbps".to_string(), Json::Num(roofline.peak_gbps)));
+    summary.push((
+        "isas".to_string(),
+        Json::Str(
+            kernels::available().iter().map(|i| i.name()).collect::<Vec<_>>().join(","),
+        ),
+    ));
+
+    println!("\nmemory-bound shape: once GB/s saturates, tokens/s tracks the packed");
+    println!("traffic reduction (≈32/bits vs f32); the SIMD kernels exist to reach");
+    println!("that saturation at batch 1-16, which the scalar decode cannot.");
+
+    if let Some(path) = record {
+        let summary_refs: Vec<(&str, Json)> =
+            summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        write_bench_json(&path, "kernels", results, summary_refs).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

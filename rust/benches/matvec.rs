@@ -16,7 +16,7 @@
 use gptq_rs::data::Rng;
 use gptq_rs::model::matvec::{matvec_f32, matvec_packed};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
-use gptq_rs::util::bench::{bench_auto, black_box, write_bench_json};
+use gptq_rs::util::bench::{bench_auto, black_box, write_bench_json, Roofline};
 use gptq_rs::util::cli::Args;
 use gptq_rs::util::json::Json;
 use gptq_rs::util::par;
@@ -112,8 +112,18 @@ fn main() {
     let ncpu = par::auto_threads();
     let thread_counts: Vec<usize> = if ncpu > 1 { vec![1, ncpu] } else { vec![1] };
 
+    // roofline context: memory-bound kernels should be judged against the
+    // machine's streaming bandwidth, not just speedup (EXPERIMENTS.md)
+    let roofline = Roofline::measure();
+    println!(
+        "streaming-read roofline (1 thread): {:.2} GB/s — kernel ISA: {}",
+        roofline.peak_gbps,
+        gptq_rs::model::kernels::isa()
+    );
+
     let mut all_results: Vec<Json> = Vec::new();
     let mut summary: Vec<(String, Json)> = Vec::new();
+    summary.push(("peak_gbps_t1".to_string(), Json::Num(roofline.peak_gbps)));
     let mut ms_layer_t1 = 0.0f64;
     for &t in &thread_counts {
         par::set_threads(t);

@@ -10,7 +10,11 @@
 //! decode; N in-flight sequences advance one token per scheduler
 //! iteration against shared weight reads — the multi-user form of the
 //! autoregressive, matvec-bound regime the paper targets (§Practical
-//! Speedups).
+//! Speedups). Every linear in that step runs on the runtime-dispatched
+//! SIMD kernels (`model::kernels`, `--isa` / `GPTQ_ISA`): the batched
+//! sub-step decodes each packed word once per batch on the active ISA,
+//! and batch-1 decode uses the register-tiled layout when the model was
+//! loaded under a SIMD ISA (DESIGN.md §Kernels).
 
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};

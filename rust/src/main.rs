@@ -26,7 +26,7 @@ use gptq_rs::Result;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [--threads N] <info|quantize|eval|serve> [flags]
+const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [--threads N] [--isa auto|scalar|avx2|neon] <info|quantize|eval|serve> [flags]
   quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq] [--calib-segments N] [--out F]
   eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
   serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]
@@ -49,6 +49,11 @@ fn main() -> Result<()> {
     // cores; unset/1 = serial (exactly the single-threaded code paths)
     if let Some(t) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         gptq_rs::util::par::set_threads(t);
+    }
+    // global kernel ISA: --isa beats GPTQ_ISA; default auto-detect, and an
+    // unsupported request clamps to scalar (DESIGN.md §Kernels)
+    if let Some(s) = args.get("isa") {
+        gptq_rs::model::kernels::set_isa_name(s)?;
     }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let backend = args.str_or("backend", "reference");
@@ -99,8 +104,9 @@ fn quantize(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let mut pipeline = QuantPipeline::new(&mut rt, &size, cfg);
     let report = pipeline.run(&mut ckpt, &calib)?;
     println!(
-        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, backend {backend}, threads {}) in {:.2}s; mean layer sq-err {:.4e}",
+        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, backend {backend}, threads {}, isa {}) in {:.2}s; mean layer sq-err {:.4e}",
         gptq_rs::util::par::threads(),
+        gptq_rs::model::kernels::isa(),
         report.total_s,
         report.mean_layer_error
     );
@@ -203,6 +209,11 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             eos: None,
         },
     };
+    println!(
+        "kernel ISA: {} (threads {})",
+        gptq_rs::model::kernels::isa(),
+        gptq_rs::util::par::threads()
+    );
     let mut server = Server::start(cfg, |_| {
         build_model(&artifacts, &entry, quantized.as_deref()).expect("model build")
     });

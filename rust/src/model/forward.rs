@@ -11,28 +11,58 @@
 //! paper's deployment story.
 
 use crate::model::checkpoint::{Checkpoint, QuantizedCheckpoint};
+use crate::model::kernels::{self, TiledPacked};
 use crate::model::kvpool::{KvPool, SeqCache};
 use crate::model::matvec::{
     matmul_f32_bias, matmul_f32_bias_serial, matmul_packed_bias, matmul_packed_bias_serial,
     matvec_f32_bias, matvec_f32_bias_serial, matvec_packed_bias, matvec_packed_bias_serial,
-    MATVEC_PAR_MIN_ELEMS,
+    matvec_tiled_bias, matvec_tiled_bias_serial, MATVEC_PAR_MIN_ELEMS,
 };
 use crate::model::ModelConfig;
 use crate::quant::PackedMatrix;
 use crate::util::par::{self, Pool};
 
+/// A packed linear's serving form: the canonical [`PackedMatrix`] plus,
+/// when the active ISA has a tiled microkernel for this bit width, the
+/// register-tiled interleaved copy ([`TiledPacked`], built once here at
+/// load time — DESIGN.md §Kernels). The batch-1 decode matvec runs on the
+/// tiled layout; the batched matmul and every ragged shape stay on the
+/// flat layout (same results — see `matvec::matvec_tiled`).
+#[derive(Debug, Clone)]
+pub struct PackedLinear {
+    pub packed: PackedMatrix,
+    pub tiled: Option<TiledPacked>,
+}
+
+impl PackedLinear {
+    pub fn new(packed: PackedMatrix) -> Self {
+        let tiled = if kernels::tiled_supported(kernels::isa(), packed.bits) {
+            TiledPacked::from_packed(&packed)
+        } else {
+            None
+        };
+        PackedLinear { packed, tiled }
+    }
+}
+
 /// A linear layer's weights on the decode path.
 #[derive(Debug, Clone)]
 pub enum LinearWeight {
     Dense { w: Vec<f32>, drow: usize, dcol: usize },
-    Packed(PackedMatrix),
+    Packed(PackedLinear),
 }
 
 impl LinearWeight {
+    /// Wrap a packed matrix (builds the tiled layout when the active ISA
+    /// can use it).
+    pub fn packed(p: PackedMatrix) -> Self {
+        LinearWeight::Packed(PackedLinear::new(p))
+    }
+
     pub fn out_dim(&self) -> usize {
         match self {
             LinearWeight::Dense { drow, .. } => *drow,
-            LinearWeight::Packed(p) => p.drow,
+            LinearWeight::Packed(pl) => pl.packed.drow,
         }
     }
 
@@ -47,11 +77,23 @@ impl LinearWeight {
                     matvec_f32_bias(w, x, b, *drow, *dcol, y)
                 }
             }
-            LinearWeight::Packed(p) => {
+            LinearWeight::Packed(pl) => {
+                // the tiled layout is only entered when the CURRENT ISA
+                // has a microkernel for it — if the ISA was flipped after
+                // load (tests), fall back to the flat path so
+                // `GPTQ_ISA=scalar` always means the historical kernels
+                if let Some(t) = &pl.tiled {
+                    if kernels::tiled_supported(kernels::isa(), t.bits) {
+                        if serial {
+                            return matvec_tiled_bias_serial(t, x, b, y);
+                        }
+                        return matvec_tiled_bias(t, x, b, y);
+                    }
+                }
                 if serial {
-                    matvec_packed_bias_serial(p, x, b, y)
+                    matvec_packed_bias_serial(&pl.packed, x, b, y)
                 } else {
-                    matvec_packed_bias(p, x, b, y)
+                    matvec_packed_bias(&pl.packed, x, b, y)
                 }
             }
         }
@@ -76,21 +118,22 @@ impl LinearWeight {
                     matmul_f32_bias(w, xs, b, *drow, *dcol, n, ys)
                 }
             }
-            LinearWeight::Packed(p) => {
+            LinearWeight::Packed(pl) => {
                 if serial {
-                    matmul_packed_bias_serial(p, xs, b, n, ys)
+                    matmul_packed_bias_serial(&pl.packed, xs, b, n, ys)
                 } else {
-                    matmul_packed_bias(p, xs, b, n, ys)
+                    matmul_packed_bias(&pl.packed, xs, b, n, ys)
                 }
             }
         }
     }
 
-    /// Weight bytes touched per matvec (Table 5 traffic accounting).
+    /// Weight bytes touched per matvec (Table 5 traffic accounting; the
+    /// tiled layout streams the same bytes, just interleaved).
     pub fn traffic_bytes(&self) -> usize {
         match self {
             LinearWeight::Dense { w, .. } => w.len() * 4,
-            LinearWeight::Packed(p) => p.storage_bytes(),
+            LinearWeight::Packed(pl) => pl.packed.storage_bytes(),
         }
     }
 }
@@ -336,7 +379,7 @@ impl CpuModel {
         let blocks = (0..cfg.n_layers)
             .map(|l| {
                 let lin = |name: &str| {
-                    LinearWeight::Packed(q.packed[&format!("blocks.{l}.{name}")].clone())
+                    LinearWeight::packed(q.packed[&format!("blocks.{l}.{name}")].clone())
                 };
                 let fp = |name: &str| q.fp[&format!("blocks.{l}.{name}")].data.clone();
                 BlockWeights {

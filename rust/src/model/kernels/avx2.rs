@@ -1,0 +1,595 @@
+//! AVX2+FMA microkernels (x86_64) — `Isa::Avx2Fma`.
+//!
+//! Every function here carries `#[target_feature(enable = "avx2", "fma")]`
+//! and is only reached through the dispatch table after
+//! `is_x86_feature_detected!` confirmed both features (kernels::clamp), so
+//! the binary stays portable with `RUSTFLAGS` unset — dispatch, not
+//! compile flags, provides the ISA.
+//!
+//! Packed dequant goes through the per-group 2^bits LUT
+//! (`lut[code] = s·(code − zero)`, `kernels::fill_lut`):
+//! * 2-bit — 4-entry LUT, one `vpermps` per 8 codes (indices 0..3);
+//! * 3-bit — 8-entry LUT, one `vpermps`; codes 8/9 of each 10-code word
+//!   are folded through the same LUT scalar-side;
+//! * 4-bit — 16-entry LUT as two ymm halves: two `vpermps` (vpermps reads
+//!   only the low 3 index bits) blended on code bit 3;
+//! * 8-bit — a 256-entry table would thrash; dequant is the affine
+//!   `fma(code, s, −s·z)` instead, which computes the same value.
+//!
+//! §Determinism: lane order is fixed (one accumulator vector per group,
+//! horizontal sum in a fixed tree), and the batched kernels replay the
+//! exact per-sequence op order of the single-sequence kernels — so for
+//! this ISA, batched ≡ single bitwise and any thread count is
+//! bit-identical (the partition only moves whole rows).
+
+use super::fill_lut;
+use super::tiled::TiledPacked;
+use crate::quant::pack::PackedMatrix;
+use core::arch::x86_64::*;
+
+/// Horizontal sum in a fixed association tree — shared by every kernel so
+/// batched/single and tiled/flat results are bit-identical per row.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let mut t = [0.0f32; 8];
+    _mm256_storeu_ps(t.as_mut_ptr(), v);
+    ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7]))
+}
+
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum4(v: __m128) -> f32 {
+    let mut t = [0.0f32; 4];
+    _mm_storeu_ps(t.as_mut_ptr(), v);
+    (t[0] + t[1]) + (t[2] + t[3])
+}
+
+// -------------------------------------------------------------------------
+// Dense f32
+// -------------------------------------------------------------------------
+
+/// 8-lane×2 FMA row dot. The single dot shared by the dense matvec AND
+/// the batched dense matmul (bit-parity between them, per sequence).
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_f32(row: &[f32], x: &[f32], dcol: usize) -> f32 {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let chunks = dcol / 16;
+    for c in 0..chunks {
+        let i = c * 16;
+        acc0 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(row.as_ptr().add(i)),
+            _mm256_loadu_ps(x.as_ptr().add(i)),
+            acc0,
+        );
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(row.as_ptr().add(i + 8)),
+            _mm256_loadu_ps(x.as_ptr().add(i + 8)),
+            acc1,
+        );
+    }
+    let mut acc = hsum8(_mm256_add_ps(acc0, acc1));
+    for i in chunks * 16..dcol {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn f32_rows(w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        *yr = dot_f32(&w[r * dcol..(r + 1) * dcol], x, dcol);
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn f32_matmul_rows(
+    w: &[f32],
+    xs: &[f32],
+    dcol: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let row = &w[r * dcol..(r + 1) * dcol];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot_f32(row, &xs[j * dcol..(j + 1) * dcol], dcol);
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// Packed dequant helpers: one u32 word -> dequantized f32 lanes
+// -------------------------------------------------------------------------
+
+/// 4-bit: 8 codes -> 8 lanes. 16-entry LUT lives in (lo, hi) ymm halves.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dequant8_b4(w: u32, lo: __m256, hi: __m256) -> __m256 {
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let codes = _mm256_and_si256(
+        _mm256_srlv_epi32(_mm256_set1_epi32(w as i32), shifts),
+        _mm256_set1_epi32(15),
+    );
+    // vpermps reads only idx[2:0], so no pre-masking of the low half
+    let vlo = _mm256_permutevar8x32_ps(lo, codes);
+    let vhi = _mm256_permutevar8x32_ps(hi, codes);
+    let m = _mm256_castsi256_ps(_mm256_cmpgt_epi32(codes, _mm256_set1_epi32(7)));
+    _mm256_blendv_ps(vlo, vhi, m)
+}
+
+/// 3-bit: lanes 0..7 of a 10-code word (codes 8/9 are handled scalar by
+/// the caller through the same LUT).
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dequant8_b3(w: u32, lut: __m256) -> __m256 {
+    let shifts = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+    let codes = _mm256_and_si256(
+        _mm256_srlv_epi32(_mm256_set1_epi32(w as i32), shifts),
+        _mm256_set1_epi32(7),
+    );
+    _mm256_permutevar8x32_ps(lut, codes)
+}
+
+/// 2-bit: 16 codes -> two 8-lane vectors. 4-entry LUT in lanes 0..3.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dequant16_b2(w: u32, lut: __m256) -> (__m256, __m256) {
+    let v = _mm256_set1_epi32(w as i32);
+    let m = _mm256_set1_epi32(3);
+    let s0 = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+    let s1 = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+    let c0 = _mm256_and_si256(_mm256_srlv_epi32(v, s0), m);
+    let c1 = _mm256_and_si256(_mm256_srlv_epi32(v, s1), m);
+    (_mm256_permutevar8x32_ps(lut, c0), _mm256_permutevar8x32_ps(lut, c1))
+}
+
+/// 8-bit: 4 codes -> 4 lanes, affine dequant `fma(code, s, −s·z)`.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dequant4_b8(w: u32, s: __m128, nsz: __m128) -> __m128 {
+    let shifts = _mm_setr_epi32(0, 8, 16, 24);
+    let codes = _mm_and_si128(
+        _mm_srlv_epi32(_mm_set1_epi32(w as i32), shifts),
+        _mm_set1_epi32(255),
+    );
+    _mm_fmadd_ps(_mm_cvtepi32_ps(codes), s, nsz)
+}
+
+// -------------------------------------------------------------------------
+// Packed matvec, aligned fast path (single sequence)
+// -------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn packed_rows_aligned(
+    p: &PackedMatrix,
+    xeff: &[f32],
+    wpg: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    match p.bits {
+        2 => rows_b2(p, xeff, wpg, row0, y),
+        3 => rows_b3(p, xeff, wpg, row0, y),
+        4 => rows_b4(p, xeff, wpg, row0, y),
+        8 => rows_b8(p, xeff, wpg, row0, y),
+        b => panic!("unsupported bit width {b}"),
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn rows_b4(p: &PackedMatrix, xeff: &[f32], wpg: usize, row0: usize, y: &mut [f32]) {
+    let mut lut = [0.0f32; 16];
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        let mut acc_row = 0.0f32;
+        for gi in 0..p.ngroups {
+            fill_lut(4, scales[gi], zeros[gi], &mut lut);
+            let lo = _mm256_loadu_ps(lut.as_ptr());
+            let hi = _mm256_loadu_ps(lut.as_ptr().add(8));
+            let mut acc = _mm256_setzero_ps();
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let xv = _mm256_loadu_ps(xeff.as_ptr().add((gi * wpg + wi) * 8));
+                acc = _mm256_fmadd_ps(dequant8_b4(w, lo, hi), xv, acc);
+            }
+            acc_row += hsum8(acc);
+        }
+        *yr = acc_row;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn rows_b3(p: &PackedMatrix, xeff: &[f32], wpg: usize, row0: usize, y: &mut [f32]) {
+    let mut lut = [0.0f32; 8];
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        let mut acc_row = 0.0f32;
+        for gi in 0..p.ngroups {
+            fill_lut(3, scales[gi], zeros[gi], &mut lut);
+            let l = _mm256_loadu_ps(lut.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            let mut tacc = 0.0f32;
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 10;
+                let xv = _mm256_loadu_ps(xeff.as_ptr().add(off));
+                acc = _mm256_fmadd_ps(dequant8_b3(w, l), xv, acc);
+                tacc += lut[((w >> 24) & 7) as usize] * xeff[off + 8];
+                tacc += lut[((w >> 27) & 7) as usize] * xeff[off + 9];
+            }
+            acc_row += hsum8(acc) + tacc;
+        }
+        *yr = acc_row;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn rows_b2(p: &PackedMatrix, xeff: &[f32], wpg: usize, row0: usize, y: &mut [f32]) {
+    let mut lut = [0.0f32; 8];
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        let mut acc_row = 0.0f32;
+        for gi in 0..p.ngroups {
+            fill_lut(2, scales[gi], zeros[gi], &mut lut);
+            let l = _mm256_loadu_ps(lut.as_ptr());
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 16;
+                let (d0, d1) = dequant16_b2(w, l);
+                acc0 = _mm256_fmadd_ps(d0, _mm256_loadu_ps(xeff.as_ptr().add(off)), acc0);
+                acc1 = _mm256_fmadd_ps(d1, _mm256_loadu_ps(xeff.as_ptr().add(off + 8)), acc1);
+            }
+            acc_row += hsum8(_mm256_add_ps(acc0, acc1));
+        }
+        *yr = acc_row;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn rows_b8(p: &PackedMatrix, xeff: &[f32], wpg: usize, row0: usize, y: &mut [f32]) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        let mut acc_row = 0.0f32;
+        for gi in 0..p.ngroups {
+            let s = _mm_set1_ps(scales[gi]);
+            let nsz = _mm_set1_ps(-(scales[gi] * zeros[gi]));
+            let mut acc = _mm_setzero_ps();
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let xv = _mm_loadu_ps(xeff.as_ptr().add((gi * wpg + wi) * 4));
+                acc = _mm_fmadd_ps(dequant4_b8(w, s, nsz), xv, acc);
+            }
+            acc_row += hsum4(acc);
+        }
+        *yr = acc_row;
+    }
+}
+
+// -------------------------------------------------------------------------
+// Packed matmul, aligned fast path (batched): each word decoded ONCE and
+// FMA'd into every sequence's accumulator. Per-sequence op order replays
+// the single-sequence kernels above exactly -> bitwise batched parity.
+// -------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn packed_matmul_rows_aligned(
+    p: &PackedMatrix,
+    xeffs: &[f32],
+    wpg: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    match p.bits {
+        2 => matmul_b2(p, xeffs, wpg, n, row0, ys),
+        3 => matmul_b3(p, xeffs, wpg, n, row0, ys),
+        4 => matmul_b4(p, xeffs, wpg, n, row0, ys),
+        8 => matmul_b8(p, xeffs, wpg, n, row0, ys),
+        b => panic!("unsupported bit width {b}"),
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_b4(p: &PackedMatrix, xeffs: &[f32], wpg: usize, n: usize, row0: usize, ys: &mut [f32]) {
+    let padded = p.nwords * 8;
+    let mut lut = [0.0f32; 16];
+    let mut accs: Vec<__m256> = vec![_mm256_setzero_ps(); n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for gi in 0..p.ngroups {
+            fill_lut(4, scales[gi], zeros[gi], &mut lut);
+            let lo = _mm256_loadu_ps(lut.as_ptr());
+            let hi = _mm256_loadu_ps(lut.as_ptr().add(8));
+            for a in accs.iter_mut() {
+                *a = _mm256_setzero_ps();
+            }
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 8;
+                let deq = dequant8_b4(w, lo, hi);
+                for (j, a) in accs.iter_mut().enumerate() {
+                    let xv = _mm256_loadu_ps(xeffs.as_ptr().add(j * padded + off));
+                    *a = _mm256_fmadd_ps(deq, xv, *a);
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += hsum8(accs[j]);
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_b3(p: &PackedMatrix, xeffs: &[f32], wpg: usize, n: usize, row0: usize, ys: &mut [f32]) {
+    let padded = p.nwords * 10;
+    let mut lut = [0.0f32; 8];
+    let mut accs: Vec<__m256> = vec![_mm256_setzero_ps(); n];
+    let mut taccs = vec![0.0f32; n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for gi in 0..p.ngroups {
+            fill_lut(3, scales[gi], zeros[gi], &mut lut);
+            let l = _mm256_loadu_ps(lut.as_ptr());
+            for a in accs.iter_mut() {
+                *a = _mm256_setzero_ps();
+            }
+            taccs.fill(0.0);
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 10;
+                let deq = dequant8_b3(w, l);
+                let l8 = lut[((w >> 24) & 7) as usize];
+                let l9 = lut[((w >> 27) & 7) as usize];
+                for j in 0..n {
+                    let xv = _mm256_loadu_ps(xeffs.as_ptr().add(j * padded + off));
+                    accs[j] = _mm256_fmadd_ps(deq, xv, accs[j]);
+                    taccs[j] += l8 * xeffs[j * padded + off + 8];
+                    taccs[j] += l9 * xeffs[j * padded + off + 9];
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += hsum8(accs[j]) + taccs[j];
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_b2(p: &PackedMatrix, xeffs: &[f32], wpg: usize, n: usize, row0: usize, ys: &mut [f32]) {
+    let padded = p.nwords * 16;
+    let mut lut = [0.0f32; 8];
+    let mut accs0: Vec<__m256> = vec![_mm256_setzero_ps(); n];
+    let mut accs1: Vec<__m256> = vec![_mm256_setzero_ps(); n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for gi in 0..p.ngroups {
+            fill_lut(2, scales[gi], zeros[gi], &mut lut);
+            let l = _mm256_loadu_ps(lut.as_ptr());
+            for a in accs0.iter_mut() {
+                *a = _mm256_setzero_ps();
+            }
+            for a in accs1.iter_mut() {
+                *a = _mm256_setzero_ps();
+            }
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 16;
+                let (d0, d1) = dequant16_b2(w, l);
+                for j in 0..n {
+                    accs0[j] = _mm256_fmadd_ps(
+                        d0,
+                        _mm256_loadu_ps(xeffs.as_ptr().add(j * padded + off)),
+                        accs0[j],
+                    );
+                    accs1[j] = _mm256_fmadd_ps(
+                        d1,
+                        _mm256_loadu_ps(xeffs.as_ptr().add(j * padded + off + 8)),
+                        accs1[j],
+                    );
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += hsum8(_mm256_add_ps(accs0[j], accs1[j]));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_b8(p: &PackedMatrix, xeffs: &[f32], wpg: usize, n: usize, row0: usize, ys: &mut [f32]) {
+    let padded = p.nwords * 4;
+    let mut accs: Vec<__m128> = vec![_mm_setzero_ps(); n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for gi in 0..p.ngroups {
+            let s = _mm_set1_ps(scales[gi]);
+            let nsz = _mm_set1_ps(-(scales[gi] * zeros[gi]));
+            for a in accs.iter_mut() {
+                *a = _mm_setzero_ps();
+            }
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 4;
+                let deq = dequant4_b8(w, s, nsz);
+                for (j, a) in accs.iter_mut().enumerate() {
+                    let xv = _mm_loadu_ps(xeffs.as_ptr().add(j * padded + off));
+                    *a = _mm_fmadd_ps(deq, xv, *a);
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += hsum4(accs[j]);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// Tiled matvec: R=4 interleaved rows, one x load feeds 4 accumulators.
+// Per-row op order matches the flat aligned kernels above exactly, so the
+// tiled and flat AVX2 paths are bit-identical per row.
+// -------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn tiled_rows(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    debug_assert_eq!(t.r, 4, "AVX2 tiled kernels assume R=4");
+    match t.bits {
+        2 => tiled_b2(t, xeff, tile, ys),
+        3 => tiled_b3(t, xeff, tile, ys),
+        4 => tiled_b4(t, xeff, tile, ys),
+        8 => tiled_b8(t, xeff, tile, ys),
+        b => panic!("unsupported bit width {b}"),
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tiled_b4(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    let mut lut = [0.0f32; 16];
+    let mut los = [_mm256_setzero_ps(); 4];
+    let mut his = [_mm256_setzero_ps(); 4];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        for rr in 0..4 {
+            fill_lut(4, t.scales[gbase + rr], t.zeros[gbase + rr], &mut lut);
+            los[rr] = _mm256_loadu_ps(lut.as_ptr());
+            his[rr] = _mm256_loadu_ps(lut.as_ptr().add(8));
+        }
+        let mut accs = [_mm256_setzero_ps(); 4];
+        for wi in 0..t.wpg {
+            let wbase = (tile * t.nwords + gi * t.wpg + wi) * 4;
+            let xv = _mm256_loadu_ps(xeff.as_ptr().add((gi * t.wpg + wi) * 8));
+            for rr in 0..4 {
+                let w = t.words[wbase + rr];
+                accs[rr] = _mm256_fmadd_ps(dequant8_b4(w, los[rr], his[rr]), xv, accs[rr]);
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += hsum8(accs[rr]);
+        }
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tiled_b3(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    let mut luts = [[0.0f32; 8]; 4];
+    let mut ls = [_mm256_setzero_ps(); 4];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        for rr in 0..4 {
+            fill_lut(3, t.scales[gbase + rr], t.zeros[gbase + rr], &mut luts[rr]);
+            ls[rr] = _mm256_loadu_ps(luts[rr].as_ptr());
+        }
+        let mut accs = [_mm256_setzero_ps(); 4];
+        let mut taccs = [0.0f32; 4];
+        for wi in 0..t.wpg {
+            let wbase = (tile * t.nwords + gi * t.wpg + wi) * 4;
+            let off = (gi * t.wpg + wi) * 10;
+            let xv = _mm256_loadu_ps(xeff.as_ptr().add(off));
+            let x8 = xeff[off + 8];
+            let x9 = xeff[off + 9];
+            for rr in 0..4 {
+                let w = t.words[wbase + rr];
+                accs[rr] = _mm256_fmadd_ps(dequant8_b3(w, ls[rr]), xv, accs[rr]);
+                taccs[rr] += luts[rr][((w >> 24) & 7) as usize] * x8;
+                taccs[rr] += luts[rr][((w >> 27) & 7) as usize] * x9;
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += hsum8(accs[rr]) + taccs[rr];
+        }
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tiled_b2(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    let mut lut = [0.0f32; 8];
+    let mut ls = [_mm256_setzero_ps(); 4];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        for rr in 0..4 {
+            fill_lut(2, t.scales[gbase + rr], t.zeros[gbase + rr], &mut lut);
+            ls[rr] = _mm256_loadu_ps(lut.as_ptr());
+        }
+        let mut accs0 = [_mm256_setzero_ps(); 4];
+        let mut accs1 = [_mm256_setzero_ps(); 4];
+        for wi in 0..t.wpg {
+            let wbase = (tile * t.nwords + gi * t.wpg + wi) * 4;
+            let off = (gi * t.wpg + wi) * 16;
+            let xv0 = _mm256_loadu_ps(xeff.as_ptr().add(off));
+            let xv1 = _mm256_loadu_ps(xeff.as_ptr().add(off + 8));
+            for rr in 0..4 {
+                let (d0, d1) = dequant16_b2(t.words[wbase + rr], ls[rr]);
+                accs0[rr] = _mm256_fmadd_ps(d0, xv0, accs0[rr]);
+                accs1[rr] = _mm256_fmadd_ps(d1, xv1, accs1[rr]);
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += hsum8(_mm256_add_ps(accs0[rr], accs1[rr]));
+        }
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tiled_b8(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        let mut svec = [_mm_setzero_ps(); 4];
+        let mut nszvec = [_mm_setzero_ps(); 4];
+        for rr in 0..4 {
+            let s = t.scales[gbase + rr];
+            svec[rr] = _mm_set1_ps(s);
+            nszvec[rr] = _mm_set1_ps(-(s * t.zeros[gbase + rr]));
+        }
+        let mut accs = [_mm_setzero_ps(); 4];
+        for wi in 0..t.wpg {
+            let wbase = (tile * t.nwords + gi * t.wpg + wi) * 4;
+            let xv = _mm_loadu_ps(xeff.as_ptr().add((gi * t.wpg + wi) * 4));
+            for rr in 0..4 {
+                let w = t.words[wbase + rr];
+                accs[rr] = _mm_fmadd_ps(dequant4_b8(w, svec[rr], nszvec[rr]), xv, accs[rr]);
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += hsum4(accs[rr]);
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! SIMD kernel subsystem: runtime-dispatched fused-dequant microkernels.
+//!
+//! The paper's end-to-end inference wins (§Practical Speedups, 3.25–4.5×
+//! over FP16) come from fused dequantize-and-multiply kernels that read
+//! the packed weights once and decode them in registers. This module is
+//! the CPU analog: explicit SIMD microkernels behind *runtime* ISA
+//! dispatch, so one portable binary (no `-C target-cpu` required) picks
+//! the fastest kernel the hardware supports at startup.
+//!
+//! Structure:
+//! * [`Isa`] — the dispatch key: `Scalar` (the pre-SIMD code paths,
+//!   bit-exact with history), `Avx2Fma` (`std::arch::x86_64`, selected
+//!   when `is_x86_feature_detected!("avx2"/"fma")`), `Neon`
+//!   (`std::arch::aarch64`).
+//! * [`scalar`] — the portable kernels, moved verbatim from
+//!   `model::matvec` so `GPTQ_ISA=scalar` reproduces today's bit-exact
+//!   arithmetic on the aligned fast paths.
+//! * [`avx2`] / [`neon`] — the SIMD microkernels. Packed weights are
+//!   dequantized through a per-group 2^bits-entry LUT
+//!   (`scale * (code − zero)`) instead of per-element shift/mask/scale
+//!   arithmetic; on AVX2 the LUT lookup is one or two `vpermps`.
+//! * [`tiled`] — [`TiledPacked`], a register-tiled interleaved layout
+//!   (row tiles of R=4) built once at pack/load time next to
+//!   `PackedMatrix`, so one SIMD load of `x` feeds R row accumulators.
+//!
+//! §Determinism contract (DESIGN.md §Kernels): for any FIXED ISA, lane
+//! order inside every kernel is fixed and per-row arithmetic is
+//! independent of the thread partition, so `threads=N` stays bit-identical
+//! to `threads=1`. Only changing the ISA may shift results, and then only
+//! within ~1e-5 elementwise (each ISA computes the same dequant values in
+//! a different association order).
+//!
+//! Selection: once at startup from, in priority order, the last
+//! [`set_isa`]/[`set_isa_name`] call (the `--isa` CLI flag), the
+//! `GPTQ_ISA` env var, else auto-detection ([`detect_best`]). A requested
+//! ISA the hardware lacks clamps to `Scalar` (never UB: the
+//! `#[target_feature]` kernels are only entered for detected features).
+
+pub mod scalar;
+pub mod tiled;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+pub use tiled::TiledPacked;
+
+use crate::quant::pack::PackedMatrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The runtime-dispatch key. Every kernel family (dense matvec/matmul,
+/// packed matvec/matmul, tiled matvec) has an implementation per variant;
+/// unsupported (isa, bits) combinations fall back to [`Isa::Scalar`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// The portable kernels — the pre-SIMD code paths, bit-exact on the
+    /// aligned layouts real layer shapes hit (the ragged fallback now
+    /// shares the LUT dequant; see the module docs).
+    Scalar,
+    /// AVX2 + FMA (x86_64), 8-lane f32 vectors.
+    Avx2Fma,
+    /// NEON (aarch64), 4-lane f32 vectors.
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2Fma => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    fn code(self) -> usize {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2Fma => 1,
+            Isa::Neon => 2,
+        }
+    }
+
+    fn from_code(c: usize) -> Isa {
+        match c {
+            1 => Isa::Avx2Fma,
+            2 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_detected() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_fma_detected() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_detected() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_detected() -> bool {
+    false
+}
+
+/// Is `isa` executable on this machine? (`Scalar` always is.)
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Avx2Fma => avx2_fma_detected(),
+        Isa::Neon => neon_detected(),
+    }
+}
+
+/// The best ISA this machine supports (the `GPTQ_ISA=auto` choice).
+pub fn detect_best() -> Isa {
+    if supported(Isa::Avx2Fma) {
+        return Isa::Avx2Fma;
+    }
+    if supported(Isa::Neon) {
+        return Isa::Neon;
+    }
+    Isa::Scalar
+}
+
+/// Every ISA runnable on this machine, `Scalar` first — what the parity
+/// tests and the kernel-sweep bench iterate over.
+pub fn available() -> Vec<Isa> {
+    let mut out = vec![Isa::Scalar];
+    for isa in [Isa::Avx2Fma, Isa::Neon] {
+        if supported(isa) {
+            out.push(isa);
+        }
+    }
+    out
+}
+
+/// Clamp to something runnable: an unsupported request degrades to
+/// `Scalar` (the dispatch entry points call this, which is what keeps the
+/// `#[target_feature]` kernels sound even if a caller hands us a foreign
+/// [`Isa`] value).
+pub fn clamp(isa: Isa) -> Isa {
+    if supported(isa) {
+        isa
+    } else {
+        Isa::Scalar
+    }
+}
+
+const UNSET: usize = usize::MAX;
+static GLOBAL_ISA: AtomicUsize = AtomicUsize::new(UNSET);
+
+/// [`clamp`] plus the one warning policy for explicit requests (`--isa`,
+/// `GPTQ_ISA`): serving at silent-scalar throughput while the operator
+/// believes SIMD is pinned is worse than a stderr line.
+fn clamp_or_warn(requested: Isa) -> Isa {
+    let resolved = clamp(requested);
+    if resolved != requested {
+        eprintln!("isa {requested} not supported on this machine; falling back to {resolved}");
+    }
+    resolved
+}
+
+fn env_isa() -> Isa {
+    match std::env::var("GPTQ_ISA") {
+        Ok(v) => match parse_isa(v.trim()) {
+            Ok(Some(requested)) => clamp_or_warn(requested),
+            Ok(None) => detect_best(),
+            Err(_) => {
+                eprintln!("GPTQ_ISA={v:?} not recognized (auto|scalar|avx2|neon); using auto");
+                detect_best()
+            }
+        },
+        Err(_) => detect_best(),
+    }
+}
+
+/// Parse an ISA name. `Ok(None)` means `auto`.
+pub fn parse_isa(name: &str) -> crate::Result<Option<Isa>> {
+    Ok(match name {
+        "auto" => None,
+        "scalar" => Some(Isa::Scalar),
+        "avx2" | "avx2fma" | "avx2-fma" => Some(Isa::Avx2Fma),
+        "neon" => Some(Isa::Neon),
+        other => anyhow::bail!("unknown ISA {other:?} (auto|scalar|avx2|neon)"),
+    })
+}
+
+/// The process-wide kernel ISA (lazily initialised from `GPTQ_ISA`,
+/// default auto-detect).
+pub fn isa() -> Isa {
+    let c = GLOBAL_ISA.load(Ordering::Relaxed);
+    if c != UNSET {
+        return Isa::from_code(c);
+    }
+    let resolved = env_isa();
+    GLOBAL_ISA.store(resolved.code(), Ordering::Relaxed);
+    resolved
+}
+
+/// Override the process-wide ISA (clamped to what the hardware supports,
+/// with the shared [`clamp_or_warn`] warning on downgrade); returns the
+/// ISA actually installed.
+pub fn set_isa(requested: Isa) -> Isa {
+    let resolved = clamp_or_warn(requested);
+    GLOBAL_ISA.store(resolved.code(), Ordering::Relaxed);
+    resolved
+}
+
+/// [`set_isa`] from a CLI name (`--isa`); `"auto"` re-runs detection.
+pub fn set_isa_name(name: &str) -> crate::Result<Isa> {
+    Ok(match parse_isa(name)? {
+        Some(requested) => set_isa(requested),
+        None => set_isa(detect_best()),
+    })
+}
+
+/// Reset the process-wide ISA to the `GPTQ_ISA` default (used by benches
+/// and tests that temporarily pin it).
+pub fn set_isa_env() {
+    GLOBAL_ISA.store(env_isa().code(), Ordering::Relaxed);
+}
+
+/// Does `isa` have a tiled-layout kernel for this bit width? Gates both
+/// building [`TiledPacked`] at load time and entering the tiled matvec.
+pub fn tiled_supported(isa: Isa, bits: u32) -> bool {
+    match isa {
+        Isa::Scalar => false,
+        Isa::Avx2Fma => matches!(bits, 2 | 3 | 4 | 8),
+        Isa::Neon => bits == 4,
+    }
+}
+
+/// The aligned-layout predicate — THE single definition shared by the
+/// flat packed entry points (`model::matvec`) and the tiled builder
+/// ([`TiledPacked::from_packed`]), so both always route a given shape the
+/// same way (the tiled≡flat bitwise guarantee depends on it): either one
+/// grid per row (pad `x` so the ragged last word multiplies zeros —
+/// packed pad fields are 0 by construction), or grouped with whole-word
+/// groups (then dcol is word-aligned too). Real layer shapes always land
+/// aligned; odd shapes use the general path.
+pub fn packed_aligned(p: &PackedMatrix) -> bool {
+    if p.ngroups == 0 {
+        return false;
+    }
+    let cpw = (32 / p.bits) as usize;
+    let group = p.dcol / p.ngroups;
+    p.ngroups == 1 || (group % cpw == 0 && p.nwords * cpw == p.dcol)
+}
+
+/// Build the per-group dequant LUT `lut[code] = scale * (code − zero)` —
+/// the §Practical-Speedups trick of decoding through a table instead of
+/// per-element scale arithmetic. `lut.len()` must be ≥ `1 << bits`.
+#[inline]
+pub(crate) fn fill_lut(bits: u32, s: f32, z: f32, lut: &mut [f32]) {
+    for (k, slot) in lut.iter_mut().enumerate().take(1usize << bits) {
+        *slot = s * (k as f32 - z);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch table: row-range kernels. `model::matvec` owns the public API
+// (argument checks, thread partitioning, Σx / padding precomputes) and
+// funnels every row range through these. All `isa` arguments are expected
+// pre-clamped (see `clamp`); unsupported (isa, bits) pairs fall back to
+// the scalar kernel, never to UB.
+// ---------------------------------------------------------------------------
+
+/// Rows `row0..row0+y.len()` of y = W x (dense).
+pub(crate) fn f32_rows(isa: Isa, w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::f32_rows(w, x, dcol, row0, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::f32_rows(w, x, dcol, row0, y) },
+        _ => scalar::f32_rows(w, x, dcol, row0, y),
+    }
+}
+
+/// Rows `row0..` of the batched dense Y = W·X (`ys` row-major rows × n).
+/// Per (row, sequence) arithmetic is the same dot as [`f32_rows`] on every
+/// ISA — the batched/single bit-parity contract.
+pub(crate) fn f32_matmul_rows(
+    isa: Isa,
+    w: &[f32],
+    xs: &[f32],
+    dcol: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::f32_matmul_rows(w, xs, dcol, n, row0, ys) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::f32_matmul_rows(w, xs, dcol, n, row0, ys) },
+        _ => scalar::f32_matmul_rows(w, xs, dcol, n, row0, ys),
+    }
+}
+
+/// Will the aligned packed dispatch for (isa, bits) land on the scalar
+/// factored kernel, which needs the per-group Σx precompute? MUST mirror
+/// the match arms of [`packed_rows_aligned`] / [`packed_matmul_rows_aligned`]
+/// exactly — `model::matvec` uses it to skip computing Σx when a SIMD LUT
+/// kernel (which bakes scale/zero into the table) will run; the scalar
+/// kernels debug-assert the Σx length so any drift fails tests loudly
+/// instead of reading out of bounds.
+pub(crate) fn packed_aligned_uses_xsum(isa: Isa, bits: u32) -> bool {
+    let _ = bits; // only consulted on aarch64
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => false,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if bits == 4 => false,
+        _ => true,
+    }
+}
+
+/// Aligned packed rows: `xeff` is `x` padded to `nwords·cpw`, `xsum` the
+/// per-group Σx (used by the scalar kernel's factored form; the SIMD LUT
+/// kernels bake scale/zero into the table and ignore it — callers may
+/// pass it empty when [`packed_aligned_uses_xsum`] says so).
+pub(crate) fn packed_rows_aligned(
+    isa: Isa,
+    p: &PackedMatrix,
+    xeff: &[f32],
+    xsum: &[f32],
+    wpg: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::packed_rows_aligned(p, xeff, wpg, row0, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if p.bits == 4 => unsafe { neon::packed_rows_aligned_b4(p, xeff, wpg, row0, y) },
+        _ => scalar::packed_rows_aligned(p, xeff, xsum, wpg, row0, y),
+    }
+}
+
+/// General (ragged) packed rows — scalar on every ISA (only odd test
+/// shapes land here; real layer shapes hit the aligned path).
+pub(crate) fn packed_rows_general(
+    p: &PackedMatrix,
+    x: &[f32],
+    group: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    scalar::packed_rows_general(p, x, group, row0, y);
+}
+
+/// Aligned batched packed rows: each u32 word is decoded ONCE and FMA'd
+/// into every sequence's accumulators (the continuous-batching kernel).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_matmul_rows_aligned(
+    isa: Isa,
+    p: &PackedMatrix,
+    xeffs: &[f32],
+    xsums: &[f32],
+    wpg: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::packed_matmul_rows_aligned(p, xeffs, wpg, n, row0, ys) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if p.bits == 4 => unsafe {
+            neon::packed_matmul_rows_aligned_b4(p, xeffs, wpg, n, row0, ys)
+        },
+        _ => scalar::packed_matmul_rows_aligned(p, xeffs, xsums, wpg, n, row0, ys),
+    }
+}
+
+/// General (ragged) batched packed rows — scalar on every ISA, with the
+/// per-row group grids hoisted out of the per-sequence loop.
+pub(crate) fn packed_matmul_rows_general(
+    p: &PackedMatrix,
+    xs: &[f32],
+    group: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    scalar::packed_matmul_rows_general(p, xs, group, n, row0, ys);
+}
+
+/// One tile (rows `tile·R..tile·R+ys.len()`) of y = dequant(T) x over the
+/// interleaved tiled layout. `xeff` is padded like the aligned path.
+pub(crate) fn tiled_rows(isa: Isa, t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::tiled_rows(t, xeff, tile, ys) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if t.bits == 4 => unsafe { neon::tiled_rows_b4(t, xeff, tile, ys) },
+        _ => scalar::tiled_rows(t, xeff, tile, ys),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available() {
+        assert!(supported(Isa::Scalar));
+        let avail = available();
+        assert_eq!(avail[0], Isa::Scalar);
+        assert!(avail.contains(&detect_best()));
+    }
+
+    #[test]
+    fn clamp_unsupported_degrades_to_scalar() {
+        for isa in [Isa::Scalar, Isa::Avx2Fma, Isa::Neon] {
+            let c = clamp(isa);
+            assert!(supported(c));
+            if supported(isa) {
+                assert_eq!(c, isa);
+            } else {
+                assert_eq!(c, Isa::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_isa_names() {
+        assert_eq!(parse_isa("auto").unwrap(), None);
+        assert_eq!(parse_isa("scalar").unwrap(), Some(Isa::Scalar));
+        assert_eq!(parse_isa("avx2").unwrap(), Some(Isa::Avx2Fma));
+        assert_eq!(parse_isa("neon").unwrap(), Some(Isa::Neon));
+        assert!(parse_isa("sse9").is_err());
+    }
+
+    #[test]
+    fn lut_matches_dequant_formula() {
+        let mut lut = [0.0f32; 16];
+        fill_lut(4, 0.25, 7.0, &mut lut);
+        for (k, &v) in lut.iter().enumerate() {
+            assert_eq!(v.to_bits(), (0.25f32 * (k as f32 - 7.0)).to_bits());
+        }
+    }
+}

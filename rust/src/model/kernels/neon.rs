@@ -1,0 +1,205 @@
+//! NEON microkernels (aarch64) — `Isa::Neon`.
+//!
+//! Initial port: the dense f32 dot and the headline 4-bit packed kernels
+//! (single-sequence, batched, tiled). Other bit widths fall back to the
+//! scalar kernels through the dispatch table (`kernels::tiled_supported`
+//! gates the tiled layout accordingly).
+//!
+//! Dequant computes the same per-element value as the LUT kernels
+//! (`s·(code − zero)`) as the affine `fma(code, s, −s·z)` — a
+//! tbl-based f32 LUT would need four table registers per group and isn't
+//! worth it at 4 lanes. Lane order is fixed (per-group accumulator
+//! vectors, `vaddvq` horizontal sums), and the batched kernel replays the
+//! single-sequence op order per sequence, so the PR-2/PR-3 determinism
+//! contracts hold at this ISA exactly as on AVX2.
+
+use super::tiled::TiledPacked;
+use crate::quant::pack::PackedMatrix;
+use core::arch::aarch64::*;
+
+/// One word (8 codes) -> two dequantized 4-lane vectors.
+/// `sh_lo`/`sh_hi` are the negative shift vectors {0,-4,-8,-12} /
+/// {-16,-20,-24,-28} (NEON `ushl` with a negative count shifts right).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn dequant8_b4(
+    w: u32,
+    sh_lo: int32x4_t,
+    sh_hi: int32x4_t,
+    s: float32x4_t,
+    nsz: float32x4_t,
+) -> (float32x4_t, float32x4_t) {
+    let v = vdupq_n_u32(w);
+    let mask = vdupq_n_u32(15);
+    let c_lo = vandq_u32(vshlq_u32(v, sh_lo), mask);
+    let c_hi = vandq_u32(vshlq_u32(v, sh_hi), mask);
+    (
+        vfmaq_f32(nsz, vcvtq_f32_u32(c_lo), s),
+        vfmaq_f32(nsz, vcvtq_f32_u32(c_hi), s),
+    )
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn shift_vectors() -> (int32x4_t, int32x4_t) {
+    let lo = [0i32, -4, -8, -12];
+    let hi = [-16i32, -20, -24, -28];
+    (vld1q_s32(lo.as_ptr()), vld1q_s32(hi.as_ptr()))
+}
+
+/// 4-lane×2 FMA row dot, shared by matvec and batched matmul (bit-parity).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn dot_f32(row: &[f32], x: &[f32], dcol: usize) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let chunks = dcol / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        acc0 = vfmaq_f32(acc0, vld1q_f32(row.as_ptr().add(i)), vld1q_f32(x.as_ptr().add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(row.as_ptr().add(i + 4)), vld1q_f32(x.as_ptr().add(i + 4)));
+    }
+    let mut acc = vaddvq_f32(vaddq_f32(acc0, acc1));
+    for i in chunks * 8..dcol {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn f32_rows(w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        *yr = dot_f32(&w[r * dcol..(r + 1) * dcol], x, dcol);
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn f32_matmul_rows(
+    w: &[f32],
+    xs: &[f32],
+    dcol: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let row = &w[r * dcol..(r + 1) * dcol];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot_f32(row, &xs[j * dcol..(j + 1) * dcol], dcol);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn packed_rows_aligned_b4(
+    p: &PackedMatrix,
+    xeff: &[f32],
+    wpg: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    let (sh_lo, sh_hi) = shift_vectors();
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        let mut acc_row = 0.0f32;
+        for gi in 0..p.ngroups {
+            let s = vdupq_n_f32(scales[gi]);
+            let nsz = vdupq_n_f32(-(scales[gi] * zeros[gi]));
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 8;
+                let (d0, d1) = dequant8_b4(w, sh_lo, sh_hi, s, nsz);
+                acc0 = vfmaq_f32(acc0, d0, vld1q_f32(xeff.as_ptr().add(off)));
+                acc1 = vfmaq_f32(acc1, d1, vld1q_f32(xeff.as_ptr().add(off + 4)));
+            }
+            acc_row += vaddvq_f32(vaddq_f32(acc0, acc1));
+        }
+        *yr = acc_row;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn packed_matmul_rows_aligned_b4(
+    p: &PackedMatrix,
+    xeffs: &[f32],
+    wpg: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    let padded = p.nwords * 8;
+    let (sh_lo, sh_hi) = shift_vectors();
+    let mut accs0: Vec<float32x4_t> = vec![vdupq_n_f32(0.0); n];
+    let mut accs1: Vec<float32x4_t> = vec![vdupq_n_f32(0.0); n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for gi in 0..p.ngroups {
+            let s = vdupq_n_f32(scales[gi]);
+            let nsz = vdupq_n_f32(-(scales[gi] * zeros[gi]));
+            for a in accs0.iter_mut() {
+                *a = vdupq_n_f32(0.0);
+            }
+            for a in accs1.iter_mut() {
+                *a = vdupq_n_f32(0.0);
+            }
+            for wi in 0..wpg {
+                let w = words[gi * wpg + wi];
+                let off = (gi * wpg + wi) * 8;
+                let (d0, d1) = dequant8_b4(w, sh_lo, sh_hi, s, nsz);
+                for j in 0..n {
+                    accs0[j] = vfmaq_f32(accs0[j], d0, vld1q_f32(xeffs.as_ptr().add(j * padded + off)));
+                    accs1[j] =
+                        vfmaq_f32(accs1[j], d1, vld1q_f32(xeffs.as_ptr().add(j * padded + off + 4)));
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += vaddvq_f32(vaddq_f32(accs0[j], accs1[j]));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn tiled_rows_b4(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    debug_assert_eq!(t.r, 4, "NEON tiled kernels assume R=4");
+    let (sh_lo, sh_hi) = shift_vectors();
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        let mut svec = [vdupq_n_f32(0.0); 4];
+        let mut nszvec = [vdupq_n_f32(0.0); 4];
+        for rr in 0..4 {
+            let s = t.scales[gbase + rr];
+            svec[rr] = vdupq_n_f32(s);
+            nszvec[rr] = vdupq_n_f32(-(s * t.zeros[gbase + rr]));
+        }
+        let mut accs0 = [vdupq_n_f32(0.0); 4];
+        let mut accs1 = [vdupq_n_f32(0.0); 4];
+        for wi in 0..t.wpg {
+            let wbase = (tile * t.nwords + gi * t.wpg + wi) * 4;
+            let off = (gi * t.wpg + wi) * 8;
+            let xv0 = vld1q_f32(xeff.as_ptr().add(off));
+            let xv1 = vld1q_f32(xeff.as_ptr().add(off + 4));
+            for rr in 0..4 {
+                let w = t.words[wbase + rr];
+                let (d0, d1) = dequant8_b4(w, sh_lo, sh_hi, svec[rr], nszvec[rr]);
+                accs0[rr] = vfmaq_f32(accs0[rr], d0, xv0);
+                accs1[rr] = vfmaq_f32(accs1[rr], d1, xv1);
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += vaddvq_f32(vaddq_f32(accs0[rr], accs1[rr]));
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Portable scalar kernels — the `Isa::Scalar` implementations.
+//!
+//! The dense dot and the ALIGNED packed kernels are moved verbatim from
+//! the pre-dispatch `model::matvec`, so `GPTQ_ISA=scalar` is bit-identical
+//! to the historical code paths (the determinism-suite contract). The
+//! general (ragged) packed path was re-based on the per-group dequant LUT
+//! (`lut[code] = s·(code − zero)`, shared with the SIMD kernels) for bits
+//! ≤ 4 — it no longer re-derives scale arithmetic per element, stays
+//! within f32-reassociation distance of the old factored form, and gives
+//! the batched general kernel per-row grids it can hoist across the
+//! sequence loop. 8-bit keeps the factored form (a 256-entry LUT per
+//! group would cost more than it saves) with the `s·z` product hoisted
+//! per row.
+
+use super::fill_lut;
+use super::tiled::TiledPacked;
+use crate::quant::pack::PackedMatrix;
+
+/// The 4-way unrolled row dot shared by the matvec and the batched
+/// matmul: one code path means the batched decode is bit-identical to
+/// the single-sequence decode on dense linears (the continuous-batching
+/// parity contract, DESIGN.md §Serving).
+#[inline(always)]
+pub(crate) fn dot4(row: &[f32], x: &[f32], dcol: usize) -> f32 {
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = dcol / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += row[i] * x[i];
+        acc1 += row[i + 1] * x[i + 1];
+        acc2 += row[i + 2] * x[i + 2];
+        acc3 += row[i + 3] * x[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks * 4..dcol {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+/// Rows `row0..row0+y.len()` of y = W x — per-row arithmetic independent
+/// of how rows are chunked (the parallel bit-identity contract).
+pub(crate) fn f32_rows(w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        *yr = dot4(&w[r * dcol..(r + 1) * dcol], x, dcol);
+    }
+}
+
+/// Rows `row0..` of the batched Y = W·X over `n` stacked activations
+/// (`ys` row-major rows × n). Per-(row, sequence) arithmetic is exactly
+/// [`dot4`], i.e. bit-identical to n separate single-sequence dots.
+pub(crate) fn f32_matmul_rows(
+    w: &[f32],
+    xs: &[f32],
+    dcol: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let row = &w[r * dcol..(r + 1) * dcol];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            *yv = dot4(row, &xs[j * dcol..(j + 1) * dcol], dcol);
+        }
+    }
+}
+
+/// General (unaligned) packed row dot for bits ≤ 4, decoding through the
+/// per-group LUT (`luts` holds `ngroups` tables of `1 << BITS` entries).
+/// Handles any dcol/group layout; group boundaries may fall mid-word.
+#[inline(always)]
+fn dot_packed_general_lut<const BITS: u32>(
+    words: &[u32],
+    x: &[f32],
+    luts: &[f32],
+    dcol: usize,
+    group: usize,
+) -> f32 {
+    let cpw = (32 / BITS) as usize;
+    let mask = (1u32 << BITS) - 1;
+    let lsize = 1usize << BITS;
+    let mut y = 0.0f32;
+    let mut col = 0usize;
+    let mut gi = 0usize;
+    let mut in_group = 0usize;
+    for &w in words {
+        let mut wbits = w;
+        let fields = cpw.min(dcol - col);
+        for _ in 0..fields {
+            let code = (wbits & mask) as usize;
+            wbits >>= BITS;
+            let xv = unsafe { *x.get_unchecked(col) };
+            y += unsafe { *luts.get_unchecked(gi * lsize + code) } * xv;
+            col += 1;
+            in_group += 1;
+            if in_group == group {
+                in_group = 0;
+                gi += 1;
+            }
+        }
+        if col == dcol {
+            break;
+        }
+    }
+    y
+}
+
+/// General (unaligned) packed row dot, factored form (8-bit): per-group
+/// Σ code·x and Σ x folded as `s·Σcx − (s·z)·Σx`, with the `(s, s·z)`
+/// pairs precomputed per row — bit-identical to the historical kernel
+/// (`s * z * acc_x` always evaluated `(s·z)·acc_x`).
+#[inline(always)]
+fn dot_packed_general_fac<const BITS: u32>(
+    words: &[u32],
+    x: &[f32],
+    szs: &[(f32, f32)],
+    dcol: usize,
+    group: usize,
+) -> f32 {
+    let cpw = (32 / BITS) as usize;
+    let mask = (1u32 << BITS) - 1;
+    let mut y = 0.0f32;
+    let mut col = 0usize;
+    let mut gi = 0usize;
+    let mut acc_cx = 0.0f32;
+    let mut acc_x = 0.0f32;
+    let mut in_group = 0usize;
+    for &w in words {
+        let mut wbits = w;
+        let fields = cpw.min(dcol - col);
+        for _ in 0..fields {
+            let code = (wbits & mask) as f32;
+            wbits >>= BITS;
+            let xv = unsafe { *x.get_unchecked(col) };
+            acc_cx += code * xv;
+            acc_x += xv;
+            col += 1;
+            in_group += 1;
+            if in_group == group {
+                let (s, sz) = unsafe { *szs.get_unchecked(gi) };
+                y += s * acc_cx - sz * acc_x;
+                acc_cx = 0.0;
+                acc_x = 0.0;
+                in_group = 0;
+                gi += 1;
+            }
+        }
+        if col == dcol {
+            break;
+        }
+    }
+    if in_group > 0 {
+        let (s, sz) = szs[gi];
+        y += s * acc_cx - sz * acc_x;
+    }
+    y
+}
+
+/// Per-row grids for the general path: LUTs for bits ≤ 4, `(s, s·z)`
+/// pairs for 8-bit. Reused across rows (and, in the batched kernel,
+/// across all n sequences of a row — the hoist that was previously redone
+/// per (row, sequence)).
+struct GeneralGrids {
+    luts: Vec<f32>,
+    szs: Vec<(f32, f32)>,
+}
+
+impl GeneralGrids {
+    fn new(p: &PackedMatrix) -> Self {
+        if p.bits < 8 {
+            GeneralGrids { luts: vec![0.0; p.ngroups << p.bits], szs: Vec::new() }
+        } else {
+            GeneralGrids { luts: Vec::new(), szs: vec![(0.0, 0.0); p.ngroups] }
+        }
+    }
+
+    fn fill(&mut self, p: &PackedMatrix, r: usize) {
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        if p.bits < 8 {
+            let lsize = 1usize << p.bits;
+            for gi in 0..p.ngroups {
+                fill_lut(p.bits, scales[gi], zeros[gi], &mut self.luts[gi * lsize..(gi + 1) * lsize]);
+            }
+        } else {
+            for gi in 0..p.ngroups {
+                self.szs[gi] = (scales[gi], scales[gi] * zeros[gi]);
+            }
+        }
+    }
+
+    fn dot(&self, p: &PackedMatrix, words: &[u32], x: &[f32], group: usize) -> f32 {
+        match p.bits {
+            2 => dot_packed_general_lut::<2>(words, x, &self.luts, p.dcol, group),
+            3 => dot_packed_general_lut::<3>(words, x, &self.luts, p.dcol, group),
+            4 => dot_packed_general_lut::<4>(words, x, &self.luts, p.dcol, group),
+            8 => dot_packed_general_fac::<8>(words, x, &self.szs, p.dcol, group),
+            b => panic!("unsupported bit width {b}"),
+        }
+    }
+}
+
+/// General (ragged) path over rows `row0..row0+y.len()`.
+pub(crate) fn packed_rows_general(
+    p: &PackedMatrix,
+    x: &[f32],
+    group: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    let mut grids = GeneralGrids::new(p);
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        grids.fill(p, r);
+        *yr = grids.dot(p, words, x, group);
+    }
+}
+
+/// General (ragged) batched path: the per-row grids (LUT / s·z) are built
+/// once per row and shared by all n sequences — the only thing re-read
+/// per sequence is the activation vector.
+pub(crate) fn packed_matmul_rows_general(
+    p: &PackedMatrix,
+    xs: &[f32],
+    group: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    let mut grids = GeneralGrids::new(p);
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        grids.fill(p, r);
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            let x = &xs[j * p.dcol..(j + 1) * p.dcol];
+            *yv = grids.dot(p, words, x, group);
+        }
+    }
+}
+
+/// Aligned fast path: whole words only, group size a multiple of the
+/// codes-per-word. §Perf design (see EXPERIMENTS.md §Perf):
+/// * Σx per group is ROW-INDEPENDENT — precomputed once per matvec in
+///   `xsum` and folded in as `−s·z·Σx`, halving the per-element FMAs;
+/// * each u32 decodes into a fixed-length `[f32; CPW]` array with
+///   independent shift/mask lanes — no loop-carried `wbits >>= B`
+///   dependency, so LLVM vectorizes the decode + dot;
+/// * no per-element group branch: groups advance in whole words.
+///
+/// Kept verbatim from the pre-dispatch kernel: this is the path real
+/// layer shapes hit, and `GPTQ_ISA=scalar` must stay bit-exact with it.
+#[inline(always)]
+fn dot_packed_row_aligned<const BITS: u32, const CPW: usize>(
+    words: &[u32],
+    x: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    xsum: &[f32],
+    words_per_group: usize,
+) -> f32 {
+    let mask = (1u32 << BITS) - 1;
+    let mut y = 0.0f32;
+    for (gi, gwords) in words.chunks_exact(words_per_group).enumerate() {
+        // CPW persistent accumulators: lane k always uses shift k·BITS, so
+        // the word loop is CPW independent FMA streams (no serial add
+        // chain) — measured ~2x over the per-word horizontal sum.
+        let mut accs = [0.0f32; CPW];
+        let xg = &x[gi * words_per_group * CPW..];
+        for (wi, &w) in gwords.iter().enumerate() {
+            let xs = &xg[wi * CPW..wi * CPW + CPW];
+            for k in 0..CPW {
+                accs[k] += ((w >> (BITS as usize * k)) & mask) as f32 * xs[k];
+            }
+        }
+        let acc: f32 = accs.iter().sum();
+        let s = unsafe { *scales.get_unchecked(gi) };
+        let z = unsafe { *zeros.get_unchecked(gi) };
+        y += s * acc - s * z * unsafe { *xsum.get_unchecked(gi) };
+    }
+    y
+}
+
+/// Aligned fast path over rows `row0..row0+y.len()` (serial core).
+pub(crate) fn packed_rows_aligned(
+    p: &PackedMatrix,
+    xeff: &[f32],
+    xsum: &[f32],
+    wpg: usize,
+    row0: usize,
+    y: &mut [f32],
+) {
+    // callers skip the Σx precompute when a SIMD kernel will run
+    // (kernels::packed_aligned_uses_xsum) — a HARD assert (one branch per
+    // row-range call, negligible vs the row loop) so any drift between
+    // that predicate and the dispatch table fails loudly in release too,
+    // never reaching the unchecked reads below
+    assert_eq!(xsum.len(), p.ngroups, "scalar aligned kernel needs per-group Σx");
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        *yr = match p.bits {
+            2 => dot_packed_row_aligned::<2, 16>(words, xeff, scales, zeros, xsum, wpg),
+            3 => dot_packed_row_aligned::<3, 10>(words, xeff, scales, zeros, xsum, wpg),
+            4 => dot_packed_row_aligned::<4, 8>(words, xeff, scales, zeros, xsum, wpg),
+            8 => dot_packed_row_aligned::<8, 4>(words, xeff, scales, zeros, xsum, wpg),
+            b => panic!("unsupported bit width {b}"),
+        };
+    }
+}
+
+/// Aligned batched core: rows `row0..` of Y = dequant(P)·X for `n`
+/// stacked activations. Each packed u32 word is decoded ONCE into its
+/// `[f32; CPW]` lane array and FMA'd into every sequence's lane
+/// accumulators — the packed-weight read (the §Practical Speedups
+/// bottleneck) is amortized over the whole batch. Per-sequence
+/// accumulation order (lanes within words, words within groups, groups
+/// within the row) is identical to [`dot_packed_row_aligned`], so the
+/// batched result is bit-identical to n independent packed matvecs.
+/// Kept verbatim from the pre-dispatch kernel.
+fn matmul_rows_packed_aligned<const BITS: u32, const CPW: usize>(
+    p: &PackedMatrix,
+    xeffs: &[f32],
+    xsums: &[f32],
+    wpg: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    let mask = (1u32 << BITS) - 1;
+    let padded = p.nwords * CPW;
+    // hard assert for the same reason as packed_rows_aligned's
+    assert_eq!(xsums.len(), n * p.ngroups, "scalar aligned kernel needs per-group Σx");
+    // per-sequence lane accumulators, reset per group
+    let mut accs = vec![0.0f32; n * CPW];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        yrow.fill(0.0);
+        for (gi, gwords) in words.chunks_exact(wpg).enumerate() {
+            accs.fill(0.0);
+            let gbase = gi * wpg * CPW;
+            for (wi, &w) in gwords.iter().enumerate() {
+                let mut dec = [0.0f32; CPW];
+                for k in 0..CPW {
+                    dec[k] = ((w >> (BITS as usize * k)) & mask) as f32;
+                }
+                let off = gbase + wi * CPW;
+                for j in 0..n {
+                    let xg = &xeffs[j * padded + off..j * padded + off + CPW];
+                    let a = &mut accs[j * CPW..(j + 1) * CPW];
+                    for k in 0..CPW {
+                        a[k] += dec[k] * xg[k];
+                    }
+                }
+            }
+            let s = scales[gi];
+            let z = zeros[gi];
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                let acc: f32 = accs[j * CPW..(j + 1) * CPW].iter().sum();
+                *yv += s * acc - s * z * xsums[j * p.ngroups + gi];
+            }
+        }
+    }
+}
+
+/// Bits dispatch for the aligned batched core.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_matmul_rows_aligned(
+    p: &PackedMatrix,
+    xeffs: &[f32],
+    xsums: &[f32],
+    wpg: usize,
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    match p.bits {
+        2 => matmul_rows_packed_aligned::<2, 16>(p, xeffs, xsums, wpg, n, row0, ys),
+        3 => matmul_rows_packed_aligned::<3, 10>(p, xeffs, xsums, wpg, n, row0, ys),
+        4 => matmul_rows_packed_aligned::<4, 8>(p, xeffs, xsums, wpg, n, row0, ys),
+        8 => matmul_rows_packed_aligned::<8, 4>(p, xeffs, xsums, wpg, n, row0, ys),
+        b => panic!("unsupported bit width {b}"),
+    }
+}
+
+/// Scalar tiled kernel — the fallback when a [`TiledPacked`] exists but
+/// the active ISA has no tiled microkernel for its width (also what the
+/// layout tests exercise on machines without SIMD). Decodes through the
+/// same per-group LUT semantics as the SIMD tiled kernels (8-bit: affine
+/// `code·s − s·z`), so results agree within f32 reassociation.
+pub(crate) fn tiled_rows(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
+    let r = t.r;
+    let cpw = (32 / t.bits) as usize;
+    let mask = (1u32 << t.bits) - 1;
+    let lsize = 1usize << t.bits.min(4);
+    let mut luts = vec![0.0f32; if t.bits < 8 { r * lsize } else { 0 }];
+    let mut szs = vec![(0.0f32, 0.0f32); if t.bits == 8 { r } else { 0 }];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * r;
+        if t.bits < 8 {
+            for rr in 0..r {
+                fill_lut(
+                    t.bits,
+                    t.scales[gbase + rr],
+                    t.zeros[gbase + rr],
+                    &mut luts[rr * lsize..(rr + 1) * lsize],
+                );
+            }
+        } else {
+            for (rr, slot) in szs.iter_mut().enumerate() {
+                let s = t.scales[gbase + rr];
+                *slot = (s, s * t.zeros[gbase + rr]);
+            }
+        }
+        for wi in 0..t.wpg {
+            let wbase = (tile * t.nwords + gi * t.wpg + wi) * r;
+            let xw = &xeff[(gi * t.wpg + wi) * cpw..(gi * t.wpg + wi) * cpw + cpw];
+            for (rr, yv) in ys.iter_mut().enumerate() {
+                let w = t.words[wbase + rr];
+                let mut acc = 0.0f32;
+                if t.bits < 8 {
+                    let lut = &luts[rr * lsize..(rr + 1) * lsize];
+                    for (k, &xv) in xw.iter().enumerate() {
+                        let code = ((w >> (t.bits as usize * k)) & mask) as usize;
+                        acc += lut[code] * xv;
+                    }
+                } else {
+                    let (s, sz) = szs[rr];
+                    for (k, &xv) in xw.iter().enumerate() {
+                        let code = ((w >> (8 * k)) & mask) as f32;
+                        acc += (code * s - sz) * xv;
+                    }
+                }
+                *yv += acc;
+            }
+        }
+    }
+}

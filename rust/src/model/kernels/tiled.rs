@@ -1,0 +1,158 @@
+//! [`TiledPacked`] — a register-tiled, row-interleaved packed layout.
+//!
+//! The plain `PackedMatrix` streams one row's words at a time: at batch 1
+//! every element of `x` is re-loaded for every row. The tiled layout
+//! interleaves the words of R=4 consecutive rows word-index-major
+//! (`words[(tile·nwords + wi)·R + rr]`), so the SIMD matvec loads each
+//! 8-lane chunk of `x` ONCE and FMAs it into R row accumulators while the
+//! R weight words stream from one contiguous cache line — the
+//! register-tiling of the paper's fused dequant kernels, applied to the
+//! batch-1 decode path (the per-token latency path of Table 5).
+//!
+//! Built once at pack/load time next to the `PackedMatrix`
+//! (`model::forward::PackedLinear`), only when the active ISA has a tiled
+//! microkernel for the bit width (`kernels::tiled_supported`) — it is a
+//! second copy of the weights, so scalar-only deployments skip it.
+//!
+//! The last tile is zero-padded to R rows (code 0, scale 0 → every padded
+//! lane dequantizes to 0); kernels simply don't write the phantom rows.
+
+use crate::quant::pack::PackedMatrix;
+
+/// Rows per tile. 4 keeps the working set at R accumulator vectors plus
+/// R LUT registers on both AVX2 (16 ymm) and NEON (32 q-regs).
+pub const TILE_ROWS: usize = 4;
+
+/// The interleaved tiled form of a `PackedMatrix` (same codes, scales,
+/// zeros — only the memory order changes, so dequant semantics and the
+/// quantization format are untouched).
+#[derive(Debug, Clone)]
+pub struct TiledPacked {
+    /// words, tile-major: `words[(tile * nwords + wi) * r + rr]` is word
+    /// `wi` of row `tile * r + rr`
+    pub words: Vec<u32>,
+    /// scales, tile-major: `scales[(tile * ngroups + gi) * r + rr]`
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    /// rows per tile (R)
+    pub r: usize,
+    /// number of tiles (`ceil(drow / r)`; last tile zero-padded)
+    pub ntiles: usize,
+    pub drow: usize,
+    pub dcol: usize,
+    /// words per row (same as the source `PackedMatrix`)
+    pub nwords: usize,
+    pub ngroups: usize,
+    /// words per group (`nwords / ngroups`)
+    pub wpg: usize,
+    pub bits: u32,
+}
+
+impl TiledPacked {
+    /// Interleave `p` into R-row tiles. Returns `None` for layouts the
+    /// aligned kernels can't walk in whole words — the SAME predicate
+    /// (`kernels::packed_aligned`) the flat matvec uses for its fast
+    /// path, so tiled and flat always route a shape the same way; those
+    /// shapes stay on the general packed path.
+    pub fn from_packed(p: &PackedMatrix) -> Option<TiledPacked> {
+        if !matches!(p.bits, 2 | 3 | 4 | 8) || !super::packed_aligned(p) {
+            return None;
+        }
+        let r = TILE_ROWS;
+        let ntiles = p.drow.div_ceil(r);
+        let mut words = vec![0u32; ntiles * p.nwords * r];
+        let mut scales = vec![0.0f32; ntiles * p.ngroups * r];
+        let mut zeros = vec![0.0f32; ntiles * p.ngroups * r];
+        for t in 0..ntiles {
+            for rr in 0..r {
+                let row = t * r + rr;
+                if row >= p.drow {
+                    break; // phantom rows stay all-zero
+                }
+                for wi in 0..p.nwords {
+                    words[(t * p.nwords + wi) * r + rr] = p.words[row * p.nwords + wi];
+                }
+                for gi in 0..p.ngroups {
+                    scales[(t * p.ngroups + gi) * r + rr] = p.scales[row * p.ngroups + gi];
+                    zeros[(t * p.ngroups + gi) * r + rr] = p.zeros[row * p.ngroups + gi];
+                }
+            }
+        }
+        Some(TiledPacked {
+            words,
+            scales,
+            zeros,
+            r,
+            ntiles,
+            drow: p.drow,
+            dcol: p.dcol,
+            nwords: p.nwords,
+            ngroups: p.ngroups,
+            wpg: p.nwords / p.ngroups,
+            bits: p.bits,
+        })
+    }
+
+    /// Bytes of weight storage in this layout (the traffic one tiled
+    /// matvec streams — same accounting as `PackedMatrix::storage_bytes`,
+    /// plus the zero padding of the last tile).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 4 + (self.scales.len() + self.zeros.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::rand_vec;
+    use crate::quant::rtn_quantize;
+
+    #[test]
+    fn interleave_roundtrips_words_and_grids() {
+        // drow 10 = 2 full tiles + a ragged one (2 real rows)
+        let (drow, dcol) = (10usize, 64usize);
+        let w = rand_vec(drow * dcol, 3);
+        let q = rtn_quantize(&w, drow, dcol, 4, 16);
+        let p = PackedMatrix::from_result(&q);
+        let t = TiledPacked::from_packed(&p).expect("aligned shape tiles");
+        assert_eq!(t.ntiles, 3);
+        assert_eq!(t.wpg, p.nwords / p.ngroups);
+        for row in 0..drow {
+            let (tile, rr) = (row / t.r, row % t.r);
+            for wi in 0..p.nwords {
+                assert_eq!(t.words[(tile * t.nwords + wi) * t.r + rr], p.words[row * p.nwords + wi]);
+            }
+            for gi in 0..p.ngroups {
+                assert_eq!(t.scales[(tile * t.ngroups + gi) * t.r + rr], p.scales[row * p.ngroups + gi]);
+                assert_eq!(t.zeros[(tile * t.ngroups + gi) * t.r + rr], p.zeros[row * p.ngroups + gi]);
+            }
+        }
+        // phantom rows of the last tile dequantize to zero
+        for wi in 0..p.nwords {
+            for rr in 2..t.r {
+                assert_eq!(t.words[(2 * t.nwords + wi) * t.r + rr], 0);
+            }
+        }
+        for gi in 0..p.ngroups {
+            for rr in 2..t.r {
+                assert_eq!(t.scales[(2 * t.ngroups + gi) * t.r + rr], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_layouts_do_not_tile() {
+        // dcol 37 with 3-bit (10/word) leaves a ragged last word per group
+        let w = rand_vec(4 * 37, 5);
+        let q = rtn_quantize(&w, 4, 37, 3, 0);
+        let p = PackedMatrix::from_result(&q);
+        // ngroups == 1 ragged shapes DO tile (x is padded like the aligned
+        // matvec path) …
+        assert!(TiledPacked::from_packed(&p).is_some());
+        // … but grouped-with-ragged-words shapes do not
+        let w2 = rand_vec(4 * 48, 6);
+        let q2 = rtn_quantize(&w2, 4, 48, 3, 16); // 16 % 10 != 0
+        let p2 = PackedMatrix::from_result(&q2);
+        assert!(TiledPacked::from_packed(&p2).is_none());
+    }
+}

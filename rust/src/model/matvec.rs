@@ -7,14 +7,22 @@
 //! FP16-baseline analog, [`matvec_packed`] the CUDA-kernel analog (and the
 //! Rust twin of the L1 `packmatvec.py` Pallas kernel).
 //!
-//! §Perf notes (see EXPERIMENTS.md §Perf for measurements): the packed
-//! inner loop decodes one u32 word at a time with compile-time-known field
-//! counts (monomorphized per bit width), accumulates `Σ code·x` and `Σ x`
-//! separately per group, and applies scale/zero once per group:
-//! `y += s·(Σ code·x) − s·z·(Σ x)` — no per-element multiply by the grid.
+//! This module owns the PUBLIC kernel API: argument checks, the
+//! aligned/ragged layout split, the row-independent precomputes (per-group
+//! Σx, x padding) and the thread partition. The per-row arithmetic lives
+//! in [`crate::model::kernels`] behind runtime ISA dispatch
+//! (`Scalar`/`Avx2Fma`/`Neon` — DESIGN.md §Kernels): every entry point
+//! reads the process-wide ISA once ([`kernels::isa`]), and the `*_isa`
+//! variants pin it explicitly (parity tests, the kernel-sweep bench).
+//!
+//! §Determinism: for a FIXED ISA every function here is bit-identical at
+//! any thread count (rows are partitioned, never the arithmetic), and the
+//! batched kernels replay the single-sequence op order per sequence.
+//! Changing the ISA may move results within ~1e-5 elementwise.
 
+use crate::model::kernels::{self, Isa, TiledPacked};
 use crate::quant::pack::PackedMatrix;
-use crate::util::par::{self, Pool};
+use crate::util::par::{self, Pool, SliceParts};
 
 /// Below this many weight elements a matvec stays serial: thread spawn
 /// costs tens of µs per region, which only amortises once the matrix is
@@ -29,63 +37,33 @@ fn pool_for(elems: usize) -> Pool {
     }
 }
 
-/// The 4-way unrolled row dot shared by the matvec and the batched
-/// matmul: one code path means the batched decode is bit-identical to
-/// the single-sequence decode on dense linears (the continuous-batching
-/// parity contract, DESIGN.md §Serving).
-#[inline(always)]
-fn dot4(row: &[f32], x: &[f32], dcol: usize) -> f32 {
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    let chunks = dcol / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc0 += row[i] * x[i];
-        acc1 += row[i + 1] * x[i + 1];
-        acc2 += row[i + 2] * x[i + 2];
-        acc3 += row[i + 3] * x[i + 3];
-    }
-    let mut acc = acc0 + acc1 + acc2 + acc3;
-    for i in chunks * 4..dcol {
-        acc += row[i] * x[i];
-    }
-    acc
-}
-
-/// Rows `row0..row0+y.len()` of y = W x. The shared serial core of
-/// [`matvec_f32`] — per-row arithmetic is independent of how rows are
-/// chunked, which is what makes the parallel wrapper bit-identical at
-/// any thread count.
-fn matvec_f32_rows(w: &[f32], x: &[f32], dcol: usize, row0: usize, y: &mut [f32]) {
-    for (i, yr) in y.iter_mut().enumerate() {
-        let r = row0 + i;
-        *yr = dot4(&w[r * dcol..(r + 1) * dcol], x, dcol);
-    }
-}
-
 /// y = W x for dense row-major W (drow × dcol). Row-range parallel on the
 /// global pool above [`MATVEC_PAR_MIN_ELEMS`]; bit-identical to
 /// [`matvec_f32_serial`] at every thread count.
 pub fn matvec_f32(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
-    assert_eq!(w.len(), drow * dcol);
-    assert_eq!(x.len(), dcol);
-    assert_eq!(y.len(), drow);
-    let pool = pool_for(drow * dcol);
-    par::for_rows_mut(&pool, y, drow, 1, |rows, ys| {
-        matvec_f32_rows(w, x, dcol, rows.start, ys);
-    });
+    matvec_f32_with(w, x, drow, dcol, y, pool_for(drow * dcol), kernels::isa());
 }
 
 /// Serial twin of [`matvec_f32`]: same arithmetic, never spawns. Used
 /// inside loops that are already parallel over rows/samples (reference
 /// backend) to avoid nested thread scopes.
 pub fn matvec_f32_serial(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32]) {
+    matvec_f32_with(w, x, drow, dcol, y, Pool::serial(), kernels::isa());
+}
+
+/// [`matvec_f32`] at an explicit ISA (parity tests, benches).
+pub fn matvec_f32_isa(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32], isa: Isa) {
+    matvec_f32_with(w, x, drow, dcol, y, pool_for(drow * dcol), isa);
+}
+
+fn matvec_f32_with(w: &[f32], x: &[f32], drow: usize, dcol: usize, y: &mut [f32], pool: Pool, isa: Isa) {
     assert_eq!(w.len(), drow * dcol);
     assert_eq!(x.len(), dcol);
     assert_eq!(y.len(), drow);
-    matvec_f32_rows(w, x, dcol, 0, y);
+    let isa = kernels::clamp(isa);
+    par::for_rows_mut(&pool, y, drow, 1, |rows, ys| {
+        kernels::f32_rows(isa, w, x, dcol, rows.start, ys);
+    });
 }
 
 /// y = W x + b (dense), the convenience used by the dense forward.
@@ -111,48 +89,53 @@ pub fn matvec_f32_bias_serial(
     }
 }
 
-/// Serial core of [`matmul_f32`]: rows `row0..` of Y = W·X over `n`
-/// stacked activations. `xs` is sequence-major (n × dcol); `ys` is
-/// ROW-major (rows × n) so a row-range parallel partition writes
-/// contiguous chunks. Each weight row is read once for all n columns —
-/// the continuous-batching win: N sequences advance per pass over the
-/// weights. Per-(row, sequence) arithmetic is exactly [`dot4`], i.e.
-/// bit-identical to n separate [`matvec_f32`] calls.
-fn matmul_f32_rows(w: &[f32], xs: &[f32], dcol: usize, n: usize, row0: usize, ys: &mut [f32]) {
-    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
-        let r = row0 + i;
-        let row = &w[r * dcol..(r + 1) * dcol];
-        for (j, yv) in yrow.iter_mut().enumerate() {
-            *yv = dot4(row, &xs[j * dcol..(j + 1) * dcol], dcol);
-        }
-    }
-}
-
 /// Batched Y = W·X: `xs` sequence-major (n × dcol), `ys` row-major
 /// (drow × n). Row-range parallel like [`matvec_f32`]; bit-identical to
-/// n independent matvecs at every thread count.
+/// n independent matvecs at every thread count (the per-(row, sequence)
+/// dot is the same kernel on every ISA).
 pub fn matmul_f32(w: &[f32], xs: &[f32], drow: usize, dcol: usize, n: usize, ys: &mut [f32]) {
-    assert_eq!(w.len(), drow * dcol);
-    assert_eq!(xs.len(), n * dcol);
-    assert_eq!(ys.len(), drow * n);
-    if n == 0 {
-        return;
-    }
-    let pool = pool_for(drow * dcol);
-    par::for_rows_mut(&pool, ys, drow, n, |rows, chunk| {
-        matmul_f32_rows(w, xs, dcol, n, rows.start, chunk);
-    });
+    matmul_f32_with(w, xs, drow, dcol, n, ys, pool_for(drow * dcol), kernels::isa());
 }
 
 /// Serial twin of [`matmul_f32`] (see [`matvec_f32_serial`]).
 pub fn matmul_f32_serial(w: &[f32], xs: &[f32], drow: usize, dcol: usize, n: usize, ys: &mut [f32]) {
+    matmul_f32_with(w, xs, drow, dcol, n, ys, Pool::serial(), kernels::isa());
+}
+
+/// [`matmul_f32`] at an explicit ISA.
+pub fn matmul_f32_isa(
+    w: &[f32],
+    xs: &[f32],
+    drow: usize,
+    dcol: usize,
+    n: usize,
+    ys: &mut [f32],
+    isa: Isa,
+) {
+    matmul_f32_with(w, xs, drow, dcol, n, ys, pool_for(drow * dcol), isa);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_f32_with(
+    w: &[f32],
+    xs: &[f32],
+    drow: usize,
+    dcol: usize,
+    n: usize,
+    ys: &mut [f32],
+    pool: Pool,
+    isa: Isa,
+) {
     assert_eq!(w.len(), drow * dcol);
     assert_eq!(xs.len(), n * dcol);
     assert_eq!(ys.len(), drow * n);
     if n == 0 {
         return;
     }
-    matmul_f32_rows(w, xs, dcol, n, 0, ys);
+    let isa = kernels::clamp(isa);
+    par::for_rows_mut(&pool, ys, drow, n, |rows, chunk| {
+        kernels::f32_matmul_rows(isa, w, xs, dcol, n, rows.start, chunk);
+    });
 }
 
 /// Batched Y = W·X + b (bias broadcast over the n columns of each row).
@@ -193,246 +176,37 @@ fn add_bias_rows(ys: &mut [f32], b: &[f32], n: usize) {
     }
 }
 
-/// General (unaligned) packed row dot — handles any dcol/group layout.
-/// The aligned fast path below is what real shapes hit.
-#[inline(always)]
-fn dot_packed_row_general<const BITS: u32>(
-    words: &[u32],
-    x: &[f32],
-    scales: &[f32],
-    zeros: &[f32],
-    dcol: usize,
-    group: usize,
-) -> f32 {
-    let cpw = (32 / BITS) as usize;
-    let mask = (1u32 << BITS) - 1;
-    let mut y = 0.0f32;
-    let mut col = 0usize;
-    let mut gi = 0usize;
-    // per-group partial sums: Σ code·x and Σ x
-    let mut acc_cx = 0.0f32;
-    let mut acc_x = 0.0f32;
-    let mut in_group = 0usize;
-    for &w in words {
-        let mut wbits = w;
-        let fields = cpw.min(dcol - col);
-        for _ in 0..fields {
-            let code = (wbits & mask) as f32;
-            wbits >>= BITS;
-            let xv = unsafe { *x.get_unchecked(col) };
-            acc_cx += code * xv;
-            acc_x += xv;
-            col += 1;
-            in_group += 1;
-            if in_group == group {
-                let s = unsafe { *scales.get_unchecked(gi) };
-                let z = unsafe { *zeros.get_unchecked(gi) };
-                y += s * acc_cx - s * z * acc_x;
-                acc_cx = 0.0;
-                acc_x = 0.0;
-                in_group = 0;
-                gi += 1;
-            }
-        }
-        if col == dcol {
-            break;
-        }
-    }
-    if in_group > 0 {
-        let s = scales[gi];
-        let z = zeros[gi];
-        y += s * acc_cx - s * z * acc_x;
-    }
-    y
-}
-
-/// Aligned fast path: whole words only, group size a multiple of the
-/// codes-per-word. §Perf design (see EXPERIMENTS.md §Perf):
-/// * Σx per group is ROW-INDEPENDENT — precomputed once per matvec in
-///   `xsum` and folded in as `−s·z·Σx`, halving the per-element FMAs;
-/// * each u32 decodes into a fixed-length `[f32; CPW]` array with
-///   independent shift/mask lanes — no loop-carried `wbits >>= B`
-///   dependency, so LLVM vectorizes the decode + dot;
-/// * no per-element group branch: groups advance in whole words.
-#[inline(always)]
-fn dot_packed_row_aligned<const BITS: u32, const CPW: usize>(
-    words: &[u32],
-    x: &[f32],
-    scales: &[f32],
-    zeros: &[f32],
-    xsum: &[f32],
-    words_per_group: usize,
-) -> f32 {
-    let mask = (1u32 << BITS) - 1;
-    let mut y = 0.0f32;
-    for (gi, gwords) in words.chunks_exact(words_per_group).enumerate() {
-        // CPW persistent accumulators: lane k always uses shift k·BITS, so
-        // the word loop is CPW independent FMA streams (no serial add
-        // chain) — measured ~2x over the per-word horizontal sum.
-        let mut accs = [0.0f32; CPW];
-        let xg = &x[gi * words_per_group * CPW..];
-        for (wi, &w) in gwords.iter().enumerate() {
-            let xs = &xg[wi * CPW..wi * CPW + CPW];
-            for k in 0..CPW {
-                accs[k] += ((w >> (BITS as usize * k)) & mask) as f32 * xs[k];
-            }
-        }
-        let acc: f32 = accs.iter().sum();
-        let s = unsafe { *scales.get_unchecked(gi) };
-        let z = unsafe { *zeros.get_unchecked(gi) };
-        y += s * acc - s * z * unsafe { *xsum.get_unchecked(gi) };
-    }
-    y
-}
-
-/// Aligned fast path over rows `row0..row0+y.len()` (serial core).
-fn packed_rows_aligned(
-    p: &PackedMatrix,
-    xeff: &[f32],
-    xsum: &[f32],
-    wpg: usize,
-    row0: usize,
-    y: &mut [f32],
-) {
-    for (i, yr) in y.iter_mut().enumerate() {
-        let r = row0 + i;
-        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
-        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
-        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
-        *yr = match p.bits {
-            2 => dot_packed_row_aligned::<2, 16>(words, xeff, scales, zeros, xsum, wpg),
-            3 => dot_packed_row_aligned::<3, 10>(words, xeff, scales, zeros, xsum, wpg),
-            4 => dot_packed_row_aligned::<4, 8>(words, xeff, scales, zeros, xsum, wpg),
-            8 => dot_packed_row_aligned::<8, 4>(words, xeff, scales, zeros, xsum, wpg),
-            b => panic!("unsupported bit width {b}"),
-        };
-    }
-}
-
-/// General (ragged) path over rows `row0..row0+y.len()` (serial core).
-fn packed_rows_general(p: &PackedMatrix, x: &[f32], group: usize, row0: usize, y: &mut [f32]) {
-    for (i, yr) in y.iter_mut().enumerate() {
-        let r = row0 + i;
-        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
-        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
-        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
-        *yr = match p.bits {
-            2 => dot_packed_row_general::<2>(words, x, scales, zeros, p.dcol, group),
-            3 => dot_packed_row_general::<3>(words, x, scales, zeros, p.dcol, group),
-            4 => dot_packed_row_general::<4>(words, x, scales, zeros, p.dcol, group),
-            8 => dot_packed_row_general::<8>(words, x, scales, zeros, p.dcol, group),
-            b => panic!("unsupported bit width {b}"),
-        };
-    }
-}
-
-/// Aligned batched core: rows `row0..` of Y = dequant(P)·X for `n`
-/// stacked activations. Each packed u32 word is decoded ONCE into its
-/// `[f32; CPW]` lane array and FMA'd into every sequence's lane
-/// accumulators — the packed-weight read (the §Practical Speedups
-/// bottleneck) is amortized over the whole batch. Per-sequence
-/// accumulation order (lanes within words, words within groups, groups
-/// within the row) is identical to [`dot_packed_row_aligned`], so the
-/// batched result is bit-identical to n independent packed matvecs.
-fn matmul_rows_packed_aligned<const BITS: u32, const CPW: usize>(
-    p: &PackedMatrix,
-    xeffs: &[f32],
-    xsums: &[f32],
-    wpg: usize,
-    n: usize,
-    row0: usize,
-    ys: &mut [f32],
-) {
-    let mask = (1u32 << BITS) - 1;
-    let padded = p.nwords * CPW;
-    // per-sequence lane accumulators, reset per group
-    let mut accs = vec![0.0f32; n * CPW];
-    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
-        let r = row0 + i;
-        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
-        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
-        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
-        yrow.fill(0.0);
-        for (gi, gwords) in words.chunks_exact(wpg).enumerate() {
-            accs.fill(0.0);
-            let gbase = gi * wpg * CPW;
-            for (wi, &w) in gwords.iter().enumerate() {
-                let mut dec = [0.0f32; CPW];
-                for k in 0..CPW {
-                    dec[k] = ((w >> (BITS as usize * k)) & mask) as f32;
-                }
-                let off = gbase + wi * CPW;
-                for j in 0..n {
-                    let xg = &xeffs[j * padded + off..j * padded + off + CPW];
-                    let a = &mut accs[j * CPW..(j + 1) * CPW];
-                    for k in 0..CPW {
-                        a[k] += dec[k] * xg[k];
-                    }
-                }
-            }
-            let s = scales[gi];
-            let z = zeros[gi];
-            for (j, yv) in yrow.iter_mut().enumerate() {
-                let acc: f32 = accs[j * CPW..(j + 1) * CPW].iter().sum();
-                *yv += s * acc - s * z * xsums[j * p.ngroups + gi];
-            }
-        }
-    }
-}
-
-/// General (ragged) batched core: falls back to the per-sequence general
-/// dot (each row re-read per sequence — only odd test shapes land here).
-fn matmul_rows_packed_general(
-    p: &PackedMatrix,
-    xs: &[f32],
-    group: usize,
-    n: usize,
-    row0: usize,
-    ys: &mut [f32],
-) {
-    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
-        let r = row0 + i;
-        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
-        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
-        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
-        for (j, yv) in yrow.iter_mut().enumerate() {
-            let x = &xs[j * p.dcol..(j + 1) * p.dcol];
-            *yv = match p.bits {
-                2 => dot_packed_row_general::<2>(words, x, scales, zeros, p.dcol, group),
-                3 => dot_packed_row_general::<3>(words, x, scales, zeros, p.dcol, group),
-                4 => dot_packed_row_general::<4>(words, x, scales, zeros, p.dcol, group),
-                8 => dot_packed_row_general::<8>(words, x, scales, zeros, p.dcol, group),
-                b => panic!("unsupported bit width {b}"),
-            };
-        }
-    }
-}
-
 /// Batched Y = dequant(P)·X: `xs` sequence-major (n × dcol), `ys`
 /// row-major (drow × n). The continuous-batching kernel: packed weight
-/// rows are read once per step for ALL n sequences. Row-range parallel;
-/// bit-identical to n independent [`matvec_packed`] calls at every
-/// thread count.
+/// rows are read (and on SIMD ISAs, decoded) once per step for ALL n
+/// sequences. Row-range parallel; bit-identical to n independent
+/// [`matvec_packed`] calls at every thread count.
 pub fn matmul_packed(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32]) {
-    matmul_packed_with(p, xs, n, ys, pool_for(p.drow * p.dcol));
+    matmul_packed_with(p, xs, n, ys, pool_for(p.drow * p.dcol), kernels::isa());
 }
 
 /// Serial twin of [`matmul_packed`] (see [`matvec_f32_serial`]).
 pub fn matmul_packed_serial(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32]) {
-    matmul_packed_with(p, xs, n, ys, Pool::serial());
+    matmul_packed_with(p, xs, n, ys, Pool::serial(), kernels::isa());
 }
 
-fn matmul_packed_with(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32], pool: Pool) {
+/// [`matmul_packed`] at an explicit ISA.
+pub fn matmul_packed_isa(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32], isa: Isa) {
+    matmul_packed_with(p, xs, n, ys, pool_for(p.drow * p.dcol), isa);
+}
+
+fn matmul_packed_with(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32], pool: Pool, isa: Isa) {
     assert_eq!(xs.len(), n * p.dcol);
     assert_eq!(ys.len(), p.drow * n);
     if n == 0 {
         return;
     }
+    let isa = kernels::clamp(isa);
     let group = p.dcol / p.ngroups;
     let cpw = (32 / p.bits) as usize;
-    // same aligned/ragged split as matvec_packed_with
-    let aligned = p.ngroups == 1 || (group % cpw == 0 && p.nwords * cpw == p.dcol);
-    if aligned {
+    // aligned/general split: the predicate is shared with the tiled
+    // builder (kernels::packed_aligned) so both route shapes identically
+    if kernels::packed_aligned(p) {
         let padded = p.nwords * cpw;
         let mut xeff_store;
         let xeffs: &[f32] = if padded == p.dcol {
@@ -445,26 +219,27 @@ fn matmul_packed_with(p: &PackedMatrix, xs: &[f32], n: usize, ys: &mut [f32], po
             }
             &xeff_store
         };
-        // per-(sequence, group) Σx — row-independent, computed once
-        let mut xsums = vec![0.0f32; n * p.ngroups];
-        for j in 0..n {
-            let x = &xs[j * p.dcol..(j + 1) * p.dcol];
-            for (gi, xc) in x.chunks_exact(group).enumerate() {
-                xsums[j * p.ngroups + gi] = xc.iter().sum();
+        // per-(sequence, group) Σx — row-independent, computed once for
+        // the scalar kernel's factored form; skipped entirely when a SIMD
+        // LUT kernel will run (it bakes scale/zero into the table)
+        let mut xsums = Vec::new();
+        if kernels::packed_aligned_uses_xsum(isa, p.bits) {
+            xsums = vec![0.0f32; n * p.ngroups];
+            for j in 0..n {
+                let x = &xs[j * p.dcol..(j + 1) * p.dcol];
+                for (gi, xc) in x.chunks_exact(group).enumerate() {
+                    xsums[j * p.ngroups + gi] = xc.iter().sum();
+                }
             }
         }
         let wpg = p.nwords / p.ngroups;
-        par::for_rows_mut(&pool, ys, p.drow, n, |rows, chunk| match p.bits {
-            2 => matmul_rows_packed_aligned::<2, 16>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
-            3 => matmul_rows_packed_aligned::<3, 10>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
-            4 => matmul_rows_packed_aligned::<4, 8>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
-            8 => matmul_rows_packed_aligned::<8, 4>(p, xeffs, &xsums, wpg, n, rows.start, chunk),
-            b => panic!("unsupported bit width {b}"),
+        par::for_rows_mut(&pool, ys, p.drow, n, |rows, chunk| {
+            kernels::packed_matmul_rows_aligned(isa, p, xeffs, &xsums, wpg, n, rows.start, chunk);
         });
         return;
     }
     par::for_rows_mut(&pool, ys, p.drow, n, |rows, chunk| {
-        matmul_rows_packed_general(p, xs, group, n, rows.start, chunk);
+        kernels::packed_matmul_rows_general(p, xs, group, n, rows.start, chunk);
     });
 }
 
@@ -485,25 +260,26 @@ pub fn matmul_packed_bias_serial(p: &PackedMatrix, xs: &[f32], b: &[f32], n: usi
 /// Row-range parallel above [`MATVEC_PAR_MIN_ELEMS`] logical elements;
 /// bit-identical at every thread count (rows are independent).
 pub fn matvec_packed(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
-    matvec_packed_with(p, x, y, pool_for(p.drow * p.dcol));
+    matvec_packed_with(p, x, y, pool_for(p.drow * p.dcol), kernels::isa());
 }
 
 /// Serial twin of [`matvec_packed`] (see [`matvec_f32_serial`]).
 pub fn matvec_packed_serial(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
-    matvec_packed_with(p, x, y, Pool::serial());
+    matvec_packed_with(p, x, y, Pool::serial(), kernels::isa());
 }
 
-fn matvec_packed_with(p: &PackedMatrix, x: &[f32], y: &mut [f32], pool: Pool) {
+/// [`matvec_packed`] at an explicit ISA.
+pub fn matvec_packed_isa(p: &PackedMatrix, x: &[f32], y: &mut [f32], isa: Isa) {
+    matvec_packed_with(p, x, y, pool_for(p.drow * p.dcol), isa);
+}
+
+fn matvec_packed_with(p: &PackedMatrix, x: &[f32], y: &mut [f32], pool: Pool, isa: Isa) {
     assert_eq!(x.len(), p.dcol);
     assert_eq!(y.len(), p.drow);
+    let isa = kernels::clamp(isa);
     let group = p.dcol / p.ngroups;
     let cpw = (32 / p.bits) as usize;
-    // Fast path: either one grid per row (pad x so the ragged last word
-    // multiplies zeros — packed pad fields are 0 by construction), or
-    // grouped with whole-word groups (then dcol is word-aligned too).
-    // Real layer shapes always land here; odd shapes use the general path.
-    let aligned = p.ngroups == 1 || (group % cpw == 0 && p.nwords * cpw == p.dcol);
-    if aligned {
+    if kernels::packed_aligned(p) {
         let padded_len = p.nwords * cpw;
         let mut xpad_store;
         let xeff: &[f32] = if padded_len == p.dcol {
@@ -513,20 +289,24 @@ fn matvec_packed_with(p: &PackedMatrix, x: &[f32], y: &mut [f32], pool: Pool) {
             xpad_store[..p.dcol].copy_from_slice(x);
             &xpad_store
         };
-        // per-group Σx, shared by every row (row-independent term);
-        // pad zeros don't perturb the sums
-        let mut xsum = vec![0.0f32; p.ngroups];
-        for (gi, xs) in x.chunks_exact(group).enumerate() {
-            xsum[gi] = xs.iter().sum();
+        // per-group Σx, shared by every row (row-independent term; pad
+        // zeros don't perturb the sums) — skipped when a SIMD LUT kernel
+        // will run
+        let mut xsum = Vec::new();
+        if kernels::packed_aligned_uses_xsum(isa, p.bits) {
+            xsum = vec![0.0f32; p.ngroups];
+            for (gi, xs) in x.chunks_exact(group).enumerate() {
+                xsum[gi] = xs.iter().sum();
+            }
         }
         let wpg = p.nwords / p.ngroups;
         par::for_rows_mut(&pool, y, p.drow, 1, |rows, ys| {
-            packed_rows_aligned(p, xeff, &xsum, wpg, rows.start, ys);
+            kernels::packed_rows_aligned(isa, p, xeff, &xsum, wpg, rows.start, ys);
         });
         return;
     }
     par::for_rows_mut(&pool, y, p.drow, 1, |rows, ys| {
-        packed_rows_general(p, x, group, rows.start, ys);
+        kernels::packed_rows_general(p, x, group, rows.start, ys);
     });
 }
 
@@ -546,9 +326,79 @@ pub fn matvec_packed_bias_serial(p: &PackedMatrix, x: &[f32], b: &[f32], y: &mut
     }
 }
 
+/// y = dequant(T) x over the register-tiled interleaved layout
+/// (DESIGN.md §Kernels): one SIMD load of `x` feeds R row accumulators.
+/// On an ISA with a tiled microkernel for `t.bits` this is bit-identical
+/// per row to [`matvec_packed`] at the same ISA (same op order, different
+/// memory walk); otherwise a scalar tiled fallback runs (≤1e-5 from the
+/// flat scalar kernel). Tile-range parallel; bit-identical at every
+/// thread count.
+pub fn matvec_tiled(t: &TiledPacked, x: &[f32], y: &mut [f32]) {
+    matvec_tiled_with(t, x, y, pool_for(t.drow * t.dcol), kernels::isa());
+}
+
+/// Serial twin of [`matvec_tiled`].
+pub fn matvec_tiled_serial(t: &TiledPacked, x: &[f32], y: &mut [f32]) {
+    matvec_tiled_with(t, x, y, Pool::serial(), kernels::isa());
+}
+
+/// [`matvec_tiled`] at an explicit ISA.
+pub fn matvec_tiled_isa(t: &TiledPacked, x: &[f32], y: &mut [f32], isa: Isa) {
+    matvec_tiled_with(t, x, y, pool_for(t.drow * t.dcol), isa);
+}
+
+fn matvec_tiled_with(t: &TiledPacked, x: &[f32], y: &mut [f32], pool: Pool, isa: Isa) {
+    assert_eq!(x.len(), t.dcol);
+    assert_eq!(y.len(), t.drow);
+    let isa = kernels::clamp(isa);
+    let cpw = (32 / t.bits) as usize;
+    let padded_len = t.nwords * cpw;
+    let mut xpad_store;
+    let xeff: &[f32] = if padded_len == t.dcol {
+        x
+    } else {
+        xpad_store = vec![0.0f32; padded_len];
+        xpad_store[..t.dcol].copy_from_slice(x);
+        &xpad_store
+    };
+    // one contiguous tile-range job per worker (mirroring for_rows_mut's
+    // chunking — per-tile jobs would mean one contended atomic per 4 rows
+    // on the batch-1 decode hot path); the last tile's row range is
+    // ragged, so partition by hand over SliceParts (disjoint per-tile
+    // output ranges — the same soundness argument as for_rows_mut)
+    let workers = pool.nthreads().min(t.ntiles.max(1));
+    let chunk = t.ntiles.div_ceil(workers.max(1));
+    let parts = SliceParts::new(y);
+    pool.run_chunks(t.ntiles, chunk, |tr| {
+        for ti in tr {
+            let lo = ti * t.r;
+            let hi = ((ti + 1) * t.r).min(t.drow);
+            let ys = unsafe { parts.range(lo..hi) };
+            kernels::tiled_rows(isa, t, xeff, ti, ys);
+        }
+    });
+}
+
+/// y = dequant(T) x + b.
+pub fn matvec_tiled_bias(t: &TiledPacked, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_tiled(t, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Serial twin of [`matvec_tiled_bias`].
+pub fn matvec_tiled_bias_serial(t: &TiledPacked, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_tiled_serial(t, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
 /// Weight bytes touched by one matvec — the quantity the paper's speedup
-/// model is built on (used by the Table 5 analog to report the traffic
-/// reduction alongside measured latency).
+/// model is built on (used by the Table 5 analog and the roofline helper
+/// `util::bench::achieved_gbps` to report the traffic reduction alongside
+/// measured latency).
 pub fn weight_traffic_bytes(p: &PackedMatrix) -> usize {
     p.storage_bytes()
 }
@@ -556,17 +406,8 @@ pub fn weight_traffic_bytes(p: &PackedMatrix) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::testkit::rand_vec;
     use crate::quant::rtn_quantize;
-
-    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
-        let mut s = seed;
-        (0..n)
-            .map(|_| {
-                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-                (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
-            })
-            .collect()
-    }
 
     #[test]
     fn f32_matches_naive() {
@@ -697,6 +538,56 @@ mod tests {
         matmul_packed(&p, &xs, n, &mut a);
         matmul_packed_serial(&p, &xs, n, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_available_isa_agrees_with_scalar() {
+        // quick in-module parity smoke (the full property sweep lives in
+        // tests/kernel_parity.rs): weights scaled so row dots stay O(1)
+        let (drow, dcol) = (13usize, 128usize);
+        let w: Vec<f32> = rand_vec(drow * dcol, 51).iter().map(|v| v / dcol as f32).collect();
+        let x = rand_vec(dcol, 52);
+        for bits in [2u32, 3, 4, 8] {
+            let q = rtn_quantize(&w, drow, dcol, bits, 0);
+            let p = PackedMatrix::from_result(&q);
+            let mut want = vec![0.0f32; drow];
+            matvec_packed_isa(&p, &x, &mut want, Isa::Scalar);
+            for isa in kernels::available() {
+                let mut got = vec![0.0f32; drow];
+                matvec_packed_isa(&p, &x, &mut got, isa);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-5, "bits={bits} isa={isa}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_flat_packed() {
+        for (bits, g) in [(2u32, 0usize), (3, 0), (4, 16), (8, 0)] {
+            // drow 11: two full tiles + a ragged one
+            let (drow, dcol) = (11usize, 320usize);
+            let w: Vec<f32> =
+                rand_vec(drow * dcol, 61 + bits as u64).iter().map(|v| v / dcol as f32).collect();
+            let q = rtn_quantize(&w, drow, dcol, bits, g);
+            let p = PackedMatrix::from_result(&q);
+            let t = TiledPacked::from_packed(&p).expect("aligned shape tiles");
+            let x = rand_vec(dcol, 62);
+            for isa in kernels::available() {
+                let mut yt = vec![0.0f32; drow];
+                let mut yp = vec![0.0f32; drow];
+                matvec_tiled_isa(&t, &x, &mut yt, isa);
+                matvec_packed_isa(&p, &x, &mut yp, isa);
+                for (row, (a, b)) in yt.iter().zip(&yp).enumerate() {
+                    if kernels::tiled_supported(isa, bits) {
+                        // same op order, different memory walk: bit-equal
+                        assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} isa={isa} row={row}");
+                    } else {
+                        assert!((a - b).abs() < 1e-5, "bits={bits} isa={isa} row={row}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,11 +5,16 @@
 //! generative inference is memory-bandwidth-bound), so [`matvec`] carries
 //! both the f32 baseline and the packed dequantizing matvec — the Rust
 //! twin of the L1 `packmatvec` Pallas kernel and the analog of the paper's
-//! CUDA kernel (§Practical Speedups).
+//! CUDA kernel (§Practical Speedups). The per-row arithmetic behind it
+//! lives in [`kernels`]: runtime-dispatched SIMD microkernels
+//! (scalar/AVX2+FMA/NEON, `--isa` / `GPTQ_ISA`) with LUT dequant and the
+//! register-tiled [`kernels::tiled::TiledPacked`] layout (DESIGN.md
+//! §Kernels).
 
 pub mod checkpoint;
 pub mod config;
 pub mod forward;
+pub mod kernels;
 pub mod kvpool;
 pub mod matvec;
 pub mod tensor;
@@ -17,6 +22,7 @@ pub mod testkit;
 
 pub use checkpoint::{Checkpoint, QuantizedCheckpoint};
 pub use config::ModelConfig;
-pub use forward::{CpuModel, KvCache, LinearWeight};
+pub use forward::{CpuModel, KvCache, LinearWeight, PackedLinear};
+pub use kernels::{Isa, TiledPacked};
 pub use kvpool::{KvPool, SeqCache};
 pub use tensor::Tensor;

@@ -13,6 +13,19 @@ use std::collections::BTreeMap;
 /// Manifest model name used by [`tiny_checkpoint`] / [`tiny_manifest`].
 pub const TINY_SIZE: &str = "tiny";
 
+/// Seeded uniform(-1, 1) f32 vector — THE shared test-vector generator
+/// (the same LCG the tiny checkpoint uses), so kernel/layout test suites
+/// don't each carry their own copy.
+pub fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
+        })
+        .collect()
+}
+
 /// The tiny config: 2 blocks, d=16, ff=32, vocab 32, max_seq 16.
 pub fn tiny_config() -> ModelConfig {
     ModelConfig { d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, vocab: 32, max_seq: 16 }

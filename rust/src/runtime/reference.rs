@@ -207,7 +207,10 @@ const REF_PAR_MIN_WORK: usize = 1 << 16;
 /// attention loop are row-range parallel with disjoint writes; each
 /// row's arithmetic is unchanged from the serial loop, so results are
 /// bit-identical at every thread count. Inner matvecs use the serial
-/// kernels to avoid nested thread scopes.
+/// kernels to avoid nested thread scopes; like every matvec in the crate
+/// they run on the runtime-dispatched ISA kernels (`model::kernels`), so
+/// the backend inherits SIMD for free while `GPTQ_ISA=scalar` keeps the
+/// historical bit-exact arithmetic.
 fn block_forward_batched(
     cfg: &ModelConfig,
     x: &[f32],

@@ -95,6 +95,54 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Achieved bandwidth for a kernel that moved `bytes` in `mean_ms`
+/// milliseconds — the roofline companion to
+/// `model::matvec::weight_traffic_bytes`: memory-bound kernels are judged
+/// against GB/s, not just speedup (a 4-bit kernel at the same GB/s as the
+/// f32 kernel IS the paper's ~8× win; a faster-than-f32 kernel that is
+/// far below peak bandwidth still has headroom).
+pub fn achieved_gbps(bytes: usize, mean_ms: f64) -> f64 {
+    bytes as f64 / (mean_ms.max(1e-12) * 1e-3) / 1e9
+}
+
+/// A measured streaming-bandwidth ceiling for roofline reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// best observed read bandwidth of a cache-busting sequential sweep
+    pub peak_gbps: f64,
+}
+
+impl Roofline {
+    /// Measure single-thread streaming read bandwidth: sum-reduce a
+    /// 64 MiB f32 buffer (far past LLC) with 8 independent accumulators,
+    /// best of 3 sweeps. This is the per-core roofline the decode-path
+    /// kernels are bounded by; it is a measurement, so only benches call
+    /// it (never tests).
+    pub fn measure() -> Roofline {
+        const N: usize = 16 << 20; // 16 Mi f32 = 64 MiB
+        let buf = vec![1.0f32; N];
+        let mut best_s = f64::INFINITY;
+        for _ in 0..3 {
+            let t = Instant::now();
+            let mut acc = [0.0f32; 8];
+            for chunk in buf.chunks_exact(8) {
+                for (a, &v) in acc.iter_mut().zip(chunk) {
+                    *a += v;
+                }
+            }
+            black_box(acc);
+            best_s = best_s.min(t.elapsed().as_secs_f64());
+        }
+        Roofline { peak_gbps: (N * 4) as f64 / best_s.max(1e-12) / 1e9 }
+    }
+
+    /// Fraction of the measured peak an achieved bandwidth reaches
+    /// (>1.0 means the working set was cache-resident).
+    pub fn fraction(&self, gbps: f64) -> f64 {
+        gbps / self.peak_gbps.max(1e-12)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +167,15 @@ mod tests {
             black_box(1 + 1);
         });
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn achieved_gbps_math() {
+        // 1 GB in 1 s = 1 GB/s; 8 bytes in 1 µs (0.001 ms) = 8 MB/ms = 0.008 GB/s
+        assert!((achieved_gbps(1_000_000_000, 1000.0) - 1.0).abs() < 1e-9);
+        assert!((achieved_gbps(8, 0.001) - 0.008).abs() < 1e-9);
+        let r = Roofline { peak_gbps: 10.0 };
+        assert!((r.fraction(5.0) - 0.5).abs() < 1e-9);
     }
 
     #[test]

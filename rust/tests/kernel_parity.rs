@@ -1,0 +1,308 @@
+//! Kernel-parity suite (DESIGN.md §Kernels): every SIMD kernel must match
+//! the scalar kernel within 1e-5 elementwise on random shapes — including
+//! ragged dcol and groupsize {0, 16, 64} — and, per ISA, the batched
+//! kernels must replay the single-sequence kernels bitwise (the serving
+//! parity contract of PR 3, now per ISA).
+//!
+//! The suite also PINS `Isa::Scalar` to the historical kernels: a verbatim
+//! copy of the pre-dispatch aligned packed kernel and the 4-wide dense dot
+//! lives below, and the scalar dispatch must reproduce them bit-for-bit.
+//! (The scalar GENERAL/ragged path is the one deliberate change of this
+//! PR — it now decodes through the per-group dequant LUT like the SIMD
+//! kernels; the aligned path, which every real layer shape hits, is
+//! bit-frozen.)
+//!
+//! All tests pass an explicit [`Isa`] into the `*_isa` entry points
+//! instead of mutating the process-wide dispatch state, so they are safe
+//! under the concurrent test runner; the one knob test below only touches
+//! state no other test in this binary reads.
+
+use gptq_rs::model::kernels::{self, Isa, TiledPacked};
+use gptq_rs::model::matvec::{
+    matmul_f32_isa, matmul_packed_isa, matvec_f32_isa, matvec_packed_isa, matvec_tiled_isa,
+};
+use gptq_rs::model::testkit::rand_vec;
+use gptq_rs::quant::{rtn_quantize, PackedMatrix};
+
+/// Weights scaled so each dequantized element is O(1/dcol): row dots stay
+/// O(1) and f32 reassociation error across ISAs sits well under the 1e-5
+/// gate.
+fn scaled_weights(drow: usize, dcol: usize, seed: u64) -> Vec<f32> {
+    rand_vec(drow * dcol, seed).iter().map(|v| v / dcol as f32).collect()
+}
+
+/// The shape matrix of the satellite spec: per groupsize, a dcol that is
+/// divisible by the group but deliberately awkward for codes-per-word
+/// (37: ragged tail at every width; 112 = 16·7; 192 = 64·3), plus one
+/// large aligned decode-like shape.
+const SHAPES: [(usize, usize); 4] = [(9, 37), (9, 112), (9, 192), (16, 1024)];
+
+fn groupsize_for(dcol: usize) -> usize {
+    match dcol {
+        112 => 16,
+        192 => 64,
+        _ => 0,
+    }
+}
+
+#[test]
+fn simd_packed_matvec_matches_scalar_elementwise() {
+    for isa in kernels::available() {
+        for bits in [2u32, 3, 4, 8] {
+            for (drow, dcol) in SHAPES {
+                let g = groupsize_for(dcol);
+                let w = scaled_weights(drow, dcol, bits as u64 * 1009 + dcol as u64);
+                let q = rtn_quantize(&w, drow, dcol, bits, g);
+                let p = PackedMatrix::from_result(&q);
+                let x = rand_vec(dcol, 7 + dcol as u64);
+                let mut want = vec![0.0f32; drow];
+                let mut got = vec![0.0f32; drow];
+                matvec_packed_isa(&p, &x, &mut want, Isa::Scalar);
+                matvec_packed_isa(&p, &x, &mut got, isa);
+                for (row, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "isa={isa} bits={bits} g={g} {drow}x{dcol} row={row}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_packed_bitwise_replays_single_sequence_per_isa() {
+    let n = 3usize;
+    for isa in kernels::available() {
+        for bits in [2u32, 3, 4, 8] {
+            for (drow, dcol) in SHAPES {
+                let g = groupsize_for(dcol);
+                let w = scaled_weights(drow, dcol, bits as u64 * 271 + dcol as u64);
+                let q = rtn_quantize(&w, drow, dcol, bits, g);
+                let p = PackedMatrix::from_result(&q);
+                let xs = rand_vec(n * dcol, 11 + bits as u64);
+                let mut ys = vec![0.0f32; drow * n];
+                matmul_packed_isa(&p, &xs, n, &mut ys, isa);
+                for j in 0..n {
+                    let mut y = vec![0.0f32; drow];
+                    matvec_packed_isa(&p, &xs[j * dcol..(j + 1) * dcol], &mut y, isa);
+                    for row in 0..drow {
+                        assert_eq!(
+                            ys[row * n + j].to_bits(),
+                            y[row].to_bits(),
+                            "isa={isa} bits={bits} g={g} {drow}x{dcol} row={row} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_dense_matches_scalar_and_batched_is_bitwise() {
+    let n = 3usize;
+    for isa in kernels::available() {
+        for (drow, dcol) in [(9usize, 37usize), (16, 1024), (7, 129)] {
+            let w = scaled_weights(drow, dcol, 31 + dcol as u64);
+            let x = rand_vec(dcol, 32);
+            let mut want = vec![0.0f32; drow];
+            let mut got = vec![0.0f32; drow];
+            matvec_f32_isa(&w, &x, drow, dcol, &mut want, Isa::Scalar);
+            matvec_f32_isa(&w, &x, drow, dcol, &mut got, isa);
+            for (row, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-5, "isa={isa} {drow}x{dcol} row={row}: {a} vs {b}");
+            }
+            // dense batched ≡ stacked single-sequence dots, bitwise, per ISA
+            let xs = rand_vec(n * dcol, 33);
+            let mut ys = vec![0.0f32; drow * n];
+            matmul_f32_isa(&w, &xs, drow, dcol, n, &mut ys, isa);
+            for j in 0..n {
+                let mut y = vec![0.0f32; drow];
+                matvec_f32_isa(&w, &xs[j * dcol..(j + 1) * dcol], drow, dcol, &mut y, isa);
+                for row in 0..drow {
+                    assert_eq!(
+                        ys[row * n + j].to_bits(),
+                        y[row].to_bits(),
+                        "isa={isa} {drow}x{dcol} row={row} j={j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_layout_agrees_with_flat_per_isa() {
+    for isa in kernels::available() {
+        for bits in [2u32, 3, 4, 8] {
+            for g in [0usize, 64] {
+                // 14 rows: 3 full tiles + a ragged 2-row one
+                let (drow, dcol) = (14usize, 320usize);
+                let w = scaled_weights(drow, dcol, bits as u64 * 53 + g as u64);
+                let q = rtn_quantize(&w, drow, dcol, bits, g);
+                let p = PackedMatrix::from_result(&q);
+                let Some(t) = TiledPacked::from_packed(&p) else {
+                    continue; // 3-bit grouped: not whole-word, stays flat
+                };
+                let x = rand_vec(dcol, 54);
+                let mut yt = vec![0.0f32; drow];
+                let mut yp = vec![0.0f32; drow];
+                matvec_tiled_isa(&t, &x, &mut yt, isa);
+                matvec_packed_isa(&p, &x, &mut yp, isa);
+                for (row, (a, b)) in yt.iter().zip(&yp).enumerate() {
+                    if kernels::tiled_supported(isa, bits) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "isa={isa} bits={bits} g={g} row={row}: tiled {a} vs flat {b}"
+                        );
+                    } else {
+                        assert!(
+                            (a - b).abs() < 1e-5,
+                            "isa={isa} bits={bits} g={g} row={row}: tiled {a} vs flat {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar bit-freeze: verbatim copies of the pre-dispatch kernels.
+// ---------------------------------------------------------------------------
+
+/// Pre-PR dense dot (4-wide unrolled), copied verbatim.
+fn legacy_dot4(row: &[f32], x: &[f32], dcol: usize) -> f32 {
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = dcol / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += row[i] * x[i];
+        acc1 += row[i + 1] * x[i + 1];
+        acc2 += row[i + 2] * x[i + 2];
+        acc3 += row[i + 3] * x[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks * 4..dcol {
+        acc += row[i] * x[i];
+    }
+    acc
+}
+
+/// Pre-PR aligned packed row dot, copied verbatim.
+fn legacy_dot_packed_aligned<const BITS: u32, const CPW: usize>(
+    words: &[u32],
+    x: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    xsum: &[f32],
+    words_per_group: usize,
+) -> f32 {
+    let mask = (1u32 << BITS) - 1;
+    let mut y = 0.0f32;
+    for (gi, gwords) in words.chunks_exact(words_per_group).enumerate() {
+        let mut accs = [0.0f32; CPW];
+        let xg = &x[gi * words_per_group * CPW..];
+        for (wi, &w) in gwords.iter().enumerate() {
+            let xs = &xg[wi * CPW..wi * CPW + CPW];
+            for k in 0..CPW {
+                accs[k] += ((w >> (BITS as usize * k)) & mask) as f32 * xs[k];
+            }
+        }
+        let acc: f32 = accs.iter().sum();
+        y += scales[gi] * acc - scales[gi] * zeros[gi] * xsum[gi];
+    }
+    y
+}
+
+/// The pre-PR aligned matvec wrapper (pad + per-group Σx), verbatim.
+fn legacy_matvec_packed_aligned(p: &PackedMatrix, x: &[f32], y: &mut [f32]) {
+    let group = p.dcol / p.ngroups;
+    let cpw = (32 / p.bits) as usize;
+    assert!(p.ngroups == 1 || (group % cpw == 0 && p.nwords * cpw == p.dcol), "aligned only");
+    let padded_len = p.nwords * cpw;
+    let mut xpad_store;
+    let xeff: &[f32] = if padded_len == p.dcol {
+        x
+    } else {
+        xpad_store = vec![0.0f32; padded_len];
+        xpad_store[..p.dcol].copy_from_slice(x);
+        &xpad_store
+    };
+    let mut xsum = vec![0.0f32; p.ngroups];
+    for (gi, xs) in x.chunks_exact(group).enumerate() {
+        xsum[gi] = xs.iter().sum();
+    }
+    let wpg = p.nwords / p.ngroups;
+    for (r, yr) in y.iter_mut().enumerate() {
+        let words = &p.words[r * p.nwords..(r + 1) * p.nwords];
+        let scales = &p.scales[r * p.ngroups..(r + 1) * p.ngroups];
+        let zeros = &p.zeros[r * p.ngroups..(r + 1) * p.ngroups];
+        *yr = match p.bits {
+            2 => legacy_dot_packed_aligned::<2, 16>(words, xeff, scales, zeros, &xsum, wpg),
+            3 => legacy_dot_packed_aligned::<3, 10>(words, xeff, scales, zeros, &xsum, wpg),
+            4 => legacy_dot_packed_aligned::<4, 8>(words, xeff, scales, zeros, &xsum, wpg),
+            8 => legacy_dot_packed_aligned::<8, 4>(words, xeff, scales, zeros, &xsum, wpg),
+            b => panic!("unsupported bit width {b}"),
+        };
+    }
+}
+
+#[test]
+fn scalar_isa_is_bit_identical_to_legacy_kernels() {
+    // dense: every shape
+    for (drow, dcol) in [(9usize, 37usize), (16, 1024), (7, 129)] {
+        let w = rand_vec(drow * dcol, 71 + dcol as u64);
+        let x = rand_vec(dcol, 72);
+        let mut got = vec![0.0f32; drow];
+        matvec_f32_isa(&w, &x, drow, dcol, &mut got, Isa::Scalar);
+        for (r, a) in got.iter().enumerate() {
+            let want = legacy_dot4(&w[r * dcol..(r + 1) * dcol], &x, dcol);
+            assert_eq!(a.to_bits(), want.to_bits(), "dense {drow}x{dcol} row={r}");
+        }
+    }
+    // packed: every bit width over aligned layouts (grouped, word-aligned,
+    // and ngroups==1 with a ragged padded tail) — the paths real layer
+    // shapes hit, bit-frozen across the dispatch refactor
+    for bits in [2u32, 3, 4, 8] {
+        for (drow, dcol, g) in [(12usize, 1024usize, 0usize), (12, 1024, 64), (5, 37, 0)] {
+            // g=64: whole-word groups for 2/4/8-bit only; 3-bit packs 10
+            // codes/word, so 64 % 10 != 0 lands it on the general path —
+            // skip (the general path is the documented LUT change)
+            if g != 0 && (g % (32 / bits as usize) != 0) {
+                continue;
+            }
+            let w = rand_vec(drow * dcol, bits as u64 * 97 + g as u64);
+            let q = rtn_quantize(&w, drow, dcol, bits, g);
+            let p = PackedMatrix::from_result(&q);
+            let x = rand_vec(dcol, 73);
+            let mut got = vec![0.0f32; drow];
+            let mut want = vec![0.0f32; drow];
+            matvec_packed_isa(&p, &x, &mut got, Isa::Scalar);
+            legacy_matvec_packed_aligned(&p, &x, &mut want);
+            for (row, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} g={g} {drow}x{dcol} row={row}");
+            }
+        }
+    }
+}
+
+#[test]
+fn isa_knobs_clamp_and_reset() {
+    // explicit scalar always sticks; unsupported requests clamp to scalar;
+    // auto resolves to something runnable. (No other test in this binary
+    // reads the process-wide ISA — they all pin it per call.)
+    assert_eq!(kernels::set_isa_name("scalar").unwrap(), Isa::Scalar);
+    assert_eq!(kernels::isa(), Isa::Scalar);
+    let auto = kernels::set_isa_name("auto").unwrap();
+    assert!(kernels::supported(auto));
+    assert!(kernels::set_isa_name("sse9").is_err());
+    let forced = kernels::set_isa(Isa::Neon);
+    assert!(kernels::supported(forced)); // Neon on aarch64, else Scalar
+    kernels::set_isa_env();
+}
