@@ -71,9 +71,10 @@ impl LatencyStats {
     }
 }
 
-/// Per-worker serving metrics, one [`LatencyStats`] per dimension. The
-/// scheduler records each completed request's samples; workers' metrics
-/// merge at shutdown (`Server::shutdown`).
+/// Per-worker serving metrics, one [`LatencyStats`] per dimension plus
+/// the prefix-cache counters. The scheduler records each completed
+/// request's samples; workers' metrics merge at shutdown
+/// (`Server::shutdown`).
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     /// one sample per generated token: the batched decode step that
@@ -85,6 +86,16 @@ pub struct ServeMetrics {
     pub ttft: LatencyStats,
     /// one sample per request: submit → admitted to a scheduler slot
     pub queue_wait: LatencyStats,
+    /// admissions that consulted the prefix cache (cache enabled and a
+    /// shareable prompt, i.e. ≥ 2 tokens — the cap at plen − 1 makes a
+    /// 1-token prompt structurally unshareable; re-admissions after
+    /// preemption consult again)
+    pub prefix_lookups: usize,
+    /// consultations that matched at least one cached page
+    pub prefix_hits: usize,
+    /// prompt tokens whose prefill was skipped by forking cached KV
+    /// pages — the cross-request work the prefix cache saved
+    pub prefill_tokens_saved: usize,
 }
 
 impl ServeMetrics {
@@ -97,21 +108,36 @@ impl ServeMetrics {
         self.queue_wait.count()
     }
 
+    /// Fraction of prefix-cache consultations that hit (0.0 when the
+    /// cache was never consulted).
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
     pub fn merge(&mut self, other: &ServeMetrics) {
         self.per_token.merge(&other.per_token);
         self.prefill.merge(&other.prefill);
         self.ttft.merge(&other.ttft);
         self.queue_wait.merge(&other.queue_wait);
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "per-token {} | ttft p50={:.3}ms p99={:.3}ms | queue-wait p50={:.3}ms p99={:.3}ms",
+            "per-token {} | ttft p50={:.3}ms p99={:.3}ms | queue-wait p50={:.3}ms p99={:.3}ms | \
+             prefix-cache hit-rate={:.2} saved={} tokens",
             self.per_token.summary(),
             self.ttft.percentile(50.0),
             self.ttft.percentile(99.0),
             self.queue_wait.percentile(50.0),
             self.queue_wait.percentile(99.0),
+            self.cache_hit_rate(),
+            self.prefill_tokens_saved,
         )
     }
 }
@@ -212,16 +238,58 @@ mod tests {
         a.ttft.record_ms(10.0);
         a.queue_wait.record_ms(1.0);
         a.prefill.record_ms(4.0);
+        a.prefix_lookups = 4;
+        a.prefix_hits = 1;
+        a.prefill_tokens_saved = 32;
         let mut b = ServeMetrics::new();
         b.per_token.record_ms(3.0);
         b.ttft.record_ms(20.0);
         b.queue_wait.record_ms(2.0);
         b.prefill.record_ms(6.0);
+        b.prefix_lookups = 2;
+        b.prefix_hits = 2;
+        b.prefill_tokens_saved = 10;
         a.merge(&b);
         assert_eq!(a.per_token.count(), 2);
         assert_eq!(a.requests(), 2);
         assert!((a.ttft.mean() - 15.0).abs() < 1e-12);
         assert!((a.prefill.mean() - 5.0).abs() < 1e-12);
         assert!((a.queue_wait.mean() - 1.5).abs() < 1e-12);
+        assert_eq!(a.prefix_lookups, 6);
+        assert_eq!(a.prefix_hits, 3);
+        assert_eq!(a.prefill_tokens_saved, 42);
+        assert!((a.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_hit_rate_safe_when_never_consulted() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.prefill_tokens_saved, 0);
+        let s = m.summary();
+        assert!(s.contains("prefix-cache"), "{s}");
+    }
+
+    #[test]
+    fn zero_token_prefill_keeps_request_accounting_consistent() {
+        // a request admitted with its whole (empty or fully-cached-but-
+        // capped) prompt already in KV still records queue-wait and — if
+        // it emits a token — TTFT, while prefill may be a 0 ms sample.
+        // requests() keys off queue_wait, so it must not drift from the
+        // other per-request dimensions.
+        let mut m = ServeMetrics::new();
+        m.queue_wait.record_ms(0.2);
+        m.prefill.record_ms(0.0);
+        m.ttft.record_ms(0.4);
+        assert_eq!(m.requests(), 1);
+        assert_eq!(m.prefill.count(), 1);
+        assert_eq!(m.ttft.count(), 1);
+        assert_eq!(m.prefill.mean(), 0.0);
+        assert!(m.ttft.percentile(50.0) > 0.0);
+        // a no-token request (max_new 0): queue-wait yes, TTFT no
+        m.queue_wait.record_ms(0.1);
+        m.prefill.record_ms(0.0);
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.ttft.count(), 1, "no-token requests must not skew TTFT");
     }
 }

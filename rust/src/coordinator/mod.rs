@@ -16,15 +16,21 @@
 //!   iteration-level admission/eviction over a paged KV pool, one
 //!   batched decode step per iteration for all in-flight sequences,
 //!   preempt + FIFO re-queue backpressure when the pool is exhausted.
+//! * [`prefixcache`] — the radix prompt cache admission consults: a
+//!   page-granular token-prefix trie over the KV pool, so requests
+//!   sharing a system/few-shot prefix fork already-computed pages
+//!   instead of re-running prefill (DESIGN.md §Prefix cache).
 //! * [`metrics`] — latency/throughput accounting (per-token, TTFT,
-//!   queue wait).
+//!   queue wait, prefix-cache hit rate and prefill tokens saved).
 
 pub mod metrics;
 pub mod pipeline;
+pub mod prefixcache;
 pub mod scheduler;
 pub mod serve;
 
 pub use metrics::{LatencyStats, ServeMetrics};
 pub use pipeline::{QuantEngine, QuantPipeline, PipelineConfig, PipelineReport};
+pub use prefixcache::PrefixCache;
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use serve::{verify_parity, GenRequest, GenResponse, Server, ServerConfig};

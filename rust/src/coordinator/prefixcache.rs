@@ -1,0 +1,351 @@
+//! Radix prompt cache — the cross-request prefix-sharing index over the
+//! paged KV pool.
+//!
+//! Real serving traffic shares long prompt prefixes (system prompts,
+//! few-shot preambles), and once per-token compute is kernel-bound the
+//! dominant redundant cost under concurrent load is re-running prefill
+//! for KV rows an earlier request already produced. This cache indexes
+//! those rows by the token ids that generated them: a trie whose edges
+//! are **exactly `page_size` tokens** and whose nodes each pin one pool
+//! page. Admission walks the trie with a new prompt, forks the matched
+//! pages into the request's `SeqCache` ([`KvPool::fork_pages`] — a
+//! refcount bump, no float moves), and enqueues only the uncached suffix
+//! as chunked prefill.
+//!
+//! **Why page-granular keys.** A KV page holds `page_size` positions and
+//! is the pool's unit of sharing — a fork maps whole pages or nothing.
+//! Causality makes page `i`'s rows a pure function of tokens
+//! `0..(i+1)·page_size`, so keying edge `i` by exactly that token chunk
+//! means a trie match IS a valid KV match: no sub-page bookkeeping, no
+//! partial-page copies at lookup time, and the index stays proportional
+//! to cached pages rather than cached tokens.
+//!
+//! **Invariants** (fuzzed by `tests/kvpool_refcount.rs`, spelled out in
+//! DESIGN.md §Prefix cache):
+//! * every node holds exactly one refcount on its page
+//!   ([`KvPool::retain_page`] on insert, [`KvPool::release_page`] on
+//!   evict) — a page appears in at most one node;
+//! * eviction only ever drops pages whose refcount is 1, i.e. pages no
+//!   live sequence maps — shared pages are unevictable until the last
+//!   sequence releases them, so a hit can never dangle;
+//! * eviction removes leaves first (LRU by last-touched lookup/insert),
+//!   so every root-to-node path always remains a complete prefix.
+
+use crate::model::{KvPool, SeqCache};
+
+/// One trie node: the `page_size`-token edge key that leads to it, the
+/// pool page holding that chunk's KV rows, an LRU stamp, and children.
+/// Children are a Vec scanned linearly — fan-out is small (distinct
+/// prompt continuations at one depth) and iteration order deterministic.
+#[derive(Debug)]
+struct Node {
+    key: Vec<u8>,
+    page: u32,
+    last_use: u64,
+    children: Vec<Node>,
+}
+
+/// Token-prefix → KV-page index for one worker's pool (see module docs).
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    page_size: usize,
+    roots: Vec<Node>,
+    clock: u64,
+    pages_held: usize,
+}
+
+impl PrefixCache {
+    pub fn new(page_size: usize) -> Self {
+        assert!(page_size > 0, "PrefixCache page_size must be positive");
+        Self { page_size, roots: Vec::new(), clock: 0, pages_held: 0 }
+    }
+
+    /// Pages currently pinned by the cache (each holds one refcount).
+    pub fn pages_held(&self) -> usize {
+        self.pages_held
+    }
+
+    /// Longest cached prefix of `tokens`, as the pool pages holding its
+    /// KV rows — `pages.len() × page_size` tokens are covered. Touches
+    /// the matched path's LRU stamps.
+    pub fn lookup(&mut self, tokens: &[u8]) -> Vec<u32> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut pages = Vec::new();
+        let mut level = &mut self.roots;
+        for chunk in tokens.chunks_exact(self.page_size) {
+            match level.iter_mut().position(|n| n.key == chunk) {
+                Some(i) => {
+                    let node = &mut level[i];
+                    node.last_use = clock;
+                    pages.push(node.page);
+                    level = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Index the full prompt pages of `seq` under the token chunks of
+    /// `tokens` (the prompt as actually prefilled — `seq` must have at
+    /// least `tokens.len()` filled positions). Chunks already present
+    /// keep their existing page (first writer wins — both pages hold
+    /// bit-identical rows, greedy prefill being deterministic); new
+    /// chunks pin `seq`'s page with an extra refcount. Only whole pages
+    /// are indexed; a trailing partial page is ignored.
+    pub fn insert(&mut self, pool: &mut KvPool, tokens: &[u8], seq: &SeqCache) {
+        debug_assert!(seq.len >= tokens.len() - tokens.len() % self.page_size);
+        self.clock += 1;
+        let clock = self.clock;
+        let mut level = &mut self.roots;
+        for (i, chunk) in tokens.chunks_exact(self.page_size).enumerate() {
+            let pos = match level.iter_mut().position(|n| n.key == chunk) {
+                Some(p) => p,
+                None => {
+                    let page = seq.pages()[i];
+                    pool.retain_page(page);
+                    self.pages_held += 1;
+                    level.push(Node {
+                        key: chunk.to_vec(),
+                        page,
+                        last_use: clock,
+                        children: Vec::new(),
+                    });
+                    level.len() - 1
+                }
+            };
+            let node = &mut level[pos];
+            node.last_use = clock;
+            level = &mut node.children;
+        }
+    }
+
+    /// Free up to `want` pages by evicting least-recently-used **leaf**
+    /// entries whose page has no other holder (refcount 1 — dropping the
+    /// hold actually returns memory; pages live sequences map are never
+    /// freed from under them, and evicting their entries would reclaim
+    /// nothing). Inner nodes become evictable as their subtrees drain.
+    /// Returns the number of pages actually freed.
+    pub fn evict(&mut self, pool: &mut KvPool, want: usize) -> usize {
+        let mut freed = 0;
+        while freed < want {
+            match Self::evict_lru_leaf(&mut self.roots, pool) {
+                Some(page) => {
+                    pool.release_page(page);
+                    self.pages_held -= 1;
+                    freed += 1;
+                }
+                None => break,
+            }
+        }
+        freed
+    }
+
+    /// Remove the LRU leaf with a refcount-1 page from the forest rooted
+    /// at `level`; returns its page (not yet released).
+    fn evict_lru_leaf(level: &mut Vec<Node>, pool: &KvPool) -> Option<u32> {
+        fn find(level: &[Node], pool: &KvPool, best: &mut Option<(u64, Vec<usize>)>, path: &mut Vec<usize>) {
+            for (i, n) in level.iter().enumerate() {
+                path.push(i);
+                if n.children.is_empty() {
+                    if pool.refcount(n.page) == 1
+                        && best.as_ref().map(|(t, _)| n.last_use < *t).unwrap_or(true)
+                    {
+                        *best = Some((n.last_use, path.clone()));
+                    }
+                } else {
+                    find(&n.children, pool, best, path);
+                }
+                path.pop();
+            }
+        }
+        let mut best = None;
+        find(level, pool, &mut best, &mut Vec::new());
+        let (_, path) = best?;
+        let mut level = level;
+        for &i in &path[..path.len() - 1] {
+            level = &mut level[i].children;
+        }
+        Some(level.remove(path[path.len() - 1]).page)
+    }
+
+    /// Drop every hold and empty the index (worker teardown, tests).
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        fn drop_subtree(n: Node, pool: &mut KvPool) {
+            pool.release_page(n.page);
+            for c in n.children {
+                drop_subtree(c, pool);
+            }
+        }
+        for n in self.roots.drain(..) {
+            drop_subtree(n, pool);
+        }
+        self.pages_held = 0;
+    }
+
+    /// Every page the cache holds (test/debug audit of refcounts).
+    pub fn held_pages(&self) -> Vec<u32> {
+        fn walk(level: &[Node], out: &mut Vec<u32>) {
+            for n in level {
+                out.push(n.page);
+                walk(&n.children, out);
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.roots, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::tiny_config;
+
+    /// A pool plus a sequence whose first `len` positions are "filled"
+    /// (rows written so the refcount discipline is exercised for real).
+    fn pool_with_seq(n_pages: usize, ps: usize, len: usize) -> (KvPool, SeqCache) {
+        let cfg = tiny_config();
+        let mut pool = KvPool::new(&cfg, n_pages, ps);
+        let mut seq = SeqCache::new();
+        assert!(pool.reserve(&mut seq, len));
+        let row = vec![0.5; cfg.d_model];
+        for pos in 0..len {
+            for l in 0..cfg.n_layers {
+                pool.write_row(&seq, l, pos, &row, &row);
+            }
+        }
+        seq.len = len;
+        (pool, seq)
+    }
+
+    #[test]
+    fn miss_then_insert_then_hit() {
+        let (mut pool, mut seq) = pool_with_seq(8, 2, 6);
+        let mut c = PrefixCache::new(2);
+        let prompt = [1u8, 2, 3, 4, 5, 6];
+        assert!(c.lookup(&prompt).is_empty());
+        c.insert(&mut pool, &prompt, &seq);
+        assert_eq!(c.pages_held(), 3);
+        // full hit: all 3 pages, in order
+        assert_eq!(c.lookup(&prompt), seq.pages()[..3].to_vec());
+        // longest-prefix hit for a diverging prompt
+        assert_eq!(c.lookup(&[1, 2, 3, 4, 9, 9]), seq.pages()[..2].to_vec());
+        assert_eq!(c.lookup(&[9, 9]), Vec::<u32>::new());
+        // partial trailing chunk is not indexed and not matched
+        assert_eq!(c.lookup(&[1, 2, 3]), seq.pages()[..1].to_vec());
+        // cache holds survive the sequence releasing
+        pool.release(&mut seq);
+        assert_eq!(pool.free_pages(), 5);
+        c.clear(&mut pool);
+        assert_eq!(pool.free_pages(), 8);
+    }
+
+    #[test]
+    fn insert_is_idempotent_first_writer_wins() {
+        let (mut pool, seq) = pool_with_seq(8, 2, 4);
+        let mut c = PrefixCache::new(2);
+        c.insert(&mut pool, &[1, 2, 3, 4], &seq);
+        let held = c.held_pages();
+        // a second sequence with the same prompt re-inserts: no-op
+        let (_, seq2) = {
+            let mut s2 = SeqCache::new();
+            assert!(pool.reserve(&mut s2, 4));
+            let row = vec![0.25; tiny_config().d_model];
+            for pos in 0..4 {
+                for l in 0..tiny_config().n_layers {
+                    pool.write_row(&s2, l, pos, &row, &row);
+                }
+            }
+            s2.len = 4;
+            ((), s2)
+        };
+        c.insert(&mut pool, &[1, 2, 3, 4], &seq2);
+        assert_eq!(c.held_pages(), held, "existing chunks must keep their page");
+        assert_eq!(c.pages_held(), 2);
+        let mut s2 = seq2;
+        pool.release(&mut s2);
+        let mut s = seq;
+        pool.release(&mut s);
+        c.clear(&mut pool);
+        assert_eq!(pool.free_pages(), 8);
+    }
+
+    #[test]
+    fn evict_lru_leaves_only_and_never_shared_pages() {
+        let (mut pool, mut seq) = pool_with_seq(16, 2, 6);
+        let mut c = PrefixCache::new(2);
+        c.insert(&mut pool, &[1, 2, 3, 4, 5, 6], &seq);
+        // a live fork maps the first 2 pages (refcount 3: seq + cache + fork)
+        let mut live = pool.fork(&seq, 4);
+        pool.release(&mut seq);
+        // leaf (page 2) has refcount 1 → evictable; pages 0/1 are mapped
+        // by `live` → not evictable even after the leaf goes
+        assert_eq!(c.evict(&mut pool, 10), 1, "only the unshared leaf frees a page");
+        assert_eq!(c.pages_held(), 2);
+        assert_eq!(c.lookup(&[1, 2, 3, 4]).len(), 2, "shared prefix must survive");
+        // once the live sequence drops, the remaining chain becomes
+        // evictable leaf-by-leaf
+        pool.release(&mut live);
+        assert_eq!(c.evict(&mut pool, 10), 2);
+        assert_eq!(c.pages_held(), 0);
+        assert_eq!(pool.free_pages(), 16);
+    }
+
+    #[test]
+    fn evict_order_is_lru() {
+        let (mut pool, mut a) = pool_with_seq(16, 2, 2);
+        // two independent single-page entries
+        let mut b = SeqCache::new();
+        assert!(pool.reserve(&mut b, 2));
+        let row = vec![1.0; tiny_config().d_model];
+        for l in 0..2 {
+            pool.write_row(&b, l, 0, &row, &row);
+            pool.write_row(&b, l, 1, &row, &row);
+        }
+        b.len = 2;
+        let mut c = PrefixCache::new(2);
+        c.insert(&mut pool, &[1, 1], &a);
+        c.insert(&mut pool, &[2, 2], &b);
+        let page_a = a.pages()[0];
+        let page_b = b.pages()[0];
+        pool.release(&mut a);
+        pool.release(&mut b);
+        // touch [1,1]: [2,2] becomes the LRU entry
+        assert_eq!(c.lookup(&[1, 1]).len(), 1);
+        assert_eq!(c.evict(&mut pool, 1), 1);
+        assert_eq!(pool.refcount(page_b), 0, "LRU entry should go first");
+        assert_eq!(pool.refcount(page_a), 1);
+        c.clear(&mut pool);
+        assert_eq!(pool.free_pages(), 16);
+    }
+
+    #[test]
+    fn branching_prefixes_share_the_trunk() {
+        let (mut pool, mut a) = pool_with_seq(16, 2, 4);
+        let mut c = PrefixCache::new(2);
+        c.insert(&mut pool, &[7, 7, 1, 1], &a);
+        // second prompt shares page 0's chunk, diverges at chunk 1
+        let mut b = SeqCache::new();
+        assert!(pool.reserve(&mut b, 4));
+        let row = vec![2.0; tiny_config().d_model];
+        for pos in 0..4 {
+            for l in 0..2 {
+                pool.write_row(&b, l, pos, &row, &row);
+            }
+        }
+        b.len = 4;
+        c.insert(&mut pool, &[7, 7, 2, 2], &b);
+        // trunk chunk [7,7] was NOT re-pinned: 3 pages held, not 4
+        assert_eq!(c.pages_held(), 3);
+        assert_eq!(c.lookup(&[7, 7, 1, 1]).len(), 2);
+        assert_eq!(c.lookup(&[7, 7, 2, 2]).len(), 2);
+        // both hits route through the SAME trunk page
+        assert_eq!(c.lookup(&[7, 7, 1, 1])[0], c.lookup(&[7, 7, 2, 2])[0]);
+        pool.release(&mut a);
+        pool.release(&mut b);
+        c.clear(&mut pool);
+        assert_eq!(pool.free_pages(), 16);
+    }
+}

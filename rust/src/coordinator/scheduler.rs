@@ -11,38 +11,54 @@
 //!
 //! One `step()` (a *tick*):
 //! 1. **Admit** queued requests while slots (`max_batch`) and pool pages
-//!    allow: a request is admitted only when the pool can hold its
-//!    prompt + first token on top of what already-running sequences
-//!    still need through their own prompts, so admission bursts don't
-//!    overcommit the pool against prefill work (decode-phase growth is
-//!    not reserved — preemption handles it).
+//!    allow. Admission first consults the [`PrefixCache`]: the longest
+//!    cached page-granular prefix of the prompt (capped at `plen − 1`,
+//!    so the last prompt position is always recomputed — its logits
+//!    pick the first token) is FORKED into the new sequence
+//!    ([`KvPool::fork_pages`], a refcount bump) and only the uncached
+//!    suffix is enqueued as chunked prefill. A request is admitted only
+//!    when the pool can hold its remaining prompt + first token on top
+//!    of what already-running sequences still need through their own
+//!    prompts (including any pending copy-on-write page), so admission
+//!    bursts don't overcommit the pool against prefill work
+//!    (decode-phase growth is not reserved — preemption handles it).
 //! 2. **Advance**: one batched decode sub-step over all running
 //!    sequences — each consumes its next prompt token (chunked prefill)
 //!    or its last generated token (decode) — then up to
 //!    `prefill_chunk − 1` extra sub-steps for sequences still in
 //!    prefill, so long prompts ramp quickly without stalling decoders
-//!    for more than one token.
+//!    for more than one token. A sequence finishing prefill indexes its
+//!    full prompt pages into the prefix cache.
 //! 3. **Reclaim**: finished sequences (max tokens, `max_seq`/pool length
-//!    cap, or the optional EOS byte) release their pages and emit a
-//!    [`GenResponse`] with queue-wait and TTFT.
+//!    cap, or the optional EOS byte) release their pages (shared pages
+//!    stay resident for the cache and other forks) and emit a
+//!    [`GenResponse`] with queue-wait, TTFT, and cached-prefix length.
 //!
-//! **Backpressure.** When [`KvPool::reserve`] fails, the youngest-admitted
-//! sequence is preempted: its pages are reclaimed and its request goes
-//! back to the FRONT of the queue (original submit time kept, so
-//! queue-wait stays honest) for a from-scratch rerun — greedy decode is
-//! deterministic, so a rerun reproduces the same tokens. A lone sequence
-//! can always finish because per-request length is capped at admission to
-//! what the whole pool can hold, which makes the loop deadlock-free.
+//! **Backpressure.** When [`KvPool::reserve`] fails, cold prefix-cache
+//! pages are evicted first (LRU entries whose pages no live sequence
+//! maps — DESIGN.md §Prefix cache); only if nothing is evictable is the
+//! youngest-admitted sequence preempted: its pages are reclaimed and its
+//! request goes back to the FRONT of the queue (original submit time
+//! kept, so queue-wait stays honest) for a rerun — on re-admission it
+//! re-forks whatever prefix is cached (often its own, indexed when its
+//! first run finished prefill), so preempted work is largely recovered.
+//! Greedy decode is deterministic, so a rerun reproduces the same
+//! tokens. A lone sequence can always finish: per-request length is
+//! capped at admission to what the whole pool can hold, and every
+//! cache-only page is eventually evictable, which keeps the loop
+//! deadlock-free.
 //!
 //! **Parity contract.** Per sequence, scheduler output is identical to
-//! the sequential single-stream decode: the batched kernels keep the
-//! single-sequence accumulation order (dense bit-identical, packed
-//! within 1e-5 — in practice also bit-identical), attention is
-//! per-sequence, and token selection copies `argmax` exactly.
-//! `tests/continuous_batching.rs` enforces this under `GPTQ_THREADS=1`
-//! and `=4`.
+//! the sequential single-stream decode — WITH OR WITHOUT the prefix
+//! cache: a fork maps the very pages an identical earlier prefill
+//! wrote, so attention reads the same f32 rows either way (dense
+//! bit-identical, packed within 1e-5 — in practice also bit-identical),
+//! and token selection copies `argmax` exactly.
+//! `tests/continuous_batching.rs` and `tests/prefix_cache.rs` enforce
+//! this under `GPTQ_ISA={scalar,auto} × GPTQ_THREADS={1,4}`.
 
 use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::prefixcache::PrefixCache;
 use crate::coordinator::serve::{GenRequest, GenResponse};
 use crate::model::{CpuModel, KvPool, SeqCache};
 use std::collections::VecDeque;
@@ -61,11 +77,22 @@ pub struct SchedulerConfig {
     pub prefill_chunk: usize,
     /// optional stop byte: generation ends when it would be emitted
     pub eos: Option<u8>,
+    /// share prompt-prefix KV across requests (the radix prompt cache);
+    /// off = every request prefills from scratch (pre-prefix-cache
+    /// behavior, bit-identical outputs either way)
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, pool_pages: 64, page_size: 16, prefill_chunk: 4, eos: None }
+        Self {
+            max_batch: 8,
+            pool_pages: 64,
+            page_size: 16,
+            prefill_chunk: 4,
+            eos: None,
+            prefix_cache: true,
+        }
     }
 }
 
@@ -74,13 +101,17 @@ impl Default for SchedulerConfig {
 struct Running {
     req: GenRequest,
     seq: SeqCache,
-    /// prompt tokens consumed so far (prefill while `consumed < plen`)
+    /// prompt tokens consumed so far (prefill while `consumed < plen`);
+    /// starts at the forked cached-prefix length, not 0
     consumed: usize,
     /// effective prompt length after the length cap
     plen: usize,
     /// hard length cap: min(max_seq, pool capacity) — guarantees a lone
     /// sequence always fits the pool
     limit: usize,
+    /// prompt tokens whose KV was forked from the prefix cache at the
+    /// last admission (prefill skipped for them)
+    cached_prefix_len: usize,
     /// generated token awaiting its decode step
     next: Option<u8>,
     out: Vec<u8>,
@@ -110,6 +141,7 @@ pub struct Scheduler {
     wid: usize,
     model: CpuModel,
     pool: KvPool,
+    cache: PrefixCache,
     cfg: SchedulerConfig,
     queue: VecDeque<(GenRequest, Instant)>,
     running: Vec<Running>,
@@ -121,10 +153,12 @@ impl Scheduler {
     pub fn new(wid: usize, model: CpuModel, cfg: SchedulerConfig) -> Self {
         assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
         let pool = KvPool::new(&model.config, cfg.pool_pages, cfg.page_size);
+        let cache = PrefixCache::new(cfg.page_size);
         Self {
             wid,
             model,
             pool,
+            cache,
             cfg,
             queue: VecDeque::new(),
             running: Vec::new(),
@@ -157,6 +191,37 @@ impl Scheduler {
 
     pub fn total_pages(&self) -> usize {
         self.pool.total_pages()
+    }
+
+    /// Pages currently pinned by the prefix cache alone. At idle,
+    /// `free_pages() + cached_pages() == total_pages()` — the pool-leak
+    /// invariant with prefix sharing on.
+    pub fn cached_pages(&self) -> usize {
+        self.cache.pages_held()
+    }
+
+    /// Drop every prefix-cache hold (tests; also proves the cache is the
+    /// only thing between `free_pages` and `total_pages` at idle).
+    pub fn clear_prefix_cache(&mut self) {
+        self.cache.clear(&mut self.pool);
+    }
+
+    /// Test/teardown assertion of the idle-pool invariant: every page is
+    /// either free or pinned by the prefix cache, and dropping the cache
+    /// returns all of them. DESTRUCTIVE — empties the prefix cache; the
+    /// single copy of the leak check every suite tears down with.
+    pub fn assert_no_page_leak(&mut self) {
+        assert!(self.is_idle(), "leak check requires an idle scheduler");
+        assert_eq!(
+            self.free_pages() + self.cached_pages(),
+            self.total_pages(),
+            "page leak (free {} + cached {} != total {})",
+            self.free_pages(),
+            self.cached_pages(),
+            self.total_pages()
+        );
+        self.clear_prefix_cache();
+        assert_eq!(self.free_pages(), self.total_pages(), "page leak after cache clear");
     }
 
     /// Pool-exhaustion preemptions so far (backpressure events).
@@ -200,8 +265,16 @@ impl Scheduler {
     }
 
     /// Admission control: FIFO from the queue while a slot is free and
-    /// the pool can hold the whole prompt plus the first generated token.
+    /// the pool can hold the prompt's uncached remainder plus the first
+    /// generated token. On a gate shortfall the candidate's fork is
+    /// released before cache eviction runs (see the comment at the gate:
+    /// holding it could pin the shortfall forever), then the request is
+    /// retried from scratch if eviction reclaimed anything.
     fn admit(&mut self) {
+        // shortfall at the last gate failure for the current queue head
+        // (usize::MAX = fresh candidate): eviction retries must shrink
+        // it or stop — see the progress check at the gate
+        let mut prev_short = usize::MAX;
         while self.running.len() < self.cfg.max_batch {
             let Some(&(ref req, _)) = self.queue.front() else { break };
             let limit = self
@@ -210,12 +283,27 @@ impl Scheduler {
                 .max_seq
                 .min(self.pool.total_pages() * self.pool.page_size());
             let plen = req.prompt.len().min(limit.saturating_sub(1));
-            // pool gate: room for this prompt + first token AFTER the
-            // pages already-running sequences still need to finish their
-            // own prompts (+ next position once decoding) — so a burst of
-            // admissions can't overcommit the pool against prefill work.
-            // Decode-phase growth past the first token is not reserved;
-            // that is what preemption is for.
+            // longest cached prefix, capped at plen − 1: the final prompt
+            // position is always recomputed because its logits choose the
+            // first generated token
+            let (seq, cached) = if self.cfg.prefix_cache && plen > 1 {
+                let pages = self.cache.lookup(&req.prompt[..plen]);
+                let cached = (pages.len() * self.pool.page_size()).min(plen - 1);
+                if cached > 0 {
+                    (self.pool.fork_pages(&pages, cached), cached)
+                } else {
+                    (SeqCache::new(), 0)
+                }
+            } else {
+                (SeqCache::new(), 0)
+            };
+            // pool gate: room for the uncached prompt remainder + first
+            // token AFTER the pages already-running sequences still need
+            // to finish their own prompts (+ next position once decoding,
+            // + a copy-on-write page where a fork tail is still shared) —
+            // so a burst of admissions can't overcommit the pool against
+            // prefill work. Decode-phase growth past the first token is
+            // not reserved; that is what preemption is for.
             let committed: usize = self
                 .running
                 .iter()
@@ -223,19 +311,58 @@ impl Scheduler {
                 .map(|r| {
                     let target = (r.plen + 1).min(r.limit).max(r.seq.len + 1);
                     self.pool.pages_for(target).saturating_sub(r.seq.n_pages())
+                        + self.pool.cow_pending(&r.seq) as usize
                 })
                 .sum();
-            if self.pool.free_pages() < committed + self.pool.pages_for(plen + 1) {
-                break; // pool pressure: admit nothing past this point
+            let fresh = self.pool.pages_for(plen + 1).saturating_sub(seq.n_pages())
+                + self.pool.cow_pending(&seq) as usize;
+            let need = committed + fresh;
+            if self.pool.free_pages() < need {
+                // Pool pressure. Drop the fork's holds BEFORE evicting:
+                // a fork pins its pages at refcount ≥ 2, so a shortfall
+                // pinned by our own fork would survive eviction and this
+                // admit would repeat identically every tick (livelock —
+                // e.g. a near-pool-sized cached prefix plus its CoW
+                // page). Un-forked, every cold cache page is evictable;
+                // the lookup just bumped this prefix's LRU stamps, so
+                // its pages go last and a retry usually re-forks them.
+                let mut seq = seq;
+                self.pool.release(&mut seq);
+                let short = need - self.pool.free_pages();
+                // Progress check: evicting a page of this request's OWN
+                // matched prefix frees one page but raises `fresh` by
+                // one — shortfall unchanged — so when the pressure comes
+                // from running sequences' reservations, retrying would
+                // churn away the whole cached prefix for nothing. Stop
+                // as soon as a retry fails to shrink the shortfall.
+                if short >= prev_short {
+                    break;
+                }
+                if self.cfg.prefix_cache && self.cache.evict(&mut self.pool, short) > 0 {
+                    // pages reclaimed: retry this request from scratch
+                    // (fresh lookup — the prefix may be partly gone)
+                    prev_short = short;
+                    continue;
+                }
+                break; // nothing reclaimable: wait for running sequences
             }
+            prev_short = usize::MAX; // next queue head starts fresh
             let (req, submitted) = self.queue.pop_front().unwrap();
             let admitted = Instant::now();
+            if self.cfg.prefix_cache && plen > 1 {
+                self.metrics.prefix_lookups += 1;
+                if cached > 0 {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefill_tokens_saved += cached;
+                }
+            }
             let mut r = Running {
                 req,
-                seq: SeqCache::new(),
-                consumed: 0,
+                seq,
+                consumed: cached,
                 plen,
                 limit,
+                cached_prefix_len: cached,
                 next: None,
                 out: Vec::new(),
                 per_token_ms: Vec::new(),
@@ -261,7 +388,9 @@ impl Scheduler {
     }
 
     /// The indices (into `running`, ascending) active in `substep`, with
-    /// pool pages reserved for each one's next position. Pool exhaustion
+    /// pool pages reserved for each one's next position (the reserve
+    /// also performs copy-on-write when a fork's tail page is shared).
+    /// Pool exhaustion evicts cold prefix-cache pages first, then
     /// preempts the youngest-admitted sequence (FIFO re-queue at the
     /// front, original submit time kept) and retries.
     fn reserve_active(&mut self, substep: usize) -> Vec<usize> {
@@ -276,9 +405,14 @@ impl Scheduler {
             for &i in &idx {
                 let need = self.running[i].seq.len + 1;
                 if !self.pool.reserve(&mut self.running[i].seq, need) {
+                    // cold cache pages go before live work does
+                    if self.cfg.prefix_cache && self.cache.evict(&mut self.pool, 1) > 0 {
+                        continue 'retry;
+                    }
                     if self.running.len() <= 1 {
                         // unreachable: a lone sequence's length is capped
-                        // to the pool at admission — defensive truncation
+                        // to the pool at admission and every cache-only
+                        // page is evictable — defensive truncation
                         debug_assert!(false, "lone sequence exhausted the pool");
                         self.running[i].done = true;
                         return Vec::new();
@@ -329,7 +463,13 @@ impl Scheduler {
                 r.consumed += 1;
                 r.prefill_ms += ms;
                 if r.consumed == r.plen {
-                    // prompt done — these logits carry the first token
+                    // prompt done — index its full KV pages so later
+                    // requests (and this one, if preempted) skip the
+                    // shared prefix, then pick the first token from
+                    // these logits
+                    if self.cfg.prefix_cache {
+                        self.cache.insert(&mut self.pool, &r.req.prompt[..r.plen], &r.seq);
+                    }
                     if r.req.max_new_tokens == 0 {
                         r.done = true;
                     } else {
@@ -362,8 +502,9 @@ impl Scheduler {
         }
     }
 
-    /// Move finished sequences out of the batch: release pages, record
-    /// metrics, emit responses (admission order preserved for the rest).
+    /// Move finished sequences out of the batch: release pages (shared
+    /// ones stay resident for the cache/other forks), record metrics,
+    /// emit responses (admission order preserved for the rest).
     fn harvest(&mut self, done: &mut Vec<GenResponse>) {
         let mut i = 0;
         while i < self.running.len() {
@@ -393,6 +534,7 @@ impl Scheduler {
                 prefill_ms: r.prefill_ms,
                 queue_wait_ms,
                 ttft_ms,
+                cached_prefix_len: r.cached_prefix_len,
                 worker: self.wid,
             });
         }
@@ -416,6 +558,11 @@ mod tests {
         GenRequest { id, prompt, max_new_tokens: max_new }
     }
 
+    /// Shorthand for the shared idle-pool invariant check.
+    fn assert_no_leak(s: &mut Scheduler) {
+        s.assert_no_page_leak();
+    }
+
     #[test]
     fn completes_one_request() {
         let mut s = sched(SchedulerConfig::default());
@@ -425,7 +572,8 @@ mod tests {
         assert_eq!(rs[0].tokens.len(), 4);
         assert_eq!(rs[0].per_token_ms.len(), 4);
         assert!(rs[0].ttft_ms >= rs[0].queue_wait_ms);
-        assert_eq!(s.free_pages(), s.total_pages(), "page leak");
+        assert_eq!(rs[0].cached_prefix_len, 0, "cold cache cannot hit");
+        assert_no_leak(&mut s);
         assert_eq!(s.metrics().requests(), 1);
         assert_eq!(s.metrics().per_token.count(), 4);
     }
@@ -441,7 +589,7 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
         assert!(rs.iter().all(|r| r.tokens.len() == 3));
-        assert_eq!(s.free_pages(), s.total_pages());
+        assert_no_leak(&mut s);
     }
 
     #[test]
@@ -453,7 +601,7 @@ mod tests {
             pool_pages: 4,
             page_size: 2,
             prefill_chunk: 2,
-            eos: None,
+            ..Default::default()
         };
         let mut s = sched(cfg);
         for i in 0..8 {
@@ -468,7 +616,56 @@ mod tests {
         }
         assert_eq!(rs.len(), 8);
         assert!(rs.iter().all(|r| r.tokens.len() == 3));
-        assert_eq!(s.free_pages(), 4, "page leak after backpressure");
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn identical_prompts_share_their_prefix_pages() {
+        // page_size 2, prompt of 5 tokens → 2 full pages cacheable; the
+        // second request should fork 4 tokens and prefill only the rest
+        let cfg = SchedulerConfig {
+            max_batch: 1, // serialize so the first request is indexed first
+            pool_pages: 16,
+            page_size: 2,
+            ..Default::default()
+        };
+        let mut s = sched(cfg);
+        s.submit(req(0, vec![5, 6, 7, 8, 9], 2));
+        s.submit(req(1, vec![5, 6, 7, 8, 9], 2));
+        let rs = s.run_until_idle();
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).cached_prefix_len, 0);
+        assert_eq!(by_id(1).cached_prefix_len, 4);
+        // identical prompt → identical greedy continuation, shared pages
+        // or not (the parity contract)
+        assert_eq!(by_id(0).tokens, by_id(1).tokens);
+        let m = s.metrics();
+        assert_eq!(m.prefix_lookups, 2);
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefill_tokens_saved, 4);
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.cached_pages(), 2, "two full prompt pages indexed");
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn prefix_cache_off_never_shares() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            pool_pages: 16,
+            page_size: 2,
+            prefix_cache: false,
+            ..Default::default()
+        };
+        let mut s = sched(cfg);
+        s.submit(req(0, vec![5, 6, 7, 8, 9], 2));
+        s.submit(req(1, vec![5, 6, 7, 8, 9], 2));
+        let rs = s.run_until_idle();
+        assert!(rs.iter().all(|r| r.cached_prefix_len == 0));
+        assert_eq!(s.metrics().prefix_lookups, 0);
+        assert_eq!(s.metrics().prefill_tokens_saved, 0);
+        assert_eq!(s.cached_pages(), 0);
+        assert_eq!(s.free_pages(), s.total_pages());
     }
 
     #[test]
@@ -481,7 +678,7 @@ mod tests {
         s.submit(req(0, vec![5, 6], 4));
         let rs = s.run_until_idle();
         assert!(rs[0].tokens.is_empty(), "EOS should suppress generation");
-        assert_eq!(s.free_pages(), s.total_pages());
+        assert_no_leak(&mut s);
     }
 
     #[test]
@@ -496,7 +693,13 @@ mod tests {
         assert_eq!(by_id(1).tokens.len(), 2);
         // the sequential path's empty-prompt behavior: first token is 0
         assert_eq!(by_id(1).tokens[0], 0);
-        assert_eq!(s.free_pages(), s.total_pages());
+        // 0-token prefill: queue-wait and TTFT accounting must survive
+        // a request that never enters the prefill loop
+        assert_eq!(by_id(1).cached_prefix_len, 0);
+        assert!(by_id(1).ttft_ms >= by_id(1).queue_wait_ms);
+        assert_eq!(s.metrics().requests(), 2);
+        assert_eq!(s.metrics().ttft.count(), 1, "only the emitting request samples TTFT");
+        assert_no_leak(&mut s);
     }
 
     #[test]
@@ -506,5 +709,68 @@ mod tests {
         s.submit(req(0, vec![1; 30], 30));
         let rs = s.run_until_idle();
         assert_eq!(rs[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn full_prefix_hit_still_recomputes_last_prompt_token() {
+        // prompt length = 3 pages exactly; a full-trie hit must be capped
+        // at plen − 1 so the last position's logits are recomputed and
+        // TTFT/prefill metrics stay well-defined (≥ one prefill step)
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            pool_pages: 16,
+            page_size: 2,
+            ..Default::default()
+        };
+        let mut s = sched(cfg);
+        let prompt = vec![4u8, 5, 6, 7, 8, 9]; // 6 tokens = 3 full pages
+        s.submit(req(0, prompt.clone(), 2));
+        s.submit(req(1, prompt.clone(), 2));
+        let rs = s.run_until_idle();
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(1).cached_prefix_len, 5, "capped at plen − 1");
+        assert_eq!(by_id(0).tokens, by_id(1).tokens);
+        assert!(by_id(1).ttft_ms > 0.0);
+        assert_eq!(s.metrics().ttft.count(), 2);
+        assert_eq!(s.metrics().queue_wait.count(), 2);
+        assert_eq!(s.metrics().prefill.count(), 2, "prefill recorded even when mostly skipped");
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn preemption_with_prefix_cache_matches_cache_off() {
+        // tight pool forces preemption/re-admission churn; a preempted
+        // request's rerun re-forks whatever prefix is cached (its own
+        // pages if its first prefill finished). Whatever the interleaving,
+        // per-request token streams must be identical to a cache-off run
+        // — the parity contract under backpressure.
+        let run = |prefix_cache: bool| {
+            let cfg = SchedulerConfig {
+                max_batch: 4,
+                pool_pages: 6,
+                page_size: 2,
+                prefill_chunk: 2,
+                prefix_cache,
+                ..Default::default()
+            };
+            let mut s = sched(cfg);
+            for i in 0..6 {
+                // distinct 4-token prompts → 2 full cacheable pages each
+                s.submit(req(i, vec![(i as u8) * 2, 1, (i as u8) * 2 + 1, 3], 4));
+            }
+            let mut steps = 0;
+            let mut rs = Vec::new();
+            while !s.is_idle() {
+                rs.extend(s.step());
+                steps += 1;
+                assert!(steps < 100_000, "deadlock under preemption (cache={prefix_cache})");
+            }
+            rs.sort_by_key(|r| r.id);
+            assert_eq!(rs.len(), 6);
+            assert!(rs.iter().all(|r| r.tokens.len() == 4));
+            assert_no_leak(&mut s);
+            rs.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false), "prefix cache changed generated tokens");
     }
 }

@@ -10,7 +10,11 @@
 //! decode; N in-flight sequences advance one token per scheduler
 //! iteration against shared weight reads — the multi-user form of the
 //! autoregressive, matvec-bound regime the paper targets (§Practical
-//! Speedups). Every linear in that step runs on the runtime-dispatched
+//! Speedups). Each worker additionally shares prompt-prefix KV across
+//! its requests through a radix prefix cache over its paged pool
+//! (`coordinator::prefixcache`, `scheduler.prefix_cache` knob): repeated
+//! system/few-shot prefixes are forked, not re-prefilled, and
+//! `ServeMetrics` reports the hit rate and prefill tokens saved. Every linear in that step runs on the runtime-dispatched
 //! SIMD kernels (`model::kernels`, `--isa` / `GPTQ_ISA`): the batched
 //! sub-step decodes each packed word once per batch on the active ISA,
 //! and batch-1 decode uses the register-tiled layout when the model was
@@ -51,6 +55,10 @@ pub struct GenResponse {
     /// submit → first generated token available, ms (0 when the request
     /// emitted no token: `max_new_tokens` 0 or EOS as the first pick)
     pub ttft_ms: f64,
+    /// prompt tokens whose KV was forked from the worker's prefix cache
+    /// at admission instead of being prefilled (0 = fully cold prompt,
+    /// or `scheduler.prefix_cache` disabled)
+    pub cached_prefix_len: usize,
     pub worker: usize,
 }
 
@@ -329,6 +337,30 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, (0..n).collect::<Vec<_>>());
         s.shutdown();
+    }
+
+    #[test]
+    fn server_reports_prefix_cache_savings() {
+        let cfg = ServerConfig {
+            n_workers: 1,
+            scheduler: SchedulerConfig { max_batch: 2, page_size: 2, ..Default::default() },
+        };
+        let mut s =
+            Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+        // sequential same-prompt requests: the second must fork the
+        // first's pages (prompt 6 tokens = 3 full pages, capped to 5)
+        s.submit(GenRequest { id: 0, prompt: vec![4, 5, 6, 7, 8, 9], max_new_tokens: 2 });
+        let r0 = s.recv();
+        s.submit(GenRequest { id: 1, prompt: vec![4, 5, 6, 7, 8, 9], max_new_tokens: 2 });
+        let r1 = s.recv();
+        assert_eq!(r0.cached_prefix_len, 0);
+        assert_eq!(r1.cached_prefix_len, 5);
+        assert_eq!(r0.tokens, r1.tokens, "prefix sharing changed greedy decode");
+        let m = s.shutdown();
+        assert_eq!(m.prefix_lookups, 2);
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefill_tokens_saved, 5);
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

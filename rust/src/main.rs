@@ -207,6 +207,9 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             page_size: args.usize_or("page-size", 16),
             prefill_chunk: args.usize_or("prefill-chunk", 4),
             eos: None,
+            // cross-request prompt-prefix sharing (DESIGN.md §Prefix
+            // cache); bit-identical outputs either way under greedy decode
+            prefix_cache: !args.flag("no-prefix-cache"),
         },
     };
     println!(

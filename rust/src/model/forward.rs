@@ -579,7 +579,12 @@ impl CpuModel {
     ///
     /// The caller must have reserved pool capacity for each sequence's
     /// next position ([`KvPool::reserve`]) — admission control and
-    /// backpressure live in the scheduler, not here.
+    /// backpressure live in the scheduler, not here. Sequences may be
+    /// forks ([`KvPool::fork`]): attention walks whatever pages the
+    /// sequence maps, shared or owned, and `reserve`'s copy-on-write
+    /// guarantees this step's `write_row` never lands in a shared page —
+    /// so prefix sharing is invisible to the math (same f32 rows read
+    /// either way; `tests/prefix_cache.rs` pins this bitwise).
     pub fn decode_steps(
         &mut self,
         pool: &mut KvPool,
@@ -810,6 +815,42 @@ mod tests {
             pool.release(&mut sc);
         }
         assert_eq!(pool.free_pages(), 8, "page leak");
+    }
+
+    #[test]
+    fn decode_over_forked_pages_matches_original_bitwise() {
+        use crate::model::kvpool::{KvPool, SeqCache};
+        let ckpt = tiny_checkpoint(8);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let vocab = m.config.vocab;
+        let toks: [u8; 7] = [3, 14, 15, 9, 2, 6, 5];
+        // drive one sequence to completion, recording per-step logits
+        let mut pool = KvPool::new(&m.config, 16, 2);
+        let mut a = SeqCache::new();
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for (t, &tok) in toks.iter().enumerate() {
+            assert!(pool.reserve(&mut a, t + 1));
+            let mut refs = vec![&mut a];
+            want.push(m.decode_steps(&mut pool, &mut refs, &[tok]));
+        }
+        // fork mid-page (len 5 with page_size 2: page 2 is a shared tail)
+        // and replay the remaining tokens over the forked table
+        let parent_row5 = pool.k_row(&a, 0, 5).to_vec();
+        let mut b = pool.fork(&a, 5);
+        for (t, &tok) in toks.iter().enumerate().skip(5) {
+            assert!(pool.reserve(&mut b, t + 1), "CoW + growth must fit");
+            let mut refs = vec![&mut b];
+            let got = m.decode_steps(&mut pool, &mut refs, &[tok]);
+            for (x, y) in got.iter().zip(&want[t][..vocab]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "forked decode diverged at step {t}");
+            }
+        }
+        // the fork's position-5 write went to its CoW copy, never into
+        // the parent's still-mapped row
+        assert_eq!(pool.k_row(&a, 0, 5), parent_row5.as_slice());
+        pool.release(&mut a);
+        pool.release(&mut b);
+        assert_eq!(pool.free_pages(), 16, "page leak after fork");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Paged KV-cache pool — the memory subsystem behind continuous batching.
+//! Paged KV-cache pool — the memory subsystem behind continuous batching
+//! and cross-request prefix sharing.
 //!
 //! The per-request [`KvCache`](crate::model::KvCache) of the single-stream
 //! decode path reserves `max_seq × d_model` rows per layer up front, so a
@@ -19,13 +20,31 @@
 //! Pages are recycled through a LIFO free list; rows are always written
 //! (`write_row` at position `len`) before they are read, so stale data
 //! from a previous owner is never observed.
+//!
+//! **Prefix sharing.** Every page carries a reference count. A page is
+//! *owned* (refcount 1) or *shared* (refcount > 1): [`KvPool::fork`]
+//! maps a parent's prefix pages into a new [`SeqCache`] by incrementing
+//! their counts — no KV floats are copied — and [`KvPool::release`]
+//! decrements, returning a page to the free list only when the last
+//! holder drops it. Sequences are append-only (the only write is
+//! `write_row` at position `len`), so at most ONE mapped page can ever
+//! be written while shared: the partially-filled tail page of a fork.
+//! [`KvPool::reserve`] therefore performs copy-on-write at the moment it
+//! guarantees capacity for the next position: if the page holding the
+//! next write position is shared, a fresh page is popped from the free
+//! list, the filled prefix rows are copied across all layers, and the
+//! sequence's table entry is swapped — the other holders keep reading
+//! the original rows, bit-for-bit unchanged. `write_row` asserts (debug)
+//! that it only ever mutates owned pages, which is the invariant the
+//! `tests/kvpool_refcount.rs` property suite fuzzes.
 
 use crate::model::ModelConfig;
 
 /// A sequence's view into the pool: the page table (indices into the
 /// pool's page array, one entry per `page_size` positions) and the number
 /// of positions filled so far. Deliberately not `Clone` — two live copies
-/// of a page table would double-free pages on release.
+/// of a page table would double-release pages; sharing goes through
+/// [`KvPool::fork`], which accounts every holder in the page refcounts.
 #[derive(Debug, Default)]
 pub struct SeqCache {
     pages: Vec<u32>,
@@ -42,6 +61,13 @@ impl SeqCache {
     pub fn n_pages(&self) -> usize {
         self.pages.len()
     }
+
+    /// The page table (pool page ids, one per `page_size` positions) —
+    /// read-only: the prefix cache indexes full prompt pages by token
+    /// key, and the property tests audit refcounts against it.
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
 }
 
 /// Bounded paged KV memory shared by every in-flight sequence of one
@@ -55,6 +81,9 @@ pub struct KvPool {
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     free: Vec<u32>,
+    /// per-page holder count: 0 = on the free list, 1 = owned by exactly
+    /// one holder (a sequence or the prefix cache), >1 = shared
+    refs: Vec<u32>,
 }
 
 impl KvPool {
@@ -72,6 +101,7 @@ impl KvPool {
             v: (0..cfg.n_layers).map(|_| vec![0.0; floats]).collect(),
             // reversed so fresh pools allocate page 0 first (deterministic)
             free: (0..n_pages as u32).rev().collect(),
+            refs: vec![0; n_pages],
         }
     }
 
@@ -87,6 +117,12 @@ impl KvPool {
         self.free.len()
     }
 
+    /// Holder count of `page` (0 = free). Exposed for the prefix cache's
+    /// eviction policy and the refcount property tests.
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
     /// Pages needed to hold `len` positions.
     pub fn pages_for(&self, len: usize) -> usize {
         len.div_ceil(self.page_size)
@@ -97,6 +133,14 @@ impl KvPool {
         seq.pages.len() * self.page_size
     }
 
+    /// True when `seq`'s next `write_row` (position `seq.len`) lands in a
+    /// page it maps but does not own — i.e. the next [`KvPool::reserve`]
+    /// past `seq.len` will consume one extra free page for the
+    /// copy-on-write. The scheduler's admission gate counts this.
+    pub fn cow_pending(&self, seq: &SeqCache) -> bool {
+        seq.len < self.capacity_of(seq) && self.refs[seq.pages[seq.len / self.page_size] as usize] > 1
+    }
+
     /// Total KV bytes held by the pool (the bounded analog of
     /// `KvCache::bytes` — the "+9 GB of keys and values" accounting of
     /// §Practical Speedups, now a budget instead of a per-request cost).
@@ -104,15 +148,28 @@ impl KvPool {
         2 * self.n_layers * self.n_pages * self.page_size * self.d_model * 4
     }
 
-    /// Grow `seq`'s page table until it can hold `len` positions. Returns
-    /// `false` — the pool-exhausted backpressure signal — when the free
-    /// list runs out. Pages granted before exhaustion stay with the
+    fn alloc(&mut self) -> Option<u32> {
+        let p = self.free.pop()?;
+        debug_assert_eq!(self.refs[p as usize], 0, "free page with holders");
+        self.refs[p as usize] = 1;
+        Some(p)
+    }
+
+    /// Grow `seq`'s page table until it can hold `len` positions, and —
+    /// when growth implies upcoming writes (`len > seq.len`) — make the
+    /// page holding the next write position exclusively owned
+    /// (copy-on-write of a shared fork tail). Returns `false` — the
+    /// pool-exhausted backpressure signal — when the free list runs out
+    /// at either step. Pages granted before exhaustion stay with the
     /// sequence (reclaimed by [`KvPool::release`]), so a failed reserve
     /// never leaks and a later retry continues where it stopped.
     #[must_use]
     pub fn reserve(&mut self, seq: &mut SeqCache, len: usize) -> bool {
+        if len > seq.len && !self.make_tail_owned(seq) {
+            return false;
+        }
         while seq.pages.len() * self.page_size < len {
-            match self.free.pop() {
+            match self.alloc() {
                 Some(p) => seq.pages.push(p),
                 None => return false,
             }
@@ -120,9 +177,81 @@ impl KvPool {
         true
     }
 
-    /// Return every page of `seq` to the free list and reset it.
+    /// Copy-on-write: if position `seq.len` falls inside a mapped page
+    /// that other holders share, give `seq` its own copy of that page's
+    /// filled rows. Append-only writes mean this is the only page that
+    /// can ever be both mapped-ahead-of-`len` and shared (fork grants
+    /// exactly `pages_for(len)` pages), so one copy per fork suffices.
+    fn make_tail_owned(&mut self, seq: &mut SeqCache) -> bool {
+        if seq.len >= self.capacity_of(seq) {
+            return true; // next write goes to a page alloc() will own
+        }
+        let pi = seq.len / self.page_size;
+        let old = seq.pages[pi] as usize;
+        if self.refs[old] == 1 {
+            return true;
+        }
+        let Some(new) = self.alloc() else { return false };
+        let filled = seq.len - pi * self.page_size;
+        let src = old * self.page_size * self.d_model;
+        let dst = new as usize * self.page_size * self.d_model;
+        for l in 0..self.n_layers {
+            self.k[l].copy_within(src..src + filled * self.d_model, dst);
+            self.v[l].copy_within(src..src + filled * self.d_model, dst);
+        }
+        self.refs[old] -= 1;
+        seq.pages[pi] = new;
+        true
+    }
+
+    /// Map the first `pages_for(len)` pages of `parent` into a new
+    /// sequence holding `len` positions — no KV data moves, the shared
+    /// pages' refcounts go up by one. `len` must not exceed the parent's
+    /// filled length (a fork may only see rows that were written).
+    pub fn fork(&mut self, parent: &SeqCache, len: usize) -> SeqCache {
+        assert!(len <= parent.len, "fork past the parent's filled length");
+        self.fork_pages(&parent.pages, len)
+    }
+
+    /// [`KvPool::fork`] from a bare page list (the prefix cache stores
+    /// matched prefixes as page ids, not `SeqCache`s). The caller asserts
+    /// the first `len` positions of `pages` hold valid rows.
+    pub fn fork_pages(&mut self, pages: &[u32], len: usize) -> SeqCache {
+        let need = self.pages_for(len);
+        assert!(need <= pages.len(), "fork needs {need} pages, got {}", pages.len());
+        let mapped = pages[..need].to_vec();
+        for &p in &mapped {
+            debug_assert!(self.refs[p as usize] > 0, "fork of a free page");
+            self.refs[p as usize] += 1;
+        }
+        SeqCache { pages: mapped, len }
+    }
+
+    /// Take one extra hold on `page` (the prefix cache pinning a prompt
+    /// page it indexed). Balanced by [`KvPool::release_page`].
+    pub fn retain_page(&mut self, page: u32) {
+        debug_assert!(self.refs[page as usize] > 0, "retain of a free page");
+        self.refs[page as usize] += 1;
+    }
+
+    /// Drop one hold on `page`; the last drop returns it to the free
+    /// list. Releasing a free page is a double-free — asserted.
+    pub fn release_page(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        assert!(*r > 0, "double free of page {page}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Drop `seq`'s hold on every page it maps and reset it. Pages whose
+    /// last holder this was return to the free list; pages shared with
+    /// other sequences or the prefix cache stay resident.
     pub fn release(&mut self, seq: &mut SeqCache) {
-        self.free.extend(seq.pages.drain(..));
+        for p in seq.pages.drain(..) {
+            self.release_page(p);
+        }
         seq.len = 0;
     }
 
@@ -144,9 +273,17 @@ impl KvPool {
     }
 
     /// Store the K and V rows for position `pos` of `seq` at layer
-    /// `layer` (the caller must have reserved capacity past `pos`).
+    /// `layer` (the caller must have reserved capacity past `pos`, which
+    /// also guarantees — via copy-on-write — that the target page is
+    /// exclusively owned: a write can never leak into rows another live
+    /// sequence or the prefix cache reads).
     pub fn write_row(&mut self, seq: &SeqCache, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         debug_assert!(pos < self.capacity_of(seq), "write past reserved pages");
+        debug_assert_eq!(
+            self.refs[seq.pages[pos / self.page_size] as usize],
+            1,
+            "write into a shared page (reserve skipped copy-on-write?)"
+        );
         let b = self.base(seq, pos);
         self.k[layer][b..b + self.d_model].copy_from_slice(k);
         self.v[layer][b..b + self.d_model].copy_from_slice(v);
@@ -174,6 +311,7 @@ mod tests {
         assert!(p.reserve(&mut s, 5));
         assert_eq!(s.n_pages(), 2);
         assert_eq!(p.free_pages(), 2);
+        assert!(s.pages().iter().all(|&pg| p.refcount(pg) == 1));
     }
 
     #[test]
@@ -237,5 +375,136 @@ mod tests {
         let cfg = tiny_config();
         let p = KvPool::new(&cfg, 8, 4);
         assert_eq!(p.bytes(), 2 * cfg.n_layers * 8 * 4 * cfg.d_model * 4);
+    }
+
+    fn fill(p: &mut KvPool, s: &SeqCache, from: usize, to: usize, tag: f32) {
+        let d = tiny_config().d_model;
+        for pos in from..to {
+            let row = vec![tag + pos as f32; d];
+            for l in 0..2 {
+                p.write_row(s, l, pos, &row, &row);
+            }
+        }
+    }
+
+    #[test]
+    fn fork_shares_pages_without_copying() {
+        let mut p = pool(8, 2);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 6));
+        fill(&mut p, &a, 0, 6, 100.0);
+        a.len = 6;
+        // fork 4 positions: maps the first 2 pages, refcounts go to 2
+        let b = p.fork(&a, 4);
+        assert_eq!(b.len, 4);
+        assert_eq!(b.n_pages(), 2);
+        assert_eq!(b.pages()[..2], a.pages()[..2]);
+        assert_eq!(p.refcount(a.pages()[0]), 2);
+        assert_eq!(p.refcount(a.pages()[1]), 2);
+        assert_eq!(p.refcount(a.pages()[2]), 1);
+        // no pages were consumed by the fork itself
+        assert_eq!(p.free_pages(), 5);
+        // forked view reads the parent's rows
+        assert_eq!(p.k_row(&b, 0, 3)[0], 103.0);
+    }
+
+    #[test]
+    fn cow_write_leaves_parent_rows_untouched() {
+        let mut p = pool(8, 4);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 6));
+        fill(&mut p, &a, 0, 6, 100.0);
+        a.len = 6;
+        // fork mid-page: position 5 sits in a's second page (shared tail)
+        let mut b = p.fork(&a, 5);
+        assert!(p.cow_pending(&b));
+        // reserve for the next write copies the shared tail page
+        assert!(p.reserve(&mut b, 6));
+        assert!(!p.cow_pending(&b));
+        assert_ne!(b.pages()[1], a.pages()[1], "tail page must be copied");
+        assert_eq!(p.refcount(a.pages()[1]), 1);
+        // the copy carried the filled prefix row (position 4)
+        assert_eq!(p.k_row(&b, 0, 4)[0], 104.0);
+        let d = tiny_config().d_model;
+        for l in 0..2 {
+            p.write_row(&b, l, 5, &vec![-1.0; d], &vec![-1.0; d]);
+        }
+        b.len = 6;
+        // parent still reads its own position-5 row
+        assert_eq!(p.k_row(&a, 0, 5)[0], 105.0);
+        assert_eq!(p.k_row(&b, 0, 5)[0], -1.0);
+        p.release(&mut a);
+        p.release(&mut b);
+        assert_eq!(p.free_pages(), 8, "page leak after CoW");
+    }
+
+    #[test]
+    fn page_aligned_fork_needs_no_cow() {
+        let mut p = pool(8, 2);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 4));
+        fill(&mut p, &a, 0, 4, 10.0);
+        a.len = 4;
+        let mut b = p.fork(&a, 4); // exactly 2 full pages
+        assert!(!p.cow_pending(&b));
+        let free_before = p.free_pages();
+        // growth allocates a fresh page; no CoW copy happens
+        assert!(p.reserve(&mut b, 5));
+        assert_eq!(p.free_pages(), free_before - 1);
+        assert_eq!(b.pages()[..2], a.pages()[..2]);
+        p.release(&mut a);
+        p.release(&mut b);
+        assert_eq!(p.free_pages(), 8);
+    }
+
+    #[test]
+    fn release_frees_only_last_holder() {
+        let mut p = pool(4, 2);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 4));
+        fill(&mut p, &a, 0, 4, 0.0);
+        a.len = 4;
+        let mut b = p.fork(&a, 4);
+        p.release(&mut a);
+        // b still holds both pages: nothing returned yet
+        assert_eq!(p.free_pages(), 2);
+        assert_eq!(p.refcount(b.pages()[0]), 1);
+        p.release(&mut b);
+        assert_eq!(p.free_pages(), 4);
+    }
+
+    #[test]
+    fn retain_release_page_pins_like_a_holder() {
+        let mut p = pool(4, 2);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 2));
+        let page = a.pages()[0];
+        p.retain_page(page); // e.g. the prefix cache indexing this page
+        p.release(&mut a);
+        assert_eq!(p.free_pages(), 3, "cache hold must keep the page resident");
+        assert_eq!(p.refcount(page), 1);
+        p.release_page(page);
+        assert_eq!(p.free_pages(), 4);
+        assert_eq!(p.refcount(page), 0);
+    }
+
+    #[test]
+    fn cow_respects_pool_exhaustion() {
+        let mut p = pool(2, 2);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 3));
+        fill(&mut p, &a, 0, 3, 0.0);
+        a.len = 3;
+        let mut b = p.fork(&a, 3); // shares both pages; free list empty
+        assert!(p.cow_pending(&b));
+        // CoW needs a free page: exhaustion signals instead of corrupting
+        assert!(!p.reserve(&mut b, 4));
+        p.release(&mut a);
+        // parent released its tail page hold; CoW can now proceed...
+        // (page came back to the free list because b maps it too? no —
+        // b still holds it, so refcount is 1 and no copy is needed)
+        assert!(p.reserve(&mut b, 4));
+        p.release(&mut b);
+        assert_eq!(p.free_pages(), 2);
     }
 }

@@ -5,13 +5,18 @@
 //!   `decode_step` per sequence: dense linears BIT-identical, packed
 //!   within 1e-5 (the batched kernels keep the single-sequence
 //!   accumulation order, so packed is bit-identical too in practice).
-//! * Pool exhaustion must backpressure (preempt + FIFO re-queue), never
-//!   deadlock, and never leak pages: the free count returns to initial.
+//! * Pool exhaustion must backpressure (evict cold prefix-cache pages,
+//!   then preempt + FIFO re-queue), never deadlock, and never leak
+//!   pages: every page is free or pinned by the prefix cache at idle,
+//!   and dropping the cache returns the free count to initial.
 //! * `make -C rust check` runs this suite under `GPTQ_THREADS=1` and
 //!   `=4`; the thread-flip test additionally pins bit-identity of the
 //!   batched kernels across pool sizes in-process.
-//! * The `#[ignore]`d soak test (`make -C rust soak`) drives a seeded
-//!   500-request trace asserting zero dropped/duplicated responses.
+//! * Soak coverage: a seeded, bounded 60-request trace runs in the
+//!   default suite (`make -C rust check`); the long 500-request trace
+//!   and a shared-prefix variant (prefix-cache churn under a tight
+//!   pool) stay `#[ignore]`d behind `make -C rust soak`. All assert
+//!   zero dropped/duplicated responses and zero leaked pages.
 
 use gptq_rs::coordinator::{GenRequest, Scheduler, SchedulerConfig};
 use gptq_rs::data::Rng;
@@ -191,6 +196,13 @@ fn requests(n: usize, seed: u64) -> Vec<GenRequest> {
         .collect()
 }
 
+/// The pool-leak invariant with prefix sharing on: at idle every page is
+/// either free or pinned by the prefix cache, and dropping the cache
+/// returns all of them (single copy: `Scheduler::assert_no_page_leak`).
+fn assert_no_leak(sched: &mut Scheduler) {
+    sched.assert_no_page_leak();
+}
+
 #[test]
 fn scheduler_n8_matches_sequential_generate_dense_and_packed() {
     for packed in [false, true] {
@@ -231,7 +243,7 @@ fn pool_exhaustion_backpressures_and_completes() {
         pool_pages: 6,
         page_size: 2,
         prefill_chunk: 3,
-        eos: None,
+        ..Default::default()
     };
     let mut model = CpuModel::from_checkpoint(&tiny_checkpoint(73));
     let reqs: Vec<GenRequest> = (0..16u64)
@@ -262,7 +274,7 @@ fn pool_exhaustion_backpressures_and_completes() {
     for (r, w) in got.iter().zip(&want) {
         assert_eq!(&r.tokens, w, "id={} (restart must reproduce greedy decode)", r.id);
     }
-    assert_eq!(sched.free_pages(), 6, "page leak after backpressure");
+    assert_no_leak(&mut sched);
 }
 
 #[test]
@@ -272,7 +284,7 @@ fn interleaved_admit_and_evict_with_ragged_prompts() {
         pool_pages: 8,
         page_size: 2,
         prefill_chunk: 2,
-        eos: None,
+        ..Default::default()
     };
     let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(83)), cfg);
     let reqs = requests(12, 89);
@@ -297,24 +309,30 @@ fn interleaved_admit_and_evict_with_ragged_prompts() {
     ids.sort_unstable();
     assert_eq!(ids, (0..12).collect::<Vec<u64>>(), "dropped or duplicated responses");
     assert!(got.iter().all(|r| !r.tokens.is_empty()));
-    assert_eq!(sched.free_pages(), 8);
+    assert_no_leak(&mut sched);
 }
 
-/// `make -C rust soak`: seeded 500-request trace against a deliberately
-/// tight pool — zero dropped/duplicated responses, zero leaked pages.
-#[test]
-#[ignore]
-fn soak_500_request_trace() {
+/// Seeded soak driver: bursty arrivals of random requests against a
+/// deliberately tight pool (prefix-cache churn included — random 1..=14
+/// token prompts over vocab 32 produce full-page collisions at
+/// page_size 4). Asserts zero dropped/duplicated responses and zero
+/// leaked pages; everything is derived from `seed`, so a trace is
+/// exactly reproducible.
+fn soak_trace(name: &str, total: usize, seed: u64, shared_prefixes: usize) {
     let cfg = SchedulerConfig {
         max_batch: 8,
         pool_pages: 12,
         page_size: 4,
         prefill_chunk: 4,
-        eos: None,
+        ..Default::default()
     };
     let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(101)), cfg);
-    let total = 500usize;
-    let mut rng = Rng::new(103);
+    // the shared-prefix variant draws every prompt's head from a small
+    // set of 8-token system prefixes (2 full pages each)
+    let mut rng = Rng::new(seed);
+    let prefixes: Vec<Vec<u8>> = (0..shared_prefixes)
+        .map(|_| (0..8).map(|_| rng.below(32) as u8).collect())
+        .collect();
     let mut submitted = 0usize;
     let mut got = Vec::new();
     let mut steps = 0usize;
@@ -322,8 +340,16 @@ fn soak_500_request_trace() {
         // bursty arrivals: 0..=4 new requests per iteration
         for _ in 0..rng.below(5) {
             if submitted < total {
-                let plen = 1 + rng.below(14);
-                let prompt: Vec<u8> = (0..plen).map(|_| rng.below(32) as u8).collect();
+                let prompt: Vec<u8> = if prefixes.is_empty() {
+                    let plen = 1 + rng.below(14);
+                    (0..plen).map(|_| rng.below(32) as u8).collect()
+                } else {
+                    let mut p = prefixes[rng.below(prefixes.len())].clone();
+                    for _ in 0..rng.below(6) {
+                        p.push(rng.below(32) as u8);
+                    }
+                    p
+                };
                 sched.submit(GenRequest {
                     id: submitted as u64,
                     prompt,
@@ -334,17 +360,49 @@ fn soak_500_request_trace() {
         }
         got.extend(sched.step());
         steps += 1;
-        assert!(steps < 1_000_000, "soak deadlocked");
+        assert!(steps < 1_000_000, "{name} deadlocked");
     }
     let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
     ids.sort_unstable();
-    assert_eq!(ids, (0..total as u64).collect::<Vec<u64>>(), "dropped/duplicated responses");
-    assert_eq!(sched.free_pages(), 12, "page leak over the soak");
+    assert_eq!(ids, (0..total as u64).collect::<Vec<u64>>(), "{name}: dropped/duplicated responses");
+    if !prefixes.is_empty() {
+        assert!(
+            sched.metrics().prefill_tokens_saved > 0,
+            "{name}: shared prefixes never forked"
+        );
+    }
     println!(
-        "soak: {} responses over {} iterations, {} preemptions, metrics: {}",
+        "{name}: {} responses over {} iterations, {} preemptions, {} cached pages, metrics: {}",
         got.len(),
         steps,
         sched.preemptions(),
+        sched.cached_pages(),
         sched.metrics().summary()
     );
+    assert_no_leak(&mut sched);
+}
+
+/// The bounded soak that runs in `make -C rust check`: same generator
+/// and pool shape as the 500-request trace, cut to 60 requests so the
+/// default suite stays fast while still crossing preemption, prefix
+/// reuse, and cache eviction many times over.
+#[test]
+fn soak_60_request_trace_bounded() {
+    soak_trace("soak-60", 60, 103, 0);
+}
+
+/// `make -C rust soak`: the long trace.
+#[test]
+#[ignore]
+fn soak_500_request_trace() {
+    soak_trace("soak-500", 500, 103, 0);
+}
+
+/// `make -C rust soak`: the shared-prefix long trace — every prompt
+/// starts with one of 4 system prefixes, so the prefix cache is hot and
+/// constantly fought over by the tight pool.
+#[test]
+#[ignore]
+fn soak_500_shared_prefix_trace() {
+    soak_trace("soak-500-shared", 500, 107, 4);
 }

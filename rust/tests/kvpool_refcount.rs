@@ -1,0 +1,246 @@
+//! Property/fuzz suite for the refcounted KV pool (DESIGN.md §Prefix
+//! cache): seeded random interleavings of admit / grow-write / fork /
+//! cache-hold / release over a deliberately small pool, with a shadow
+//! model of every live sequence's expected rows and every page's
+//! expected holder count. Asserts, continuously and at the end:
+//!
+//! * **no leak** — every page is free or accounted to a holder, and the
+//!   free count returns to `total_pages` once all holders drop;
+//! * **no double-free** — `KvPool::release`/`release_page` panic on a
+//!   zero-refcount page, so survival of thousands of random release
+//!   interleavings is the property;
+//! * **CoW isolation** — a write into a forked sequence never mutates a
+//!   row any other live holder maps: every live sequence's rows always
+//!   match its shadow, no matter how forks/releases interleave.
+
+use gptq_rs::data::Rng;
+use gptq_rs::model::testkit::tiny_config;
+use gptq_rs::model::{KvPool, SeqCache};
+
+const POOL_PAGES: usize = 12;
+const PAGE_SIZE: usize = 4;
+const MAX_LEN: usize = 32; // < POOL_PAGES × PAGE_SIZE so growth can succeed
+const MAX_LIVE: usize = 6;
+
+/// A live sequence plus the rows it must observe (tag per position).
+struct Sim {
+    seq: SeqCache,
+    rows: Vec<f32>,
+}
+
+/// First element of the K row at `pos` — the shadow-checked cell.
+fn cell(pool: &KvPool, seq: &SeqCache, pos: usize) -> f32 {
+    pool.k_row(seq, 0, pos)[0]
+}
+
+fn write_tagged(pool: &mut KvPool, sim: &mut Sim, tag: f32, n_layers: usize, d: usize) {
+    let pos = sim.seq.len;
+    let row = vec![tag; d];
+    for l in 0..n_layers {
+        pool.write_row(&sim.seq, l, pos, &row, &row);
+    }
+    sim.seq.len += 1;
+    sim.rows.push(tag);
+}
+
+/// Audit refcounts against the ground truth: holders = live page tables
+/// plus explicit cache holds. Duplicates (a page forked into several
+/// sequences, or held twice) must each count.
+fn audit_refcounts(pool: &KvPool, sims: &[Sim], holds: &[u32]) {
+    let mut counts = vec![0u32; pool.total_pages()];
+    for sim in sims {
+        for &p in sim.seq.pages() {
+            counts[p as usize] += 1;
+        }
+    }
+    for &p in holds {
+        counts[p as usize] += 1;
+    }
+    let mut held_pages = 0;
+    for (p, &want) in counts.iter().enumerate() {
+        assert_eq!(
+            pool.refcount(p as u32),
+            want,
+            "page {p}: refcount drifted from the holder ground truth"
+        );
+        if want > 0 {
+            held_pages += 1;
+        }
+    }
+    assert_eq!(
+        pool.free_pages(),
+        pool.total_pages() - held_pages,
+        "free-list size disagrees with held-page count"
+    );
+}
+
+/// Every live sequence still reads exactly the rows it wrote or forked —
+/// the CoW-isolation property.
+fn audit_rows(pool: &KvPool, sims: &[Sim]) {
+    for (i, sim) in sims.iter().enumerate() {
+        for pos in 0..sim.seq.len {
+            assert_eq!(
+                cell(pool, &sim.seq, pos),
+                sim.rows[pos],
+                "sim {i} pos {pos}: a write leaked into a shared page"
+            );
+        }
+    }
+}
+
+fn fuzz(seed: u64, iters: usize) {
+    let cfg = tiny_config();
+    let (n_layers, d) = (cfg.n_layers, cfg.d_model);
+    let mut pool = KvPool::new(&cfg, POOL_PAGES, PAGE_SIZE);
+    let mut rng = Rng::new(seed);
+    let mut sims: Vec<Sim> = Vec::new();
+    let mut holds: Vec<u32> = Vec::new();
+    let mut next_tag = 1.0f32;
+    let (mut grows, mut forks, mut cows, mut oom) = (0usize, 0usize, 0usize, 0usize);
+
+    for it in 0..iters {
+        match rng.below(10) {
+            // admit a fresh sequence
+            0 if sims.len() < MAX_LIVE => {
+                sims.push(Sim { seq: SeqCache::new(), rows: Vec::new() });
+            }
+            // fork a random live sequence at a random (often mid-page)
+            // cut — the child shares full pages and the partial tail
+            1 | 2 if !sims.is_empty() => {
+                let j = rng.below(sims.len());
+                if sims[j].seq.len > 0 && sims.len() < MAX_LIVE {
+                    let cut = 1 + rng.below(sims[j].seq.len);
+                    let child = pool.fork(&sims[j].seq, cut);
+                    let rows = sims[j].rows[..cut].to_vec();
+                    sims.push(Sim { seq: child, rows });
+                    forks += 1;
+                }
+            }
+            // cache-style hold on a random mapped page
+            3 if !sims.is_empty() => {
+                let j = rng.below(sims.len());
+                if sims[j].seq.n_pages() > 0 && holds.len() < POOL_PAGES {
+                    let p = sims[j].seq.pages()[rng.below(sims[j].seq.n_pages())];
+                    pool.retain_page(p);
+                    holds.push(p);
+                }
+            }
+            // drop a random hold
+            4 if !holds.is_empty() => {
+                let p = holds.swap_remove(rng.below(holds.len()));
+                pool.release_page(p);
+            }
+            // release (preempt/finish) a random sequence
+            5 if sims.len() > 1 || (sims.len() == 1 && rng.below(4) == 0) => {
+                let j = rng.below(sims.len());
+                let mut sim = sims.swap_remove(j);
+                pool.release(&mut sim.seq);
+            }
+            // grow + tagged write (reserve performs CoW when the tail
+            // page is shared — the hot property)
+            _ if !sims.is_empty() => {
+                let j = rng.below(sims.len());
+                if sims[j].seq.len < MAX_LEN {
+                    let was_shared = pool.cow_pending(&sims[j].seq);
+                    let need = sims[j].seq.len + 1;
+                    if pool.reserve(&mut sims[j].seq, need) {
+                        if was_shared {
+                            cows += 1;
+                        }
+                        write_tagged(&mut pool, &mut sims[j], next_tag, n_layers, d);
+                        next_tag += 1.0;
+                        grows += 1;
+                    } else {
+                        // pool exhausted: legal backpressure — free room
+                        oom += 1;
+                        if !holds.is_empty() {
+                            let p = holds.swap_remove(rng.below(holds.len()));
+                            pool.release_page(p);
+                        } else if sims.len() > 1 {
+                            let k = rng.below(sims.len());
+                            let mut sim = sims.swap_remove(k);
+                            pool.release(&mut sim.seq);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        audit_refcounts(&pool, &sims, &holds);
+        if it % 7 == 0 {
+            audit_rows(&pool, &sims);
+        }
+    }
+    audit_rows(&pool, &sims);
+
+    // teardown in random order: children before parents, holds last,
+    // whatever the dice say — the free count must still come back whole
+    while !sims.is_empty() {
+        let j = rng.below(sims.len());
+        let mut sim = sims.swap_remove(j);
+        pool.release(&mut sim.seq);
+        audit_refcounts(&pool, &sims, &holds);
+    }
+    while !holds.is_empty() {
+        let p = holds.swap_remove(rng.below(holds.len()));
+        pool.release_page(p);
+    }
+    assert_eq!(pool.free_pages(), pool.total_pages(), "page leak (seed {seed})");
+    for p in 0..pool.total_pages() {
+        assert_eq!(pool.refcount(p as u32), 0, "page {p} refcount stuck (seed {seed})");
+    }
+    assert!(grows > 0 && forks > 0, "seed {seed} never exercised grow/fork");
+    // the interesting interleavings actually happened under this seed mix
+    println!("seed {seed}: {grows} writes, {forks} forks, {cows} CoW copies, {oom} OOM events");
+}
+
+#[test]
+fn refcount_fuzz_seed_1() {
+    fuzz(0xA11CE, 3000);
+}
+
+#[test]
+fn refcount_fuzz_seed_2() {
+    fuzz(0xB0B, 3000);
+}
+
+#[test]
+fn refcount_fuzz_seed_3() {
+    fuzz(0xC0FFEE, 3000);
+}
+
+/// Deterministic micro-interleaving: the exact sequence the scheduler
+/// produces under preemption — prefill, index (hold), fork, CoW write,
+/// release parent, release child — with the shadow checked at each step.
+#[test]
+fn scripted_preemption_interleaving() {
+    let cfg = tiny_config();
+    let d = cfg.d_model;
+    let mut pool = KvPool::new(&cfg, 6, 2);
+    // parent prefills 5 positions (2 full pages + tail)
+    let mut parent = Sim { seq: SeqCache::new(), rows: Vec::new() };
+    for t in 0..5 {
+        assert!(pool.reserve(&mut parent.seq, t + 1));
+        write_tagged(&mut pool, &mut parent, 10.0 + t as f32, cfg.n_layers, d);
+    }
+    // "prefix cache" indexes the 2 full pages
+    let holds: Vec<u32> = parent.seq.pages()[..2].to_vec();
+    for &p in &holds {
+        pool.retain_page(p);
+    }
+    // a second request forks 4 tokens, then appends its own rows
+    let mut child = Sim { seq: pool.fork(&parent.seq, 4), rows: parent.rows[..4].to_vec() };
+    assert!(pool.reserve(&mut child.seq, 5));
+    write_tagged(&mut pool, &mut child, 99.0, cfg.n_layers, d);
+    // parent's position-4 row must be untouched by the child's write
+    assert_eq!(cell(&pool, &parent.seq, 4), 14.0);
+    assert_eq!(cell(&pool, &child.seq, 4), 99.0);
+    // preempt the parent (release); cached pages stay for the child+holds
+    pool.release(&mut parent.seq);
+    assert_eq!(cell(&pool, &child.seq, 1), 11.0, "release freed a page the child maps");
+    // parent re-admitted as a fork of the cached prefix
+    let mut parent2 = Sim { seq: pool.fork_pages(&holds, 4), rows: vec![10.0, 11.0, 12.0, 13.0] };
+    assert!(pool.reserve(&mut parent2.seq, 5));
+    write_tagged(&mut pool, &mut parent2, 14.0, cfg.n_layers, d);
+    audit_rows(&pool, &[child, parent2]);
+}

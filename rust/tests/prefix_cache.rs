@@ -1,0 +1,257 @@
+//! Prefix-cache parity and accounting suite (DESIGN.md §Prefix cache).
+//!
+//! The contract that makes cross-request prefix sharing safe to ship:
+//! with greedy decode, serving WITH the prefix cache is bit-identical
+//! per sequence to serving WITHOUT it — a fork maps the very pages an
+//! identical earlier prefill wrote, so attention reads the same f32
+//! rows either way. Dense weights are asserted BITWISE at both the
+//! logits level (forked replay vs original) and the token-stream level
+//! (scheduler cache-on vs cache-off); packed weights within 1e-5 on
+//! logits (in practice bit-identical — same kernels, same rows) and
+//! exactly on token streams. `make -C rust check` runs this suite under
+//! `GPTQ_ISA={scalar,auto} × GPTQ_THREADS={1,4}`.
+//!
+//! Plus hit accounting: K distinct prefixes cost exactly K cold
+//! prefills — every later same-prefix request forks instead.
+
+use gptq_rs::coordinator::{GenRequest, Scheduler, SchedulerConfig};
+use gptq_rs::model::checkpoint::quantizable_keys;
+use gptq_rs::model::testkit::tiny_checkpoint;
+use gptq_rs::model::{CpuModel, KvPool, QuantizedCheckpoint, SeqCache};
+use gptq_rs::quant::{rtn_quantize, PackedMatrix};
+use std::collections::BTreeMap;
+
+fn packed_tiny_model(seed: u64) -> CpuModel {
+    let ckpt = tiny_checkpoint(seed);
+    let mut packed = BTreeMap::new();
+    for key in quantizable_keys(&ckpt.config) {
+        let t = ckpt.get(&key);
+        let (o, i) = t.dims2();
+        packed.insert(key.clone(), PackedMatrix::from_result(&rtn_quantize(&t.data, o, i, 4, 16)));
+    }
+    let q = QuantizedCheckpoint::from_parts(ckpt.config.clone(), 4, 16, packed, &ckpt, vec![]);
+    CpuModel::from_quantized(&q)
+}
+
+/// Decode `toks` twice: once from scratch, once resuming at `fork_at`
+/// over a fork of the first run's pages. Returns (original per-step
+/// logits, forked per-step logits for steps `fork_at..`).
+fn replay_pair(model: &mut CpuModel, toks: &[u8], fork_at: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut pool = KvPool::new(&model.config, 16, 2);
+    let mut a = SeqCache::new();
+    let mut orig = Vec::new();
+    for (t, &tok) in toks.iter().enumerate() {
+        assert!(pool.reserve(&mut a, t + 1));
+        let mut refs = vec![&mut a];
+        orig.push(model.decode_steps(&mut pool, &mut refs, &[tok]));
+    }
+    let mut b = pool.fork(&a, fork_at);
+    let mut forked = Vec::new();
+    for (t, &tok) in toks.iter().enumerate().skip(fork_at) {
+        assert!(pool.reserve(&mut b, t + 1));
+        let mut refs = vec![&mut b];
+        forked.push(model.decode_steps(&mut pool, &mut refs, &[tok]));
+    }
+    pool.release(&mut a);
+    pool.release(&mut b);
+    assert_eq!(pool.free_pages(), 16, "page leak in replay");
+    (orig, forked)
+}
+
+#[test]
+fn forked_logits_bitwise_dense() {
+    let mut m = CpuModel::from_checkpoint(&tiny_checkpoint(21));
+    let toks: Vec<u8> = vec![3, 14, 15, 9, 2, 6, 5, 30];
+    // page-aligned and mid-page (CoW) forks both
+    for fork_at in [2usize, 3, 5, 7] {
+        let (orig, forked) = replay_pair(&mut m, &toks, fork_at);
+        for (k, step) in forked.iter().enumerate() {
+            let want = &orig[fork_at + k];
+            for (x, y) in step.iter().zip(want) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "dense fork_at={fork_at} step {} diverged",
+                    fork_at + k
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forked_logits_close_packed() {
+    let mut m = packed_tiny_model(23);
+    let toks: Vec<u8> = vec![1, 7, 7, 21, 0, 13, 8];
+    for fork_at in [1usize, 4, 6] {
+        let (orig, forked) = replay_pair(&mut m, &toks, fork_at);
+        for (k, step) in forked.iter().enumerate() {
+            let want = &orig[fork_at + k];
+            for (x, y) in step.iter().zip(want) {
+                assert!(
+                    (x - y).abs() < 1e-5,
+                    "packed fork_at={fork_at} step {}: {x} vs {y}",
+                    fork_at + k
+                );
+            }
+        }
+    }
+}
+
+/// A fork decoding in the SAME batch as fresh sequences must still match
+/// its solo replay bitwise (mixed batches are the serving reality).
+#[test]
+fn forked_sequence_in_mixed_batch_bitwise() {
+    let mut m = CpuModel::from_checkpoint(&tiny_checkpoint(29));
+    let vocab = m.config.vocab;
+    let shared: Vec<u8> = vec![5, 6, 7, 8];
+    let tails: [&[u8]; 2] = [&[9, 1], &[2, 3]];
+    // reference: each full stream decoded alone
+    let solo: Vec<Vec<Vec<f32>>> = tails
+        .iter()
+        .map(|tail| {
+            let toks: Vec<u8> = shared.iter().chain(tail.iter()).copied().collect();
+            let mut pool = KvPool::new(&m.config, 16, 2);
+            let mut s = SeqCache::new();
+            let mut out = Vec::new();
+            for (t, &tok) in toks.iter().enumerate() {
+                assert!(pool.reserve(&mut s, t + 1));
+                let mut refs = vec![&mut s];
+                out.push(m.decode_steps(&mut pool, &mut refs, &[tok]));
+            }
+            out
+        })
+        .collect();
+    // shared prefill once, then two forks decode their tails in ONE batch
+    let mut pool = KvPool::new(&m.config, 16, 2);
+    let mut parent = SeqCache::new();
+    for (t, &tok) in shared.iter().enumerate() {
+        assert!(pool.reserve(&mut parent, t + 1));
+        let mut refs = vec![&mut parent];
+        let got = m.decode_steps(&mut pool, &mut refs, &[tok]);
+        for (x, y) in got.iter().zip(&solo[0][t]) {
+            assert_eq!(x.to_bits(), y.to_bits(), "shared prefill step {t}");
+        }
+    }
+    let mut f0 = pool.fork(&parent, shared.len());
+    let mut f1 = pool.fork(&parent, shared.len());
+    for t in 0..2 {
+        let pos = shared.len() + t;
+        assert!(pool.reserve(&mut f0, pos + 1));
+        assert!(pool.reserve(&mut f1, pos + 1));
+        let toks = [tails[0][t], tails[1][t]];
+        let mut refs = vec![&mut f0, &mut f1];
+        let got = m.decode_steps(&mut pool, &mut refs, &toks);
+        for j in 0..2 {
+            let want = &solo[j][pos];
+            for (x, y) in got[j * vocab..(j + 1) * vocab].iter().zip(want) {
+                assert_eq!(x.to_bits(), y.to_bits(), "fork {j} batched step {pos}");
+            }
+        }
+    }
+    pool.release(&mut parent);
+    pool.release(&mut f0);
+    pool.release(&mut f1);
+    assert_eq!(pool.free_pages(), 16);
+}
+
+/// Shared-prefix workload through the scheduler: K prefixes × `per`
+/// suffixes each, submitted round-robin over prefixes (s-major: by the
+/// time prefix p's second request arrives, its first has been through
+/// prefill in every batch shape) — the realistic arrival mix.
+fn shared_prefix_requests(k: usize, per: usize) -> Vec<GenRequest> {
+    let mut reqs = Vec::new();
+    for s in 0..per {
+        for p in 0..k {
+            // 6-token prefix (3 full pages at page_size 2), distinct per p
+            let mut prompt: Vec<u8> = (0..6).map(|i| ((p * 7 + i * 3) % 32) as u8).collect();
+            prompt.push(((s * 11 + p) % 32) as u8); // distinct suffix head
+            prompt.push((s % 32) as u8);
+            reqs.push(GenRequest {
+                id: (s * k + p) as u64,
+                prompt,
+                max_new_tokens: 3,
+            });
+        }
+    }
+    reqs
+}
+
+fn run_sched(model: CpuModel, prefix_cache: bool, max_batch: usize, reqs: &[GenRequest]) -> Vec<Vec<u8>> {
+    let cfg = SchedulerConfig {
+        max_batch,
+        pool_pages: 64,
+        page_size: 2,
+        prefill_chunk: 3,
+        eos: None,
+        prefix_cache,
+    };
+    let mut sched = Scheduler::new(0, model, cfg);
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    let mut rs = sched.run_until_idle();
+    rs.sort_by_key(|r| r.id);
+    assert_eq!(rs.len(), reqs.len(), "dropped responses (cache={prefix_cache})");
+    if prefix_cache {
+        assert!(sched.metrics().prefill_tokens_saved > 0, "shared prefixes never hit");
+    }
+    sched.assert_no_page_leak();
+    rs.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn scheduler_cache_on_equals_cache_off_dense() {
+    let reqs = shared_prefix_requests(3, 4);
+    let on = run_sched(CpuModel::from_checkpoint(&tiny_checkpoint(31)), true, 4, &reqs);
+    let off = run_sched(CpuModel::from_checkpoint(&tiny_checkpoint(31)), false, 4, &reqs);
+    assert_eq!(on, off, "prefix cache changed dense greedy token streams");
+}
+
+#[test]
+fn scheduler_cache_on_equals_cache_off_packed() {
+    let reqs = shared_prefix_requests(3, 4);
+    let on = run_sched(packed_tiny_model(37), true, 4, &reqs);
+    let off = run_sched(packed_tiny_model(37), false, 4, &reqs);
+    assert_eq!(on, off, "prefix cache changed packed greedy token streams");
+}
+
+/// K distinct prefixes must cost exactly K cold prefills: serialized
+/// requests (max_batch 1, ample pool — no eviction, no preemption) make
+/// the accounting exact.
+#[test]
+fn k_distinct_prefixes_k_cold_prefills() {
+    let (k, per) = (4usize, 3usize);
+    let reqs = shared_prefix_requests(k, per);
+    let cfg = SchedulerConfig {
+        max_batch: 1,
+        pool_pages: 64,
+        page_size: 2,
+        prefill_chunk: 4,
+        eos: None,
+        prefix_cache: true,
+    };
+    let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(41)), cfg);
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut rs = sched.run_until_idle();
+    rs.sort_by_key(|r| r.id);
+    let m = sched.metrics();
+    assert_eq!(m.prefix_lookups, k * per);
+    assert_eq!(m.prefix_lookups - m.prefix_hits, k, "exactly K cold prefills");
+    // every hit forked the full 6-token prefix (suffix chunks differ)
+    assert_eq!(m.prefill_tokens_saved, (k * per - k) * 6);
+    let expect_rate = (per - 1) as f64 / per as f64;
+    assert!((m.cache_hit_rate() - expect_rate).abs() < 1e-12);
+    // the first round (one request per prefix, ids 0..k) is the only
+    // cold one; every later round forks its prefix
+    for (i, r) in rs.iter().enumerate() {
+        if i < k {
+            assert_eq!(r.cached_prefix_len, 0, "id {i} should be cold");
+        } else {
+            assert_eq!(r.cached_prefix_len, 6, "id {i} should fork the prefix");
+        }
+    }
+    sched.assert_no_page_leak();
+}
