@@ -2,7 +2,7 @@
 # project (build time); everything after it is the self-contained Rust
 # coordinator (see README.md).
 
-.PHONY: artifacts check
+.PHONY: artifacts check perfgate
 
 # Train the default model ladder, generate corpora + zero-shot tasks, and
 # lower the L1/L2 graphs to HLO text under ./artifacts.
@@ -13,3 +13,8 @@ artifacts:
 # Tier-1 gate (delegates to rust/Makefile).
 check:
 	$(MAKE) -C rust check
+
+# Perf-regression gate: bench subset + diff vs the committed
+# rust/BENCH_*.json baselines (delegates to rust/Makefile).
+perfgate:
+	$(MAKE) -C rust perfgate

@@ -10,7 +10,7 @@
 
 use gptq_rs::data::Rng;
 use gptq_rs::quant::{accumulate_hessian, gptq_quantize, obq_quantize, GptqConfig};
-use gptq_rs::util::bench::{black_box, write_bench_json};
+use gptq_rs::util::bench::{black_box, write_bench_json, MachineClass};
 use gptq_rs::util::cli::Args;
 use gptq_rs::util::json::Json;
 use gptq_rs::util::par;
@@ -118,7 +118,9 @@ fn main() {
     if let Some(path) = record {
         let summary_refs: Vec<(&str, Json)> =
             summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
-        write_bench_json(&path, "quantize", results, summary_refs).expect("write bench json");
-        println!("wrote {path}");
+        let machine = MachineClass::detect();
+        write_bench_json(&path, "quantize", &machine, results, summary_refs)
+            .expect("write bench json");
+        println!("wrote {path} (machine {machine})");
     }
 }

@@ -24,7 +24,9 @@ use gptq_rs::data::Rng;
 use gptq_rs::model::kernels::{self, Isa};
 use gptq_rs::model::LinearWeight;
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
-use gptq_rs::util::bench::{achieved_gbps, bench_auto, black_box, write_bench_json, Roofline};
+use gptq_rs::util::bench::{
+    achieved_gbps, bench_auto, black_box, write_bench_json, MachineClass, Roofline,
+};
 use gptq_rs::util::cli::Args;
 use gptq_rs::util::json::Json;
 use gptq_rs::util::par;
@@ -184,7 +186,11 @@ fn main() {
     if let Some(path) = record {
         let summary_refs: Vec<(&str, Json)> =
             summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
-        write_bench_json(&path, "kernels", results, summary_refs).expect("write bench json");
-        println!("wrote {path}");
+        // detect AFTER set_isa_env: the header keys on the machine's
+        // effective dispatch ISA, not the last swept one
+        let machine = MachineClass::detect();
+        write_bench_json(&path, "kernels", &machine, results, summary_refs)
+            .expect("write bench json");
+        println!("wrote {path} (machine {machine})");
     }
 }

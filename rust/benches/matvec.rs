@@ -16,7 +16,7 @@
 use gptq_rs::data::Rng;
 use gptq_rs::model::matvec::{matvec_f32, matvec_packed};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
-use gptq_rs::util::bench::{bench_auto, black_box, write_bench_json, Roofline};
+use gptq_rs::util::bench::{bench_auto, black_box, write_bench_json, MachineClass, Roofline};
 use gptq_rs::util::cli::Args;
 use gptq_rs::util::json::Json;
 use gptq_rs::util::par;
@@ -157,7 +157,9 @@ fn main() {
     if let Some(path) = record {
         let summary_refs: Vec<(&str, Json)> =
             summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
-        write_bench_json(&path, "decode", all_results, summary_refs).expect("write bench json");
-        println!("wrote {path}");
+        let machine = MachineClass::detect();
+        write_bench_json(&path, "decode", &machine, all_results, summary_refs)
+            .expect("write bench json");
+        println!("wrote {path} (machine {machine})");
     }
 }

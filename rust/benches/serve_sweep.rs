@@ -25,7 +25,7 @@ use gptq_rs::data::Rng;
 use gptq_rs::model::checkpoint::quantizable_keys;
 use gptq_rs::model::{Checkpoint, CpuModel, ModelConfig, QuantizedCheckpoint, Tensor};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
-use gptq_rs::util::bench::write_bench_json;
+use gptq_rs::util::bench::{write_bench_json, MachineClass};
 use gptq_rs::util::cli::Args;
 use gptq_rs::util::json::Json;
 use gptq_rs::util::par;
@@ -208,6 +208,16 @@ fn main() {
                     ("per_token_p50_ms", Json::Num(r.per_token_p50)),
                 ]));
                 if offered == 32 {
+                    // TTFT percentiles are gated metrics (perfgate):
+                    // promote the saturated-load points to the summary
+                    summary.push((
+                        format!("ttft_p50_ms_{label}_b{batch}"),
+                        Json::Num(r.ttft_p50),
+                    ));
+                    summary.push((
+                        format!("ttft_p99_ms_{label}_b{batch}"),
+                        Json::Num(r.ttft_p99),
+                    ));
                     if batch == 1 {
                         tps_b1_l32 = r.tokens_per_s;
                     } else if batch == 16 && tps_b1_l32 > 0.0 {
@@ -282,7 +292,9 @@ fn main() {
     if let Some(path) = record {
         let summary_refs: Vec<(&str, Json)> =
             summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
-        write_bench_json(&path, "serve", results, summary_refs).expect("write bench json");
-        println!("wrote {path}");
+        let machine = MachineClass::detect();
+        write_bench_json(&path, "serve", &machine, results, summary_refs)
+            .expect("write bench json");
+        println!("wrote {path} (machine {machine})");
     }
 }

@@ -1,0 +1,87 @@
+//! `perfgate` — the perf-regression gate (README.md §Perf gate).
+//!
+//! Diffs the summary metrics of freshly recorded `BENCH_*.json` files
+//! against committed baselines under per-metric tolerance bands
+//! (`util::bench::default_specs`), honoring each metric's direction
+//! (tokens/s up is good, TTFT up is bad). Machine classes
+//! (arch/ISA/cores, recorded in every bench header) must match — a NEON
+//! runner is never judged against an AVX2 baseline.
+//!
+//! ```bash
+//! perfgate --baseline-dir . --current-dir target/perfgate \
+//!          --benches kernels,decode,serve [--skip-mismatch]
+//! ```
+//!
+//! Exit codes: 0 = all gated metrics within band; 1 = at least one
+//! regression; 2 = structural error (unreadable file, missing/extra
+//! metric keys, machine-class mismatch). `--skip-mismatch` downgrades a
+//! machine-class mismatch to a skip (exit 0 for that bench) so shared CI
+//! runners of a different class stay green instead of red-herring.
+
+use gptq_rs::util::bench::{compare, default_specs, BenchDoc};
+use gptq_rs::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: perfgate --baseline-dir DIR --current-dir DIR \
+         [--benches kernels,decode,serve] [--skip-mismatch]"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let Some(baseline_dir) = args.get("baseline-dir") else { usage() };
+    let Some(current_dir) = args.get("current-dir") else { usage() };
+    let benches = args.str_or("benches", "kernels,decode,serve");
+    let skip_mismatch = args.flag("skip-mismatch");
+
+    let mut regressions = 0usize;
+    let mut errors = 0usize;
+    for bench in benches.split(',').map(str::trim).filter(|b| !b.is_empty()) {
+        let file = format!("BENCH_{bench}.json");
+        let baseline = match BenchDoc::load(&format!("{baseline_dir}/{file}")) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("perfgate: baseline {e}");
+                errors += 1;
+                continue;
+            }
+        };
+        let current = match BenchDoc::load(&format!("{current_dir}/{file}")) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("perfgate: current {e}");
+                errors += 1;
+                continue;
+            }
+        };
+        if skip_mismatch {
+            if let (Some(b), Some(c)) = (&baseline.machine, &current.machine) {
+                if b.key() != c.key() {
+                    println!(
+                        "== perfgate: bench `{bench}` SKIPPED — machine class {} vs baseline {} \
+                         (--skip-mismatch)",
+                        c.key(),
+                        b.key()
+                    );
+                    continue;
+                }
+            }
+        }
+        let report = compare(&baseline, &current, &default_specs(bench));
+        print!("{}", report.render());
+        regressions += report.regressions();
+        errors += report.errors.len();
+    }
+
+    if errors > 0 {
+        eprintln!("perfgate: FAIL ({errors} errors, {regressions} regressions)");
+        std::process::exit(2);
+    }
+    if regressions > 0 {
+        eprintln!("perfgate: FAIL ({regressions} regressed metrics)");
+        std::process::exit(1);
+    }
+    println!("perfgate: PASS");
+}

@@ -4,6 +4,7 @@
 //! EXPERIMENTS.md §Benches) so the perf trajectory is tracked in-repo.
 
 use crate::util::json::Json;
+use std::fmt;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -35,21 +36,357 @@ impl BenchResult {
     }
 }
 
-/// Write a bench record (`{bench, results: […], summary: {…}}`) to
-/// `path`. The `make bench` targets use this to produce
-/// `BENCH_decode.json` / `BENCH_quantize.json` (EXPERIMENTS.md §Benches).
+/// The machine-class key recorded in every `BENCH_*.json` header so the
+/// perf gate never diffs runs from incomparable hardware: a NEON laptop
+/// must not be judged against an AVX2 server baseline, and a
+/// `GPTQ_ISA=scalar` run must not be judged against an `avx2` one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineClass {
+    /// `std::env::consts::ARCH` — "x86_64", "aarch64", …
+    pub arch: String,
+    /// effective kernel dispatch ISA (`model::kernels::isa().name()`)
+    pub isa: String,
+    /// hardware parallelism (`par::auto_threads()`), NOT the current
+    /// `GPTQ_THREADS` setting — thread sweeps key on capability
+    pub cores: usize,
+}
+
+impl MachineClass {
+    pub fn detect() -> MachineClass {
+        MachineClass {
+            arch: std::env::consts::ARCH.to_string(),
+            isa: crate::model::kernels::isa().name().to_string(),
+            cores: crate::util::par::auto_threads(),
+        }
+    }
+
+    /// The comparison key, e.g. `x86_64/avx2/8`.
+    pub fn key(&self) -> String {
+        format!("{}/{}/{}", self.arch, self.isa, self.cores)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("isa", Json::Str(self.isa.clone())),
+            ("cores", Json::Num(self.cores as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<MachineClass> {
+        Some(MachineClass {
+            arch: j.get("arch")?.as_str()?.to_string(),
+            isa: j.get("isa")?.as_str()?.to_string(),
+            cores: j.get("cores")?.as_usize()?,
+        })
+    }
+}
+
+impl fmt::Display for MachineClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+/// Write a bench record (`{bench, machine, results: […], summary: {…}}`)
+/// to `path`. The `make bench` targets use this to produce
+/// `BENCH_decode.json` / `BENCH_quantize.json` (EXPERIMENTS.md §Benches);
+/// `perfgate` diffs the summary block against a committed baseline with
+/// the same machine class.
 pub fn write_bench_json(
     path: &str,
     bench: &str,
+    machine: &MachineClass,
     results: Vec<Json>,
     summary: Vec<(&str, Json)>,
 ) -> std::io::Result<()> {
     let doc = Json::obj(vec![
         ("bench", Json::Str(bench.to_string())),
+        ("machine", machine.to_json()),
         ("results", Json::Arr(results)),
         ("summary", Json::obj(summary)),
     ]);
     std::fs::write(path, doc.to_string())
+}
+
+/// A parsed `BENCH_*.json` as the perf gate sees it: the bench name, the
+/// machine class, and the NUMERIC summary metrics in file order
+/// (non-numeric summary entries like kernel_sweep's `isas` string are
+/// informational and skipped).
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    pub bench: String,
+    pub machine: Option<MachineClass>,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchDoc {
+    pub fn parse(text: &str) -> Result<BenchDoc, String> {
+        let doc = Json::parse(text)?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing `bench` header".to_string())?
+            .to_string();
+        let machine = doc.get("machine").and_then(MachineClass::from_json);
+        let summary = doc.get("summary").ok_or_else(|| "missing `summary` block".to_string())?;
+        let pairs = match summary {
+            Json::Obj(pairs) => pairs,
+            _ => return Err("`summary` is not an object".to_string()),
+        };
+        let metrics = pairs
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+            .collect();
+        Ok(BenchDoc { bench, machine, metrics })
+    }
+
+    pub fn load(path: &str) -> Result<BenchDoc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+}
+
+/// Which way a metric is allowed to drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// throughput-like: tokens/s, GB/s, speedups, tokens saved
+    HigherIsBetter,
+    /// latency-like: ms/layer, TTFT percentiles
+    LowerIsBetter,
+}
+
+/// A tolerance band for every summary metric matching `pattern`
+/// (`*` wildcards). First matching spec wins; metrics matching no spec
+/// are reported but not gated.
+#[derive(Debug, Clone)]
+pub struct MetricSpec {
+    pub pattern: String,
+    pub direction: Direction,
+    /// relative tolerance: a 0.15 band fails a >15% move in the bad
+    /// direction (and flags a >15% move in the good one as improvement)
+    pub rel_tol: f64,
+}
+
+impl MetricSpec {
+    pub fn new(pattern: &str, direction: Direction, rel_tol: f64) -> MetricSpec {
+        MetricSpec { pattern: pattern.to_string(), direction, rel_tol }
+    }
+
+    pub fn matches(&self, name: &str) -> bool {
+        glob_match(&self.pattern, name)
+    }
+}
+
+/// `*`-wildcard match (any number of stars, each matching any substring).
+fn glob_match(pattern: &str, name: &str) -> bool {
+    let (p, n): (Vec<char>, Vec<char>) = (pattern.chars().collect(), name.chars().collect());
+    // classic iterative glob with single-level backtracking to the last *
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let (mut star, mut mark) = (None::<usize>, 0usize);
+    while ni < n.len() {
+        if pi < p.len() && (p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some(pi);
+            mark = ni;
+            pi += 1;
+        } else if let Some(s) = star {
+            pi = s + 1;
+            mark += 1;
+            ni = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// The default tolerance bands for each recorded bench, keyed by the
+/// `bench` header. Patterns cover every numeric summary key the four
+/// harnesses emit; the bands are wide enough for shared-CI timing noise
+/// but far inside the ≥20% regression the gate exists to catch.
+/// Deterministic counters (`prefill_tokens_saved`) get a zero band.
+pub fn default_specs(bench: &str) -> Vec<MetricSpec> {
+    use Direction::{HigherIsBetter as Higher, LowerIsBetter as Lower};
+    match bench {
+        "kernels" => vec![
+            MetricSpec::new("speedup_4bit_b16_*_over_scalar", Higher, 0.15),
+            MetricSpec::new("peak_gbps*", Higher, 0.25),
+        ],
+        "decode" => vec![
+            MetricSpec::new("peak_gbps*", Higher, 0.25),
+            MetricSpec::new("ms_per_layer_*", Lower, 0.15),
+            MetricSpec::new("tokens_per_s_*", Higher, 0.15),
+            MetricSpec::new("decode_speedup_*", Higher, 0.15),
+        ],
+        "quantize" => vec![
+            MetricSpec::new("quantize_speedup_*", Higher, 0.15),
+            MetricSpec::new("ms_per_layer_*", Lower, 0.20),
+        ],
+        "serve" => vec![
+            MetricSpec::new("serve_speedup_*", Higher, 0.20),
+            MetricSpec::new("ttft_p50_ms_*", Lower, 0.25),
+            MetricSpec::new("ttft_p99_ms_*", Lower, 0.35),
+            MetricSpec::new("*_prefill_tokens_saved", Higher, 0.0),
+            MetricSpec::new("*_ttft_p50_speedup", Higher, 0.25),
+        ],
+        _ => Vec::new(),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricStatus {
+    Pass,
+    Improved,
+    Regressed,
+    /// no spec matched — informational only
+    Skipped,
+}
+
+/// One row of the per-metric report.
+#[derive(Debug, Clone)]
+pub struct MetricLine {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// signed relative change, +0.20 = 20% higher than baseline
+    pub delta: f64,
+    pub rel_tol: f64,
+    pub status: MetricStatus,
+}
+
+/// The outcome of diffing one current bench doc against its baseline.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    pub bench: String,
+    pub lines: Vec<MetricLine>,
+    /// structural problems: machine-class mismatch, missing/extra
+    /// metric keys, bench-name mismatch — never panics
+    pub errors: Vec<String>,
+}
+
+impl GateReport {
+    pub fn regressions(&self) -> usize {
+        self.lines.iter().filter(|l| l.status == MetricStatus::Regressed).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.errors.is_empty() && self.regressions() == 0
+    }
+
+    /// Human-readable per-metric report (the thing CI prints on red).
+    pub fn render(&self) -> String {
+        let mut out = format!("== perfgate: bench `{}` ==\n", self.bench);
+        for e in &self.errors {
+            out.push_str(&format!("  ERROR      {e}\n"));
+        }
+        for l in &self.lines {
+            let tag = match l.status {
+                MetricStatus::Pass => "ok       ",
+                MetricStatus::Improved => "IMPROVED ",
+                MetricStatus::Regressed => "REGRESSED",
+                MetricStatus::Skipped => "(no spec)",
+            };
+            out.push_str(&format!(
+                "  {tag}  {:<44} base {:>12.4}  now {:>12.4}  {:>+7.1}% (tol ±{:.0}%)\n",
+                l.name,
+                l.baseline,
+                l.current,
+                l.delta * 100.0,
+                l.rel_tol * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "  => {} metrics, {} regressed, {} errors: {}\n",
+            self.lines.len(),
+            self.regressions(),
+            self.errors.len(),
+            if self.passed() { "PASS" } else { "FAIL" }
+        ));
+        out
+    }
+}
+
+/// Diff `current` against `baseline` under `specs`. Every baseline
+/// metric must exist in the current run and vice versa (a vanished or
+/// novel summary key means the bench changed shape and the baseline
+/// must be regenerated — reported as an error, not a panic). Machine
+/// classes must match exactly; regressions are moves beyond `rel_tol`
+/// in the spec's bad direction.
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, specs: &[MetricSpec]) -> GateReport {
+    let mut report =
+        GateReport { bench: baseline.bench.clone(), lines: Vec::new(), errors: Vec::new() };
+    if baseline.bench != current.bench {
+        report.errors.push(format!(
+            "bench mismatch: baseline `{}` vs current `{}`",
+            baseline.bench, current.bench
+        ));
+    }
+    match (&baseline.machine, &current.machine) {
+        (Some(b), Some(c)) if b.key() != c.key() => report.errors.push(format!(
+            "machine-class mismatch: baseline {} vs current {} — not comparable; \
+             re-baseline on this machine class",
+            b.key(),
+            c.key()
+        )),
+        (None, _) => report.errors.push("baseline has no machine-class header".to_string()),
+        (_, None) => report.errors.push("current run has no machine-class header".to_string()),
+        _ => {}
+    }
+    for (name, base) in &baseline.metrics {
+        let Some(cur) = current.metric(name) else {
+            report.errors.push(format!("metric `{name}` is in the baseline but missing from the current run"));
+            continue;
+        };
+        let Some(spec) = specs.iter().find(|s| s.matches(name)) else {
+            report.lines.push(MetricLine {
+                name: name.clone(),
+                baseline: *base,
+                current: cur,
+                delta: (cur - base) / base.abs().max(1e-12),
+                rel_tol: 0.0,
+                status: MetricStatus::Skipped,
+            });
+            continue;
+        };
+        let delta = (cur - base) / base.abs().max(1e-12);
+        let (bad, good) = match spec.direction {
+            Direction::HigherIsBetter => (delta < -spec.rel_tol - 1e-12, delta > spec.rel_tol + 1e-12),
+            Direction::LowerIsBetter => (delta > spec.rel_tol + 1e-12, delta < -spec.rel_tol - 1e-12),
+        };
+        let status = if bad {
+            MetricStatus::Regressed
+        } else if good {
+            MetricStatus::Improved
+        } else {
+            MetricStatus::Pass
+        };
+        report.lines.push(MetricLine {
+            name: name.clone(),
+            baseline: *base,
+            current: cur,
+            delta,
+            rel_tol: spec.rel_tol,
+            status,
+        });
+    }
+    for (name, _) in &current.metrics {
+        if baseline.metric(name).is_none() {
+            report.errors.push(format!(
+                "metric `{name}` appeared in the current run but is not in the baseline"
+            ));
+        }
+    }
+    report
 }
 
 /// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
@@ -185,9 +522,11 @@ mod tests {
         });
         let path = std::env::temp_dir().join("gptq_bench_json_test.json");
         let path_s = path.to_string_lossy().into_owned();
+        let machine = MachineClass::detect();
         write_bench_json(
             &path_s,
             "decode",
+            &machine,
             vec![r.to_json()],
             vec![("speedup", Json::Num(2.0))],
         )
@@ -202,5 +541,122 @@ mod tests {
         let first = &doc.get("results").unwrap().as_arr().unwrap()[0];
         assert_eq!(first.get("name").and_then(Json::as_str), Some("probe"));
         assert_eq!(first.get("iters").and_then(Json::as_usize), Some(2));
+        // and the perfgate view of the same file
+        let bd = BenchDoc::parse(&text).unwrap();
+        assert_eq!(bd.bench, "decode");
+        assert_eq!(bd.machine.as_ref().map(|m| m.key()), Some(machine.key()));
+        assert_eq!(bd.metric("speedup"), Some(2.0));
+    }
+
+    #[test]
+    fn machine_class_json_roundtrip() {
+        let m = MachineClass { arch: "x86_64".into(), isa: "avx2".into(), cores: 8 };
+        assert_eq!(m.key(), "x86_64/avx2/8");
+        assert_eq!(MachineClass::from_json(&m.to_json()), Some(m.clone()));
+        assert_eq!(format!("{m}"), "x86_64/avx2/8");
+        // detect() must yield a non-empty class on any machine
+        let d = MachineClass::detect();
+        assert!(!d.arch.is_empty() && !d.isa.is_empty() && d.cores >= 1);
+    }
+
+    #[test]
+    fn glob_patterns() {
+        assert!(glob_match("tokens_per_s_*", "tokens_per_s_3bit_t1"));
+        assert!(glob_match("speedup_4bit_b16_*_over_scalar", "speedup_4bit_b16_avx2_over_scalar"));
+        assert!(!glob_match("speedup_4bit_b16_*_over_scalar", "speedup_4bit_b16_avx2"));
+        assert!(glob_match("*_prefill_tokens_saved", "shared_prefix_k4_prefill_tokens_saved"));
+        assert!(glob_match("peak_gbps*", "peak_gbps"));
+        assert!(glob_match("peak_gbps*", "peak_gbps_t1"));
+        assert!(!glob_match("ms_per_layer_*", "tokens_per_s_f32_t1"));
+        assert!(glob_match("*", "anything"));
+        assert!(!glob_match("", "x") && glob_match("", ""));
+    }
+
+    fn doc(bench: &str, isa: &str, metrics: &[(&str, f64)]) -> BenchDoc {
+        BenchDoc {
+            bench: bench.to_string(),
+            machine: Some(MachineClass { arch: "x86_64".into(), isa: isa.into(), cores: 4 }),
+            metrics: metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    #[test]
+    fn compare_flags_20pct_regression_and_passes_noise() {
+        let specs = default_specs("decode");
+        let base = doc("decode", "avx2", &[("tokens_per_s_4bit_t1", 1000.0), ("ms_per_layer_4bit_t1", 1.0)]);
+        // 20% tokens/s drop: beyond the 15% band -> regression, nonzero report
+        let bad = doc("decode", "avx2", &[("tokens_per_s_4bit_t1", 800.0), ("ms_per_layer_4bit_t1", 1.0)]);
+        let r = compare(&base, &bad, &specs);
+        assert!(!r.passed());
+        assert_eq!(r.regressions(), 1);
+        assert!(r.render().contains("REGRESSED") && r.render().contains("tokens_per_s_4bit_t1"));
+        // 3% noise either way stays inside the band
+        let noisy = doc("decode", "avx2", &[("tokens_per_s_4bit_t1", 970.0), ("ms_per_layer_4bit_t1", 1.03)]);
+        let r = compare(&base, &noisy, &specs);
+        assert!(r.passed(), "{}", r.render());
+        assert!(r.lines.iter().all(|l| l.status == MetricStatus::Pass));
+        // a 30% improvement passes (and is labeled as such)
+        let better = doc("decode", "avx2", &[("tokens_per_s_4bit_t1", 1300.0), ("ms_per_layer_4bit_t1", 0.7)]);
+        let r = compare(&base, &better, &specs);
+        assert!(r.passed());
+        assert!(r.lines.iter().all(|l| l.status == MetricStatus::Improved));
+    }
+
+    #[test]
+    fn compare_latency_direction() {
+        // lower-is-better: a 20% ms/layer INCREASE is the regression
+        let specs = default_specs("decode");
+        let base = doc("decode", "avx2", &[("ms_per_layer_3bit_t1", 1.0)]);
+        let slow = doc("decode", "avx2", &[("ms_per_layer_3bit_t1", 1.2)]);
+        assert_eq!(compare(&base, &slow, &specs).regressions(), 1);
+        let fast = doc("decode", "avx2", &[("ms_per_layer_3bit_t1", 0.8)]);
+        assert!(compare(&base, &fast, &specs).passed());
+    }
+
+    #[test]
+    fn compare_key_mismatches_are_errors_not_panics() {
+        let specs = default_specs("decode");
+        let base = doc("decode", "avx2", &[("tokens_per_s_4bit_t1", 1000.0), ("peak_gbps_t1", 10.0)]);
+        // missing key in current
+        let missing = doc("decode", "avx2", &[("tokens_per_s_4bit_t1", 1000.0)]);
+        let r = compare(&base, &missing, &specs);
+        assert!(!r.passed() && r.errors.iter().any(|e| e.contains("peak_gbps_t1")));
+        // extra key in current
+        let extra = doc(
+            "decode",
+            "avx2",
+            &[("tokens_per_s_4bit_t1", 1000.0), ("peak_gbps_t1", 10.0), ("novel_metric", 1.0)],
+        );
+        let r = compare(&base, &extra, &specs);
+        assert!(!r.passed() && r.errors.iter().any(|e| e.contains("novel_metric")));
+        // machine-class mismatch
+        let other_isa = doc("decode", "neon", &[("tokens_per_s_4bit_t1", 1000.0), ("peak_gbps_t1", 10.0)]);
+        let r = compare(&base, &other_isa, &specs);
+        assert!(!r.passed() && r.errors.iter().any(|e| e.contains("machine-class mismatch")));
+        // absent machine header
+        let mut no_machine = base.clone();
+        no_machine.machine = None;
+        let r = compare(&base, &no_machine, &specs);
+        assert!(!r.passed() && r.errors.iter().any(|e| e.contains("machine-class")));
+    }
+
+    #[test]
+    fn compare_unspecced_metric_is_reported_not_gated() {
+        let specs = default_specs("kernels");
+        let base = doc("kernels", "avx2", &[("some_unknown_counter", 5.0)]);
+        let cur = doc("kernels", "avx2", &[("some_unknown_counter", 1.0)]);
+        let r = compare(&base, &cur, &specs);
+        assert!(r.passed());
+        assert_eq!(r.lines[0].status, MetricStatus::Skipped);
+    }
+
+    #[test]
+    fn deterministic_counters_have_zero_band() {
+        let specs = default_specs("serve");
+        let base = doc("serve", "avx2", &[("shared_prefix_k4_prefill_tokens_saved", 1344.0)]);
+        let same = doc("serve", "avx2", &[("shared_prefix_k4_prefill_tokens_saved", 1344.0)]);
+        assert!(compare(&base, &same, &specs).passed());
+        let fewer = doc("serve", "avx2", &[("shared_prefix_k4_prefill_tokens_saved", 1200.0)]);
+        assert_eq!(compare(&base, &fewer, &specs).regressions(), 1);
     }
 }

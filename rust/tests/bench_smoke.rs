@@ -1,0 +1,99 @@
+//! Deterministic mini-bench smoke test: drives the bench harness and
+//! the perfgate code paths on every `cargo test` without the full
+//! `make bench` sweep — a tiny testkit model, fixed seeds, one decode
+//! micro-bench and one serve tick, recorded through
+//! `write_bench_json`, parsed back with `BenchDoc`, and self-compared
+//! through the gate.
+
+use gptq_rs::coordinator::{GenRequest, SchedulerConfig, Server, ServerConfig};
+use gptq_rs::model::testkit::tiny_checkpoint;
+use gptq_rs::model::{CpuModel, KvCache};
+use gptq_rs::util::bench::{
+    bench, black_box, compare, default_specs, write_bench_json, BenchDoc, MachineClass,
+};
+use gptq_rs::util::json::Json;
+
+/// One serve tick: a single request through a one-worker server,
+/// returning the generated tokens and the TTFT p50.
+fn serve_tick() -> (Vec<u8>, f64) {
+    let cfg = ServerConfig {
+        n_workers: 1,
+        scheduler: SchedulerConfig {
+            max_batch: 2,
+            pool_pages: 16,
+            page_size: 4,
+            ..Default::default()
+        },
+    };
+    let m = CpuModel::from_checkpoint(&tiny_checkpoint(7));
+    let mut server = Server::start(cfg, move |_| m.clone());
+    server.submit(GenRequest { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 });
+    let responses = server.collect(1);
+    let metrics = server.shutdown();
+    (responses[0].tokens.clone(), metrics.ttft.percentile(50.0))
+}
+
+#[test]
+fn mini_bench_and_perfgate_smoke() {
+    // -- decode micro-bench: a few real decode steps under the harness --
+    let mut model = CpuModel::from_checkpoint(&tiny_checkpoint(7));
+    let mut cache = KvCache::new(&model.config);
+    for t in [1u8, 2, 3] {
+        model.decode_step(&mut cache, t);
+    }
+    let mut next = 3u8;
+    let r = bench("tiny_decode_step", 1, 4, || {
+        let logits = model.decode_step(&mut cache, next);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        next = (next + 1) % 8;
+        black_box(logits[0]);
+    });
+    assert!(r.mean_ms > 0.0 && r.iters == 4);
+
+    // -- one serve tick, deterministic across runs --------------------
+    let (tokens_a, ttft) = serve_tick();
+    let (tokens_b, _) = serve_tick();
+    assert!(!tokens_a.is_empty());
+    assert_eq!(tokens_a, tokens_b, "serve tick must be deterministic at fixed seed");
+    assert!(ttft >= 0.0 && ttft.is_finite());
+
+    // -- record both through the bench JSON path and gate them --------
+    let machine = MachineClass::detect();
+    let dir = std::env::temp_dir();
+    let decode_path = dir.join("gptq_smoke_BENCH_decode.json");
+    let serve_path = dir.join("gptq_smoke_BENCH_serve.json");
+    write_bench_json(
+        &decode_path.to_string_lossy(),
+        "decode",
+        &machine,
+        vec![r.to_json()],
+        vec![
+            ("ms_per_layer_smoke_t1", Json::Num(r.mean_ms)),
+            ("tokens_per_s_smoke_t1", Json::Num(1e3 / r.mean_ms)),
+        ],
+    )
+    .unwrap();
+    write_bench_json(
+        &serve_path.to_string_lossy(),
+        "serve",
+        &machine,
+        vec![],
+        vec![
+            ("ttft_p50_ms_smoke_b2", Json::Num(ttft)),
+            ("smoke_prefill_tokens_saved", Json::Num(0.0)),
+        ],
+    )
+    .unwrap();
+
+    for (path, bench_name) in [(&decode_path, "decode"), (&serve_path, "serve")] {
+        let doc = BenchDoc::load(&path.to_string_lossy()).unwrap();
+        assert_eq!(doc.bench, bench_name);
+        assert_eq!(doc.machine.as_ref().map(|m| m.key()), Some(machine.key()));
+        // self-compare: identical runs must clear the gate, and every
+        // smoke metric must be covered by the default specs
+        let report = compare(&doc, &doc, &default_specs(bench_name));
+        assert!(report.passed(), "{}", report.render());
+        assert_eq!(report.lines.len(), doc.metrics.len());
+        std::fs::remove_file(path).ok();
+    }
+}

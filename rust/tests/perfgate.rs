@@ -1,0 +1,209 @@
+//! Perf-gate integration suite: `util::bench::write_bench_json` →
+//! `BenchDoc::parse` round-trips for all three committed baseline
+//! layouts (BENCH_kernels / BENCH_decode / BENCH_serve summary-key
+//! shapes), and the compare() gate driven through real files — the
+//! injected ≥20% tokens/s regression MUST fail with a per-metric
+//! report, within-band noise and improvements must pass.
+
+use gptq_rs::util::bench::{
+    compare, default_specs, write_bench_json, BenchDoc, MachineClass, MetricStatus,
+};
+use gptq_rs::util::json::Json;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> (PathBuf, String) {
+    let p = std::env::temp_dir().join(name);
+    let s = p.to_string_lossy().into_owned();
+    (p, s)
+}
+
+fn write_and_parse(bench: &str, summary: Vec<(&str, Json)>) -> BenchDoc {
+    let (path, path_s) = tmp(&format!("gptq_perfgate_rt_{bench}.json"));
+    let machine = MachineClass::detect();
+    let results = vec![Json::obj(vec![("name", Json::Str("probe".into()))])];
+    write_bench_json(&path_s, bench, &machine, results, summary).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = BenchDoc::parse(&text).unwrap();
+    assert_eq!(doc.bench, bench);
+    assert_eq!(doc.machine.as_ref().map(|m| m.key()), Some(machine.key()));
+    doc
+}
+
+#[test]
+fn kernels_layout_roundtrips() {
+    // the kernel_sweep summary shape: per-ISA speedup keys, the
+    // roofline, and a NON-numeric `isas` string that must be skipped
+    let doc = write_and_parse(
+        "kernels",
+        vec![
+            ("speedup_4bit_b16_avx2_over_scalar", Json::Num(3.1)),
+            ("peak_gbps", Json::Num(11.5)),
+            ("isas", Json::Str("scalar,avx2".into())),
+        ],
+    );
+    assert_eq!(doc.metric("speedup_4bit_b16_avx2_over_scalar"), Some(3.1));
+    assert_eq!(doc.metric("peak_gbps"), Some(11.5));
+    assert_eq!(doc.metrics.len(), 2, "string summary entries must not become metrics");
+    // every numeric key is covered by a gate spec
+    let specs = default_specs("kernels");
+    for (name, _) in &doc.metrics {
+        assert!(specs.iter().any(|s| s.matches(name)), "no spec for {name}");
+    }
+}
+
+#[test]
+fn decode_layout_roundtrips() {
+    // the matvec summary shape: roofline + per-bits/per-thread layer
+    // latency + throughput + the thread-scaling speedup
+    let doc = write_and_parse(
+        "decode",
+        vec![
+            ("peak_gbps_t1", Json::Num(11.5)),
+            ("ms_per_layer_f32_t1", Json::Num(4.4)),
+            ("tokens_per_s_f32_t1", Json::Num(227.0)),
+            ("ms_per_layer_3bit_t1", Json::Num(1.9)),
+            ("tokens_per_s_3bit_t1", Json::Num(526.0)),
+            ("decode_speedup_3bit_t4_over_t1", Json::Num(2.6)),
+        ],
+    );
+    assert_eq!(doc.metrics.len(), 6);
+    assert_eq!(doc.metric("decode_speedup_3bit_t4_over_t1"), Some(2.6));
+    let specs = default_specs("decode");
+    for (name, _) in &doc.metrics {
+        assert!(specs.iter().any(|s| s.matches(name)), "no spec for {name}");
+    }
+}
+
+#[test]
+fn serve_layout_roundtrips() {
+    // the serve_sweep summary shape: batching speedups, promoted TTFT
+    // percentiles, shared-prefix counters and speedups
+    let doc = write_and_parse(
+        "serve",
+        vec![
+            ("ttft_p50_ms_f32_b1", Json::Num(410.0)),
+            ("ttft_p99_ms_f32_b1", Json::Num(820.0)),
+            ("ttft_p50_ms_4bit_b16", Json::Num(21.0)),
+            ("ttft_p99_ms_4bit_b16", Json::Num(55.0)),
+            ("serve_speedup_f32_b16_over_b1", Json::Num(4.7)),
+            ("serve_speedup_4bit_b16_over_b1", Json::Num(5.3)),
+            ("shared_prefix_k1_prefill_tokens_saved", Json::Num(1488.0)),
+            ("shared_prefix_k1_ttft_p50_speedup", Json::Num(2.8)),
+        ],
+    );
+    assert_eq!(doc.metrics.len(), 8);
+    assert_eq!(doc.metric("shared_prefix_k1_prefill_tokens_saved"), Some(1488.0));
+    let specs = default_specs("serve");
+    for (name, _) in &doc.metrics {
+        assert!(specs.iter().any(|s| s.matches(name)), "no spec for {name}");
+    }
+}
+
+/// The acceptance-criteria scenario end to end through files: a
+/// baseline on disk, a current run with a 20% tokens/s regression
+/// injected — the gate must fail with the offending metric in the
+/// report; the unmodified run must pass.
+#[test]
+fn injected_regression_fails_identity_passes() {
+    let machine = MachineClass::detect();
+    let summary = |tps: f64| {
+        vec![
+            ("tokens_per_s_4bit_t1", Json::Num(tps)),
+            ("ms_per_layer_4bit_t1", Json::Num(1000.0 / tps)),
+            ("peak_gbps_t1", Json::Num(11.5)),
+        ]
+    };
+    let (bp, bp_s) = tmp("gptq_perfgate_baseline.json");
+    let (cp, cp_s) = tmp("gptq_perfgate_current.json");
+    write_bench_json(&bp_s, "decode", &machine, vec![], summary(500.0)).unwrap();
+
+    // identity: same numbers -> pass
+    write_bench_json(&cp_s, "decode", &machine, vec![], summary(500.0)).unwrap();
+    let base = BenchDoc::load(&bp_s).unwrap();
+    let cur = BenchDoc::load(&cp_s).unwrap();
+    let r = compare(&base, &cur, &default_specs("decode"));
+    assert!(r.passed(), "{}", r.render());
+
+    // inject -20% tokens/s (and the matching +25% ms/layer)
+    write_bench_json(&cp_s, "decode", &machine, vec![], summary(400.0)).unwrap();
+    let cur = BenchDoc::load(&cp_s).unwrap();
+    let r = compare(&base, &cur, &default_specs("decode"));
+    assert!(!r.passed());
+    assert_eq!(r.regressions(), 2, "{}", r.render());
+    let report = r.render();
+    assert!(report.contains("REGRESSED") && report.contains("tokens_per_s_4bit_t1"));
+    assert!(report.contains("FAIL"));
+
+    // improvement: +30% tokens/s -> pass, labeled improved
+    write_bench_json(&cp_s, "decode", &machine, vec![], summary(650.0)).unwrap();
+    let cur = BenchDoc::load(&cp_s).unwrap();
+    let r = compare(&base, &cur, &default_specs("decode"));
+    assert!(r.passed(), "{}", r.render());
+    assert!(r.lines.iter().any(|l| l.status == MetricStatus::Improved));
+
+    std::fs::remove_file(&bp).ok();
+    std::fs::remove_file(&cp).ok();
+}
+
+/// Corrupt / mismatched inputs surface as Err or report errors, never
+/// panics.
+#[test]
+fn structural_problems_are_errors() {
+    assert!(BenchDoc::load("/nonexistent/BENCH_decode.json").is_err());
+    assert!(BenchDoc::parse("not json at all").is_err());
+    assert!(BenchDoc::parse("{\"results\": []}").is_err(), "missing bench header");
+    assert!(BenchDoc::parse("{\"bench\": \"decode\"}").is_err(), "missing summary");
+
+    // a doc without a machine header parses (old files) but cannot gate
+    let old = BenchDoc::parse(
+        "{\"bench\": \"decode\", \"results\": [], \"summary\": {\"peak_gbps_t1\": 10.0}}",
+    )
+    .unwrap();
+    assert!(old.machine.is_none());
+    let r = compare(&old, &old, &default_specs("decode"));
+    assert!(!r.passed() && r.errors.iter().any(|e| e.contains("machine-class")));
+}
+
+/// The committed baselines themselves: parse, carry machine metadata,
+/// cover the gated metric families, and self-compare clean (the
+/// machine-class guard is bypassed by construction since both sides are
+/// the same file).
+#[test]
+fn committed_baselines_parse_and_self_compare() {
+    for (bench, musts) in [
+        ("kernels", vec!["peak_gbps"]),
+        ("decode", vec!["peak_gbps_t1", "ms_per_layer_3bit_t1", "tokens_per_s_3bit_t1"]),
+        (
+            "serve",
+            vec![
+                "serve_speedup_4bit_b16_over_b1",
+                "ttft_p50_ms_4bit_b16",
+                "shared_prefix_k1_prefill_tokens_saved",
+            ],
+        ),
+    ] {
+        let path = format!("{}/BENCH_{bench}.json", env!("CARGO_MANIFEST_DIR"));
+        let doc = match BenchDoc::load(&path) {
+            Ok(d) => d,
+            Err(e) => {
+                // baselines are committed; only a sparse checkout skips
+                eprintln!("SKIP: {e}");
+                continue;
+            }
+        };
+        assert_eq!(doc.bench, bench);
+        assert!(doc.machine.is_some(), "{bench} baseline lacks machine metadata");
+        for m in musts {
+            assert!(doc.metric(m).is_some(), "{bench} baseline lacks `{m}`");
+        }
+        let r = compare(&doc, &doc, &default_specs(bench));
+        assert!(r.passed(), "{}", r.render());
+        // every committed metric must be gated by some spec
+        assert!(
+            r.lines.iter().all(|l| l.status != MetricStatus::Skipped),
+            "unspecced metric in {bench}: {}",
+            r.render()
+        );
+    }
+}
