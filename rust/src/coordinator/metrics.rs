@@ -30,15 +30,10 @@ impl LatencyStats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
-    /// p-th percentile (0–100) with linear interpolation between ranks
-    /// (numpy's default convention): p50 of [1, 2] is 1.5 — the old
+    /// Linear interpolation between ranks of an already-sorted sample
+    /// view (numpy's default convention): p50 of [1, 2] is 1.5 — the old
     /// nearest-rank rounding returned 2.0.
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    fn interp(sorted: &[f64], p: f64) -> f64 {
         let last = sorted.len() - 1;
         let rank = (p / 100.0).clamp(0.0, 1.0) * last as f64;
         let lo = rank.floor() as usize;
@@ -47,12 +42,46 @@ impl LatencyStats {
         sorted[lo] + (sorted[hi] - sorted[lo]) * frac
     }
 
+    /// p-th percentile (0–100), interpolated (see [`LatencyStats::interp`]).
+    /// One-off convenience; a caller that needs several should use
+    /// [`LatencyStats::percentiles`], which sorts once.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Batch percentile query: clone + sort the samples ONCE, then
+    /// interpolate each requested p — the summary paths ask for four
+    /// percentiles per dimension, and the per-call sort was O(n log n)
+    /// × 4 at every shutdown/merge report. Values are identical to
+    /// calling [`LatencyStats::percentile`] per entry (empty stats →
+    /// all zeros).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.samples.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter().map(|&p| Self::interp(&sorted, p)).collect()
+    }
+
+    /// Smallest sample, 0.0 on empty stats — matching `mean`/`max`/
+    /// `percentile`, so an idle worker's merged summary never prints
+    /// `inf` (the old fold-from-+∞ identity leaked through).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample, 0.0 on empty stats (explicit guard — the old
+    /// fold from 0.0 silently clamped negative samples and made an
+    /// all-negative population indistinguishable from empty).
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(0.0, f64::max)
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
     pub fn merge(&mut self, other: &LatencyStats) {
@@ -60,12 +89,13 @@ impl LatencyStats {
     }
 
     pub fn summary(&self) -> String {
+        let ps = self.percentiles(&[50.0, 95.0]);
         format!(
             "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms max={:.3}ms",
             self.count(),
             self.mean(),
-            self.percentile(50.0),
-            self.percentile(95.0),
+            ps[0],
+            ps[1],
             self.max()
         )
     }
@@ -128,14 +158,18 @@ impl ServeMetrics {
     }
 
     pub fn summary(&self) -> String {
+        // one sort per dimension (LatencyStats::percentiles), not one
+        // per percentile
+        let ttft = self.ttft.percentiles(&[50.0, 99.0]);
+        let queue = self.queue_wait.percentiles(&[50.0, 99.0]);
         format!(
             "per-token {} | ttft p50={:.3}ms p99={:.3}ms | queue-wait p50={:.3}ms p99={:.3}ms | \
              prefix-cache hit-rate={:.2} saved={} tokens",
             self.per_token.summary(),
-            self.ttft.percentile(50.0),
-            self.ttft.percentile(99.0),
-            self.queue_wait.percentile(50.0),
-            self.queue_wait.percentile(99.0),
+            ttft[0],
+            ttft[1],
+            queue[0],
+            queue[1],
             self.cache_hit_rate(),
             self.prefill_tokens_saved,
         )
@@ -167,6 +201,41 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
+        // the motivating bugs: min() folded from +inf (an idle worker's
+        // summary printed "inf"), max() from 0.0 (empty vs all-negative
+        // indistinguishable) — both must report 0.0 on empty, finitely
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert!(s.min().is_finite() && s.max().is_finite());
+        assert_eq!(s.percentiles(&[50.0, 99.0]), vec![0.0, 0.0]);
+        assert!(!s.summary().contains("inf"), "{}", s.summary());
+    }
+
+    #[test]
+    fn negative_samples_min_max_exact() {
+        // negative latencies shouldn't occur, but clock skew can produce
+        // them and the stats must report, not clamp: the old max() fold
+        // from 0.0 turned an all-negative population into 0.0
+        let mut s = LatencyStats::new();
+        for v in [-5.0, -1.0, -3.0] {
+            s.record_ms(v);
+        }
+        assert_eq!(s.min(), -5.0);
+        assert_eq!(s.max(), -1.0, "max must not clamp negatives to 0.0");
+        assert_eq!(s.percentile(100.0), -1.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_individual_calls() {
+        let mut s = LatencyStats::new();
+        for v in [4.0, 1.0, 3.0, 2.0, 8.0, 0.5, 2.5] {
+            s.record_ms(v);
+        }
+        let ps = [0.0, 25.0, 50.0, 95.0, 99.0, 100.0];
+        let batch = s.percentiles(&ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i], s.percentile(p), "p{p}");
+        }
     }
 
     #[test]

@@ -60,7 +60,7 @@
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::prefixcache::PrefixCache;
 use crate::coordinator::serve::{GenRequest, GenResponse};
-use crate::model::{CpuModel, KvPool, SeqCache};
+use crate::model::{CpuModel, KvDtype, KvPool, SeqCache};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -81,6 +81,12 @@ pub struct SchedulerConfig {
     /// off = every request prefills from scratch (pre-prefix-cache
     /// behavior, bit-identical outputs either way)
     pub prefix_cache: bool,
+    /// KV page storage precision (`--kv-dtype` / `GPTQ_KV_DTYPE`):
+    /// `F32` is today's exact rows, `Q8` fits ≈4× the positions in the
+    /// same bytes at a documented logit-drift cost (DESIGN.md §KV
+    /// precision). Within either dtype the scheduler's parity contracts
+    /// hold bitwise.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for SchedulerConfig {
@@ -92,6 +98,11 @@ impl Default for SchedulerConfig {
             prefill_chunk: 4,
             eos: None,
             prefix_cache: true,
+            // env-derived so the determinism suites (and anything else
+            // built on the default config) flip to q8 pages under
+            // GPTQ_KV_DTYPE=q8 without code changes; unset env = F32 =
+            // bit-identical to the pre-dtype default
+            kv_dtype: KvDtype::from_env(),
         }
     }
 }
@@ -152,7 +163,7 @@ pub struct Scheduler {
 impl Scheduler {
     pub fn new(wid: usize, model: CpuModel, cfg: SchedulerConfig) -> Self {
         assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
-        let pool = KvPool::new(&model.config, cfg.pool_pages, cfg.page_size);
+        let pool = KvPool::new_with_dtype(&model.config, cfg.pool_pages, cfg.page_size, cfg.kv_dtype);
         let cache = PrefixCache::new(cfg.page_size);
         Self {
             wid,

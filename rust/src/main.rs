@@ -30,7 +30,8 @@ const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [-
   quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq] [--calib-segments N] [--out F]
   eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
   serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]
-           [--max-batch N] [--pool-pages N] [--page-size N] [--prefill-chunk N] [--skip-parity]";
+           [--max-batch N] [--pool-pages N] [--page-size N] [--prefill-chunk N]
+           [--kv-dtype f32|q8] [--skip-parity]";
 
 fn parse_engine(s: &str) -> Result<QuantEngine> {
     Ok(match s {
@@ -198,6 +199,13 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
         println!("parity check vs {} backend: rel ppl diff {rel:.2e}", rt.backend_name());
     }
 
+    // KV page precision: --kv-dtype beats GPTQ_KV_DTYPE; default f32
+    // (DESIGN.md §KV precision)
+    let kv_dtype = match args.get("kv-dtype") {
+        Some(s) => gptq_rs::model::KvDtype::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --kv-dtype {s:?} (f32|q8)"))?,
+        None => gptq_rs::model::KvDtype::from_env(),
+    };
     let artifacts = artifacts.to_path_buf();
     let cfg = ServerConfig {
         n_workers: workers,
@@ -210,12 +218,14 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             // cross-request prompt-prefix sharing (DESIGN.md §Prefix
             // cache); bit-identical outputs either way under greedy decode
             prefix_cache: !args.flag("no-prefix-cache"),
+            kv_dtype,
         },
     };
     println!(
-        "kernel ISA: {} (threads {})",
+        "kernel ISA: {} (threads {}, kv-dtype {})",
         gptq_rs::model::kernels::isa(),
-        gptq_rs::util::par::threads()
+        gptq_rs::util::par::threads(),
+        kv_dtype.name()
     );
     let mut server = Server::start(cfg, |_| {
         build_model(&artifacts, &entry, quantized.as_deref()).expect("model build")

@@ -12,7 +12,7 @@
 
 use crate::model::checkpoint::{Checkpoint, QuantizedCheckpoint};
 use crate::model::kernels::{self, TiledPacked};
-use crate::model::kvpool::{KvPool, SeqCache};
+use crate::model::kvpool::{KvDtype, KvPool, SeqCache};
 use crate::model::matvec::{
     matmul_f32_bias, matmul_f32_bias_serial, matmul_packed_bias, matmul_packed_bias_serial,
     matvec_f32_bias, matvec_f32_bias_serial, matvec_packed_bias, matvec_packed_bias_serial,
@@ -265,12 +265,42 @@ fn transpose_rows(src: &[f32], rows: usize, n: usize, dst: &mut [f32]) {
     }
 }
 
+/// K/V row source for one sequence's attention walk: `Pool` borrows f32
+/// rows straight out of an F32 pool (the historical zero-copy path —
+/// same calls, same arithmetic, bit-identical); `Buf` reads from a
+/// per-worker scratch buffer that Q8 pages were dequantized into.
+enum KvRows<'a> {
+    Pool { pool: &'a KvPool, sc: &'a SeqCache, layer: usize },
+    Buf { k: &'a [f32], v: &'a [f32], d: usize },
+}
+
+impl KvRows<'_> {
+    #[inline]
+    fn k(&self, p: usize) -> &[f32] {
+        match self {
+            KvRows::Pool { pool, sc, layer } => pool.k_row(sc, *layer, p),
+            KvRows::Buf { k, d, .. } => &k[p * d..(p + 1) * d],
+        }
+    }
+
+    #[inline]
+    fn v(&self, p: usize) -> &[f32] {
+        match self {
+            KvRows::Pool { pool, sc, layer } => pool.v_row(sc, *layer, p),
+            KvRows::Buf { v, d, .. } => &v[p * d..(p + 1) * d],
+        }
+    }
+}
+
 /// Per-sequence causal attention for one layer of the batched decode:
 /// sequence `j` attends over positions `0..=seqs[j].len` of its OWN
 /// pages. Parallel ACROSS sequences (each output row is one sequence —
 /// disjoint, partition-independent arithmetic, so any thread count is
 /// bit-identical); within a sequence the loops match `decode_step`
-/// exactly.
+/// exactly. Q8 pools dequantize each sequence's rows into a per-worker
+/// scratch buffer first ([`KvPool::read_k_row`]) — deterministic, so
+/// the bitwise parity contracts hold within Q8 too; the matvec kernels
+/// never see quantized KV.
 #[allow(clippy::too_many_arguments)]
 fn batched_attention(
     pool: &KvPool,
@@ -292,8 +322,11 @@ fn batched_attention(
     };
     par::for_rows_mut(&tp, attns, n, d, |range, chunk| {
         // one score buffer per worker chunk (every entry is overwritten
-        // before it is read, so reuse across sequences is safe)
+        // before it is read, so reuse across sequences is safe); the
+        // dequant scratch (Q8 only) is likewise per worker chunk
         let mut att_buf: Vec<f32> = Vec::new();
+        let mut kbuf: Vec<f32> = Vec::new();
+        let mut vbuf: Vec<f32> = Vec::new();
         for (jj, out_all) in chunk.chunks_exact_mut(d).enumerate() {
             let j = range.start + jj;
             let sc: &SeqCache = &*seqs[j];
@@ -304,11 +337,25 @@ fn batched_attention(
                 att_buf.resize(pos + 1, 0.0);
             }
             let att = &mut att_buf[..pos + 1];
+            let rows = match pool.dtype() {
+                KvDtype::F32 => KvRows::Pool { pool, sc, layer },
+                KvDtype::Q8 => {
+                    if kbuf.len() < (pos + 1) * d {
+                        kbuf.resize((pos + 1) * d, 0.0);
+                        vbuf.resize((pos + 1) * d, 0.0);
+                    }
+                    for p in 0..=pos {
+                        pool.read_k_row(sc, layer, p, &mut kbuf[p * d..(p + 1) * d]);
+                        pool.read_v_row(sc, layer, p, &mut vbuf[p * d..(p + 1) * d]);
+                    }
+                    KvRows::Buf { k: &kbuf, v: &vbuf, d }
+                }
+            };
             for head in 0..h {
                 let qh = &q[head * hd..(head + 1) * hd];
                 let mut maxv = f32::NEG_INFINITY;
                 for (p, av) in att.iter_mut().enumerate() {
-                    let kh = &pool.k_row(sc, layer, p)[head * hd..(head + 1) * hd];
+                    let kh = &rows.k(p)[head * hd..(head + 1) * hd];
                     let mut dot = 0.0f32;
                     for i in 0..hd {
                         dot += qh[i] * kh[i];
@@ -325,7 +372,7 @@ fn batched_attention(
                 out.fill(0.0);
                 for (p, &av) in att.iter().enumerate() {
                     let wgt = av / denom;
-                    let vh = &pool.v_row(sc, layer, p)[head * hd..(head + 1) * hd];
+                    let vh = &rows.v(p)[head * hd..(head + 1) * hd];
                     for i in 0..hd {
                         out[i] += wgt * vh[i];
                     }
@@ -585,6 +632,14 @@ impl CpuModel {
     /// guarantees this step's `write_row` never lands in a shared page —
     /// so prefix sharing is invisible to the math (same f32 rows read
     /// either way; `tests/prefix_cache.rs` pins this bitwise).
+    ///
+    /// Q8 pools are a distinct numeric mode (this step's K/V rows are
+    /// quantized by `write_row` and read back dequantized, including the
+    /// current position), so Q8 logits differ from [`CpuModel::decode_step`]
+    /// within the documented drift tolerance (EXPERIMENTS.md §KV capacity)
+    /// — but all the WITHIN-mode contracts above stay bitwise, because
+    /// quantization happens once at write and dequant is deterministic
+    /// (`tests/kv_quant.rs`).
     pub fn decode_steps(
         &mut self,
         pool: &mut KvPool,

@@ -37,8 +37,102 @@
 //! the original rows, bit-for-bit unchanged. `write_row` asserts (debug)
 //! that it only ever mutates owned pages, which is the invariant the
 //! `tests/kvpool_refcount.rs` property suite fuzzes.
+//!
+//! **KV precision.** Pages store rows in one of two dtypes
+//! ([`KvDtype`], fixed at pool construction): `F32` keeps today's exact
+//! f32 rows, `Q8` stores u8 codes plus per-position **per-head**
+//! (scale, zero) f32 pairs — asymmetric affine over each head's
+//! `head_dim` slice, computed once at [`KvPool::write_row`] time. A Q8
+//! page costs `d_model + 8·n_heads` bytes per position per layer per
+//! {K,V} instead of `4·d_model`, an ≈4× capacity win for realistic
+//! `head_dim`. Reads go through [`KvPool::read_k_row`] /
+//! [`KvPool::read_v_row`], which dequantize into a caller scratch
+//! buffer; quantization error is incurred exactly once (at write), so
+//! every holder of a shared page — and every re-read of the same
+//! position — sees bit-identical floats. CoW copies codes and scales
+//! verbatim and NEVER re-quantizes, so the prefix-cache
+//! bit-reproducibility argument survives unchanged under Q8
+//! (DESIGN.md §KV precision).
 
 use crate::model::ModelConfig;
+
+/// Storage precision of a [`KvPool`]'s pages. `F32` is the default and
+/// bit-identical to the pre-dtype pool; `Q8` trades ≈4× KV memory for a
+/// deterministic per-head affine quantization error (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    Q8,
+}
+
+impl KvDtype {
+    /// Parse a CLI/env spelling (`"f32"` / `"q8"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Self::F32),
+            "q8" => Some(Self::Q8),
+            _ => None,
+        }
+    }
+
+    /// Dtype selected by `GPTQ_KV_DTYPE` (unset or empty → `F32`; any
+    /// other unrecognized value panics — a silent fallback would quietly
+    /// un-test the q8 rows of the determinism matrix).
+    pub fn from_env() -> Self {
+        match std::env::var("GPTQ_KV_DTYPE") {
+            Ok(s) if s.is_empty() => Self::F32,
+            Ok(s) => Self::parse(&s)
+                .unwrap_or_else(|| panic!("GPTQ_KV_DTYPE must be f32 or q8, got {s:?}")),
+            Err(_) => Self::F32,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::Q8 => "q8",
+        }
+    }
+}
+
+/// Per-head asymmetric affine encode of one `d_model` row:
+/// `code = round((x − zero) / scale)` with `scale = (max − min)/255`,
+/// `zero = min`, per `head_dim` slice. A flat head (`max == min`) gets
+/// `scale = 0` and code 0, which round-trips exactly through
+/// `zero + code·scale` — constant rows survive Q8 bit-for-bit.
+fn q8_encode(row: &[f32], head_dim: usize, codes: &mut [u8], scales: &mut [f32]) {
+    for h in 0..row.len() / head_dim {
+        let seg = &row[h * head_dim..(h + 1) * head_dim];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in seg {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let scale = (hi - lo) / 255.0;
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        scales[2 * h] = scale;
+        scales[2 * h + 1] = lo;
+        for (c, &x) in codes[h * head_dim..(h + 1) * head_dim].iter_mut().zip(seg) {
+            *c = ((x - lo) * inv).round().clamp(0.0, 255.0) as u8;
+        }
+    }
+}
+
+/// Inverse of [`q8_encode`]: `x̂ = zero + code·scale` per head. Pure
+/// f32 arithmetic in a fixed order — deterministic across threads,
+/// batch shapes, and cache on/off, which is what lets the serving
+/// parity contracts stay bitwise within Q8.
+fn q8_decode(codes: &[u8], scales: &[f32], head_dim: usize, out: &mut [f32]) {
+    for h in 0..codes.len() / head_dim {
+        let (s, z) = (scales[2 * h], scales[2 * h + 1]);
+        let seg = &codes[h * head_dim..(h + 1) * head_dim];
+        for (o, &c) in out[h * head_dim..(h + 1) * head_dim].iter_mut().zip(seg) {
+            *o = z + c as f32 * s;
+        }
+    }
+}
 
 /// A sequence's view into the pool: the page table (indices into the
 /// pool's page array, one entry per `page_size` positions) and the number
@@ -76,10 +170,21 @@ impl SeqCache {
 pub struct KvPool {
     n_layers: usize,
     d_model: usize,
+    n_heads: usize,
     page_size: usize,
     n_pages: usize,
+    dtype: KvDtype,
+    /// F32 rows per layer (empty when dtype is Q8)
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    /// Q8 codes per layer, `n_pages·page_size·d_model` u8 each (empty
+    /// when dtype is F32)
+    kq: Vec<Vec<u8>>,
+    vq: Vec<Vec<u8>>,
+    /// Q8 (scale, zero) pairs per layer, `n_pages·page_size·n_heads·2`
+    /// f32 each (empty when dtype is F32)
+    ksz: Vec<Vec<f32>>,
+    vsz: Vec<Vec<f32>>,
     free: Vec<u32>,
     /// per-page holder count: 0 = on the free list, 1 = owned by exactly
     /// one holder (a sequence or the prefix cache), >1 = shared
@@ -87,18 +192,43 @@ pub struct KvPool {
 }
 
 impl KvPool {
-    /// A pool of `n_pages` pages of `page_size` positions each.
+    /// A pool of `n_pages` pages of `page_size` positions each, storing
+    /// exact f32 rows ([`KvDtype::F32`] — bit-identical to the
+    /// pre-dtype pool; every pre-existing caller goes through here).
     pub fn new(cfg: &ModelConfig, n_pages: usize, page_size: usize) -> Self {
+        Self::new_with_dtype(cfg, n_pages, page_size, KvDtype::F32)
+    }
+
+    /// A pool with an explicit page storage dtype (see module docs §KV
+    /// precision).
+    pub fn new_with_dtype(
+        cfg: &ModelConfig,
+        n_pages: usize,
+        page_size: usize,
+        dtype: KvDtype,
+    ) -> Self {
         assert!(n_pages > 0, "KvPool needs at least one page");
         assert!(page_size > 0, "KvPool page_size must be positive");
+        assert_eq!(cfg.d_model % cfg.n_heads, 0, "d_model must split into heads");
         let floats = n_pages * page_size * cfg.d_model;
+        let nsz = n_pages * page_size * cfg.n_heads * 2;
+        let (f32_layers, q8_layers) = match dtype {
+            KvDtype::F32 => (cfg.n_layers, 0),
+            KvDtype::Q8 => (0, cfg.n_layers),
+        };
         Self {
             n_layers: cfg.n_layers,
             d_model: cfg.d_model,
+            n_heads: cfg.n_heads,
             page_size,
             n_pages,
-            k: (0..cfg.n_layers).map(|_| vec![0.0; floats]).collect(),
-            v: (0..cfg.n_layers).map(|_| vec![0.0; floats]).collect(),
+            dtype,
+            k: (0..f32_layers).map(|_| vec![0.0; floats]).collect(),
+            v: (0..f32_layers).map(|_| vec![0.0; floats]).collect(),
+            kq: (0..q8_layers).map(|_| vec![0; floats]).collect(),
+            vq: (0..q8_layers).map(|_| vec![0; floats]).collect(),
+            ksz: (0..q8_layers).map(|_| vec![0.0; nsz]).collect(),
+            vsz: (0..q8_layers).map(|_| vec![0.0; nsz]).collect(),
             // reversed so fresh pools allocate page 0 first (deterministic)
             free: (0..n_pages as u32).rev().collect(),
             refs: vec![0; n_pages],
@@ -107,6 +237,11 @@ impl KvPool {
 
     pub fn page_size(&self) -> usize {
         self.page_size
+    }
+
+    /// Storage precision of this pool's pages.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
     }
 
     pub fn total_pages(&self) -> usize {
@@ -141,11 +276,33 @@ impl KvPool {
         seq.len < self.capacity_of(seq) && self.refs[seq.pages[seq.len / self.page_size] as usize] > 1
     }
 
+    /// Bytes one {K or V} position costs at one layer under `dtype`:
+    /// `4·d_model` for f32 rows, `d_model` codes + `n_heads` (scale,
+    /// zero) f32 pairs for q8.
+    fn pos_bytes(d_model: usize, n_heads: usize, dtype: KvDtype) -> usize {
+        match dtype {
+            KvDtype::F32 => d_model * 4,
+            KvDtype::Q8 => d_model + n_heads * 2 * 4,
+        }
+    }
+
+    /// Bytes one page (all layers, K and V) costs under `dtype` — the
+    /// unit the scheduler's fixed-byte budget and `serve_sweep`'s
+    /// fixed-pool-bytes phase divide by to size dtype-fair pools.
+    pub fn page_bytes(cfg: &ModelConfig, page_size: usize, dtype: KvDtype) -> usize {
+        2 * cfg.n_layers * page_size * Self::pos_bytes(cfg.d_model, cfg.n_heads, dtype)
+    }
+
     /// Total KV bytes held by the pool (the bounded analog of
     /// `KvCache::bytes` — the "+9 GB of keys and values" accounting of
-    /// §Practical Speedups, now a budget instead of a per-request cost).
+    /// §Practical Speedups, now a budget instead of a per-request cost),
+    /// derived from the page dtype: q8 pools report their smaller
+    /// footprint, which is the whole capacity story.
     pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.n_pages * self.page_size * self.d_model * 4
+        2 * self.n_layers
+            * self.n_pages
+            * self.page_size
+            * Self::pos_bytes(self.d_model, self.n_heads, self.dtype)
     }
 
     fn alloc(&mut self) -> Option<u32> {
@@ -195,9 +352,27 @@ impl KvPool {
         let filled = seq.len - pi * self.page_size;
         let src = old * self.page_size * self.d_model;
         let dst = new as usize * self.page_size * self.d_model;
-        for l in 0..self.n_layers {
-            self.k[l].copy_within(src..src + filled * self.d_model, dst);
-            self.v[l].copy_within(src..src + filled * self.d_model, dst);
+        match self.dtype {
+            KvDtype::F32 => {
+                for l in 0..self.n_layers {
+                    self.k[l].copy_within(src..src + filled * self.d_model, dst);
+                    self.v[l].copy_within(src..src + filled * self.d_model, dst);
+                }
+            }
+            KvDtype::Q8 => {
+                // Copy codes AND scales verbatim — never re-quantize:
+                // the copy must be byte-identical to the shared original
+                // so the other holders and the new owner keep reading
+                // the same dequantized floats (module docs).
+                let ssrc = old * self.page_size * self.n_heads * 2;
+                let sdst = new as usize * self.page_size * self.n_heads * 2;
+                for l in 0..self.n_layers {
+                    self.kq[l].copy_within(src..src + filled * self.d_model, dst);
+                    self.vq[l].copy_within(src..src + filled * self.d_model, dst);
+                    self.ksz[l].copy_within(ssrc..ssrc + filled * self.n_heads * 2, sdst);
+                    self.vsz[l].copy_within(ssrc..ssrc + filled * self.n_heads * 2, sdst);
+                }
+            }
         }
         self.refs[old] -= 1;
         seq.pages[pi] = new;
@@ -255,28 +430,111 @@ impl KvPool {
         seq.len = 0;
     }
 
-    fn base(&self, seq: &SeqCache, pos: usize) -> usize {
+    /// Flat slot index of position `pos` of `seq` (× d_model for
+    /// row/code offsets, × n_heads·2 for scale offsets).
+    fn slot(&self, seq: &SeqCache, pos: usize) -> usize {
         let page = seq.pages[pos / self.page_size] as usize;
-        (page * self.page_size + pos % self.page_size) * self.d_model
+        page * self.page_size + pos % self.page_size
     }
 
-    /// Layer `layer`'s K row (d_model floats) for position `pos` of `seq`.
+    fn base(&self, seq: &SeqCache, pos: usize) -> usize {
+        self.slot(seq, pos) * self.d_model
+    }
+
+    /// Layer `layer`'s K row (d_model floats) for position `pos` of
+    /// `seq`. F32 pools only — the zero-copy fast path the f32
+    /// attention loop borrows from; Q8 readers go through
+    /// [`KvPool::read_k_row`].
     pub fn k_row(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[f32] {
+        debug_assert_eq!(self.dtype, KvDtype::F32, "k_row on a {} pool", self.dtype.name());
         let b = self.base(seq, pos);
         &self.k[layer][b..b + self.d_model]
     }
 
-    /// Layer `layer`'s V row for position `pos` of `seq`.
+    /// Layer `layer`'s V row for position `pos` of `seq` (F32 pools
+    /// only, see [`KvPool::k_row`]).
     pub fn v_row(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[f32] {
+        debug_assert_eq!(self.dtype, KvDtype::F32, "v_row on a {} pool", self.dtype.name());
         let b = self.base(seq, pos);
         &self.v[layer][b..b + self.d_model]
+    }
+
+    /// Materialize layer `layer`'s K row for position `pos` of `seq`
+    /// into `out` (d_model floats) — copy for F32, per-head dequant for
+    /// Q8. Works for both dtypes; the attention loops use this to fill
+    /// their per-thread scratch buffers under Q8.
+    pub fn read_k_row(&self, seq: &SeqCache, layer: usize, pos: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d_model);
+        match self.dtype {
+            KvDtype::F32 => out.copy_from_slice(self.k_row(seq, layer, pos)),
+            KvDtype::Q8 => {
+                let b = self.slot(seq, pos) * self.d_model;
+                let s = self.slot(seq, pos) * self.n_heads * 2;
+                q8_decode(
+                    &self.kq[layer][b..b + self.d_model],
+                    &self.ksz[layer][s..s + self.n_heads * 2],
+                    self.d_model / self.n_heads,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// [`KvPool::read_k_row`] for the V row.
+    pub fn read_v_row(&self, seq: &SeqCache, layer: usize, pos: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d_model);
+        match self.dtype {
+            KvDtype::F32 => out.copy_from_slice(self.v_row(seq, layer, pos)),
+            KvDtype::Q8 => {
+                let b = self.slot(seq, pos) * self.d_model;
+                let s = self.slot(seq, pos) * self.n_heads * 2;
+                q8_decode(
+                    &self.vq[layer][b..b + self.d_model],
+                    &self.vsz[layer][s..s + self.n_heads * 2],
+                    self.d_model / self.n_heads,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// Raw Q8 K codes for one position (Q8 pools only) — exposed so the
+    /// refcount property suite can assert CoW copies are byte-identical.
+    pub fn k_codes(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[u8] {
+        assert_eq!(self.dtype, KvDtype::Q8, "k_codes on a {} pool", self.dtype.name());
+        let b = self.slot(seq, pos) * self.d_model;
+        &self.kq[layer][b..b + self.d_model]
+    }
+
+    /// Raw Q8 V codes for one position (Q8 pools only).
+    pub fn v_codes(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[u8] {
+        assert_eq!(self.dtype, KvDtype::Q8, "v_codes on a {} pool", self.dtype.name());
+        let b = self.slot(seq, pos) * self.d_model;
+        &self.vq[layer][b..b + self.d_model]
+    }
+
+    /// Raw Q8 K (scale, zero) pairs for one position, `n_heads·2` f32
+    /// (Q8 pools only).
+    pub fn k_scales(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[f32] {
+        assert_eq!(self.dtype, KvDtype::Q8, "k_scales on a {} pool", self.dtype.name());
+        let s = self.slot(seq, pos) * self.n_heads * 2;
+        &self.ksz[layer][s..s + self.n_heads * 2]
+    }
+
+    /// Raw Q8 V (scale, zero) pairs for one position (Q8 pools only).
+    pub fn v_scales(&self, seq: &SeqCache, layer: usize, pos: usize) -> &[f32] {
+        assert_eq!(self.dtype, KvDtype::Q8, "v_scales on a {} pool", self.dtype.name());
+        let s = self.slot(seq, pos) * self.n_heads * 2;
+        &self.vsz[layer][s..s + self.n_heads * 2]
     }
 
     /// Store the K and V rows for position `pos` of `seq` at layer
     /// `layer` (the caller must have reserved capacity past `pos`, which
     /// also guarantees — via copy-on-write — that the target page is
     /// exclusively owned: a write can never leak into rows another live
-    /// sequence or the prefix cache reads).
+    /// sequence or the prefix cache reads). Under Q8 this is where the
+    /// one-and-only quantization happens (per-head affine, see module
+    /// docs); every later read dequantizes the same stored codes.
     pub fn write_row(&mut self, seq: &SeqCache, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         debug_assert!(pos < self.capacity_of(seq), "write past reserved pages");
         debug_assert_eq!(
@@ -285,8 +543,28 @@ impl KvPool {
             "write into a shared page (reserve skipped copy-on-write?)"
         );
         let b = self.base(seq, pos);
-        self.k[layer][b..b + self.d_model].copy_from_slice(k);
-        self.v[layer][b..b + self.d_model].copy_from_slice(v);
+        match self.dtype {
+            KvDtype::F32 => {
+                self.k[layer][b..b + self.d_model].copy_from_slice(k);
+                self.v[layer][b..b + self.d_model].copy_from_slice(v);
+            }
+            KvDtype::Q8 => {
+                let hd = self.d_model / self.n_heads;
+                let s = self.slot(seq, pos) * self.n_heads * 2;
+                q8_encode(
+                    k,
+                    hd,
+                    &mut self.kq[layer][b..b + self.d_model],
+                    &mut self.ksz[layer][s..s + self.n_heads * 2],
+                );
+                q8_encode(
+                    v,
+                    hd,
+                    &mut self.vq[layer][b..b + self.d_model],
+                    &mut self.vsz[layer][s..s + self.n_heads * 2],
+                );
+            }
+        }
     }
 }
 
@@ -375,6 +653,123 @@ mod tests {
         let cfg = tiny_config();
         let p = KvPool::new(&cfg, 8, 4);
         assert_eq!(p.bytes(), 2 * cfg.n_layers * 8 * 4 * cfg.d_model * 4);
+        assert_eq!(p.bytes(), 8 * KvPool::page_bytes(&cfg, 4, KvDtype::F32));
+    }
+
+    #[test]
+    fn bytes_accounting_q8() {
+        // q8: d_model code bytes + n_heads (scale, zero) f32 pairs per
+        // position per layer per {K,V}. tiny config (d=16, h=2):
+        // 16 + 2·2·4 = 32 bytes vs f32's 64 — exactly 2× smaller.
+        let cfg = tiny_config();
+        let q = KvPool::new_with_dtype(&cfg, 8, 4, KvDtype::Q8);
+        let per_pos = cfg.d_model + cfg.n_heads * 2 * 4;
+        assert_eq!(q.bytes(), 2 * cfg.n_layers * 8 * 4 * per_pos);
+        assert_eq!(q.bytes(), 8 * KvPool::page_bytes(&cfg, 4, KvDtype::Q8));
+        let f = KvPool::new(&cfg, 8, 4);
+        assert_eq!(f.bytes(), 2 * q.bytes());
+    }
+
+    #[test]
+    fn dtype_parse_and_default() {
+        assert_eq!(KvDtype::parse("f32"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("q8"), Some(KvDtype::Q8));
+        assert_eq!(KvDtype::parse("fp16"), None);
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+        assert_eq!(KvDtype::F32.name(), "f32");
+        assert_eq!(KvDtype::Q8.name(), "q8");
+    }
+
+    #[test]
+    fn q8_rows_round_trip_within_step() {
+        // Reading back a q8 row lands within one quantization step
+        // (scale/2 per element) of the written floats, and re-reads are
+        // bit-identical (quantize once at write, dequant is pure).
+        let cfg = tiny_config();
+        let d = cfg.d_model;
+        let mut p = KvPool::new_with_dtype(&cfg, 4, 2, KvDtype::Q8);
+        let mut s = SeqCache::new();
+        assert!(p.reserve(&mut s, 5));
+        for pos in 0..5 {
+            let k: Vec<f32> = (0..d).map(|i| ((pos * d + i) as f32).sin()).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x * 0.5).collect();
+            for l in 0..cfg.n_layers {
+                p.write_row(&s, l, pos, &k, &v);
+            }
+            s.len = pos + 1;
+            let mut kd = vec![0.0; d];
+            let mut kd2 = vec![0.0; d];
+            let mut vd = vec![0.0; d];
+            p.read_k_row(&s, 0, pos, &mut kd);
+            p.read_k_row(&s, 0, pos, &mut kd2);
+            p.read_v_row(&s, 0, pos, &mut vd);
+            assert_eq!(kd, kd2, "dequant must be deterministic");
+            let scales = p.k_scales(&s, 0, pos);
+            let hd = d / cfg.n_heads;
+            for (i, (&x, &x_hat)) in k.iter().zip(&kd).enumerate() {
+                let step = scales[2 * (i / hd)];
+                assert!((x - x_hat).abs() <= step * 0.5 + 1e-6, "elem {i}: {x} vs {x_hat}");
+            }
+            assert!(vd.iter().zip(&v).all(|(a, b)| (a - b).abs() < 0.05));
+        }
+    }
+
+    #[test]
+    fn q8_constant_rows_are_exact() {
+        // Flat heads get scale 0 / zero = value: constant rows survive
+        // q8 bit-for-bit — the property the refcount fuzz tags rely on.
+        let cfg = tiny_config();
+        let d = cfg.d_model;
+        let mut p = KvPool::new_with_dtype(&cfg, 2, 4, KvDtype::Q8);
+        let mut s = SeqCache::new();
+        assert!(p.reserve(&mut s, 1));
+        p.write_row(&s, 0, 0, &vec![3.25; d], &vec![-7.5; d]);
+        let (mut k, mut v) = (vec![0.0; d], vec![0.0; d]);
+        p.read_k_row(&s, 0, 0, &mut k);
+        p.read_v_row(&s, 0, 0, &mut v);
+        assert_eq!(k, vec![3.25; d]);
+        assert_eq!(v, vec![-7.5; d]);
+    }
+
+    #[test]
+    fn q8_cow_copies_codes_and_scales_byte_identically() {
+        let cfg = tiny_config();
+        let d = cfg.d_model;
+        let mut p = KvPool::new_with_dtype(&cfg, 8, 4, KvDtype::Q8);
+        let mut a = SeqCache::new();
+        assert!(p.reserve(&mut a, 6));
+        for pos in 0..6 {
+            // varied (non-flat) rows so scales are nontrivial
+            let k: Vec<f32> = (0..d).map(|i| ((pos * 31 + i * 7) % 13) as f32 * 0.3 - 1.0).collect();
+            let v: Vec<f32> = k.iter().map(|x| x * -1.7 + 0.2).collect();
+            for l in 0..cfg.n_layers {
+                p.write_row(&a, l, pos, &k, &v);
+            }
+        }
+        a.len = 6;
+        let parent_codes: Vec<Vec<u8>> = (0..6).map(|pos| p.k_codes(&a, 1, pos).to_vec()).collect();
+        let parent_scales: Vec<Vec<f32>> =
+            (0..6).map(|pos| p.k_scales(&a, 1, pos).to_vec()).collect();
+        // fork mid-page: position 5 sits in a's second page (shared tail)
+        let mut b = p.fork(&a, 5);
+        assert!(p.reserve(&mut b, 6)); // triggers CoW of the tail page
+        assert_ne!(b.pages()[1], a.pages()[1], "tail page must be copied");
+        for pos in 0..5 {
+            assert_eq!(p.k_codes(&b, 1, pos), &parent_codes[pos][..], "pos {pos} codes");
+            assert_eq!(p.k_scales(&b, 1, pos), &parent_scales[pos][..], "pos {pos} scales");
+            assert_eq!(p.v_codes(&b, 1, pos), p.v_codes(&a, 1, pos));
+            assert_eq!(p.v_scales(&b, 1, pos), p.v_scales(&a, 1, pos));
+        }
+        // writing the child's tail leaves the parent's rows untouched
+        for l in 0..cfg.n_layers {
+            p.write_row(&b, l, 5, &vec![1.0; d], &vec![1.0; d]);
+        }
+        b.len = 6;
+        assert_eq!(p.k_codes(&a, 1, 5), &parent_codes[5][..]);
+        assert_eq!(p.k_scales(&a, 1, 5), &parent_scales[5][..]);
+        p.release(&mut a);
+        p.release(&mut b);
+        assert_eq!(p.free_pages(), 8, "page leak after q8 CoW");
     }
 
     fn fill(p: &mut KvPool, s: &SeqCache, from: usize, to: usize, tag: f32) {

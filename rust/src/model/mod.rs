@@ -24,5 +24,5 @@ pub use checkpoint::{Checkpoint, QuantizedCheckpoint};
 pub use config::ModelConfig;
 pub use forward::{CpuModel, KvCache, LinearWeight, PackedLinear};
 pub use kernels::{Isa, TiledPacked};
-pub use kvpool::{KvPool, SeqCache};
+pub use kvpool::{KvDtype, KvPool, SeqCache};
 pub use tensor::Tensor;

@@ -238,6 +238,13 @@ pub fn default_specs(bench: &str) -> Vec<MetricSpec> {
             MetricSpec::new("ttft_p99_ms_*", Lower, 0.35),
             MetricSpec::new("*_prefill_tokens_saved", Higher, 0.0),
             MetricSpec::new("*_ttft_p50_speedup", Higher, 0.25),
+            // fixed-byte-budget q8 KV phase: capacity and agreement are
+            // deterministic (scheduler driven synchronously), tail TTFT
+            // is wall-clock; preemption counts stay ungated/informational
+            MetricSpec::new("kv_fixed_bytes_peak_seqs_*", Higher, 0.10),
+            MetricSpec::new("kv_q8_capacity_ratio", Higher, 0.20),
+            MetricSpec::new("kv_q8_ttft_p99_speedup", Higher, 0.25),
+            MetricSpec::new("kv_q8_token_agreement", Higher, 0.05),
         ],
         _ => Vec::new(),
     }
@@ -658,5 +665,54 @@ mod tests {
         assert!(compare(&base, &same, &specs).passed());
         let fewer = doc("serve", "avx2", &[("shared_prefix_k4_prefill_tokens_saved", 1200.0)]);
         assert_eq!(compare(&base, &fewer, &specs).regressions(), 1);
+    }
+
+    #[test]
+    fn kv_capacity_metrics_are_gated() {
+        let specs = default_specs("serve");
+        let base = doc(
+            "serve",
+            "avx2",
+            &[
+                ("kv_fixed_bytes_peak_seqs_q8", 21.0),
+                ("kv_q8_capacity_ratio", 2.6),
+                ("kv_q8_token_agreement", 0.98),
+                ("kv_fixed_bytes_preemptions_f32", 9.0),
+            ],
+        );
+        // losing >5% of greedy agreement is a quantization-quality bug
+        let drifted = doc(
+            "serve",
+            "avx2",
+            &[
+                ("kv_fixed_bytes_peak_seqs_q8", 21.0),
+                ("kv_q8_capacity_ratio", 2.6),
+                ("kv_q8_token_agreement", 0.90),
+                ("kv_fixed_bytes_preemptions_f32", 9.0),
+            ],
+        );
+        let r = compare(&base, &drifted, &specs);
+        assert_eq!(r.regressions(), 1);
+        assert!(r.render().contains("kv_q8_token_agreement"));
+        // capacity halving back toward f32 fails the ratio gate; raw
+        // preemption counts are informational only
+        let shrunk = doc(
+            "serve",
+            "avx2",
+            &[
+                ("kv_fixed_bytes_peak_seqs_q8", 9.0),
+                ("kv_q8_capacity_ratio", 1.1),
+                ("kv_q8_token_agreement", 0.98),
+                ("kv_fixed_bytes_preemptions_f32", 40.0),
+            ],
+        );
+        let r = compare(&base, &shrunk, &specs);
+        assert_eq!(r.regressions(), 2);
+        let preempt_line = r
+            .lines
+            .iter()
+            .find(|l| l.name == "kv_fixed_bytes_preemptions_f32")
+            .unwrap();
+        assert_eq!(preempt_line.status, MetricStatus::Skipped);
     }
 }

@@ -12,6 +12,12 @@
 //! * `make -C rust check` runs this suite under `GPTQ_THREADS=1` and
 //!   `=4`; the thread-flip test additionally pins bit-identity of the
 //!   batched kernels across pool sizes in-process.
+//! * The determinism matrix additionally runs the suite under
+//!   `GPTQ_KV_DTYPE=q8`: the scheduler's default pool flips to q8 pages
+//!   and the `generate_sequential` oracle follows it (batch-1
+//!   `decode_steps` over a q8 pool), pinning scheduler ≡ sequential
+//!   WITHIN the q8 numeric mode. The explicit f32 pools built by the
+//!   parity tests are deliberately env-independent.
 //! * Soak coverage: a seeded, bounded 60-request trace runs in the
 //!   default suite (`make -C rust check`); the long 500-request trace
 //!   and a shared-prefix variant (prefix-cache churn under a tight
@@ -22,7 +28,7 @@ use gptq_rs::coordinator::{GenRequest, Scheduler, SchedulerConfig};
 use gptq_rs::data::Rng;
 use gptq_rs::model::checkpoint::quantizable_keys;
 use gptq_rs::model::testkit::tiny_checkpoint;
-use gptq_rs::model::{CpuModel, KvCache, KvPool, QuantizedCheckpoint, SeqCache};
+use gptq_rs::model::{CpuModel, KvCache, KvDtype, KvPool, QuantizedCheckpoint, SeqCache};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
 use gptq_rs::util::par;
 use std::collections::BTreeMap;
@@ -164,16 +170,41 @@ fn batched_decode_thread_count_bit_identical() {
 
 /// The sequential single-stream generation loop (what `serve.rs` ran
 /// before continuous batching) — the scheduler's parity oracle.
+///
+/// Dtype-aware so the suite can run under `GPTQ_KV_DTYPE=q8`: the
+/// scheduler's default pool follows the env, so the oracle must speak
+/// the same numeric mode. For f32 it stays the INDEPENDENT dense
+/// `KvCache`/`decode_step` path (a stronger oracle: different storage,
+/// bit-identical math). For q8 there is no dense equivalent — the
+/// contract is scheduler ≡ batch-1 sequential WITHIN the mode — so the
+/// oracle replays the same loop through batch-1 `decode_steps` over its
+/// own q8 pool.
 fn generate_sequential(model: &mut CpuModel, prompt: &[u8], max_new: usize) -> Vec<u8> {
-    let mut cache = KvCache::new(&model.config);
     let max_seq = model.config.max_seq;
+    let dtype = KvDtype::from_env();
+    let mut pool = KvPool::new_with_dtype(&model.config, (max_seq + 1) / 2, 2, dtype);
+    let mut seq = SeqCache::new();
+    let mut cache = KvCache::new(&model.config);
+    // One decode step in the oracle's numeric mode.
+    let mut step = |model: &mut CpuModel, pool: &mut KvPool, seq: &mut SeqCache, b: u8| {
+        match dtype {
+            KvDtype::F32 => model.decode_step(&mut cache, b).to_vec(),
+            KvDtype::Q8 => {
+                assert!(pool.reserve(seq, seq.len + 1), "oracle pool sized too small");
+                let mut refs = [&mut *seq];
+                model.decode_steps(pool, &mut refs, &[b])
+            }
+        }
+    };
+    let mut len = 0usize;
     let mut logits: Vec<f32> = Vec::new();
     for &b in prompt.iter().take(max_seq.saturating_sub(1)) {
-        logits = model.decode_step(&mut cache, b).to_vec();
+        logits = step(model, &mut pool, &mut seq, b);
+        len += 1;
     }
     let mut tokens = Vec::new();
     for _ in 0..max_new {
-        if cache.len >= max_seq {
+        if len >= max_seq {
             break;
         }
         let next = logits
@@ -182,9 +213,11 @@ fn generate_sequential(model: &mut CpuModel, prompt: &[u8], max_new: usize) -> V
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i as u8)
             .unwrap_or(0);
-        logits = model.decode_step(&mut cache, next).to_vec();
+        logits = step(model, &mut pool, &mut seq, next);
+        len += 1;
         tokens.push(next);
     }
+    pool.release(&mut seq);
     tokens
 }
 

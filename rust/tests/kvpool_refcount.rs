@@ -12,10 +12,18 @@
 //! * **CoW isolation** — a write into a forked sequence never mutates a
 //!   row any other live holder maps: every live sequence's rows always
 //!   match its shadow, no matter how forks/releases interleave.
+//!
+//! The whole suite runs under BOTH page dtypes (DESIGN.md §KV
+//! precision): refcount/fork/CoW machinery is dtype-agnostic, and the
+//! shadow rows are constant per position, which q8's per-head affine
+//! encodes exactly (flat head → scale 0, zero = value) — so the
+//! equality audits hold bitwise under q8 too. Byte-identity of q8 CoW
+//! copies on NON-flat rows is pinned by the `kvpool` unit test
+//! `q8_cow_copies_codes_and_scales_byte_identically`.
 
 use gptq_rs::data::Rng;
 use gptq_rs::model::testkit::tiny_config;
-use gptq_rs::model::{KvPool, SeqCache};
+use gptq_rs::model::{KvDtype, KvPool, SeqCache};
 
 const POOL_PAGES: usize = 12;
 const PAGE_SIZE: usize = 4;
@@ -29,8 +37,12 @@ struct Sim {
 }
 
 /// First element of the K row at `pos` — the shadow-checked cell.
+/// Reads through the dtype-generic accessor so the same audit runs over
+/// f32 and q8 pages.
 fn cell(pool: &KvPool, seq: &SeqCache, pos: usize) -> f32 {
-    pool.k_row(seq, 0, pos)[0]
+    let mut row = vec![0.0f32; tiny_config().d_model];
+    pool.read_k_row(seq, 0, pos, &mut row);
+    row[0]
 }
 
 fn write_tagged(pool: &mut KvPool, sim: &mut Sim, tag: f32, n_layers: usize, d: usize) {
@@ -88,10 +100,10 @@ fn audit_rows(pool: &KvPool, sims: &[Sim]) {
     }
 }
 
-fn fuzz(seed: u64, iters: usize) {
+fn fuzz(seed: u64, iters: usize, dtype: KvDtype) {
     let cfg = tiny_config();
     let (n_layers, d) = (cfg.n_layers, cfg.d_model);
-    let mut pool = KvPool::new(&cfg, POOL_PAGES, PAGE_SIZE);
+    let mut pool = KvPool::new_with_dtype(&cfg, POOL_PAGES, PAGE_SIZE, dtype);
     let mut rng = Rng::new(seed);
     let mut sims: Vec<Sim> = Vec::new();
     let mut holds: Vec<u32> = Vec::new();
@@ -196,17 +208,32 @@ fn fuzz(seed: u64, iters: usize) {
 
 #[test]
 fn refcount_fuzz_seed_1() {
-    fuzz(0xA11CE, 3000);
+    fuzz(0xA11CE, 3000, KvDtype::F32);
 }
 
 #[test]
 fn refcount_fuzz_seed_2() {
-    fuzz(0xB0B, 3000);
+    fuzz(0xB0B, 3000, KvDtype::F32);
 }
 
 #[test]
 fn refcount_fuzz_seed_3() {
-    fuzz(0xC0FFEE, 3000);
+    fuzz(0xC0FFEE, 3000, KvDtype::F32);
+}
+
+#[test]
+fn refcount_fuzz_seed_1_q8() {
+    fuzz(0xA11CE, 3000, KvDtype::Q8);
+}
+
+#[test]
+fn refcount_fuzz_seed_2_q8() {
+    fuzz(0xB0B, 3000, KvDtype::Q8);
+}
+
+#[test]
+fn refcount_fuzz_seed_3_q8() {
+    fuzz(0xC0FFEE, 3000, KvDtype::Q8);
 }
 
 /// Deterministic micro-interleaving: the exact sequence the scheduler
@@ -214,9 +241,18 @@ fn refcount_fuzz_seed_3() {
 /// release parent, release child — with the shadow checked at each step.
 #[test]
 fn scripted_preemption_interleaving() {
+    scripted_preemption(KvDtype::F32);
+}
+
+#[test]
+fn scripted_preemption_interleaving_q8() {
+    scripted_preemption(KvDtype::Q8);
+}
+
+fn scripted_preemption(dtype: KvDtype) {
     let cfg = tiny_config();
     let d = cfg.d_model;
-    let mut pool = KvPool::new(&cfg, 6, 2);
+    let mut pool = KvPool::new_with_dtype(&cfg, 6, 2, dtype);
     // parent prefills 5 positions (2 full pages + tail)
     let mut parent = Sim { seq: SeqCache::new(), rows: Vec::new() };
     for t in 0..5 {

@@ -11,13 +11,20 @@
 //! exactly on token streams. `make -C rust check` runs this suite under
 //! `GPTQ_ISA={scalar,auto} × GPTQ_THREADS={1,4}`.
 //!
+//! The determinism matrix also runs the suite under `GPTQ_KV_DTYPE=q8`
+//! (pools here follow the env): the sharing contract is dtype-generic —
+//! a fork maps the very pages the original prefill wrote, q8 CoW copies
+//! codes and scales byte-for-byte and dequant is deterministic, so
+//! forked replay and cache-on≡cache-off stay BITWISE within the q8
+//! numeric mode too (DESIGN.md §KV precision).
+//!
 //! Plus hit accounting: K distinct prefixes cost exactly K cold
 //! prefills — every later same-prefix request forks instead.
 
 use gptq_rs::coordinator::{GenRequest, Scheduler, SchedulerConfig};
 use gptq_rs::model::checkpoint::quantizable_keys;
 use gptq_rs::model::testkit::tiny_checkpoint;
-use gptq_rs::model::{CpuModel, KvPool, QuantizedCheckpoint, SeqCache};
+use gptq_rs::model::{CpuModel, KvDtype, KvPool, QuantizedCheckpoint, SeqCache};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
 use std::collections::BTreeMap;
 
@@ -37,7 +44,7 @@ fn packed_tiny_model(seed: u64) -> CpuModel {
 /// over a fork of the first run's pages. Returns (original per-step
 /// logits, forked per-step logits for steps `fork_at..`).
 fn replay_pair(model: &mut CpuModel, toks: &[u8], fork_at: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-    let mut pool = KvPool::new(&model.config, 16, 2);
+    let mut pool = KvPool::new_with_dtype(&model.config, 16, 2, KvDtype::from_env());
     let mut a = SeqCache::new();
     let mut orig = Vec::new();
     for (t, &tok) in toks.iter().enumerate() {
@@ -111,7 +118,7 @@ fn forked_sequence_in_mixed_batch_bitwise() {
         .iter()
         .map(|tail| {
             let toks: Vec<u8> = shared.iter().chain(tail.iter()).copied().collect();
-            let mut pool = KvPool::new(&m.config, 16, 2);
+            let mut pool = KvPool::new_with_dtype(&m.config, 16, 2, KvDtype::from_env());
             let mut s = SeqCache::new();
             let mut out = Vec::new();
             for (t, &tok) in toks.iter().enumerate() {
@@ -123,7 +130,7 @@ fn forked_sequence_in_mixed_batch_bitwise() {
         })
         .collect();
     // shared prefill once, then two forks decode their tails in ONE batch
-    let mut pool = KvPool::new(&m.config, 16, 2);
+    let mut pool = KvPool::new_with_dtype(&m.config, 16, 2, KvDtype::from_env());
     let mut parent = SeqCache::new();
     for (t, &tok) in shared.iter().enumerate() {
         assert!(pool.reserve(&mut parent, t + 1));
@@ -185,6 +192,7 @@ fn run_sched(model: CpuModel, prefix_cache: bool, max_batch: usize, reqs: &[GenR
         prefill_chunk: 3,
         eos: None,
         prefix_cache,
+        kv_dtype: KvDtype::from_env(),
     };
     let mut sched = Scheduler::new(0, model, cfg);
     for r in reqs {
@@ -230,6 +238,7 @@ fn k_distinct_prefixes_k_cold_prefills() {
         prefill_chunk: 4,
         eos: None,
         prefix_cache: true,
+        kv_dtype: KvDtype::from_env(),
     };
     let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(41)), cfg);
     for r in &reqs {
