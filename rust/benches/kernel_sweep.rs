@@ -23,6 +23,7 @@
 use gptq_rs::data::Rng;
 use gptq_rs::model::kernels::{self, Isa};
 use gptq_rs::model::LinearWeight;
+use gptq_rs::quant::sparse::{prune_2of4_by_magnitude, Sparse24Matrix};
 use gptq_rs::quant::{rtn_quantize, PackedMatrix};
 use gptq_rs::util::bench::{
     achieved_gbps, bench_auto, black_box, write_bench_json, MachineClass, Roofline,
@@ -67,6 +68,22 @@ fn build_layers(bits: u32) -> Vec<Layer> {
                 )))
             };
             Layer { lin, drow, dcol }
+        })
+        .collect()
+}
+
+/// The same layer set, 4-bit 2:4 sparse-packed (magnitude masks stand in
+/// for the solver's OBS masks — identical layout and kernel work).
+fn build_sparse_layers() -> Vec<Layer> {
+    LAYER_SHAPES
+        .iter()
+        .map(|&(drow, dcol)| {
+            let mut rng = Rng::new(drow as u64 * 13 + dcol as u64 + 4);
+            let w: Vec<f32> = (0..drow * dcol).map(|_| rng.unit()).collect();
+            let mut r = rtn_quantize(&w, drow, dcol, 4, 0);
+            prune_2of4_by_magnitude(&mut r);
+            let m = Sparse24Matrix::from_result(&r).expect("2:4 pack");
+            Layer { lin: LinearWeight::sparse24(m), drow, dcol }
         })
         .collect()
 }
@@ -167,6 +184,63 @@ fn main() {
                 }
             }
         }
+    }
+    // 2:4 sparse sweep: batch-1 decode matvec, 4-bit sparse-packed vs the
+    // dense 4-bit packed path above — the index nibble skips the two zero
+    // slots per block, so both traffic AND multiplies drop ~25% / 50%
+    println!("\n== sparse 2:4 (4-bit, batch 1) ==");
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>14}",
+        "isa", "ms/layer", "tokens/s", "GB/s", "vs dense-4bit"
+    );
+    for isa in kernels::available() {
+        kernels::set_isa(isa);
+        let dense = build_layers(4);
+        let sparse = build_sparse_layers();
+        let xs: Vec<Vec<f32>> = sparse
+            .iter()
+            .map(|l| {
+                let mut rng = Rng::new(l.dcol as u64 + 1);
+                (0..l.dcol).map(|_| rng.unit()).collect()
+            })
+            .collect();
+        let biases: Vec<Vec<f32>> = sparse.iter().map(|l| vec![0.0f32; l.drow]).collect();
+        let mut ys: Vec<Vec<f32>> = sparse.iter().map(|l| vec![0.0f32; l.drow]).collect();
+        let bench_set = |layers: &[Layer], ys: &mut [Vec<f32>], label: &str| {
+            bench_auto(label, 300.0, 10, || {
+                for (i, l) in layers.iter().enumerate() {
+                    l.lin.apply_with(black_box(&xs[i]), &biases[i], &mut ys[i], false);
+                    black_box(&ys[i]);
+                }
+            })
+        };
+        let rd = bench_set(&dense, &mut ys, &format!("dense 4bit b1 {isa}"));
+        let rs = bench_set(&sparse, &mut ys, &format!("sparse24 4bit b1 {isa}"));
+        let traffic: usize = sparse.iter().map(|l| l.lin.traffic_bytes()).sum();
+        let gbps = achieved_gbps(traffic, rs.mean_ms);
+        let speedup = rd.mean_ms / rs.mean_ms;
+        println!(
+            "{:>8} {:>12.3} {:>12.1} {:>10.2} {:>13.2}x",
+            isa.name(),
+            rs.mean_ms,
+            1e3 / rs.mean_ms,
+            gbps,
+            speedup
+        );
+        results.push(Json::obj(vec![
+            ("isa", Json::Str(isa.name().to_string())),
+            ("bits", Json::Str("4bit-2of4".to_string())),
+            ("batch", Json::Num(1.0)),
+            ("ms_per_layer", Json::Num(rs.mean_ms)),
+            ("tokens_per_s", Json::Num(1e3 / rs.mean_ms)),
+            ("gbps", Json::Num(gbps)),
+            ("speedup_vs_dense_4bit", Json::Num(speedup)),
+        ]));
+        summary.push((
+            format!("sparse24_speedup_4bit_b1_{}_over_dense", isa.name()),
+            Json::Num(speedup),
+        ));
+        summary.push((format!("sparse24_gbps_4bit_b1_{}", isa.name()), Json::Num(gbps)));
     }
     kernels::set_isa_env();
     par::set_threads_env();

@@ -23,7 +23,10 @@ use crate::data::{batch_segments, sample_calibration, CorpusFile};
 use crate::model::checkpoint::{LayerStats, QuantizedCheckpoint};
 use crate::model::config::QUANT_LINEARS;
 use crate::model::{Checkpoint, ModelConfig};
-use crate::quant::{self, gptq_quantize, rtn_quantize, GptqConfig, PackedMatrix, QuantResult};
+use crate::quant::{
+    self, gptq_quantize, rtn_quantize, GptqConfig, PackedMatrix, QuantResult, Sparse24Matrix,
+    Sparsity,
+};
 use crate::runtime::{Runtime, Value, BLOCK_TENSORS};
 use crate::util::par::{self, Pool};
 use crate::Result;
@@ -55,6 +58,8 @@ pub struct PipelineConfig {
     pub gptq: GptqConfig,
     /// propagate quantized outputs to the next block (paper default: true)
     pub propagate_quantized: bool,
+    /// joint sparsify+quantize mode (SparseGPT-style; DESIGN.md §Sparsity)
+    pub sparsity: Sparsity,
 }
 
 impl PipelineConfig {
@@ -67,12 +72,19 @@ impl PipelineConfig {
             seed: 1234,
             gptq: GptqConfig::new(bits),
             propagate_quantized: true,
+            sparsity: Sparsity::None,
         }
     }
 
     pub fn with_groupsize(mut self, g: usize) -> Self {
         self.groupsize = g;
         self.gptq.groupsize = g;
+        self
+    }
+
+    pub fn with_sparsity(mut self, s: Sparsity) -> Self {
+        self.sparsity = s;
+        self.gptq.sparsity = s;
         self
     }
 }
@@ -121,6 +133,15 @@ impl<'rt> QuantPipeline<'rt> {
     /// copy — quantized weights are written back for propagation).
     pub fn run(&mut self, ckpt: &mut Checkpoint, calib: &CorpusFile) -> Result<PipelineReport> {
         let t0 = Instant::now();
+        anyhow::ensure!(
+            self.cfg.sparsity == Sparsity::None || self.cfg.engine == QuantEngine::GptqRust,
+            "--sparsity requires the rust GPTQ engine (joint mask selection runs inside the \
+             Cholesky solver)"
+        );
+        anyhow::ensure!(
+            self.cfg.sparsity == self.cfg.gptq.sparsity,
+            "PipelineConfig.sparsity and gptq.sparsity diverged; use with_sparsity()"
+        );
         let config = ckpt.config.clone();
         let seq = self.rt.manifest.seq_len;
         let batch = self.rt.manifest.eval_batch;
@@ -148,6 +169,7 @@ impl<'rt> QuantPipeline<'rt> {
 
         // 3. per block: capture -> hessians -> quantize -> propagate
         let mut packed: BTreeMap<String, PackedMatrix> = BTreeMap::new();
+        let mut sparse: BTreeMap<String, Sparse24Matrix> = BTreeMap::new();
         let mut stats: Vec<LayerStats> = Vec::new();
         for layer in 0..config.n_layers {
             let (hessians, captures) = self.capture_block(ckpt, layer, &xs, &config)?;
@@ -171,7 +193,18 @@ impl<'rt> QuantPipeline<'rt> {
                 let sq_error =
                     quant::layer_sq_error(w, &result.wq, &captures[li], *drow, *dcol);
                 stats.push(LayerStats { layer, name: lin.to_string(), sq_error, quant_ms });
-                packed.insert(format!("blocks.{layer}.{lin}"), PackedMatrix::from_result(&result));
+                let key = format!("blocks.{layer}.{lin}");
+                // 2:4 masks pack into the index-skipping sparse layout;
+                // unstructured masks stay on the dense pack (zeros encode
+                // as the zero-point code — no layout change needed)
+                if self.cfg.sparsity == Sparsity::TwoOfFour {
+                    sparse.insert(
+                        key,
+                        Sparse24Matrix::from_result(&result).map_err(|e| anyhow::anyhow!(e))?,
+                    );
+                } else {
+                    packed.insert(key, PackedMatrix::from_result(&result));
+                }
                 // write back Ŵ so the propagation pass (and later layers'
                 // Hessians within this block, via re-capture) see it
                 ckpt.set_block_weight(layer, lin, result.wq);
@@ -206,11 +239,12 @@ impl<'rt> QuantPipeline<'rt> {
         // rebuild a pristine fp checkpoint view for the non-quantized
         // tensors (ckpt weights were overwritten with Ŵ — that is fine:
         // packed codes are the source of truth for the linears)
-        let qc = QuantizedCheckpoint::from_parts(
+        let qc = QuantizedCheckpoint::from_parts_sparse(
             config,
             self.cfg.bits,
             self.cfg.groupsize,
             packed,
+            sparse,
             ckpt,
             stats.clone(),
         );

@@ -27,7 +27,8 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [--threads N] [--isa auto|scalar|avx2|neon] <info|quantize|eval|serve> [flags]
-  quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq] [--calib-segments N] [--out F]
+  quantize --size S --bits B [--groupsize G] [--engine rust|artifact|rtn|obq]
+           [--sparsity none|unstructured50|2of4] [--calib-segments N] [--out F]
   eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
   serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]
            [--max-batch N] [--pool-pages N] [--page-size N] [--prefill-chunk N]
@@ -96,16 +97,26 @@ fn quantize(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let bits = args.u32_or("bits", 4);
     let groupsize = args.usize_or("groupsize", 0);
     let engine_s = args.str_or("engine", "rust");
+    // joint sparsify+quantize: --sparsity beats GPTQ_SPARSITY; default
+    // dense (DESIGN.md §Sparsity)
+    let sparsity = match args.get("sparsity") {
+        Some(s) => gptq_rs::quant::Sparsity::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --sparsity {s:?} (none|unstructured50|2of4)")
+        })?,
+        None => gptq_rs::quant::Sparsity::from_env(),
+    };
     let mut rt = Runtime::from_artifacts_dir_with(artifacts, backend)?;
     let entry = rt.manifest.model(&size)?.clone();
     let mut ckpt = Checkpoint::load(artifacts, &entry)?;
     let calib = CorpusFile::load(&rt.manifest.corpus_path("calib.bin"))?;
-    let mut cfg = PipelineConfig::new(bits, parse_engine(&engine_s)?).with_groupsize(groupsize);
+    let mut cfg = PipelineConfig::new(bits, parse_engine(&engine_s)?)
+        .with_groupsize(groupsize)
+        .with_sparsity(sparsity);
     cfg.n_calib_segments = args.usize_or("calib-segments", 64);
     let mut pipeline = QuantPipeline::new(&mut rt, &size, cfg);
     let report = pipeline.run(&mut ckpt, &calib)?;
     println!(
-        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, backend {backend}, threads {}, isa {}) in {:.2}s; mean layer sq-err {:.4e}",
+        "quantized {size} to {bits}-bit (g={groupsize}, engine {engine_s}, sparsity {sparsity}, backend {backend}, threads {}, isa {}) in {:.2}s; mean layer sq-err {:.4e}",
         gptq_rs::util::par::threads(),
         gptq_rs::model::kernels::isa(),
         report.total_s,

@@ -9,6 +9,7 @@
 
 use crate::model::config::QUANT_LINEARS;
 use crate::model::{ModelConfig, Tensor};
+use crate::quant::sparse::Sparse24Matrix;
 use crate::quant::PackedMatrix;
 use crate::runtime::ModelEntry;
 use crate::util::Json;
@@ -99,6 +100,9 @@ pub struct QuantizedCheckpoint {
     pub groupsize: usize,
     /// `packed["blocks.{l}.{name}"]`
     pub packed: BTreeMap<String, PackedMatrix>,
+    /// 2:4 sparse-quantized linears (`--sparsity 2of4`), same key scheme
+    /// as `packed`; a linear lives in exactly one of the two maps
+    pub sparse: BTreeMap<String, Sparse24Matrix>,
     /// everything that stays fp: embeddings, LN, biases, unembed
     pub fp: BTreeMap<String, Tensor>,
     pub stats: Vec<LayerStats>,
@@ -109,6 +113,9 @@ struct QHeader {
     bits: u32,
     groupsize: usize,
     packed_meta: Vec<(String, usize, usize, usize, usize, u32)>, // name, drow, dcol, nwords, ngroups, bits
+    // name, drow, dcol, ngroups, pair_wpg, idx_wpg, bits — absent in
+    // pre-sparsity checkpoints (read back as empty)
+    sparse_meta: Vec<(String, usize, usize, usize, usize, usize, u32)>,
     fp_meta: Vec<(String, Vec<usize>)>,
     stats: Vec<LayerStats>,
 }
@@ -132,6 +139,25 @@ impl QHeader {
                                 Json::Num(*c as f64),
                                 Json::Num(*d as f64),
                                 Json::Num(*e as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "sparse_meta",
+                Json::Arr(
+                    self.sparse_meta
+                        .iter()
+                        .map(|(n, a, b, c, d, e, f)| {
+                            Json::Arr(vec![
+                                Json::Str(n.clone()),
+                                Json::Num(*a as f64),
+                                Json::Num(*b as f64),
+                                Json::Num(*c as f64),
+                                Json::Num(*d as f64),
+                                Json::Num(*e as f64),
+                                Json::Num(*f as f64),
                             ])
                         })
                         .collect(),
@@ -170,6 +196,28 @@ impl QHeader {
             })
             .collect::<Option<Vec<_>>>()
             .ok_or_else(bad)?;
+        // absent in checkpoints written before the sparsity PR
+        let sparse_meta = match j.get("sparse_meta") {
+            None => Vec::new(),
+            Some(p) => p
+                .as_arr()
+                .ok_or_else(bad)?
+                .iter()
+                .map(|e| {
+                    let a = e.as_arr()?;
+                    Some((
+                        a[0].as_str()?.to_string(),
+                        a[1].as_usize()?,
+                        a[2].as_usize()?,
+                        a[3].as_usize()?,
+                        a[4].as_usize()?,
+                        a[5].as_usize()?,
+                        a[6].as_u32()?,
+                    ))
+                })
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(bad)?,
+        };
         let fp_meta = j
             .get("fp_meta")
             .and_then(|p| p.as_arr())
@@ -194,6 +242,7 @@ impl QHeader {
             bits: j.get("bits").and_then(|b| b.as_u32()).ok_or_else(bad)?,
             groupsize: j.get("groupsize").and_then(|g| g.as_usize()).ok_or_else(bad)?,
             packed_meta,
+            sparse_meta,
             fp_meta,
             stats,
         })
@@ -210,19 +259,36 @@ impl QuantizedCheckpoint {
         source: &Checkpoint,
         stats: Vec<LayerStats>,
     ) -> Self {
+        Self::from_parts_sparse(config, bits, groupsize, packed, BTreeMap::new(), source, stats)
+    }
+
+    /// [`QuantizedCheckpoint::from_parts`] with a 2:4 sparse map: linears
+    /// present in either map are dropped from the fp side.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts_sparse(
+        config: ModelConfig,
+        bits: u32,
+        groupsize: usize,
+        packed: BTreeMap<String, PackedMatrix>,
+        sparse: BTreeMap<String, Sparse24Matrix>,
+        source: &Checkpoint,
+        stats: Vec<LayerStats>,
+    ) -> Self {
         let mut fp = BTreeMap::new();
         for (name, t) in &source.tensors {
-            if !packed.contains_key(name) {
+            if !packed.contains_key(name) && !sparse.contains_key(name) {
                 fp.insert(name.clone(), t.clone());
             }
         }
-        Self { config, bits, groupsize, packed, fp, stats }
+        Self { config, bits, groupsize, packed, sparse, fp, stats }
     }
 
-    /// Total bytes of quantized weight storage (codes + grids), the
-    /// "memory footprint" column of the Table 5 analog.
+    /// Total bytes of quantized weight storage (codes + grids, dense and
+    /// sparse layouts alike), the "memory footprint" column of the Table 5
+    /// analog.
     pub fn packed_bytes(&self) -> usize {
-        self.packed.values().map(|p| p.storage_bytes()).sum()
+        self.packed.values().map(|p| p.storage_bytes()).sum::<usize>()
+            + self.sparse.values().map(|m| m.storage_bytes()).sum::<usize>()
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -234,6 +300,13 @@ impl QuantizedCheckpoint {
                 .packed
                 .iter()
                 .map(|(n, p)| (n.clone(), p.drow, p.dcol, p.nwords, p.ngroups, p.bits))
+                .collect(),
+            sparse_meta: self
+                .sparse
+                .iter()
+                .map(|(n, m)| {
+                    (n.clone(), m.drow, m.dcol, m.ngroups, m.pair_wpg, m.idx_wpg, m.bits)
+                })
                 .collect(),
             fp_meta: self.fp.iter().map(|(n, t)| (n.clone(), t.shape.clone())).collect(),
             stats: self.stats.clone(),
@@ -248,6 +321,14 @@ impl QuantizedCheckpoint {
                 f.write_all(&w.to_le_bytes())?;
             }
             for s in p.scales.iter().chain(&p.zeros) {
+                f.write_all(&s.to_le_bytes())?;
+            }
+        }
+        for (_, m) in &self.sparse {
+            for w in m.pair_words.iter().chain(&m.idx_words) {
+                f.write_all(&w.to_le_bytes())?;
+            }
+            for s in m.scales.iter().chain(&m.zeros) {
                 f.write_all(&s.to_le_bytes())?;
             }
         }
@@ -297,6 +378,29 @@ impl QuantizedCheckpoint {
                 },
             );
         }
+        let mut sparse = BTreeMap::new();
+        for (name, drow, dcol, ngroups, pair_wpg, idx_wpg, bits) in &header.sparse_meta {
+            let pair_words = read_u32s(drow * ngroups * pair_wpg, &mut f)?;
+            let idx_words = read_u32s(drow * ngroups * idx_wpg, &mut f)?;
+            let grids = read_u32s(2 * drow * ngroups, &mut f)?;
+            let scales: Vec<f32> = grids[..drow * ngroups].iter().map(|&u| f32::from_bits(u)).collect();
+            let zeros: Vec<f32> = grids[drow * ngroups..].iter().map(|&u| f32::from_bits(u)).collect();
+            sparse.insert(
+                name.clone(),
+                Sparse24Matrix {
+                    pair_words,
+                    idx_words,
+                    scales,
+                    zeros,
+                    drow: *drow,
+                    dcol: *dcol,
+                    ngroups: *ngroups,
+                    bits: *bits,
+                    pair_wpg: *pair_wpg,
+                    idx_wpg: *idx_wpg,
+                },
+            );
+        }
         let mut fp = BTreeMap::new();
         for (name, shape) in &header.fp_meta {
             let n: usize = shape.iter().product();
@@ -309,6 +413,7 @@ impl QuantizedCheckpoint {
             bits: header.bits,
             groupsize: header.groupsize,
             packed,
+            sparse,
             fp,
             stats: header.stats,
         })
@@ -349,6 +454,7 @@ mod tests {
             bits: 3,
             groupsize: 0,
             packed,
+            sparse: BTreeMap::new(),
             fp,
             stats: vec![LayerStats { layer: 0, name: "wqkv".into(), sq_error: 0.1, quant_ms: 1.0 }],
         };
@@ -363,6 +469,78 @@ mod tests {
         assert_eq!(q2.stats.len(), 1);
         // dequantization identical across the roundtrip
         assert_eq!(q2.packed["blocks.0.wqkv"].dequantize(), q.packed["blocks.0.wqkv"].dequantize());
+    }
+
+    #[test]
+    fn sparse_checkpoint_roundtrip() {
+        use crate::quant::sparse::prune_2of4_by_magnitude;
+        let cfg = tiny_config();
+        let w: Vec<f32> = (0..24 * 16).map(|i| ((i * 37 + 5) as f32).sin()).collect();
+        let mut r = rtn_quantize(&w, 24, 16, 4, 8);
+        prune_2of4_by_magnitude(&mut r);
+        let sp = Sparse24Matrix::from_result(&r).unwrap();
+        let mut sparse = BTreeMap::new();
+        sparse.insert("blocks.0.wqkv".to_string(), sp.clone());
+        let mut fp = BTreeMap::new();
+        fp.insert("embed".to_string(), Tensor::new(vec![0.25; 16 * 8], vec![16, 8]));
+        let q = QuantizedCheckpoint {
+            config: cfg,
+            bits: 4,
+            groupsize: 8,
+            packed: BTreeMap::new(),
+            sparse,
+            fp,
+            stats: vec![],
+        };
+        let tmp = std::env::temp_dir().join("gptq_test_sparse_ckpt.bin");
+        q.save(&tmp).unwrap();
+        let q2 = QuantizedCheckpoint::load(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        // exact struct equality: codes, index nibbles, and grids all
+        // round-trip bitwise
+        assert_eq!(q2.sparse["blocks.0.wqkv"], sp);
+        assert_eq!(q2.fp["embed"].data, q.fp["embed"].data);
+        assert!(q2.sparse["blocks.0.wqkv"].check_2of4());
+    }
+
+    #[test]
+    fn pre_sparsity_header_reads_as_empty_sparse_map() {
+        // a header with no "sparse_meta" key (written before the sparsity
+        // PR) must load with an empty sparse map, not error
+        let cfg = tiny_config();
+        let w: Vec<f32> = (0..24 * 8).map(|i| (i as f32).cos()).collect();
+        let r = rtn_quantize(&w, 24, 8, 3, 0);
+        let mut packed = BTreeMap::new();
+        packed.insert("blocks.0.wqkv".to_string(), PackedMatrix::from_result(&r));
+        let q = QuantizedCheckpoint {
+            config: cfg,
+            bits: 3,
+            groupsize: 0,
+            packed,
+            sparse: BTreeMap::new(),
+            fp: BTreeMap::new(),
+            stats: vec![],
+        };
+        let tmp = std::env::temp_dir().join("gptq_test_legacy_ckpt.bin");
+        q.save(&tmp).unwrap();
+        // strip the sparse_meta key from the written header to simulate a
+        // legacy file (it serializes as an empty array)
+        let bytes = std::fs::read(&tmp).unwrap();
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let htext = std::str::from_utf8(&bytes[16..16 + hlen]).unwrap();
+        assert!(htext.contains("\"sparse_meta\""));
+        let legacy = htext.replace("\"sparse_meta\":[],", "");
+        assert!(!legacy.contains("sparse_meta"));
+        let mut out = Vec::new();
+        out.extend_from_slice(b"GPTQCKPT");
+        out.extend_from_slice(&(legacy.len() as u64).to_le_bytes());
+        out.extend_from_slice(legacy.as_bytes());
+        out.extend_from_slice(&bytes[16 + hlen..]);
+        std::fs::write(&tmp, &out).unwrap();
+        let q2 = QuantizedCheckpoint::load(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert!(q2.sparse.is_empty());
+        assert_eq!(q2.packed["blocks.0.wqkv"].words, q.packed["blocks.0.wqkv"].words);
     }
 
     #[test]

@@ -11,14 +11,17 @@
 //! paper's deployment story.
 
 use crate::model::checkpoint::{Checkpoint, QuantizedCheckpoint};
-use crate::model::kernels::{self, TiledPacked};
+use crate::model::kernels::{self, Sparse24Tiled, TiledPacked};
 use crate::model::kvpool::{KvDtype, KvPool, SeqCache};
 use crate::model::matvec::{
     matmul_f32_bias, matmul_f32_bias_serial, matmul_packed_bias, matmul_packed_bias_serial,
-    matvec_f32_bias, matvec_f32_bias_serial, matvec_packed_bias, matvec_packed_bias_serial,
+    matmul_sparse24_bias, matmul_sparse24_bias_serial, matvec_f32_bias, matvec_f32_bias_serial,
+    matvec_packed_bias, matvec_packed_bias_serial, matvec_sparse24_bias,
+    matvec_sparse24_bias_serial, matvec_sparse24_tiled_bias, matvec_sparse24_tiled_bias_serial,
     matvec_tiled_bias, matvec_tiled_bias_serial, MATVEC_PAR_MIN_ELEMS,
 };
 use crate::model::ModelConfig;
+use crate::quant::sparse::Sparse24Matrix;
 use crate::quant::PackedMatrix;
 use crate::util::par::{self, Pool};
 
@@ -45,11 +48,34 @@ impl PackedLinear {
     }
 }
 
+/// A 2:4 sparse-quantized linear's serving form: the canonical
+/// [`Sparse24Matrix`] plus, when the active ISA has a sparse tiled
+/// microkernel for this bit width, the register-tiled interleaved copy
+/// ([`Sparse24Tiled`]) — the same two-layout story as [`PackedLinear`],
+/// over the sparse pack format (DESIGN.md §Sparsity).
+#[derive(Debug, Clone)]
+pub struct Sparse24Linear {
+    pub flat: Sparse24Matrix,
+    pub tiled: Option<Sparse24Tiled>,
+}
+
+impl Sparse24Linear {
+    pub fn new(flat: Sparse24Matrix) -> Self {
+        let tiled = if kernels::sparse24_tiled_supported(kernels::isa(), flat.bits) {
+            Some(Sparse24Tiled::from_sparse(&flat))
+        } else {
+            None
+        };
+        Sparse24Linear { flat, tiled }
+    }
+}
+
 /// A linear layer's weights on the decode path.
 #[derive(Debug, Clone)]
 pub enum LinearWeight {
     Dense { w: Vec<f32>, drow: usize, dcol: usize },
     Packed(PackedLinear),
+    Sparse24(Sparse24Linear),
 }
 
 impl LinearWeight {
@@ -59,10 +85,17 @@ impl LinearWeight {
         LinearWeight::Packed(PackedLinear::new(p))
     }
 
+    /// Wrap a 2:4 sparse matrix (builds the sparse tiled layout when the
+    /// active ISA can use it).
+    pub fn sparse24(m: Sparse24Matrix) -> Self {
+        LinearWeight::Sparse24(Sparse24Linear::new(m))
+    }
+
     pub fn out_dim(&self) -> usize {
         match self {
             LinearWeight::Dense { drow, .. } => *drow,
             LinearWeight::Packed(pl) => pl.packed.drow,
+            LinearWeight::Sparse24(sl) => sl.flat.drow,
         }
     }
 
@@ -96,6 +129,22 @@ impl LinearWeight {
                     matvec_packed_bias(&pl.packed, x, b, y)
                 }
             }
+            LinearWeight::Sparse24(sl) => {
+                // same ISA re-check discipline as the packed tiled path
+                if let Some(t) = &sl.tiled {
+                    if kernels::sparse24_tiled_supported(kernels::isa(), t.bits) {
+                        if serial {
+                            return matvec_sparse24_tiled_bias_serial(t, x, b, y);
+                        }
+                        return matvec_sparse24_tiled_bias(t, x, b, y);
+                    }
+                }
+                if serial {
+                    matvec_sparse24_bias_serial(&sl.flat, x, b, y)
+                } else {
+                    matvec_sparse24_bias(&sl.flat, x, b, y)
+                }
+            }
         }
     }
 
@@ -125,6 +174,13 @@ impl LinearWeight {
                     matmul_packed_bias(&pl.packed, xs, b, n, ys)
                 }
             }
+            LinearWeight::Sparse24(sl) => {
+                if serial {
+                    matmul_sparse24_bias_serial(&sl.flat, xs, b, n, ys)
+                } else {
+                    matmul_sparse24_bias(&sl.flat, xs, b, n, ys)
+                }
+            }
         }
     }
 
@@ -134,6 +190,7 @@ impl LinearWeight {
         match self {
             LinearWeight::Dense { w, .. } => w.len() * 4,
             LinearWeight::Packed(pl) => pl.packed.storage_bytes(),
+            LinearWeight::Sparse24(sl) => sl.flat.storage_bytes(),
         }
     }
 }
@@ -426,7 +483,11 @@ impl CpuModel {
         let blocks = (0..cfg.n_layers)
             .map(|l| {
                 let lin = |name: &str| {
-                    LinearWeight::packed(q.packed[&format!("blocks.{l}.{name}")].clone())
+                    let key = format!("blocks.{l}.{name}");
+                    match q.sparse.get(&key) {
+                        Some(m) => LinearWeight::sparse24(m.clone()),
+                        None => LinearWeight::packed(q.packed[&key].clone()),
+                    }
                 };
                 let fp = |name: &str| q.fp[&format!("blocks.{l}.{name}")].data.clone();
                 BlockWeights {
@@ -925,6 +986,44 @@ mod tests {
         let q = QuantizedCheckpoint::from_parts(ckpt.config.clone(), 4, 0, packed, &ckpt, vec![]);
         let mut qm = CpuModel::from_quantized(&q);
         let mut dm = CpuModel::from_checkpoint(&dense);
+        let tokens = [7u8, 21, 0, 13];
+        let lq = qm.logits_all(&tokens);
+        let ld = dm.logits_all(&tokens);
+        for (a, b) in lq.iter().zip(&ld) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_model_matches_dense_pruned_dequant() {
+        use crate::model::checkpoint::{quantizable_keys, QuantizedCheckpoint};
+        use crate::quant::rtn_quantize;
+        use crate::quant::sparse::{prune_2of4_by_magnitude, Sparse24Matrix};
+        let ckpt = tiny_checkpoint(9);
+        let mut sparse = BTreeMap::new();
+        let mut dense = ckpt.clone();
+        for key in quantizable_keys(&ckpt.config) {
+            let t = ckpt.get(&key);
+            let (o, i) = t.dims2();
+            let mut r = rtn_quantize(&t.data, o, i, 4, 0);
+            prune_2of4_by_magnitude(&mut r);
+            sparse.insert(key.clone(), Sparse24Matrix::from_result(&r).unwrap());
+            dense.tensors.get_mut(&key).unwrap().data = r.wq;
+        }
+        let q = QuantizedCheckpoint::from_parts_sparse(
+            ckpt.config.clone(),
+            4,
+            0,
+            BTreeMap::new(),
+            sparse,
+            &ckpt,
+            vec![],
+        );
+        let mut qm = CpuModel::from_quantized(&q);
+        let mut dm = CpuModel::from_checkpoint(&dense);
+        // every linear rides the sparse decode path and the sparse traffic
+        // is below the dense-f32 equivalent
+        assert!(qm.traffic_bytes_per_token() * 2 < dm.traffic_bytes_per_token());
         let tokens = [7u8, 21, 0, 13];
         let lq = qm.logits_all(&tokens);
         let ld = dm.logits_all(&tokens);

@@ -23,8 +23,10 @@
 //! bit-identical (the partition only moves whole rows).
 
 use super::fill_lut;
+use super::sparse24::Sparse24Tiled;
 use super::tiled::TiledPacked;
 use crate::quant::pack::PackedMatrix;
+use crate::quant::sparse::Sparse24Matrix;
 use core::arch::x86_64::*;
 
 /// Horizontal sum in a fixed association tree — shared by every kernel so
@@ -563,6 +565,212 @@ unsafe fn tiled_b2(t: &TiledPacked, xeff: &[f32], tile: usize, ys: &mut [f32]) {
         }
         for (rr, yv) in ys.iter_mut().enumerate() {
             *yv += hsum8(_mm256_add_ps(accs0[rr], accs1[rr]));
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 2:4 sparse kernels (4-bit): one pair-code word = 8 surviving codes = 4
+// blocks. The index nibbles steer a scalar gather of the 8 surviving x
+// values into a stack buffer; the codes dequantize through the same
+// (lo, hi) vpermps LUT as the dense b4 kernels. Half the FMAs of dense,
+// and 12 bits of weight traffic per 4 columns instead of 16.
+// -------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn sparse24_tiled_rows_b4(
+    t: &Sparse24Tiled,
+    x: &[f32],
+    tile: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(t.bits, 4, "AVX2 sparse24 kernel is 4-bit only");
+    debug_assert_eq!(t.r, 4, "AVX2 tiled kernels assume R=4");
+    let group = t.dcol / t.ngroups;
+    let nblocks = group / 4;
+    let nfull = nblocks / 4; // fully-populated pair words (8 codes each)
+    let mut luts = [[0.0f32; 16]; 4];
+    let mut los = [_mm256_setzero_ps(); 4];
+    let mut his = [_mm256_setzero_ps(); 4];
+    let mut xbuf = [0.0f32; 8];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        for rr in 0..4 {
+            fill_lut(4, t.scales[gbase + rr], t.zeros[gbase + rr], &mut luts[rr]);
+            los[rr] = _mm256_loadu_ps(luts[rr].as_ptr());
+            his[rr] = _mm256_loadu_ps(luts[rr].as_ptr().add(8));
+        }
+        let xg = &x[gi * group..];
+        let mut accs = [_mm256_setzero_ps(); 4];
+        let mut taccs = [0.0f32; 4];
+        for wi in 0..nfull {
+            let wbase = (tile * t.npw + gi * t.pair_wpg + wi) * 4;
+            // 4 blocks per word -> 4 nibbles, a contiguous 16-bit field
+            let ibase = (tile * t.niw + gi * t.idx_wpg + wi / 2) * 4;
+            for rr in 0..4 {
+                let w = t.pair_words[wbase + rr];
+                let nib16 = (t.idx_words[ibase + rr] >> ((wi % 2) * 16)) & 0xFFFF;
+                for bb in 0..4 {
+                    let nib = (nib16 >> (bb * 4)) & 0xF;
+                    let base = (wi * 4 + bb) * 4;
+                    xbuf[2 * bb] = xg[base + (nib & 3) as usize];
+                    xbuf[2 * bb + 1] = xg[base + ((nib >> 2) & 3) as usize];
+                }
+                accs[rr] = _mm256_fmadd_ps(
+                    dequant8_b4(w, los[rr], his[rr]),
+                    _mm256_loadu_ps(xbuf.as_ptr()),
+                    accs[rr],
+                );
+            }
+        }
+        // tail blocks of a partial last word (group % 16 != 0): scalar
+        // through the same LUT arrays
+        for b in nfull * 4..nblocks {
+            let k = 2 * b;
+            let wbase = (tile * t.npw + gi * t.pair_wpg + k / 8) * 4;
+            let ibase = (tile * t.niw + gi * t.idx_wpg + b / 8) * 4;
+            for rr in 0..4 {
+                let w = t.pair_words[wbase + rr];
+                let nib = (t.idx_words[ibase + rr] >> ((b % 8) * 4)) & 0xF;
+                let c0 = ((w >> ((k % 8) * 4)) & 15) as usize;
+                let c1 = ((w >> (((k + 1) % 8) * 4)) & 15) as usize;
+                taccs[rr] += luts[rr][c0] * xg[b * 4 + (nib & 3) as usize];
+                taccs[rr] += luts[rr][c1] * xg[b * 4 + ((nib >> 2) & 3) as usize];
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += hsum8(accs[rr]) + taccs[rr];
+        }
+    }
+}
+
+/// Flat 2:4 rows (single sequence). Per-group op order is replayed
+/// exactly by the batched kernel below (per sequence) and the tiled
+/// kernel above (per row), so all three agree bitwise on this ISA.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn sparse24_rows_b4(
+    m: &Sparse24Matrix,
+    x: &[f32],
+    row0: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(m.bits, 4, "AVX2 sparse24 kernel is 4-bit only");
+    let group = m.dcol / m.ngroups;
+    let nblocks = group / 4;
+    let nfull = nblocks / 4;
+    let (npw, niw) = (m.npair_words(), m.nidx_words());
+    let mut lut = [0.0f32; 16];
+    let mut xbuf = [0.0f32; 8];
+    for (i, yr) in y.iter_mut().enumerate() {
+        let r = row0 + i;
+        let scales = &m.scales[r * m.ngroups..(r + 1) * m.ngroups];
+        let zeros = &m.zeros[r * m.ngroups..(r + 1) * m.ngroups];
+        let mut acc_row = 0.0f32;
+        for gi in 0..m.ngroups {
+            fill_lut(4, scales[gi], zeros[gi], &mut lut);
+            let lo = _mm256_loadu_ps(lut.as_ptr());
+            let hi = _mm256_loadu_ps(lut.as_ptr().add(8));
+            let pw = &m.pair_words[r * npw + gi * m.pair_wpg..];
+            let iw = &m.idx_words[r * niw + gi * m.idx_wpg..];
+            let xg = &x[gi * group..];
+            let mut acc = _mm256_setzero_ps();
+            let mut tacc = 0.0f32;
+            for wi in 0..nfull {
+                let w = pw[wi];
+                let nib16 = (iw[wi / 2] >> ((wi % 2) * 16)) & 0xFFFF;
+                for bb in 0..4 {
+                    let nib = (nib16 >> (bb * 4)) & 0xF;
+                    let base = (wi * 4 + bb) * 4;
+                    xbuf[2 * bb] = xg[base + (nib & 3) as usize];
+                    xbuf[2 * bb + 1] = xg[base + ((nib >> 2) & 3) as usize];
+                }
+                acc = _mm256_fmadd_ps(dequant8_b4(w, lo, hi), _mm256_loadu_ps(xbuf.as_ptr()), acc);
+            }
+            for b in nfull * 4..nblocks {
+                let k = 2 * b;
+                let w = pw[k / 8];
+                let nib = (iw[b / 8] >> ((b % 8) * 4)) & 0xF;
+                tacc += lut[((w >> ((k % 8) * 4)) & 15) as usize] * xg[b * 4 + (nib & 3) as usize];
+                tacc += lut[((w >> (((k + 1) % 8) * 4)) & 15) as usize]
+                    * xg[b * 4 + ((nib >> 2) & 3) as usize];
+            }
+            acc_row += hsum8(acc) + tacc;
+        }
+        *yr = acc_row;
+    }
+}
+
+/// Batched 2:4 rows: each pair word is decoded ONCE (and its gather
+/// columns computed once) and FMA'd into every sequence's accumulator.
+/// Per-sequence op order replays [`sparse24_rows_b4`] exactly.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn sparse24_matmul_rows_b4(
+    m: &Sparse24Matrix,
+    xs: &[f32],
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(m.bits, 4, "AVX2 sparse24 kernel is 4-bit only");
+    let group = m.dcol / m.ngroups;
+    let nblocks = group / 4;
+    let nfull = nblocks / 4;
+    let (npw, niw) = (m.npair_words(), m.nidx_words());
+    let mut lut = [0.0f32; 16];
+    let mut xbuf = [0.0f32; 8];
+    let mut cols = [0usize; 8];
+    let mut accs: Vec<__m256> = vec![_mm256_setzero_ps(); n];
+    let mut taccs = vec![0.0f32; n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        let scales = &m.scales[r * m.ngroups..(r + 1) * m.ngroups];
+        let zeros = &m.zeros[r * m.ngroups..(r + 1) * m.ngroups];
+        yrow.fill(0.0);
+        for gi in 0..m.ngroups {
+            fill_lut(4, scales[gi], zeros[gi], &mut lut);
+            let lo = _mm256_loadu_ps(lut.as_ptr());
+            let hi = _mm256_loadu_ps(lut.as_ptr().add(8));
+            let pw = &m.pair_words[r * npw + gi * m.pair_wpg..];
+            let iw = &m.idx_words[r * niw + gi * m.idx_wpg..];
+            for a in accs.iter_mut() {
+                *a = _mm256_setzero_ps();
+            }
+            taccs.fill(0.0);
+            for wi in 0..nfull {
+                let w = pw[wi];
+                let nib16 = (iw[wi / 2] >> ((wi % 2) * 16)) & 0xFFFF;
+                for bb in 0..4 {
+                    let nib = (nib16 >> (bb * 4)) & 0xF;
+                    let base = gi * group + (wi * 4 + bb) * 4;
+                    cols[2 * bb] = base + (nib & 3) as usize;
+                    cols[2 * bb + 1] = base + ((nib >> 2) & 3) as usize;
+                }
+                let deq = dequant8_b4(w, lo, hi);
+                for (j, a) in accs.iter_mut().enumerate() {
+                    let xrow = &xs[j * m.dcol..];
+                    for (slot, &c) in xbuf.iter_mut().zip(cols.iter()) {
+                        *slot = xrow[c];
+                    }
+                    *a = _mm256_fmadd_ps(deq, _mm256_loadu_ps(xbuf.as_ptr()), *a);
+                }
+            }
+            for b in nfull * 4..nblocks {
+                let k = 2 * b;
+                let w = pw[k / 8];
+                let nib = (iw[b / 8] >> ((b % 8) * 4)) & 0xF;
+                let l0 = lut[((w >> ((k % 8) * 4)) & 15) as usize];
+                let l1 = lut[((w >> (((k + 1) % 8) * 4)) & 15) as usize];
+                let col0 = gi * group + b * 4 + (nib & 3) as usize;
+                let col1 = gi * group + b * 4 + ((nib >> 2) & 3) as usize;
+                for (j, ta) in taccs.iter_mut().enumerate() {
+                    *ta += l0 * xs[j * m.dcol + col0];
+                    *ta += l1 * xs[j * m.dcol + col1];
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += hsum8(accs[j]) + taccs[j];
+            }
         }
     }
 }

@@ -37,6 +37,7 @@
 //! `#[target_feature]` kernels are only entered for detected features).
 
 pub mod scalar;
+pub mod sparse24;
 pub mod tiled;
 
 #[cfg(target_arch = "x86_64")]
@@ -45,9 +46,11 @@ pub mod avx2;
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
 
+pub use sparse24::Sparse24Tiled;
 pub use tiled::TiledPacked;
 
 use crate::quant::pack::PackedMatrix;
+use crate::quant::sparse::Sparse24Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The runtime-dispatch key. Every kernel family (dense matvec/matmul,
@@ -245,6 +248,16 @@ pub fn tiled_supported(isa: Isa, bits: u32) -> bool {
     }
 }
 
+/// Does `isa` have a 2:4-sparse tiled microkernel for this bit width?
+/// Gates building [`Sparse24Tiled`] at load time and entering the sparse
+/// tiled matvec (the scalar ISA runs the flat sparse kernels directly).
+pub fn sparse24_tiled_supported(isa: Isa, bits: u32) -> bool {
+    match isa {
+        Isa::Scalar => false,
+        Isa::Avx2Fma | Isa::Neon => bits == 4,
+    }
+}
+
 /// The aligned-layout predicate — THE single definition shared by the
 /// flat packed entry points (`model::matvec`) and the tiled builder
 /// ([`TiledPacked::from_packed`]), so both always route a given shape the
@@ -410,6 +423,56 @@ pub(crate) fn tiled_rows(isa: Isa, t: &TiledPacked, xeff: &[f32], tile: usize, y
         #[cfg(target_arch = "aarch64")]
         Isa::Neon if t.bits == 4 => unsafe { neon::tiled_rows_b4(t, xeff, tile, ys) },
         _ => scalar::tiled_rows(t, xeff, tile, ys),
+    }
+}
+
+/// Rows of y = dequant(M)·x over the 2:4 sparse layout. The scalar
+/// kernel is the bit-frozen sparse reference; AVX2 has a 4-bit fast path
+/// whose op order the batched and tiled AVX2 kernels replay. NEON runs
+/// scalar here (its only sparse microkernel is the tiled one, which
+/// therefore agrees with this path within the cross-ISA ~1e-5 band
+/// rather than bitwise).
+pub(crate) fn sparse24_rows(isa: Isa, m: &Sparse24Matrix, x: &[f32], row0: usize, y: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if m.bits == 4 => unsafe { avx2::sparse24_rows_b4(m, x, row0, y) },
+        _ => sparse24::rows(m, x, row0, y),
+    }
+}
+
+/// Batched 2:4 sparse rows: each pair word decoded once per row and
+/// replayed across the batch. AVX2 has a 4-bit fast path; NEON stays on
+/// the scalar kernel (the batched path is bandwidth-bound and the sparse
+/// format already halves traffic).
+pub(crate) fn sparse24_matmul_rows(
+    isa: Isa,
+    m: &Sparse24Matrix,
+    xs: &[f32],
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if m.bits == 4 => unsafe { avx2::sparse24_matmul_rows_b4(m, xs, n, row0, ys) },
+        _ => sparse24::matmul_rows(m, xs, n, row0, ys),
+    }
+}
+
+/// One tile of y = dequant(T)·x over the interleaved 2:4 sparse layout.
+pub(crate) fn sparse24_tiled_rows(
+    isa: Isa,
+    t: &Sparse24Tiled,
+    x: &[f32],
+    tile: usize,
+    ys: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if t.bits == 4 => unsafe { avx2::sparse24_tiled_rows_b4(t, x, tile, ys) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if t.bits == 4 => unsafe { neon::sparse24_tiled_rows_b4(t, x, tile, ys) },
+        _ => sparse24::tiled_rows(t, x, tile, ys),
     }
 }
 

@@ -13,6 +13,7 @@
 //! single-sequence op order per sequence, so the PR-2/PR-3 determinism
 //! contracts hold at this ISA exactly as on AVX2.
 
+use super::sparse24::Sparse24Tiled;
 use super::tiled::TiledPacked;
 use crate::quant::pack::PackedMatrix;
 use core::arch::aarch64::*;
@@ -166,6 +167,80 @@ pub(crate) unsafe fn packed_matmul_rows_aligned_b4(
             for (j, yv) in yrow.iter_mut().enumerate() {
                 *yv += vaddvq_f32(vaddq_f32(accs0[j], accs1[j]));
             }
+        }
+    }
+}
+
+/// 2:4 sparse tiled rows (4-bit): the index nibbles steer a scalar
+/// gather of the 8 surviving x values per pair word; codes dequantize
+/// through the same affine `fma(code, s, −s·z)` as the dense b4 kernels.
+/// Batched sparse matmul stays scalar on NEON (dispatch table).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn sparse24_tiled_rows_b4(
+    t: &Sparse24Tiled,
+    x: &[f32],
+    tile: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(t.bits, 4, "NEON sparse24 kernel is 4-bit only");
+    debug_assert_eq!(t.r, 4, "NEON tiled kernels assume R=4");
+    let (sh_lo, sh_hi) = shift_vectors();
+    let group = t.dcol / t.ngroups;
+    let nblocks = group / 4;
+    let nfull = nblocks / 4; // fully-populated pair words (8 codes each)
+    let mut xbuf = [0.0f32; 8];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * 4;
+        let mut svec = [vdupq_n_f32(0.0); 4];
+        let mut nszvec = [vdupq_n_f32(0.0); 4];
+        let mut ss = [0.0f32; 4];
+        let mut szs = [0.0f32; 4];
+        for rr in 0..4 {
+            let s = t.scales[gbase + rr];
+            let sz = s * t.zeros[gbase + rr];
+            svec[rr] = vdupq_n_f32(s);
+            nszvec[rr] = vdupq_n_f32(-sz);
+            ss[rr] = s;
+            szs[rr] = sz;
+        }
+        let xg = &x[gi * group..];
+        let mut accs0 = [vdupq_n_f32(0.0); 4];
+        let mut accs1 = [vdupq_n_f32(0.0); 4];
+        let mut taccs = [0.0f32; 4];
+        for wi in 0..nfull {
+            let wbase = (tile * t.npw + gi * t.pair_wpg + wi) * 4;
+            let ibase = (tile * t.niw + gi * t.idx_wpg + wi / 2) * 4;
+            for rr in 0..4 {
+                let w = t.pair_words[wbase + rr];
+                let nib16 = (t.idx_words[ibase + rr] >> ((wi % 2) * 16)) & 0xFFFF;
+                for bb in 0..4 {
+                    let nib = (nib16 >> (bb * 4)) & 0xF;
+                    let base = (wi * 4 + bb) * 4;
+                    xbuf[2 * bb] = xg[base + (nib & 3) as usize];
+                    xbuf[2 * bb + 1] = xg[base + ((nib >> 2) & 3) as usize];
+                }
+                let (d0, d1) = dequant8_b4(w, sh_lo, sh_hi, svec[rr], nszvec[rr]);
+                accs0[rr] = vfmaq_f32(accs0[rr], d0, vld1q_f32(xbuf.as_ptr()));
+                accs1[rr] = vfmaq_f32(accs1[rr], d1, vld1q_f32(xbuf.as_ptr().add(4)));
+            }
+        }
+        // tail blocks of a partial last word (group % 16 != 0)
+        for b in nfull * 4..nblocks {
+            let k = 2 * b;
+            let wbase = (tile * t.npw + gi * t.pair_wpg + k / 8) * 4;
+            let ibase = (tile * t.niw + gi * t.idx_wpg + b / 8) * 4;
+            for rr in 0..4 {
+                let w = t.pair_words[wbase + rr];
+                let nib = (t.idx_words[ibase + rr] >> ((b % 8) * 4)) & 0xF;
+                let c0 = ((w >> ((k % 8) * 4)) & 15) as f32;
+                let c1 = ((w >> (((k + 1) % 8) * 4)) & 15) as f32;
+                taccs[rr] += (c0 * ss[rr] - szs[rr]) * xg[b * 4 + (nib & 3) as usize];
+                taccs[rr] += (c1 * ss[rr] - szs[rr]) * xg[b * 4 + ((nib >> 2) & 3) as usize];
+            }
+        }
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            *yv += vaddvq_f32(vaddq_f32(accs0[rr], accs1[rr])) + taccs[rr];
         }
     }
 }

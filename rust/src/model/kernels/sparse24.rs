@@ -1,0 +1,353 @@
+//! 2:4 semi-structured kernels over [`Sparse24Matrix`] — the execution
+//! side of the joint sparsify+quantize engine (`quant::sparse`).
+//!
+//! The format stores, per aligned 4-column block, only the two surviving
+//! codes (a contiguous code stream at `bits` per code) plus one index
+//! nibble `(i1 << 2) | i0`; both streams are word-padded per group. The
+//! kernels therefore touch 2 of every 4 weights: half the FMAs and, at
+//! 4-bit, 12 bits of weight traffic per 4 columns against the dense
+//! packed path's 16 — which is where the batch-1 speedup comes from on
+//! the memory-bound decode matvec (DESIGN.md §Sparsity).
+//!
+//! §Determinism, mirroring the dense kernels:
+//! * the scalar kernels here are THE bit-frozen reference: per group one
+//!   f32 accumulator, blocks in order, survivor `i0` before `i1`. Because
+//!   pruned entries dequantize to exactly ±0.0 and a (+0-initialised) f32
+//!   accumulator is bit-invariant under adding ±0.0, the scalar sparse
+//!   dot is bit-identical to the groupwise single-accumulator dense dot
+//!   over the dequantized matrix — the property `tests/sparsity.rs` pins.
+//! * the batched kernel replays the single-sequence op order per
+//!   sequence (batched ≡ single bitwise), and the tiled scalar fallback
+//!   replays the flat per-row op order (tiled ≡ flat bitwise).
+//! * SIMD variants (AVX2/NEON, 4-bit) reassociate lanes and agree with
+//!   scalar within the usual ~1e-5 cross-ISA band.
+
+use super::fill_lut;
+use crate::quant::sparse::Sparse24Matrix;
+
+/// Rows per tile — same R as the dense [`super::tiled::TiledPacked`].
+pub const TILE_ROWS: usize = 4;
+
+/// Register-tiled interleaved form of a [`Sparse24Matrix`]: words and
+/// grids of R=4 consecutive rows interleaved index-major, so the batch-1
+/// decode streams one cache line of 4 rows' pair words at a time. Same
+/// codes/indices/grids as the flat form — only the memory order changes.
+///
+/// Unlike the dense `TiledPacked` there is no alignment predicate: the
+/// sparse format is word-padded per group by construction, so every
+/// instance tiles. The last tile is zero-padded (code 0, scale 0 → every
+/// phantom lane dequantizes to 0); kernels don't write the phantom rows.
+#[derive(Debug, Clone)]
+pub struct Sparse24Tiled {
+    /// pair words, tile-major: `pair_words[(tile * npw + wi) * r + rr]`
+    pub pair_words: Vec<u32>,
+    /// index words, tile-major: `idx_words[(tile * niw + wi) * r + rr]`
+    pub idx_words: Vec<u32>,
+    /// scales, tile-major: `scales[(tile * ngroups + gi) * r + rr]`
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    /// rows per tile (R)
+    pub r: usize,
+    /// number of tiles (`ceil(drow / r)`; last tile zero-padded)
+    pub ntiles: usize,
+    pub drow: usize,
+    pub dcol: usize,
+    pub ngroups: usize,
+    /// pair words per row (`ngroups · pair_wpg`)
+    pub npw: usize,
+    /// index words per row (`ngroups · idx_wpg`)
+    pub niw: usize,
+    pub pair_wpg: usize,
+    pub idx_wpg: usize,
+    pub bits: u32,
+}
+
+impl Sparse24Tiled {
+    /// Interleave `m` into R-row tiles.
+    pub fn from_sparse(m: &Sparse24Matrix) -> Sparse24Tiled {
+        let r = TILE_ROWS;
+        let ntiles = m.drow.div_ceil(r);
+        let (npw, niw) = (m.npair_words(), m.nidx_words());
+        let mut pair_words = vec![0u32; ntiles * npw * r];
+        let mut idx_words = vec![0u32; ntiles * niw * r];
+        let mut scales = vec![0.0f32; ntiles * m.ngroups * r];
+        let mut zeros = vec![0.0f32; ntiles * m.ngroups * r];
+        for t in 0..ntiles {
+            for rr in 0..r {
+                let row = t * r + rr;
+                if row >= m.drow {
+                    break; // phantom rows stay all-zero
+                }
+                for wi in 0..npw {
+                    pair_words[(t * npw + wi) * r + rr] = m.pair_words[row * npw + wi];
+                }
+                for wi in 0..niw {
+                    idx_words[(t * niw + wi) * r + rr] = m.idx_words[row * niw + wi];
+                }
+                for gi in 0..m.ngroups {
+                    scales[(t * m.ngroups + gi) * r + rr] = m.scales[row * m.ngroups + gi];
+                    zeros[(t * m.ngroups + gi) * r + rr] = m.zeros[row * m.ngroups + gi];
+                }
+            }
+        }
+        Sparse24Tiled {
+            pair_words,
+            idx_words,
+            scales,
+            zeros,
+            r,
+            ntiles,
+            drow: m.drow,
+            dcol: m.dcol,
+            ngroups: m.ngroups,
+            npw,
+            niw,
+            pair_wpg: m.pair_wpg,
+            idx_wpg: m.idx_wpg,
+            bits: m.bits,
+        }
+    }
+
+    /// Bytes of weight storage in this layout (what one tiled matvec
+    /// streams, including last-tile padding).
+    pub fn storage_bytes(&self) -> usize {
+        (self.pair_words.len() + self.idx_words.len()) * 4
+            + (self.scales.len() + self.zeros.len()) * 4
+    }
+}
+
+/// One row's sparse dot — THE reference op order every other variant
+/// (batched, tiled, SIMD) is measured against. Per group: fill the
+/// dequant LUT, one f32 accumulator, blocks in order, `i0` before `i1`.
+#[inline(always)]
+fn dot_row(m: &Sparse24Matrix, r: usize, x: &[f32], lut: &mut [f32; 256]) -> f32 {
+    let group = m.dcol / m.ngroups;
+    let nblocks = group / 4;
+    let cpw = (32 / m.bits) as usize;
+    let bits = m.bits as usize;
+    let mask = (1u32 << m.bits) - 1;
+    let (npw, niw) = (m.npair_words(), m.nidx_words());
+    let mut acc_row = 0.0f32;
+    for gi in 0..m.ngroups {
+        fill_lut(m.bits, m.scales[r * m.ngroups + gi], m.zeros[r * m.ngroups + gi], lut);
+        let pw = &m.pair_words[r * npw + gi * m.pair_wpg..];
+        let iw = &m.idx_words[r * niw + gi * m.idx_wpg..];
+        let xg = &x[gi * group..];
+        let mut acc = 0.0f32;
+        for b in 0..nblocks {
+            let nib = (iw[b / 8] >> ((b % 8) * 4)) & 0xF;
+            let k = 2 * b;
+            let c0 = (pw[k / cpw] >> ((k % cpw) * bits)) & mask;
+            let c1 = (pw[(k + 1) / cpw] >> (((k + 1) % cpw) * bits)) & mask;
+            acc += lut[c0 as usize] * xg[b * 4 + (nib & 3) as usize];
+            acc += lut[c1 as usize] * xg[b * 4 + ((nib >> 2) & 3) as usize];
+        }
+        acc_row += acc;
+    }
+    acc_row
+}
+
+/// Rows `row0..row0+y.len()` of y = dequant(M) x — the scalar flat
+/// matvec (per-row arithmetic independent of the thread partition).
+pub(crate) fn rows(m: &Sparse24Matrix, x: &[f32], row0: usize, y: &mut [f32]) {
+    let mut lut = [0.0f32; 256];
+    for (i, yr) in y.iter_mut().enumerate() {
+        *yr = dot_row(m, row0 + i, x, &mut lut);
+    }
+}
+
+/// Batched rows `row0..` of Y = dequant(M)·X over `n` stacked
+/// activations: each block's codes/indices are decoded ONCE and FMA'd
+/// into every sequence's group accumulator; per-sequence op order is
+/// exactly [`dot_row`], so batched ≡ n single matvecs bitwise.
+pub(crate) fn matmul_rows(
+    m: &Sparse24Matrix,
+    xs: &[f32],
+    n: usize,
+    row0: usize,
+    ys: &mut [f32],
+) {
+    let group = m.dcol / m.ngroups;
+    let nblocks = group / 4;
+    let cpw = (32 / m.bits) as usize;
+    let bits = m.bits as usize;
+    let mask = (1u32 << m.bits) - 1;
+    let (npw, niw) = (m.npair_words(), m.nidx_words());
+    let mut lut = [0.0f32; 256];
+    let mut accs = vec![0.0f32; n];
+    for (i, yrow) in ys.chunks_exact_mut(n).enumerate() {
+        let r = row0 + i;
+        yrow.fill(0.0);
+        for gi in 0..m.ngroups {
+            fill_lut(m.bits, m.scales[r * m.ngroups + gi], m.zeros[r * m.ngroups + gi], &mut lut);
+            let pw = &m.pair_words[r * npw + gi * m.pair_wpg..];
+            let iw = &m.idx_words[r * niw + gi * m.idx_wpg..];
+            accs.fill(0.0);
+            for b in 0..nblocks {
+                let nib = (iw[b / 8] >> ((b % 8) * 4)) & 0xF;
+                let k = 2 * b;
+                let l0 = lut[((pw[k / cpw] >> ((k % cpw) * bits)) & mask) as usize];
+                let l1 = lut[((pw[(k + 1) / cpw] >> (((k + 1) % cpw) * bits)) & mask) as usize];
+                let col0 = gi * group + b * 4 + (nib & 3) as usize;
+                let col1 = gi * group + b * 4 + ((nib >> 2) & 3) as usize;
+                for (j, a) in accs.iter_mut().enumerate() {
+                    *a += l0 * xs[j * m.dcol + col0];
+                    *a += l1 * xs[j * m.dcol + col1];
+                }
+            }
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                *yv += accs[j];
+            }
+        }
+    }
+}
+
+/// One tile of y = dequant(T) x — the scalar fallback when the active
+/// ISA has no sparse tiled microkernel. Per-row op order replays
+/// [`dot_row`] exactly (same group accumulator, same block order), so
+/// tiled ≡ flat bitwise on the scalar ISA.
+pub(crate) fn tiled_rows(t: &Sparse24Tiled, x: &[f32], tile: usize, ys: &mut [f32]) {
+    let group = t.dcol / t.ngroups;
+    let nblocks = group / 4;
+    let cpw = (32 / t.bits) as usize;
+    let bits = t.bits as usize;
+    let mask = (1u32 << t.bits) - 1;
+    let r = t.r;
+    let mut lut = [0.0f32; 256];
+    ys.fill(0.0);
+    for gi in 0..t.ngroups {
+        let gbase = (tile * t.ngroups + gi) * r;
+        let xg = &x[gi * group..];
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            fill_lut(t.bits, t.scales[gbase + rr], t.zeros[gbase + rr], &mut lut);
+            let mut acc = 0.0f32;
+            for b in 0..nblocks {
+                let iwi = (tile * t.niw + gi * t.idx_wpg + b / 8) * r + rr;
+                let nib = (t.idx_words[iwi] >> ((b % 8) * 4)) & 0xF;
+                let k = 2 * b;
+                let w0 = t.pair_words[(tile * t.npw + gi * t.pair_wpg + k / cpw) * r + rr];
+                let w1 = t.pair_words[(tile * t.npw + gi * t.pair_wpg + (k + 1) / cpw) * r + rr];
+                let c0 = (w0 >> ((k % cpw) * bits)) & mask;
+                let c1 = (w1 >> (((k + 1) % cpw) * bits)) & mask;
+                acc += lut[c0 as usize] * xg[b * 4 + (nib & 3) as usize];
+                acc += lut[c1 as usize] * xg[b * 4 + ((nib >> 2) & 3) as usize];
+            }
+            *yv += acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::rand_vec;
+    use crate::quant::rtn_quantize;
+    use crate::quant::sparse::prune_2of4_by_magnitude;
+
+    fn sample(bits: u32, g: usize, drow: usize, dcol: usize, seed: u64) -> Sparse24Matrix {
+        let w = rand_vec(drow * dcol, seed);
+        let mut q = rtn_quantize(&w, drow, dcol, bits, g);
+        prune_2of4_by_magnitude(&mut q);
+        Sparse24Matrix::from_result(&q).unwrap()
+    }
+
+    #[test]
+    fn tiled_interleave_roundtrips() {
+        let m = sample(4, 16, 10, 64, 11); // 2 full tiles + ragged
+        let t = Sparse24Tiled::from_sparse(&m);
+        assert_eq!(t.ntiles, 3);
+        for row in 0..m.drow {
+            let (tile, rr) = (row / t.r, row % t.r);
+            for wi in 0..t.npw {
+                assert_eq!(
+                    t.pair_words[(tile * t.npw + wi) * t.r + rr],
+                    m.pair_words[row * t.npw + wi]
+                );
+            }
+            for wi in 0..t.niw {
+                assert_eq!(
+                    t.idx_words[(tile * t.niw + wi) * t.r + rr],
+                    m.idx_words[row * t.niw + wi]
+                );
+            }
+            for gi in 0..t.ngroups {
+                assert_eq!(
+                    t.scales[(tile * t.ngroups + gi) * t.r + rr],
+                    m.scales[row * t.ngroups + gi]
+                );
+            }
+        }
+        // phantom rows of the last tile stay zero
+        for wi in 0..t.npw {
+            for rr in 2..t.r {
+                assert_eq!(t.pair_words[(2 * t.npw + wi) * t.r + rr], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_matches_groupwise_dense_dot_bitwise() {
+        for bits in [2u32, 3, 4, 8] {
+            for g in [0usize, 16] {
+                let (drow, dcol) = (7usize, 48usize);
+                let m = sample(bits, g, drow, dcol, 21 + bits as u64);
+                let x = rand_vec(dcol, 31);
+                let wdeq = m.dequantize();
+                let group = dcol / m.ngroups;
+                let mut y = vec![0.0f32; drow];
+                rows(&m, &x, 0, &mut y);
+                for r in 0..drow {
+                    // groupwise single-accumulator dense reference
+                    let mut want = 0.0f32;
+                    for gi in 0..m.ngroups {
+                        let mut acc = 0.0f32;
+                        for c in 0..group {
+                            acc += wdeq[r * dcol + gi * group + c] * x[gi * group + c];
+                        }
+                        want += acc;
+                    }
+                    assert_eq!(y[r].to_bits(), want.to_bits(), "bits={bits} g={g} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_replays_single_bitwise() {
+        let m = sample(4, 16, 9, 64, 3);
+        let n = 3usize;
+        let xs = rand_vec(n * 64, 5);
+        let mut ys = vec![0.0f32; 9 * n];
+        matmul_rows(&m, &xs, n, 0, &mut ys);
+        let mut lut = [0.0f32; 256];
+        for j in 0..n {
+            for r in 0..9 {
+                let want = dot_row(&m, r, &xs[j * 64..(j + 1) * 64], &mut lut);
+                assert_eq!(ys[r * n + j].to_bits(), want.to_bits(), "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_scalar_matches_flat_bitwise() {
+        for (drow, dcol, g) in [(10usize, 64usize, 16usize), (5, 48, 0), (4, 32, 8)] {
+            let m = sample(4, g, drow, dcol, 40 + drow as u64);
+            let t = Sparse24Tiled::from_sparse(&m);
+            let x = rand_vec(dcol, 7);
+            let mut flat = vec![0.0f32; drow];
+            rows(&m, &x, 0, &mut flat);
+            for tile in 0..t.ntiles {
+                let rows_here = t.r.min(drow - tile * t.r);
+                let mut ys = vec![0.0f32; rows_here];
+                tiled_rows(&t, &x, tile, &mut ys);
+                for rr in 0..rows_here {
+                    assert_eq!(
+                        ys[rr].to_bits(),
+                        flat[tile * t.r + rr].to_bits(),
+                        "tile={tile} rr={rr}"
+                    );
+                }
+            }
+        }
+    }
+}

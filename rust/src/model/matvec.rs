@@ -20,8 +20,9 @@
 //! batched kernels replay the single-sequence op order per sequence.
 //! Changing the ISA may move results within ~1e-5 elementwise.
 
-use crate::model::kernels::{self, Isa, TiledPacked};
+use crate::model::kernels::{self, Isa, Sparse24Tiled, TiledPacked};
 use crate::quant::pack::PackedMatrix;
+use crate::quant::sparse::Sparse24Matrix;
 use crate::util::par::{self, Pool, SliceParts};
 
 /// Below this many weight elements a matvec stays serial: thread spawn
@@ -395,6 +396,162 @@ pub fn matvec_tiled_bias_serial(t: &TiledPacked, x: &[f32], b: &[f32], y: &mut [
     }
 }
 
+// ---------------------------------------------------------------------------
+// 2:4 sparse entry points — the same API shape as the packed/tiled ones.
+// No x padding or Σx precompute is needed: the sparse format gathers x by
+// absolute column, and its per-group word padding is never executed.
+// ---------------------------------------------------------------------------
+
+/// y = dequant(M) x over the 2:4 sparse layout. Row-range parallel;
+/// bit-identical at every thread count. On the scalar ISA this is THE
+/// bit-frozen sparse reference (see `kernels::sparse24`).
+pub fn matvec_sparse24(m: &Sparse24Matrix, x: &[f32], y: &mut [f32]) {
+    matvec_sparse24_with(m, x, y, pool_for(m.drow * m.dcol), kernels::isa());
+}
+
+/// Serial twin of [`matvec_sparse24`] (see [`matvec_f32_serial`]).
+pub fn matvec_sparse24_serial(m: &Sparse24Matrix, x: &[f32], y: &mut [f32]) {
+    matvec_sparse24_with(m, x, y, Pool::serial(), kernels::isa());
+}
+
+/// [`matvec_sparse24`] at an explicit ISA (parity tests, benches).
+pub fn matvec_sparse24_isa(m: &Sparse24Matrix, x: &[f32], y: &mut [f32], isa: Isa) {
+    matvec_sparse24_with(m, x, y, pool_for(m.drow * m.dcol), isa);
+}
+
+fn matvec_sparse24_with(m: &Sparse24Matrix, x: &[f32], y: &mut [f32], pool: Pool, isa: Isa) {
+    assert_eq!(x.len(), m.dcol);
+    assert_eq!(y.len(), m.drow);
+    let isa = kernels::clamp(isa);
+    par::for_rows_mut(&pool, y, m.drow, 1, |rows, ys| {
+        kernels::sparse24_rows(isa, m, x, rows.start, ys);
+    });
+}
+
+/// y = dequant(M) x + b.
+pub fn matvec_sparse24_bias(m: &Sparse24Matrix, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_sparse24(m, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Serial twin of [`matvec_sparse24_bias`].
+pub fn matvec_sparse24_bias_serial(m: &Sparse24Matrix, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_sparse24_serial(m, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Batched Y = dequant(M)·X over the 2:4 sparse layout: block decodes are
+/// shared across the batch and per-sequence op order replays the single
+/// matvec — bit-identical to n independent [`matvec_sparse24`] calls.
+pub fn matmul_sparse24(m: &Sparse24Matrix, xs: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_sparse24_with(m, xs, n, ys, pool_for(m.drow * m.dcol), kernels::isa());
+}
+
+/// Serial twin of [`matmul_sparse24`].
+pub fn matmul_sparse24_serial(m: &Sparse24Matrix, xs: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_sparse24_with(m, xs, n, ys, Pool::serial(), kernels::isa());
+}
+
+/// [`matmul_sparse24`] at an explicit ISA.
+pub fn matmul_sparse24_isa(m: &Sparse24Matrix, xs: &[f32], n: usize, ys: &mut [f32], isa: Isa) {
+    matmul_sparse24_with(m, xs, n, ys, pool_for(m.drow * m.dcol), isa);
+}
+
+fn matmul_sparse24_with(
+    m: &Sparse24Matrix,
+    xs: &[f32],
+    n: usize,
+    ys: &mut [f32],
+    pool: Pool,
+    isa: Isa,
+) {
+    assert_eq!(xs.len(), n * m.dcol);
+    assert_eq!(ys.len(), m.drow * n);
+    if n == 0 {
+        return;
+    }
+    let isa = kernels::clamp(isa);
+    par::for_rows_mut(&pool, ys, m.drow, n, |rows, chunk| {
+        kernels::sparse24_matmul_rows(isa, m, xs, n, rows.start, chunk);
+    });
+}
+
+/// Batched Y = dequant(M)·X + b.
+pub fn matmul_sparse24_bias(m: &Sparse24Matrix, xs: &[f32], b: &[f32], n: usize, ys: &mut [f32]) {
+    matmul_sparse24(m, xs, n, ys);
+    add_bias_rows(ys, b, n);
+}
+
+/// Serial twin of [`matmul_sparse24_bias`].
+pub fn matmul_sparse24_bias_serial(
+    m: &Sparse24Matrix,
+    xs: &[f32],
+    b: &[f32],
+    n: usize,
+    ys: &mut [f32],
+) {
+    matmul_sparse24_serial(m, xs, n, ys);
+    add_bias_rows(ys, b, n);
+}
+
+/// y = dequant(T) x over the interleaved 2:4 tiled layout — the batch-1
+/// decode fast path when the active ISA has a sparse tiled microkernel
+/// (`kernels::sparse24_tiled_supported`); the scalar fallback replays the
+/// flat op order bitwise. Tile-range parallel; bit-identical at every
+/// thread count.
+pub fn matvec_sparse24_tiled(t: &Sparse24Tiled, x: &[f32], y: &mut [f32]) {
+    matvec_sparse24_tiled_with(t, x, y, pool_for(t.drow * t.dcol), kernels::isa());
+}
+
+/// Serial twin of [`matvec_sparse24_tiled`].
+pub fn matvec_sparse24_tiled_serial(t: &Sparse24Tiled, x: &[f32], y: &mut [f32]) {
+    matvec_sparse24_tiled_with(t, x, y, Pool::serial(), kernels::isa());
+}
+
+/// [`matvec_sparse24_tiled`] at an explicit ISA.
+pub fn matvec_sparse24_tiled_isa(t: &Sparse24Tiled, x: &[f32], y: &mut [f32], isa: Isa) {
+    matvec_sparse24_tiled_with(t, x, y, pool_for(t.drow * t.dcol), isa);
+}
+
+fn matvec_sparse24_tiled_with(t: &Sparse24Tiled, x: &[f32], y: &mut [f32], pool: Pool, isa: Isa) {
+    assert_eq!(x.len(), t.dcol);
+    assert_eq!(y.len(), t.drow);
+    let isa = kernels::clamp(isa);
+    // same tile-range partition as matvec_tiled_with (see the rationale
+    // there); disjoint per-tile output ranges over SliceParts
+    let workers = pool.nthreads().min(t.ntiles.max(1));
+    let chunk = t.ntiles.div_ceil(workers.max(1));
+    let parts = SliceParts::new(y);
+    pool.run_chunks(t.ntiles, chunk, |tr| {
+        for ti in tr {
+            let lo = ti * t.r;
+            let hi = ((ti + 1) * t.r).min(t.drow);
+            let ys = unsafe { parts.range(lo..hi) };
+            kernels::sparse24_tiled_rows(isa, t, x, ti, ys);
+        }
+    });
+}
+
+/// y = dequant(T) x + b over the 2:4 tiled layout.
+pub fn matvec_sparse24_tiled_bias(t: &Sparse24Tiled, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_sparse24_tiled(t, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
+/// Serial twin of [`matvec_sparse24_tiled_bias`].
+pub fn matvec_sparse24_tiled_bias_serial(t: &Sparse24Tiled, x: &[f32], b: &[f32], y: &mut [f32]) {
+    matvec_sparse24_tiled_serial(t, x, y);
+    for (yv, &bv) in y.iter_mut().zip(b) {
+        *yv += bv;
+    }
+}
+
 /// Weight bytes touched by one matvec — the quantity the paper's speedup
 /// model is built on (used by the Table 5 analog and the roofline helper
 /// `util::bench::achieved_gbps` to report the traffic reduction alongside
@@ -585,6 +742,42 @@ mod tests {
                     } else {
                         assert!((a - b).abs() < 1e-5, "bits={bits} isa={isa} row={row}");
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse24_paths_agree_across_isas() {
+        // quick smoke (the full sparse sweep lives in tests/sparsity.rs)
+        use crate::quant::sparse::{prune_2of4_by_magnitude, Sparse24Matrix};
+        let (drow, dcol) = (11usize, 128usize);
+        let w: Vec<f32> = rand_vec(drow * dcol, 71).iter().map(|v| v / dcol as f32).collect();
+        let mut q = rtn_quantize(&w, drow, dcol, 4, 16);
+        prune_2of4_by_magnitude(&mut q);
+        let m = Sparse24Matrix::from_result(&q).unwrap();
+        let t = Sparse24Tiled::from_sparse(&m);
+        let x = rand_vec(dcol, 72);
+        let n = 3usize;
+        let xs = rand_vec(n * dcol, 73);
+        let mut want = vec![0.0f32; drow];
+        matvec_sparse24_isa(&m, &x, &mut want, Isa::Scalar);
+        for isa in kernels::available() {
+            let (mut yf, mut yt) = (vec![0.0f32; drow], vec![0.0f32; drow]);
+            matvec_sparse24_isa(&m, &x, &mut yf, isa);
+            matvec_sparse24_tiled_isa(&t, &x, &mut yt, isa);
+            for r in 0..drow {
+                assert!((yf[r] - want[r]).abs() < 1e-5, "flat isa={isa} r={r}");
+                assert!((yt[r] - want[r]).abs() < 1e-5, "tiled isa={isa} r={r}");
+            }
+            // batched replays the single-sequence op order bitwise
+            let mut ys = vec![0.0f32; drow * n];
+            matmul_sparse24_isa(&m, &xs, n, &mut ys, isa);
+            for j in 0..n {
+                let mut y = vec![0.0f32; drow];
+                matvec_sparse24_isa(&m, &xs[j * dcol..(j + 1) * dcol], &mut y, isa);
+                for r in 0..drow {
+                    assert_eq!(ys[r * n + j].to_bits(), y[r].to_bits(), "isa={isa} r={r} j={j}");
                 }
             }
         }

@@ -16,6 +16,7 @@
 
 use super::grid::{quant_params, quantize_value};
 use super::linalg::{cholesky_upper, matmul_acc, spd_inverse};
+use super::sparse::{self, Sparsity};
 use crate::util::par::{self, Pool};
 
 /// Below this many weight elements (`drow · dcol`) the solver stays
@@ -48,11 +49,22 @@ pub struct GptqConfig {
     pub order: Order,
     /// false → naive repeated-inverse ablation (paper pre-Step-3).
     pub use_cholesky: bool,
+    /// Joint sparsify+quantize policy (SparseGPT); `None` leaves the
+    /// solver bit-identical to the pre-sparsity path.
+    pub sparsity: Sparsity,
 }
 
 impl Default for GptqConfig {
     fn default() -> Self {
-        Self { bits: 4, blocksize: 128, groupsize: 0, percdamp: 0.01, order: Order::Natural, use_cholesky: true }
+        Self {
+            bits: 4,
+            blocksize: 128,
+            groupsize: 0,
+            percdamp: 0.01,
+            order: Order::Natural,
+            use_cholesky: true,
+            sparsity: Sparsity::None,
+        }
     }
 }
 
@@ -122,6 +134,14 @@ pub fn gptq_quantize(
 ) -> Result<QuantResult, String> {
     assert_eq!(w.len(), drow * dcol);
     assert_eq!(h.len(), dcol * dcol);
+    if cfg.sparsity != Sparsity::None {
+        if cfg.order == Order::ActOrder {
+            return Err("sparsity requires natural column order".into());
+        }
+        if !cfg.use_cholesky {
+            return Err("sparsity requires the Cholesky solver".into());
+        }
+    }
     if cfg.order == Order::ActOrder {
         return gptq_act_order(w, drow, dcol, h, cfg);
     }
@@ -134,7 +154,20 @@ pub fn gptq_quantize(
         return Err(format!("groupsize {g} must divide dcol {dcol}"));
     }
     let ngroups = dcol / g;
-    let bs = cfg.blocksize.min(g).min(dcol).max(1);
+    let mut bs = cfg.blocksize.min(g).min(dcol).max(1);
+    if cfg.sparsity == Sparsity::TwoOfFour {
+        // 2:4 mask selection reads all 4 columns of a block from the
+        // CURRENT compensated weights, so solver blocks must not split an
+        // aligned 4-block: require 4 | dcol, 4 | g, and round bs up to 4.
+        if dcol % 4 != 0 {
+            return Err(format!("2:4 sparsity requires dcol % 4 == 0 (got {dcol})"));
+        }
+        if g % 4 != 0 {
+            return Err(format!("2:4 sparsity requires groupsize % 4 == 0 (got {g})"));
+        }
+        bs = (bs.div_ceil(4) * 4).min(g).min(dcol);
+    }
+    let bs = bs;
 
     let (u, mut wf) = prepare(w, drow, dcol, h, cfg.percdamp)?;
     let mut codes = vec![0u8; drow * dcol];
@@ -174,7 +207,22 @@ pub fn gptq_quantize(
                     zr_p.range(rs * ngroups..re * ngroups),
                 )
             };
-            gptq_rows(&u, wfs, cds, wqs, scs, zrs, re - rs, dcol, g, ngroups, bs, cfg.bits, grouped);
+            gptq_rows(
+                &u,
+                wfs,
+                cds,
+                wqs,
+                scs,
+                zrs,
+                re - rs,
+                dcol,
+                g,
+                ngroups,
+                bs,
+                cfg.bits,
+                grouped,
+                cfg.sparsity,
+            );
         });
     } else {
         gptq_rows(
@@ -191,6 +239,7 @@ pub fn gptq_quantize(
             bs,
             cfg.bits,
             grouped,
+            cfg.sparsity,
         );
     }
 
@@ -212,6 +261,13 @@ pub fn gptq_quantize(
 /// factor. Per-row arithmetic (grids included: [`quant_params`] is
 /// per-row min-max) never reads another row, so any row partition
 /// produces bit-identical output.
+///
+/// Sparsity (SparseGPT, solved jointly in this same sweep): a pruned
+/// weight is "quantized" to the zero-point code (dequantizes to exactly
+/// 0.0) and its full value propagates as error `w/d` through the
+/// unchanged compensation path below. With `Sparsity::None` no mask code
+/// executes and the arithmetic is bit-identical to the pre-sparsity
+/// solver (pinned by `tests/sparsity.rs`).
 #[allow(clippy::too_many_arguments)]
 fn gptq_rows(
     u: &[f64],
@@ -227,8 +283,10 @@ fn gptq_rows(
     bs: usize,
     bits: u32,
     grouped: bool,
+    sparsity: Sparsity,
 ) {
     let maxq = ((1u32 << bits) - 1) as f64;
+    let sparse = sparsity != Sparsity::None;
 
     // per-row grid from the ORIGINAL weights when ungrouped (paper default)
     if !grouped {
@@ -242,10 +300,29 @@ fn gptq_rows(
 
     let mut err = vec![0.0f64; nrows * bs];
     let mut group_buf = vec![0.0f32; nrows * g];
+    // prune mask for the current solver block (row-major, nrows × bs)
+    let mut prune: Vec<bool> = if sparse { vec![false; nrows * bs] } else { Vec::new() };
+    let mut sal: Vec<f64> = if sparse { vec![0.0; bs] } else { Vec::new() };
     let mut i1 = 0;
     while i1 < dcol {
         let i2 = (i1 + bs).min(dcol);
         let bw = i2 - i1;
+        if sparsity == Sparsity::Unstructured50 {
+            // SparseGPT iterative blocking: per row, prune the ⌊bw/2⌋
+            // lowest-saliency columns of this block, judged from the
+            // weights as compensated by all previous blocks.
+            let k = bw / 2;
+            for r in 0..nrows {
+                for (bj, j) in (i1..i2).enumerate() {
+                    let d = u[j * dcol + j];
+                    let wv = wf[r * dcol + j];
+                    sal[bj] = (wv * wv) / (d * d);
+                }
+                let pr = &mut prune[r * bs..r * bs + bw];
+                pr.fill(false);
+                sparse::mask_smallest_k(&sal[..bw], k, pr);
+            }
+        }
         for j in i1..i2 {
             // group boundary: refresh grid from the CURRENT compensated
             // weights ("always the most current updated weights")
@@ -262,6 +339,23 @@ fn gptq_rows(
                     zeros[r * ngroups + gi] = grid.zero[r];
                 }
             }
+            if sparsity == Sparsity::TwoOfFour && j % 4 == 0 {
+                // 2:4 mask for the aligned block j..j+4, chosen per row
+                // from the current compensated weights (bs % 4 == 0, so
+                // the whole block lies inside this solver block).
+                for r in 0..nrows {
+                    let mut s4 = [0.0f64; 4];
+                    for (c, sv) in s4.iter_mut().enumerate() {
+                        let d = u[(j + c) * dcol + j + c];
+                        let wv = wf[r * dcol + j + c];
+                        *sv = (wv * wv) / (d * d);
+                    }
+                    let m = sparse::mask_2of4(&s4);
+                    for c in 0..4 {
+                        prune[r * bs + (j - i1) + c] = m[c];
+                    }
+                }
+            }
             let gi = j / g;
             let d = u[j * dcol + j];
             let urow = &u[j * dcol..(j + 1) * dcol];
@@ -269,7 +363,13 @@ fn gptq_rows(
                 let s = scales[r * ngroups + gi] as f64;
                 let z = zeros[r * ngroups + gi] as f64;
                 let wv = wf[r * dcol + j];
-                let (q, dq) = quantize_value(wv, s, z, maxq);
+                let (q, dq) = if sparse && prune[r * bs + (j - i1)] {
+                    // prune: the zero-point is an integral code, so this
+                    // dequantizes to exactly 0.0 through any pack path
+                    (z, 0.0)
+                } else {
+                    quantize_value(wv, s, z, maxq)
+                };
                 codes[r * dcol + j] = q as u8;
                 wq64[r * dcol + j] = dq;
                 let e = (wv - dq) / d;
@@ -545,5 +645,79 @@ mod tests {
             let r = gptq_quantize(&w, 8, 16, &h, &GptqConfig::new(bits)).unwrap();
             assert!(r.codes.iter().all(|&c| (c as u32) < (1 << bits)));
         }
+    }
+
+    fn sparse_cfg(bits: u32, s: Sparsity) -> GptqConfig {
+        GptqConfig { sparsity: s, ..GptqConfig::new(bits) }
+    }
+
+    #[test]
+    fn unstructured50_hits_half_zeros() {
+        let (w, h, _) = case(9, 8, 64, 256);
+        let r = gptq_quantize(&w, 8, 64, &h, &sparse_cfg(4, Sparsity::Unstructured50)).unwrap();
+        let zeros = r.wq.iter().filter(|v| **v == 0.0).count();
+        let frac = zeros as f64 / r.wq.len() as f64;
+        // exactly 50% pruned (dcol=64, ⌊64/2⌋ per block-row), plus a few
+        // surviving weights that legitimately round to the zero-point
+        assert!((0.5..0.62).contains(&frac), "sparsity {frac}");
+    }
+
+    #[test]
+    fn two_of_four_invariant_on_every_block() {
+        for g in [0usize, 16] {
+            let (w, h, _) = case(10, 8, 64, 256);
+            let cfg = GptqConfig { groupsize: g, ..sparse_cfg(4, Sparsity::TwoOfFour) };
+            let r = gptq_quantize(&w, 8, 64, &h, &cfg).unwrap();
+            for (bi, block) in r.wq.chunks_exact(4).enumerate() {
+                let nz = block.iter().filter(|v| **v != 0.0).count();
+                assert!(nz <= 2, "g={g} block {bi}: {nz} nonzeros {block:?}");
+            }
+            // exactly half the weights are pruned to exact zeros
+            let zeros = r.wq.iter().filter(|v| **v == 0.0).count();
+            assert!(zeros >= r.wq.len() / 2, "g={g}: only {zeros} zeros");
+        }
+    }
+
+    #[test]
+    fn sparse_blocking_is_exact_for_2of4() {
+        // 2:4 masks depend only on aligned 4-blocks, never on the solver
+        // block size, so blocking stays a pure perf knob for this policy
+        let (w, h, _) = case(11, 6, 64, 256);
+        let full =
+            gptq_quantize(&w, 6, 64, &h, &GptqConfig { blocksize: 64, ..sparse_cfg(4, Sparsity::TwoOfFour) })
+                .unwrap();
+        let blocked =
+            gptq_quantize(&w, 6, 64, &h, &GptqConfig { blocksize: 8, ..sparse_cfg(4, Sparsity::TwoOfFour) })
+                .unwrap();
+        assert_eq!(full.codes, blocked.codes);
+        for (a, b) in full.wq.iter().zip(&blocked.wq) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn joint_solve_beats_prune_after_quantize() {
+        // the SparseGPT claim in miniature: propagating pruning error
+        // through the Cholesky compensation beats magnitude-pruning the
+        // already-quantized weights
+        let (w, h, x) = case(12, 16, 64, 256);
+        let joint = gptq_quantize(&w, 16, 64, &h, &sparse_cfg(4, Sparsity::TwoOfFour)).unwrap();
+        let mut after = gptq_quantize(&w, 16, 64, &h, &GptqConfig::new(4)).unwrap();
+        crate::quant::sparse::prune_2of4_by_magnitude(&mut after);
+        let ej = layer_sq_error(&w, &joint.wq, &x, 16, 64);
+        let ea = layer_sq_error(&w, &after.wq, &x, 16, 64);
+        assert!(ej < ea, "joint {ej} !< prune-after {ea}");
+    }
+
+    #[test]
+    fn sparsity_rejects_ablation_paths_and_bad_shapes() {
+        let (w, h, _) = case(13, 4, 16, 64);
+        let act = GptqConfig { order: Order::ActOrder, ..sparse_cfg(4, Sparsity::TwoOfFour) };
+        assert!(gptq_quantize(&w, 4, 16, &h, &act).is_err());
+        let naive = GptqConfig { use_cholesky: false, ..sparse_cfg(4, Sparsity::Unstructured50) };
+        assert!(gptq_quantize(&w, 4, 16, &h, &naive).is_err());
+        // dcol not a multiple of 4
+        let (w2, h2, _) = case(14, 4, 18, 64);
+        assert!(gptq_quantize(&w2, 4, 18, &h2, &sparse_cfg(4, Sparsity::TwoOfFour)).is_err());
     }
 }

@@ -16,6 +16,9 @@
 //!   ablation switches (greedy order, naive inverse, no damping).
 //! * [`pack`] — 2/3/4/8-bit code packing into `u32` words (the storage
 //!   format of the inference kernel).
+//! * [`sparse`] — SparseGPT-style joint sparsify+quantize: mask policies
+//!   (50% unstructured, 2:4 semi-structured) solved inside the GPTQ
+//!   column sweep, plus the 2:4 pack format the sparse kernels execute.
 
 pub mod gptq;
 pub mod grid;
@@ -23,12 +26,14 @@ pub mod linalg;
 pub mod obq;
 pub mod pack;
 pub mod rtn;
+pub mod sparse;
 
 pub use gptq::{gptq_quantize, GptqConfig, Order, QuantResult};
 pub use grid::{quant_params, quantize_value, Grid};
 pub use obq::obq_quantize;
 pub use pack::PackedMatrix;
 pub use rtn::rtn_quantize;
+pub use sparse::{Sparse24Matrix, Sparsity};
 
 /// Below this many input elements (`n · dcol`) Hessian accumulation
 /// stays serial (DESIGN.md §Parallelism, threshold rationale).

@@ -1,0 +1,382 @@
+//! Joint sparsify+quantize support (SparseGPT; Frantar & Alistarh 2023).
+//!
+//! SparseGPT's key observation is that the GPTQ column solver already
+//! contains everything one-shot pruning needs: walking columns left to
+//! right with the Cholesky-factored inverse Hessian, *zeroing* a weight is
+//! just another quantization target — the OBS error `w²/[H⁻¹]ⱼⱼ` ranks
+//! which weights to prune, and the pruning error `w/d` propagates through
+//! the exact same compensation path as quantization error. This module
+//! holds the mask-selection policies consumed by `gptq::gptq_rows` and the
+//! 2:4 semi-structured pack format the sparse kernels execute.
+//!
+//! Policies ([`Sparsity`]):
+//! * `Unstructured50` — per solver block of B columns, each row prunes the
+//!   ⌊B/2⌋ columns with the smallest saliency `w²/d²` (d = the Cholesky
+//!   diagonal, so `d² = [H⁻¹_F]ⱼⱼ` at the step the column is reached).
+//! * `TwoOfFour` — per aligned group of 4 columns, each row keeps the 2
+//!   with the largest saliency; the hardware-friendly 2:4 pattern.
+//!
+//! Pruned weights quantize to the *zero-point code*: the asymmetric grid
+//! widens to include 0 ([`crate::quant::grid::quant_params`]), so `zero`
+//! is an integral code in `[0, maxq]` and `s·(zero − zero) == 0.0`
+//! exactly. That means unstructured-sparse layers round-trip through the
+//! ordinary dense [`crate::quant::pack::PackedMatrix`] unchanged, while
+//! 2:4 layers can additionally drop into [`Sparse24Matrix`], which stores
+//! only the two surviving codes per block plus a 2-bit-pair index nibble.
+//!
+//! Determinism: mask selection is per-row arithmetic over row-local
+//! state (ties broken by column index via a total order), so the solver's
+//! threads=N ≡ threads=1 bitwise contract is preserved.
+
+use super::gptq::QuantResult;
+
+/// Weight-sparsity policy solved jointly with quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Sparsity {
+    /// Dense — the solver is bit-identical to the pre-sparsity GPTQ path.
+    #[default]
+    None,
+    /// 50% unstructured, selected per solver block by OBS saliency.
+    Unstructured50,
+    /// 2:4 semi-structured — exactly 2 survivors per 4 aligned columns.
+    TwoOfFour,
+}
+
+impl Sparsity {
+    /// CLI name (`--sparsity {none,unstructured50,2of4}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Sparsity::None => "none",
+            Sparsity::Unstructured50 => "unstructured50",
+            Sparsity::TwoOfFour => "2of4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" | "dense" => Some(Sparsity::None),
+            "unstructured50" | "unstructured" | "50" => Some(Sparsity::Unstructured50),
+            "2of4" | "2:4" | "24" => Some(Sparsity::TwoOfFour),
+            _ => None,
+        }
+    }
+
+    /// `GPTQ_SPARSITY` env (same contract as `GPTQ_ISA` / `GPTQ_KV_DTYPE`);
+    /// unset or unparsable → `None` (dense).
+    pub fn from_env() -> Self {
+        std::env::var("GPTQ_SPARSITY").ok().and_then(|v| Self::parse(&v)).unwrap_or_default()
+    }
+}
+
+impl std::fmt::Display for Sparsity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Mark the `k` smallest saliencies in `sal` as pruned (`prune[i] = true`).
+/// Ties break by column index (total order), so the mask is deterministic
+/// for any input — including duplicated saliencies and dead columns.
+pub fn mask_smallest_k(sal: &[f64], k: usize, prune: &mut [bool]) {
+    debug_assert_eq!(sal.len(), prune.len());
+    let mut order: Vec<usize> = (0..sal.len()).collect();
+    order.sort_unstable_by(|&a, &b| sal[a].total_cmp(&sal[b]).then(a.cmp(&b)));
+    for &i in order.iter().take(k.min(sal.len())) {
+        prune[i] = true;
+    }
+}
+
+/// The 2:4 policy for one aligned block: prune the 2 smallest of the 4
+/// saliencies (ties by index). Always prunes exactly two.
+pub fn mask_2of4(sal: &[f64; 4]) -> [bool; 4] {
+    let mut order = [0usize, 1, 2, 3];
+    order.sort_unstable_by(|&a, &b| sal[a].total_cmp(&sal[b]).then(a.cmp(&b)));
+    let mut m = [false; 4];
+    m[order[0]] = true;
+    m[order[1]] = true;
+    m
+}
+
+/// 2:4 semi-structured packed matrix: per 4-column block only the two
+/// surviving codes are stored (a contiguous little-endian code stream at
+/// `bits` per code, like [`crate::quant::pack::pack_row`]) plus one index
+/// nibble `(i1 << 2) | i0` with `i0 < i1` naming the surviving columns.
+///
+/// Both streams are padded to a whole `u32` word *per group*, so every
+/// group starts word-aligned and the kernels never straddle a group
+/// boundary mid-word. At 4-bit this stores 12 bits per 4 weights against
+/// the dense packed format's 16 — a 1.33× weight-traffic cut on top of
+/// halving the multiply count, which is where the batch-1 decode speedup
+/// comes from (the matvec is memory-bound; see DESIGN.md §Sparsity).
+///
+/// Grids (`scales`/`zeros`) are per row × group exactly as in
+/// `PackedMatrix`, and `s·(zero − zero) == 0.0` keeps padded survivor
+/// slots (blocks with fewer than 2 nonzero codes) exact zeros.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sparse24Matrix {
+    /// Surviving codes, `drow × (ngroups · pair_wpg)` words.
+    pub pair_words: Vec<u32>,
+    /// Index nibbles, `drow × (ngroups · idx_wpg)` words (8 nibbles/word).
+    pub idx_words: Vec<u32>,
+    /// Per row × group scale, `drow × ngroups`.
+    pub scales: Vec<f32>,
+    /// Per row × group zero point (an integral code), `drow × ngroups`.
+    pub zeros: Vec<f32>,
+    pub drow: usize,
+    pub dcol: usize,
+    pub ngroups: usize,
+    pub bits: u32,
+    /// Pair-code words per group: `ceil((group/2) / (32/bits))`.
+    pub pair_wpg: usize,
+    /// Index words per group: `ceil((group/4) / 8)`.
+    pub idx_wpg: usize,
+}
+
+impl Sparse24Matrix {
+    /// Pack a solver result whose codes satisfy the 2:4 invariant (at most
+    /// 2 non-zero-point codes per aligned 4-block — the output of
+    /// `gptq_quantize` with [`Sparsity::TwoOfFour`]). Survivors are the
+    /// non-zero-point codes, padded to exactly 2 with the lowest-index
+    /// zero-point columns (which dequantize to exactly 0.0, so the padding
+    /// is value-neutral). Errors if any block has 3+ nonzero codes.
+    pub fn from_result(q: &QuantResult) -> Result<Self, String> {
+        let (drow, dcol, ngroups, bits) = (q.drow, q.dcol, q.ngroups, q.bits);
+        if dcol % 4 != 0 {
+            return Err(format!("sparse24: dcol {dcol} not a multiple of 4"));
+        }
+        if dcol % ngroups != 0 {
+            return Err(format!("sparse24: ngroups {ngroups} does not divide dcol {dcol}"));
+        }
+        let group = dcol / ngroups;
+        if group % 4 != 0 {
+            return Err(format!("sparse24: group {group} not a multiple of 4"));
+        }
+        if !(1..=8).contains(&bits) {
+            return Err(format!("sparse24: unsupported bit width {bits}"));
+        }
+        let cpw = (32 / bits) as usize;
+        let nblocks = group / 4;
+        let pair_wpg = (group / 2).div_ceil(cpw);
+        let idx_wpg = nblocks.div_ceil(8);
+        let npw = ngroups * pair_wpg;
+        let niw = ngroups * idx_wpg;
+        let mut pair_words = vec![0u32; drow * npw];
+        let mut idx_words = vec![0u32; drow * niw];
+        for r in 0..drow {
+            for gi in 0..ngroups {
+                let zc = q.zeros[r * ngroups + gi] as u32;
+                let pw = &mut pair_words[r * npw + gi * pair_wpg..r * npw + (gi + 1) * pair_wpg];
+                let iw = &mut idx_words[r * niw + gi * idx_wpg..r * niw + (gi + 1) * idx_wpg];
+                for b in 0..nblocks {
+                    let col0 = gi * group + b * 4;
+                    // survivors: non-zero-point codes, then zero-point
+                    // columns in ascending order as value-neutral padding
+                    let mut keep = [0usize; 2];
+                    let mut nkeep = 0usize;
+                    for c in 0..4 {
+                        if q.codes[r * dcol + col0 + c] as u32 != zc {
+                            if nkeep == 2 {
+                                return Err(format!(
+                                    "sparse24: row {r} block at col {col0} has 3+ nonzero codes"
+                                ));
+                            }
+                            keep[nkeep] = c;
+                            nkeep += 1;
+                        }
+                    }
+                    for c in 0..4 {
+                        if nkeep == 2 {
+                            break;
+                        }
+                        if q.codes[r * dcol + col0 + c] as u32 == zc {
+                            // keep `keep` sorted ascending (i0 < i1)
+                            if nkeep == 1 && keep[0] > c {
+                                keep[1] = keep[0];
+                                keep[0] = c;
+                            } else {
+                                keep[nkeep] = c;
+                            }
+                            nkeep += 1;
+                        }
+                    }
+                    for (slot, &c) in keep.iter().enumerate() {
+                        let k = 2 * b + slot;
+                        let code = q.codes[r * dcol + col0 + c] as u32;
+                        pw[k / cpw] |= code << ((k % cpw) * bits as usize);
+                    }
+                    let nib = ((keep[1] as u32) << 2) | keep[0] as u32;
+                    iw[b / 8] |= nib << ((b % 8) * 4);
+                }
+            }
+        }
+        Ok(Self {
+            pair_words,
+            idx_words,
+            scales: q.scales.clone(),
+            zeros: q.zeros.clone(),
+            drow,
+            dcol,
+            ngroups,
+            bits,
+            pair_wpg,
+            idx_wpg,
+        })
+    }
+
+    /// Words per row in `pair_words`.
+    pub fn npair_words(&self) -> usize {
+        self.ngroups * self.pair_wpg
+    }
+
+    /// Words per row in `idx_words`.
+    pub fn nidx_words(&self) -> usize {
+        self.ngroups * self.idx_wpg
+    }
+
+    /// Dense dequantized matrix (pruned entries exactly 0.0) — the
+    /// reference the sparse kernels are tested against.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let group = self.dcol / self.ngroups;
+        let nblocks = group / 4;
+        let cpw = (32 / self.bits) as usize;
+        let mask = if self.bits == 32 { u32::MAX } else { (1u32 << self.bits) - 1 };
+        let (npw, niw) = (self.npair_words(), self.nidx_words());
+        let mut out = vec![0.0f32; self.drow * self.dcol];
+        for r in 0..self.drow {
+            for gi in 0..self.ngroups {
+                let s = self.scales[r * self.ngroups + gi];
+                let z = self.zeros[r * self.ngroups + gi];
+                let pw = &self.pair_words[r * npw + gi * self.pair_wpg..];
+                let iw = &self.idx_words[r * niw + gi * self.idx_wpg..];
+                for b in 0..nblocks {
+                    let nib = (iw[b / 8] >> ((b % 8) * 4)) & 0xF;
+                    let (i0, i1) = ((nib & 3) as usize, ((nib >> 2) & 3) as usize);
+                    for (slot, idx) in [i0, i1].into_iter().enumerate() {
+                        let k = 2 * b + slot;
+                        let code = (pw[k / cpw] >> ((k % cpw) * self.bits as usize)) & mask;
+                        out[r * self.dcol + gi * group + b * 4 + idx] = s * (code as f32 - z);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total resident bytes (codes + indices + grids).
+    pub fn storage_bytes(&self) -> usize {
+        (self.pair_words.len() + self.idx_words.len()) * 4
+            + (self.scales.len() + self.zeros.len()) * 4
+    }
+
+    /// Achieved bits per (dense-equivalent) weight including indices and
+    /// grids — at 4-bit per-row this approaches `2·4/4 + 1 = 3` bits.
+    pub fn effective_bits(&self) -> f64 {
+        self.storage_bytes() as f64 * 8.0 / (self.drow * self.dcol) as f64
+    }
+
+    /// The 2:4 invariant, checkable on any instance: dequantized blocks
+    /// carry at most 2 nonzeros. (`from_result` enforces it on codes; this
+    /// re-derives it from values for tests and checkpoint loads.)
+    pub fn check_2of4(&self) -> bool {
+        let w = self.dequantize();
+        w.chunks_exact(4).all(|b| b.iter().filter(|v| **v != 0.0).count() <= 2)
+    }
+}
+
+/// Magnitude-based 2:4 pruning applied *after* quantization: per aligned
+/// 4-block keep the 2 largest `|wq|`, rewriting pruned codes to the
+/// zero-point. This is NOT the joint solver (no error compensation) — it
+/// exists so kernel tests and benches can produce valid 2:4 operands
+/// without a Hessian, and as the naive baseline the joint path beats.
+pub fn prune_2of4_by_magnitude(q: &mut QuantResult) {
+    assert_eq!(q.dcol % 4, 0, "2:4 pruning needs dcol % 4 == 0");
+    let group = q.dcol / q.ngroups;
+    assert_eq!(group % 4, 0, "2:4 pruning needs group % 4 == 0");
+    for r in 0..q.drow {
+        for b in 0..q.dcol / 4 {
+            let col0 = b * 4;
+            let mut sal = [0.0f64; 4];
+            for c in 0..4 {
+                let v = q.wq[r * q.dcol + col0 + c] as f64;
+                sal[c] = v * v;
+            }
+            let m = mask_2of4(&sal);
+            for c in 0..4 {
+                if m[c] {
+                    let gi = (col0 + c) / group;
+                    q.codes[r * q.dcol + col0 + c] = q.zeros[r * q.ngroups + gi] as u8;
+                    q.wq[r * q.dcol + col0 + c] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::rand_vec;
+    use crate::quant::rtn::rtn_quantize;
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for s in [Sparsity::None, Sparsity::Unstructured50, Sparsity::TwoOfFour] {
+            assert_eq!(Sparsity::parse(s.name()), Some(s));
+        }
+        assert_eq!(Sparsity::parse("2:4"), Some(Sparsity::TwoOfFour));
+        assert_eq!(Sparsity::parse("bogus"), None);
+    }
+
+    #[test]
+    fn mask_smallest_k_is_deterministic_on_ties() {
+        let sal = [1.0f64, 0.0, 0.0, 0.0, 2.0];
+        let mut p = [false; 5];
+        mask_smallest_k(&sal, 2, &mut p);
+        assert_eq!(p, [false, true, true, false, false]);
+    }
+
+    #[test]
+    fn mask_2of4_prunes_exactly_two() {
+        let m = mask_2of4(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(m, [false, true, false, true]);
+        let all_equal = mask_2of4(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(all_equal.iter().filter(|v| **v).count(), 2);
+    }
+
+    #[test]
+    fn pack_dequant_round_trips_magnitude_pruned_rtn() {
+        for bits in [2u32, 3, 4, 8] {
+            for g in [0usize, 16] {
+                let (drow, dcol) = (6usize, 48usize);
+                let w = rand_vec(drow * dcol, 9 + bits as u64);
+                let mut q = rtn_quantize(&w, drow, dcol, bits, g);
+                prune_2of4_by_magnitude(&mut q);
+                let s = Sparse24Matrix::from_result(&q).unwrap();
+                assert!(s.check_2of4());
+                let deq = s.dequantize();
+                for (i, (a, b)) in deq.iter().zip(&q.wq).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} g={g} i={i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_result_rejects_dense_blocks() {
+        let w = rand_vec(4 * 16, 77);
+        let q = rtn_quantize(&w, 4, 16, 4, 0);
+        // random dense codes essentially surely have a 3+-nonzero block
+        assert!(Sparse24Matrix::from_result(&q).is_err());
+    }
+
+    #[test]
+    fn storage_is_smaller_than_dense_packed() {
+        let w = rand_vec(8 * 128, 5);
+        let mut q = rtn_quantize(&w, 8, 128, 4, 0);
+        prune_2of4_by_magnitude(&mut q);
+        let s = Sparse24Matrix::from_result(&q).unwrap();
+        let dense = crate::quant::pack::PackedMatrix::from_result(&q);
+        assert!(s.storage_bytes() < dense.storage_bytes());
+        assert!(s.effective_bits() < 3.5, "{}", s.effective_bits());
+    }
+}

@@ -11,10 +11,13 @@
 //! tables table6     2-bit group-size sweep                (paper Table 6)
 //! tables fig4       zero-shot accuracy                    (paper Figure 4, Tables 14–23)
 //! tables ablations  order/Cholesky/damping/propagation    (paper §3.3 design choices)
+//! tables sparse     joint sparsify+quantize comparison    (SparseGPT-style follow-up)
 //! tables all        everything above
 //! ```
 //!
-//! Flags: `--sizes nano,micro,small` `--segments N` `--calib N`.
+//! Flags: `--sizes nano,micro,small` `--segments N` `--calib N`
+//! `--sparsity none|unstructured50|2of4` (or `GPTQ_SPARSITY`; applies the
+//! regime to every GPTQ solve — RTN/OBQ baselines stay dense).
 //! Absolute numbers are testbed-specific; the *shape* (who wins, by what
 //! factor, where RTN collapses) is the reproduction target.
 
@@ -22,7 +25,7 @@ use crate::coordinator::{PipelineConfig, QuantEngine, QuantPipeline};
 use crate::data::{load_tasks, CorpusFile};
 use crate::eval::{eval_choice, eval_cloze, perplexity};
 use crate::model::{Checkpoint, CpuModel, KvCache, QuantizedCheckpoint};
-use crate::quant::{self, gptq_quantize, obq_quantize, GptqConfig, Order};
+use crate::quant::{self, gptq_quantize, obq_quantize, GptqConfig, Order, Sparsity};
 use crate::runtime::Runtime;
 use crate::util::cli::Args;
 use crate::Result;
@@ -34,8 +37,11 @@ pub struct Ctx {
     sizes: Vec<String>,
     segments: usize,
     calib_segments: usize,
-    /// (size, bits, groupsize, engine-tag) -> quantized checkpoint + runtime
-    cache: HashMap<(String, u32, usize, &'static str), (QuantizedCheckpoint, f64)>,
+    /// sparsity regime for GPTQ solves (`--sparsity` / `GPTQ_SPARSITY`)
+    sparsity: Sparsity,
+    /// (size, bits, groupsize, engine-tag, sparsity-tag) -> quantized
+    /// checkpoint + runtime
+    cache: HashMap<(String, u32, usize, &'static str, &'static str), (QuantizedCheckpoint, f64)>,
 }
 
 impl Ctx {
@@ -46,11 +52,18 @@ impl Ctx {
             Some(s) => s.split(',').map(String::from).filter(|s| !s.is_empty()).collect(),
             None => all,
         };
+        let sparsity = match args.get("sparsity") {
+            Some(s) => Sparsity::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown --sparsity {s:?} (none|unstructured50|2of4)")
+            })?,
+            None => Sparsity::from_env(),
+        };
         Ok(Self {
             rt,
             sizes,
             segments: args.usize_or("segments", 16),
             calib_segments: args.usize_or("calib", 32),
+            sparsity,
             cache: HashMap::new(),
         })
     }
@@ -69,7 +82,9 @@ impl Ctx {
         }
     }
 
-    /// Quantize (cached) and return (checkpoint, pipeline seconds).
+    /// Quantize (cached) and return (checkpoint, pipeline seconds). The
+    /// `--sparsity` regime applies to GPTQ solves; RTN/OBQ rows stay dense
+    /// (the joint mask selection lives in the Cholesky solver).
     fn quantized(
         &mut self,
         size: &str,
@@ -77,14 +92,27 @@ impl Ctx {
         groupsize: usize,
         engine: QuantEngine,
     ) -> Result<(QuantizedCheckpoint, f64)> {
-        let key = (size.to_string(), bits, groupsize, Self::engine_tag(engine));
+        let sp = if engine == QuantEngine::GptqRust { self.sparsity } else { Sparsity::None };
+        self.quantized_sparse(size, bits, groupsize, engine, sp)
+    }
+
+    fn quantized_sparse(
+        &mut self,
+        size: &str,
+        bits: u32,
+        groupsize: usize,
+        engine: QuantEngine,
+        sparsity: Sparsity,
+    ) -> Result<(QuantizedCheckpoint, f64)> {
+        let key = (size.to_string(), bits, groupsize, Self::engine_tag(engine), sparsity.name());
         if let Some(v) = self.cache.get(&key) {
             return Ok(v.clone_pair());
         }
         let entry = self.rt.manifest.model(size)?.clone();
         let mut ckpt = Checkpoint::load(&crate::artifacts_dir(), &entry)?;
         let calib = CorpusFile::load(&self.rt.manifest.corpus_path("calib.bin"))?;
-        let mut cfg = PipelineConfig::new(bits, engine).with_groupsize(groupsize);
+        let mut cfg =
+            PipelineConfig::new(bits, engine).with_groupsize(groupsize).with_sparsity(sparsity);
         cfg.n_calib_segments = self.calib_segments;
         let report = QuantPipeline::new(&mut self.rt, size, cfg).run(&mut ckpt, &calib)?;
         let out = (report.checkpoint, report.total_s);
@@ -542,6 +570,45 @@ pub fn ablations(ctx: &mut Ctx) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Sparsity — the SparseGPT-style follow-up experiment
+// ---------------------------------------------------------------------------
+
+pub fn sparse(ctx: &mut Ctx) -> Result<()> {
+    let size = ctx.sizes.last().cloned().unwrap_or_else(|| "small".into());
+    println!("\n== Sparsity: joint sparsify+quantize at 4-bit ({size}, narrative) ==");
+    println!("SparseGPT-style: masks chosen inside the GPTQ solver by OBS saliency w²/[H⁻¹]ⱼⱼ,");
+    println!("pruning error propagated through the same Cholesky path; 2:4 packs into the");
+    println!("index-skipping sparse layout (DESIGN.md §Sparsity)");
+    let mut fp = ctx.fp_model(&size)?;
+    let p_fp = ctx.ppl(&mut fp, "narrative")?;
+    hline(80);
+    println!(
+        "{:<16} {:>10} {:>14} {:>14} {:>12}",
+        "mode", "ppl", "mean sq-err", "weight bytes", "eff. bits"
+    );
+    hline(80);
+    let fp_bytes: usize = {
+        let entry = ctx.rt.manifest.model(&size)?.clone();
+        entry.config.quantizable_bytes_f32()
+    };
+    println!("{:<16} {:>10.3} {:>14} {:>14} {:>12}", "fp32", p_fp, "-", fp_bytes, "32.00");
+    for sp in [Sparsity::None, Sparsity::Unstructured50, Sparsity::TwoOfFour] {
+        let (qc, _) = ctx.quantized_sparse(&size, 4, 0, QuantEngine::GptqRust, sp)?;
+        let mut m = CpuModel::from_quantized(&qc);
+        let ppl = ctx.ppl(&mut m, "narrative")?;
+        let err = qc.stats.iter().map(|s| s.sq_error).sum::<f64>() / qc.stats.len().max(1) as f64;
+        let n_weights: usize = qc.packed.values().map(|p| p.drow * p.dcol).sum::<usize>()
+            + qc.sparse.values().map(|s| s.drow * s.dcol).sum::<usize>();
+        let bytes = qc.packed_bytes();
+        let eff = bytes as f64 * 8.0 / n_weights as f64;
+        println!("{:<16} {:>10.3} {:>14.4e} {:>14} {:>12.2}", sp.name(), ppl, err, bytes, eff);
+    }
+    println!("shape: unstructured50 ≈ dense ppl at the same stored bits; 2of4 trades a small");
+    println!("ppl gap for the structured layout the batch-1 kernels exploit (kernel_sweep)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 
 pub fn main_cli() -> Result<()> {
     let args = Args::from_env();
@@ -558,6 +625,7 @@ pub fn main_cli() -> Result<()> {
         "table6" => table6(&mut ctx)?,
         "fig4" => fig4(&mut ctx)?,
         "ablations" => ablations(&mut ctx)?,
+        "sparse" => sparse(&mut ctx)?,
         "all" => {
             table1(&mut ctx)?;
             fig1(&mut ctx)?;
@@ -568,9 +636,10 @@ pub fn main_cli() -> Result<()> {
             table6(&mut ctx)?;
             fig4(&mut ctx)?;
             ablations(&mut ctx)?;
+            sparse(&mut ctx)?;
         }
         other => anyhow::bail!(
-            "unknown table {other}; one of table1|fig1|table2|fig3|table4|table5|table6|fig4|ablations|all"
+            "unknown table {other}; one of table1|fig1|table2|fig3|table4|table5|table6|fig4|ablations|sparse|all"
         ),
     }
     eprintln!("\n[{which} done in {:.1}s]", t0.elapsed().as_secs_f64());
