@@ -61,13 +61,13 @@ fn main() -> gptq_rs::Result<()> {
         let t0 = Instant::now();
         for i in 0..n_requests {
             let start = (i * 257) % (corpus.len() - 40);
-            server.submit(GenRequest {
-                id: i as u64,
-                prompt: corpus.bytes[start..start + 24].to_vec(),
-                max_new_tokens: gen_tokens,
-            });
+            server.submit(GenRequest::new(
+                i as u64,
+                corpus.bytes[start..start + 24].to_vec(),
+                gen_tokens,
+            ))?;
         }
-        let responses = server.collect(n_requests);
+        let responses = server.collect(n_requests)?;
         let wall_s = t0.elapsed().as_secs_f64();
         let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
         let metrics = server.shutdown();

@@ -1,8 +1,11 @@
 //! Latency/throughput metrics for the serving harness — the measurement
 //! side of the Table 5 analog ("average per-token latency, batch size 1,
 //! generating sequences of length 128"), extended with the multi-user
-//! serving dimensions (queue wait, time-to-first-token) the
-//! continuous-batching scheduler reports per request.
+//! serving dimensions (queue wait, time-to-first-token, per-class TTFT,
+//! terminal-outcome counts) the continuous-batching scheduler reports
+//! per request.
+
+use crate::coordinator::serve::{Class, GenOutcome};
 
 /// Online latency statistics over recorded samples (milliseconds).
 #[derive(Debug, Clone, Default)]
@@ -112,10 +115,29 @@ pub struct ServeMetrics {
     pub per_token: LatencyStats,
     /// one sample per request: wall-clock spent consuming its prompt
     pub prefill: LatencyStats,
-    /// one sample per request: submit → first generated token available
+    /// one sample per request: submit → first generated token available.
+    /// Requests that never emit a token (zero-token completions, sheds)
+    /// contribute NO sample — the old 0.0 sentinel dragged p50 down and
+    /// polluted the perfgate TTFT keys
     pub ttft: LatencyStats,
+    /// TTFT restricted to `Interactive` requests (the per-class SLO view
+    /// the overload bench gates on)
+    pub ttft_interactive: LatencyStats,
+    /// TTFT restricted to `Batch` requests
+    pub ttft_batch: LatencyStats,
     /// one sample per request: submit → admitted to a scheduler slot
     pub queue_wait: LatencyStats,
+    /// terminal outcomes (exactly one per submitted request — see
+    /// `GenOutcome`); `completed` includes zero-token completions
+    pub completed: usize,
+    pub rejected: usize,
+    pub timed_out: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    /// `Completed` requests that emitted no token (`max_new_tokens` 0,
+    /// EOS as the first pick) — counted here instead of as a 0.0 TTFT
+    /// sample
+    pub no_token_requests: usize,
     /// admissions that consulted the prefix cache (cache enabled and a
     /// shareable prompt, i.e. ≥ 2 tokens — the cap at plen − 1 makes a
     /// 1-token prompt structurally unshareable; re-admissions after
@@ -133,9 +155,54 @@ impl ServeMetrics {
         Self::default()
     }
 
-    /// Requests observed (every dimension but `per_token` is per-request).
+    /// Requests that reached a slot (every admitted request records
+    /// exactly one queue-wait sample). Requests resolved without
+    /// admission — validation rejects, queue-bound sheds, deadline sheds
+    /// — appear in [`ServeMetrics::terminals`] but not here.
     pub fn requests(&self) -> usize {
         self.queue_wait.count()
+    }
+
+    /// Count one terminal outcome (called exactly once per request).
+    pub fn record_outcome(&mut self, outcome: GenOutcome) {
+        match outcome {
+            GenOutcome::Completed => self.completed += 1,
+            GenOutcome::Rejected => self.rejected += 1,
+            GenOutcome::TimedOut => self.timed_out += 1,
+            GenOutcome::Cancelled => self.cancelled += 1,
+            GenOutcome::Failed => self.failed += 1,
+        }
+    }
+
+    /// Total terminal responses issued — with exactly-one-terminal
+    /// semantics, this equals the number of submitted requests.
+    pub fn terminals(&self) -> usize {
+        self.completed + self.rejected + self.timed_out + self.cancelled + self.failed
+    }
+
+    /// Fraction of terminals shed by admission control or deadlines
+    /// (`Rejected` + `TimedOut`); 0.0 before any terminal.
+    pub fn shed_rate(&self) -> f64 {
+        let t = self.terminals();
+        if t == 0 {
+            return 0.0;
+        }
+        (self.rejected + self.timed_out) as f64 / t as f64
+    }
+
+    /// Per-class TTFT view.
+    pub fn ttft_class(&self, class: Class) -> &LatencyStats {
+        match class {
+            Class::Interactive => &self.ttft_interactive,
+            Class::Batch => &self.ttft_batch,
+        }
+    }
+
+    pub fn ttft_class_mut(&mut self, class: Class) -> &mut LatencyStats {
+        match class {
+            Class::Interactive => &mut self.ttft_interactive,
+            Class::Batch => &mut self.ttft_batch,
+        }
     }
 
     /// Fraction of prefix-cache consultations that hit (0.0 when the
@@ -151,7 +218,15 @@ impl ServeMetrics {
         self.per_token.merge(&other.per_token);
         self.prefill.merge(&other.prefill);
         self.ttft.merge(&other.ttft);
+        self.ttft_interactive.merge(&other.ttft_interactive);
+        self.ttft_batch.merge(&other.ttft_batch);
         self.queue_wait.merge(&other.queue_wait);
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.timed_out += other.timed_out;
+        self.cancelled += other.cancelled;
+        self.failed += other.failed;
+        self.no_token_requests += other.no_token_requests;
         self.prefix_lookups += other.prefix_lookups;
         self.prefix_hits += other.prefix_hits;
         self.prefill_tokens_saved += other.prefill_tokens_saved;
@@ -164,7 +239,8 @@ impl ServeMetrics {
         let queue = self.queue_wait.percentiles(&[50.0, 99.0]);
         format!(
             "per-token {} | ttft p50={:.3}ms p99={:.3}ms | queue-wait p50={:.3}ms p99={:.3}ms | \
-             prefix-cache hit-rate={:.2} saved={} tokens",
+             prefix-cache hit-rate={:.2} saved={} tokens | outcomes completed={} rejected={} \
+             timed-out={} cancelled={} failed={} (shed-rate={:.2}, no-token={})",
             self.per_token.summary(),
             ttft[0],
             ttft[1],
@@ -172,6 +248,13 @@ impl ServeMetrics {
             queue[1],
             self.cache_hit_rate(),
             self.prefill_tokens_saved,
+            self.completed,
+            self.rejected,
+            self.timed_out,
+            self.cancelled,
+            self.failed,
+            self.shed_rate(),
+            self.no_token_requests,
         )
     }
 }
@@ -328,6 +411,52 @@ mod tests {
         assert_eq!(a.prefix_hits, 3);
         assert_eq!(a.prefill_tokens_saved, 42);
         assert!((a.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_counters_and_shed_rate() {
+        let mut m = ServeMetrics::new();
+        assert_eq!(m.shed_rate(), 0.0, "no terminals yet");
+        for o in [
+            GenOutcome::Completed,
+            GenOutcome::Completed,
+            GenOutcome::Rejected,
+            GenOutcome::TimedOut,
+            GenOutcome::Cancelled,
+            GenOutcome::Failed,
+        ] {
+            m.record_outcome(o);
+        }
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.timed_out, 1);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.terminals(), 6);
+        assert!((m.shed_rate() - 2.0 / 6.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("completed=2"), "{s}");
+        assert!(s.contains("failed=1"), "{s}");
+    }
+
+    #[test]
+    fn per_class_ttft_and_outcomes_merge() {
+        let mut a = ServeMetrics::new();
+        a.ttft_class_mut(Class::Interactive).record_ms(5.0);
+        a.record_outcome(GenOutcome::Completed);
+        a.no_token_requests = 1;
+        let mut b = ServeMetrics::new();
+        b.ttft_class_mut(Class::Batch).record_ms(50.0);
+        b.record_outcome(GenOutcome::TimedOut);
+        b.record_outcome(GenOutcome::Failed);
+        a.merge(&b);
+        assert_eq!(a.ttft_class(Class::Interactive).count(), 1);
+        assert_eq!(a.ttft_class(Class::Batch).count(), 1);
+        assert!((a.ttft_batch.mean() - 50.0).abs() < 1e-12);
+        assert_eq!(a.terminals(), 3);
+        assert_eq!(a.timed_out, 1);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.no_token_requests, 1);
     }
 
     #[test]

@@ -8,14 +8,18 @@
 //!   block's calibration inputs — the paper's "actual layer inputs in the
 //!   already partially quantized" trick.
 //! * [`serve`] — the generation server: request router over worker
-//!   replicas, per-request/per-token latency metrics (the Table 5
-//!   measurement harness), plus the [`serve::verify_parity`] pre-flight
-//!   check that compares the serving decode path against the runtime's
-//!   execution backend before workers start.
+//!   replicas with fault isolation (a panicking worker is reaped and its
+//!   requests replayed on survivors with a bounded retry budget),
+//!   per-request/per-token latency metrics (the Table 5 measurement
+//!   harness), plus the [`serve::verify_parity`] pre-flight check that
+//!   compares the serving decode path against the runtime's execution
+//!   backend before workers start.
 //! * [`scheduler`] — the continuous-batching loop each worker runs:
 //!   iteration-level admission/eviction over a paged KV pool, one
 //!   batched decode step per iteration for all in-flight sequences,
-//!   preempt + FIFO re-queue backpressure when the pool is exhausted.
+//!   preempt + FIFO re-queue backpressure when the pool is exhausted,
+//!   SLO enforcement (priority classes, per-class queue bounds, TTFT and
+//!   total deadlines, cooperative cancellation — DESIGN.md §Robustness).
 //! * [`prefixcache`] — the radix prompt cache admission consults: a
 //!   page-granular token-prefix trie over the KV pool, so requests
 //!   sharing a system/few-shot prefix fork already-computed pages
@@ -33,4 +37,6 @@ pub use metrics::{LatencyStats, ServeMetrics};
 pub use pipeline::{QuantEngine, QuantPipeline, PipelineConfig, PipelineReport};
 pub use prefixcache::PrefixCache;
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use serve::{verify_parity, GenRequest, GenResponse, Server, ServerConfig};
+pub use serve::{
+    verify_parity, Class, GenOutcome, GenRequest, GenResponse, ServeError, Server, ServerConfig,
+};

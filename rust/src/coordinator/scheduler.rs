@@ -10,43 +10,75 @@
 //! regime — with KV state in pages from a bounded [`KvPool`].
 //!
 //! One `step()` (a *tick*):
-//! 1. **Admit** queued requests while slots (`max_batch`) and pool pages
-//!    allow. Admission first consults the [`PrefixCache`]: the longest
-//!    cached page-granular prefix of the prompt (capped at `plen − 1`,
-//!    so the last prompt position is always recomputed — its logits
-//!    pick the first token) is FORKED into the new sequence
-//!    ([`KvPool::fork_pages`], a refcount bump) and only the uncached
-//!    suffix is enqueued as chunked prefill. A request is admitted only
-//!    when the pool can hold its remaining prompt + first token on top
-//!    of what already-running sequences still need through their own
-//!    prompts (including any pending copy-on-write page), so admission
-//!    bursts don't overcommit the pool against prefill work
-//!    (decode-phase growth is not reserved — preemption handles it).
-//! 2. **Advance**: one batched decode sub-step over all running
+//! 1. **Shed/timeout**: queued requests past their TTFT or total
+//!    deadline are shed (`TimedOut`, never admitted — the pool is not
+//!    spent on an answer nobody is waiting for); running sequences past
+//!    their total deadline are stopped, their pages reclaimed, and their
+//!    partial tokens returned.
+//! 2. **Admit** queued requests while slots (`max_batch`) and pool pages
+//!    allow, in strict priority order: every queued `Interactive`
+//!    request goes before any `Batch` one (within a class, FIFO). A
+//!    class head that does not fit blocks lower classes too — skipping
+//!    ahead would let Batch work starve the very Interactive request the
+//!    classes exist to protect. Admission first consults the
+//!    [`PrefixCache`]: the longest cached page-granular prefix of the
+//!    prompt (capped at `plen − 1`, so the last prompt position is
+//!    always recomputed — its logits pick the first token) is FORKED
+//!    into the new sequence ([`KvPool::fork_pages`], a refcount bump)
+//!    and only the uncached suffix is enqueued as chunked prefill. A
+//!    request is admitted only when the pool can hold its remaining
+//!    prompt + first token on top of what already-running sequences
+//!    still need through their own prompts (including any pending
+//!    copy-on-write page), so admission bursts don't overcommit the pool
+//!    against prefill work (decode-phase growth is not reserved —
+//!    preemption handles it).
+//! 3. **Advance**: one batched decode sub-step over all running
 //!    sequences — each consumes its next prompt token (chunked prefill)
 //!    or its last generated token (decode) — then up to
 //!    `prefill_chunk − 1` extra sub-steps for sequences still in
 //!    prefill, so long prompts ramp quickly without stalling decoders
 //!    for more than one token. A sequence finishing prefill indexes its
 //!    full prompt pages into the prefix cache.
-//! 3. **Reclaim**: finished sequences (max tokens, `max_seq`/pool length
-//!    cap, or the optional EOS byte) release their pages (shared pages
-//!    stay resident for the cache and other forks) and emit a
-//!    [`GenResponse`] with queue-wait, TTFT, and cached-prefix length.
+//! 4. **Reclaim**: finished sequences (max tokens, `max_seq`/pool length
+//!    cap, the optional EOS byte, a deadline, or a cancellation) release
+//!    their pages (shared pages stay resident for the cache and other
+//!    forks) and emit a [`GenResponse`] tagged with its terminal
+//!    [`GenOutcome`].
+//!
+//! **Lifecycle (DESIGN.md §Robustness).** Every `submit` leads to
+//! exactly one terminal response. Validation is immediate:
+//! `max_new_tokens == 0` is vacuously `Completed` (no compute spent),
+//! an empty prompt is `Rejected` (no logits exist to pick a token
+//! from). Overload is shed at submit by per-class queue bounds
+//! (`max_queue_interactive` / `max_queue_batch`) — sizing the Batch
+//! bound smaller makes overload reject Batch before it delays
+//! Interactive. [`Scheduler::cancel`] resolves a queued or running
+//! request to `Cancelled` (partial tokens returned); cancelling an
+//! already-finished id is a no-op, preserving exactly-one-terminal.
 //!
 //! **Backpressure.** When [`KvPool::reserve`] fails, cold prefix-cache
 //! pages are evicted first (LRU entries whose pages no live sequence
-//! maps — DESIGN.md §Prefix cache); only if nothing is evictable is the
-//! youngest-admitted sequence preempted: its pages are reclaimed and its
-//! request goes back to the FRONT of the queue (original submit time
-//! kept, so queue-wait stays honest) for a rerun — on re-admission it
-//! re-forks whatever prefix is cached (often its own, indexed when its
-//! first run finished prefill), so preempted work is largely recovered.
-//! Greedy decode is deterministic, so a rerun reproduces the same
-//! tokens. A lone sequence can always finish: per-request length is
-//! capped at admission to what the whole pool can hold, and every
-//! cache-only page is eventually evictable, which keeps the loop
-//! deadlock-free.
+//! maps — DESIGN.md §Prefix cache); only if nothing is evictable is a
+//! running sequence preempted — the youngest-admitted `Batch` sequence
+//! if any is running, else the youngest overall (priority-then-youngest)
+//! — its pages are reclaimed and its request goes back to the FRONT of
+//! its class queue (original submit time kept, so queue-wait stays
+//! honest) for a rerun — on re-admission it re-forks whatever prefix is
+//! cached (often its own, indexed when its first run finished prefill),
+//! so preempted work is largely recovered. Greedy decode is
+//! deterministic, so a rerun reproduces the same tokens. A lone
+//! sequence can always finish: per-request length is capped at
+//! admission to what the whole pool can hold, and every cache-only page
+//! is eventually evictable, which keeps the loop deadlock-free.
+//!
+//! **Fault injection.** `cfg.faults` (default: parsed from
+//! `GPTQ_FAULTS`, i.e. off unless asked) arms the deterministic chaos
+//! hooks (`util::faultinject`): a tick-boundary hook that can delay or
+//! panic the worker BEFORE any state changes, and a reserve-site hook
+//! that forces `KvPool::reserve` failures on a seeded counter schedule
+//! to exercise eviction/preemption without real pool pressure. All
+//! hooks are zero-cost when off, and the default config injects
+//! nothing, so every determinism contract below is unchanged.
 //!
 //! **Parity contract.** Per sequence, scheduler output is identical to
 //! the sequential single-stream decode — WITH OR WITHOUT the prefix
@@ -59,8 +91,9 @@
 
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::prefixcache::PrefixCache;
-use crate::coordinator::serve::{GenRequest, GenResponse};
+use crate::coordinator::serve::{Class, GenOutcome, GenRequest, GenResponse};
 use crate::model::{CpuModel, KvDtype, KvPool, SeqCache};
+use crate::util::faultinject::{FaultConfig, FaultInjector};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -87,6 +120,16 @@ pub struct SchedulerConfig {
     /// precision). Within either dtype the scheduler's parity contracts
     /// hold bitwise.
     pub kv_dtype: KvDtype,
+    /// admission bound on the Interactive queue: a submit past it is
+    /// answered `Rejected` immediately (default: unbounded)
+    pub max_queue_interactive: usize,
+    /// admission bound on the Batch queue — size it smaller than the
+    /// Interactive bound so overload sheds Batch first
+    pub max_queue_batch: usize,
+    /// deterministic fault-injection schedule (chaos testing); default
+    /// is `GPTQ_FAULTS` from the environment, i.e. no faults unless
+    /// explicitly armed
+    pub faults: FaultConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -103,12 +146,16 @@ impl Default for SchedulerConfig {
             // GPTQ_KV_DTYPE=q8 without code changes; unset env = F32 =
             // bit-identical to the pre-dtype default
             kv_dtype: KvDtype::from_env(),
+            max_queue_interactive: usize::MAX,
+            max_queue_batch: usize::MAX,
+            faults: FaultConfig::from_env(),
         }
     }
 }
 
 /// One in-flight sequence (admission order is preserved in
-/// `Scheduler::running`; the LAST entry is the preemption victim).
+/// `Scheduler::running`; preemption picks the last `Batch` entry, else
+/// the last entry).
 struct Running {
     req: GenRequest,
     seq: SeqCache,
@@ -131,6 +178,9 @@ struct Running {
     submitted: Instant,
     admitted: Instant,
     ttft_ms: Option<f64>,
+    /// how this sequence will be reported once `done` (deadline/cancel
+    /// paths overwrite the `Completed` default before setting `done`)
+    outcome: GenOutcome,
     done: bool,
 }
 
@@ -147,6 +197,27 @@ fn argmax(logits: &[f32]) -> u8 {
         .unwrap_or(0)
 }
 
+/// Terminal response for a request that never reached a slot (validated
+/// away at submit, shed from the queue, or cancelled while queued).
+fn unadmitted_response(
+    req: &GenRequest,
+    queue_wait_ms: f64,
+    outcome: GenOutcome,
+    wid: usize,
+) -> GenResponse {
+    GenResponse {
+        id: req.id,
+        tokens: Vec::new(),
+        per_token_ms: Vec::new(),
+        prefill_ms: 0.0,
+        queue_wait_ms,
+        ttft_ms: None,
+        cached_prefix_len: 0,
+        outcome,
+        worker: wid,
+    }
+}
+
 /// Continuous-batching scheduler for one worker (see module docs).
 pub struct Scheduler {
     wid: usize,
@@ -154,10 +225,16 @@ pub struct Scheduler {
     pool: KvPool,
     cache: PrefixCache,
     cfg: SchedulerConfig,
-    queue: VecDeque<(GenRequest, Instant)>,
+    /// one FIFO queue per [`Class`], indexed by `Class::idx()`;
+    /// admission drains lower indices (higher priority) first
+    queues: [VecDeque<(GenRequest, Instant)>; Class::COUNT],
     running: Vec<Running>,
+    /// terminal responses produced outside a sub-step (submit-time
+    /// validation, queue sheds, cancellations) — drained by `step()`
+    done_buf: Vec<GenResponse>,
     metrics: ServeMetrics,
     preemptions: usize,
+    faults: FaultInjector,
 }
 
 impl Scheduler {
@@ -165,31 +242,95 @@ impl Scheduler {
         assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
         let pool = KvPool::new_with_dtype(&model.config, cfg.pool_pages, cfg.page_size, cfg.kv_dtype);
         let cache = PrefixCache::new(cfg.page_size);
+        let faults = FaultInjector::new(cfg.faults.clone(), wid);
         Self {
             wid,
             model,
             pool,
             cache,
             cfg,
-            queue: VecDeque::new(),
+            queues: [VecDeque::new(), VecDeque::new()],
             running: Vec::new(),
+            done_buf: Vec::new(),
             metrics: ServeMetrics::new(),
             preemptions: 0,
+            faults,
         }
     }
 
-    /// Enqueue a request (FIFO; queue-wait starts now).
+    /// Enqueue a request (FIFO within its class; queue-wait starts now).
+    /// Degenerate requests resolve immediately (`max_new_tokens == 0` →
+    /// `Completed`, empty prompt → `Rejected`), as does a submit past
+    /// the class queue bound (`Rejected` — admission-time load
+    /// shedding); their terminal responses surface from the next
+    /// `step()`.
     pub fn submit(&mut self, req: GenRequest) {
-        self.queue.push_back((req, Instant::now()));
+        if req.max_new_tokens == 0 {
+            // zero tokens requested: vacuously complete, zero compute
+            self.finish_unadmitted(req, GenOutcome::Completed);
+            return;
+        }
+        if req.prompt.is_empty() {
+            // no prompt position exists to produce first-token logits
+            self.finish_unadmitted(req, GenOutcome::Rejected);
+            return;
+        }
+        let bound = match req.priority {
+            Class::Interactive => self.cfg.max_queue_interactive,
+            Class::Batch => self.cfg.max_queue_batch,
+        };
+        let q = req.priority.idx();
+        if self.queues[q].len() >= bound {
+            self.finish_unadmitted(req, GenOutcome::Rejected);
+            return;
+        }
+        self.queues[q].push_back((req, Instant::now()));
     }
 
-    /// Nothing queued and nothing in flight.
+    fn finish_unadmitted(&mut self, req: GenRequest, outcome: GenOutcome) {
+        self.metrics.record_outcome(outcome);
+        if outcome == GenOutcome::Completed {
+            self.metrics.no_token_requests += 1;
+        }
+        self.done_buf.push(unadmitted_response(&req, 0.0, outcome, self.wid));
+    }
+
+    /// Cooperatively cancel request `id`. Queued → resolved `Cancelled`
+    /// immediately; running → stopped at the current token (partial
+    /// output returned as `Cancelled`); unknown/finished id → `false`
+    /// (its terminal response already exists — never a second one).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for q in 0..self.queues.len() {
+            if let Some(i) = self.queues[q].iter().position(|(r, _)| r.id == id) {
+                let (req, submitted) = self.queues[q].remove(i).unwrap();
+                self.metrics.record_outcome(GenOutcome::Cancelled);
+                self.done_buf.push(unadmitted_response(
+                    &req,
+                    ms_since(submitted),
+                    GenOutcome::Cancelled,
+                    self.wid,
+                ));
+                return true;
+            }
+        }
+        if let Some(r) = self.running.iter_mut().find(|r| r.req.id == id && !r.done) {
+            r.done = true;
+            r.outcome = GenOutcome::Cancelled;
+            return true;
+        }
+        false
+    }
+
+    /// Nothing queued, nothing in flight, no terminal response pending.
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.running.is_empty()
+        self.queues.iter().all(|q| q.is_empty())
+            && self.running.is_empty()
+            && self.done_buf.is_empty()
     }
 
+    /// Queued requests across every class.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     pub fn in_flight(&self) -> usize {
@@ -202,6 +343,13 @@ impl Scheduler {
 
     pub fn total_pages(&self) -> usize {
         self.pool.total_pages()
+    }
+
+    /// Fraction of the KV pool currently in use (live sequences plus
+    /// prefix-cache holds) — the saturation signal the overload bench
+    /// reports.
+    pub fn pool_utilization(&self) -> f64 {
+        self.pool.utilization()
     }
 
     /// Pages currently pinned by the prefix cache alone. At idle,
@@ -248,13 +396,20 @@ impl Scheduler {
         self.metrics
     }
 
-    /// One scheduler iteration; returns the requests completed by it.
+    /// One scheduler iteration; returns the requests that reached a
+    /// terminal state during it (completions, sheds, timeouts,
+    /// cancellations, submit-time validations).
     pub fn step(&mut self) -> Vec<GenResponse> {
-        self.admit();
-        let mut done = Vec::new();
-        // requests that complete AT admission (empty prompt, zero tokens)
-        // never enter a sub-step — reclaim them here
+        // fault hook first, BEFORE any state changes: an injected panic
+        // here leaves a clean slate for the server's replay
+        self.faults.on_tick();
+        let mut done = std::mem::take(&mut self.done_buf);
+        self.shed_expired(&mut done);
+        self.timeout_running();
+        // reclaim timed-out sequences before admitting against the pool
         self.harvest(&mut done);
+        self.admit();
+        done.append(&mut self.done_buf); // degenerate admissions
         for substep in 0..self.cfg.prefill_chunk.max(1) {
             let idx = self.reserve_active(substep);
             if idx.is_empty() {
@@ -275,19 +430,60 @@ impl Scheduler {
         out
     }
 
-    /// Admission control: FIFO from the queue while a slot is free and
-    /// the pool can hold the prompt's uncached remainder plus the first
-    /// generated token. On a gate shortfall the candidate's fork is
-    /// released before cache eviction runs (see the comment at the gate:
-    /// holding it could pin the shortfall forever), then the request is
-    /// retried from scratch if eviction reclaimed anything.
+    /// Shed queued requests whose TTFT (or total) deadline has already
+    /// passed: they are answered `TimedOut` without ever taking a slot
+    /// or pool pages — by the time they would run, nobody is waiting.
+    fn shed_expired(&mut self, done: &mut Vec<GenResponse>) {
+        for q in 0..self.queues.len() {
+            let mut i = 0;
+            while i < self.queues[q].len() {
+                let (req, submitted) = &self.queues[q][i];
+                let waited = ms_since(*submitted);
+                let expired = req.ttft_deadline_ms.map_or(false, |d| waited >= d)
+                    || req.deadline_ms.map_or(false, |d| waited >= d);
+                if expired {
+                    let (req, _) = self.queues[q].remove(i).unwrap();
+                    self.metrics.record_outcome(GenOutcome::TimedOut);
+                    done.push(unadmitted_response(&req, waited, GenOutcome::TimedOut, self.wid));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Stop running sequences past their total deadline: marked done as
+    /// `TimedOut`, pages reclaimed by the next harvest, partial tokens
+    /// returned.
+    fn timeout_running(&mut self) {
+        for r in &mut self.running {
+            if !r.done && r.req.deadline_ms.map_or(false, |d| ms_since(r.submitted) >= d) {
+                r.done = true;
+                r.outcome = GenOutcome::TimedOut;
+            }
+        }
+    }
+
+    /// Admission control: strict priority across class queues, FIFO
+    /// within one, while a slot is free and the pool can hold the
+    /// prompt's uncached remainder plus the first generated token. On a
+    /// gate shortfall the candidate's fork is released before cache
+    /// eviction runs (see the comment at the gate: holding it could pin
+    /// the shortfall forever), then the request is retried from scratch
+    /// if eviction reclaimed anything.
     fn admit(&mut self) {
         // shortfall at the last gate failure for the current queue head
         // (usize::MAX = fresh candidate): eviction retries must shrink
         // it or stop — see the progress check at the gate
         let mut prev_short = usize::MAX;
         while self.running.len() < self.cfg.max_batch {
-            let Some(&(ref req, _)) = self.queue.front() else { break };
+            // highest-priority non-empty queue; its head is THE next
+            // admission — a head that doesn't fit blocks lower classes
+            // (skipping ahead would starve the class we protect)
+            let Some(qi) = (0..self.queues.len()).find(|&q| !self.queues[q].is_empty()) else {
+                break;
+            };
+            let Some(&(ref req, _)) = self.queues[qi].front() else { break };
             let limit = self
                 .model
                 .config
@@ -358,7 +554,7 @@ impl Scheduler {
                 break; // nothing reclaimable: wait for running sequences
             }
             prev_short = usize::MAX; // next queue head starts fresh
-            let (req, submitted) = self.queue.pop_front().unwrap();
+            let (req, submitted) = self.queues[qi].pop_front().unwrap();
             let admitted = Instant::now();
             if self.cfg.prefix_cache && plen > 1 {
                 self.metrics.prefix_lookups += 1;
@@ -367,7 +563,23 @@ impl Scheduler {
                     self.metrics.prefill_tokens_saved += cached;
                 }
             }
-            let mut r = Running {
+            if plen == 0 {
+                // defensive: submit-level validation rejects empty
+                // prompts, so plen == 0 here means the length cap ate the
+                // whole prompt (a pool smaller than one position) —
+                // nothing can run, reject rather than fabricate tokens
+                let mut seq = seq;
+                self.pool.release(&mut seq);
+                self.metrics.record_outcome(GenOutcome::Rejected);
+                self.done_buf.push(unadmitted_response(
+                    &req,
+                    (admitted - submitted).as_secs_f64() * 1e3,
+                    GenOutcome::Rejected,
+                    self.wid,
+                ));
+                continue;
+            }
+            self.running.push(Running {
                 req,
                 seq,
                 consumed: cached,
@@ -381,20 +593,9 @@ impl Scheduler {
                 submitted,
                 admitted,
                 ttft_ms: None,
+                outcome: GenOutcome::Completed,
                 done: false,
-            };
-            if plen == 0 {
-                // empty prompt: the sequential path feeds token 0 with no
-                // logits to pick from — mirror it (but EOS is still never
-                // emitted)
-                if r.req.max_new_tokens == 0 || self.cfg.eos == Some(0) {
-                    r.done = true;
-                } else {
-                    r.ttft_ms = Some(ms_since(submitted));
-                    r.next = Some(0);
-                }
-            }
-            self.running.push(r);
+            });
         }
     }
 
@@ -402,8 +603,12 @@ impl Scheduler {
     /// pool pages reserved for each one's next position (the reserve
     /// also performs copy-on-write when a fork's tail page is shared).
     /// Pool exhaustion evicts cold prefix-cache pages first, then
-    /// preempts the youngest-admitted sequence (FIFO re-queue at the
-    /// front, original submit time kept) and retries.
+    /// preempts priority-then-youngest: the youngest-admitted `Batch`
+    /// sequence if one is running, else the youngest overall (FIFO
+    /// re-queue at the front of its class, original submit time kept).
+    /// An injected reserve failure (`cfg.faults`) takes the same
+    /// preemption path, minus real eviction — that is the point: chaos
+    /// runs exercise backpressure without needing a truly full pool.
     fn reserve_active(&mut self, substep: usize) -> Vec<usize> {
         'retry: loop {
             let idx: Vec<usize> = self
@@ -415,25 +620,41 @@ impl Scheduler {
                 .collect();
             for &i in &idx {
                 let need = self.running[i].seq.len + 1;
-                if !self.pool.reserve(&mut self.running[i].seq, need) {
-                    // cold cache pages go before live work does
-                    if self.cfg.prefix_cache && self.cache.evict(&mut self.pool, 1) > 0 {
-                        continue 'retry;
-                    }
-                    if self.running.len() <= 1 {
-                        // unreachable: a lone sequence's length is capped
-                        // to the pool at admission and every cache-only
-                        // page is evictable — defensive truncation
-                        debug_assert!(false, "lone sequence exhausted the pool");
-                        self.running[i].done = true;
-                        return Vec::new();
-                    }
-                    let mut victim = self.running.pop().unwrap();
-                    self.pool.release(&mut victim.seq);
-                    self.queue.push_front((victim.req, victim.submitted));
-                    self.preemptions += 1;
+                let injected = self.faults.inject_reserve_failure();
+                if !injected && self.pool.reserve(&mut self.running[i].seq, need) {
+                    continue;
+                }
+                // cold cache pages go before live work does (a forced
+                // failure skips eviction — the pool isn't actually full)
+                if !injected && self.cfg.prefix_cache && self.cache.evict(&mut self.pool, 1) > 0 {
                     continue 'retry;
                 }
+                if self.running.len() <= 1 {
+                    if injected {
+                        // forced failure on a lone sequence: nothing to
+                        // preempt, so just stall this tick and retry —
+                        // the counter advances, so a p < 1 schedule
+                        // eventually lets it through
+                        return Vec::new();
+                    }
+                    // unreachable: a lone sequence's length is capped
+                    // to the pool at admission and every cache-only
+                    // page is evictable — defensive truncation
+                    debug_assert!(false, "lone sequence exhausted the pool");
+                    self.running[i].done = true;
+                    return Vec::new();
+                }
+                let vi = self
+                    .running
+                    .iter()
+                    .rposition(|r| r.req.priority == Class::Batch && !r.done)
+                    .unwrap_or(self.running.len() - 1);
+                let mut victim = self.running.remove(vi);
+                self.pool.release(&mut victim.seq);
+                self.queues[victim.req.priority.idx()]
+                    .push_front((victim.req, victim.submitted));
+                self.preemptions += 1;
+                continue 'retry;
             }
             return idx;
         }
@@ -481,17 +702,13 @@ impl Scheduler {
                     if self.cfg.prefix_cache {
                         self.cache.insert(&mut self.pool, &r.req.prompt[..r.plen], &r.seq);
                     }
-                    if r.req.max_new_tokens == 0 {
+                    let t = argmax(lg);
+                    if self.cfg.eos == Some(t) {
                         r.done = true;
                     } else {
-                        let t = argmax(lg);
-                        if self.cfg.eos == Some(t) {
-                            r.done = true;
-                        } else {
-                            // a token will actually be emitted: TTFT
-                            r.ttft_ms = Some(ms_since(r.submitted));
-                            r.next = Some(t);
-                        }
+                        // a token will actually be emitted: TTFT
+                        r.ttft_ms = Some(ms_since(r.submitted));
+                        r.next = Some(t);
                     }
                 }
             } else {
@@ -515,7 +732,8 @@ impl Scheduler {
 
     /// Move finished sequences out of the batch: release pages (shared
     /// ones stay resident for the cache/other forks), record metrics,
-    /// emit responses (admission order preserved for the rest).
+    /// emit outcome-tagged responses (admission order preserved for the
+    /// rest).
     fn harvest(&mut self, done: &mut Vec<GenResponse>) {
         let mut i = 0;
         while i < self.running.len() {
@@ -530,22 +748,32 @@ impl Scheduler {
                 self.metrics.per_token.record_ms(ms);
             }
             self.metrics.prefill.record_ms(r.prefill_ms);
-            // requests that emit no token (max_new 0, EOS-first) have no
-            // first-token time — skip the sample rather than skew TTFT
-            // with prompt-processing-only measurements
-            if let Some(t) = r.ttft_ms {
-                self.metrics.ttft.record_ms(t);
+            // requests that emit no token have no first-token time — the
+            // old code recorded a 0.0 sentinel here, dragging TTFT p50
+            // down; legit empty completions (EOS-first) are counted
+            // separately instead
+            match r.ttft_ms {
+                Some(t) => {
+                    self.metrics.ttft.record_ms(t);
+                    self.metrics.ttft_class_mut(r.req.priority).record_ms(t);
+                }
+                None => {
+                    if r.outcome == GenOutcome::Completed {
+                        self.metrics.no_token_requests += 1;
+                    }
+                }
             }
             self.metrics.queue_wait.record_ms(queue_wait_ms);
-            let ttft_ms = r.ttft_ms.unwrap_or(0.0);
+            self.metrics.record_outcome(r.outcome);
             done.push(GenResponse {
                 id: r.req.id,
                 tokens: r.out,
                 per_token_ms: r.per_token_ms,
                 prefill_ms: r.prefill_ms,
                 queue_wait_ms,
-                ttft_ms,
+                ttft_ms: r.ttft_ms,
                 cached_prefix_len: r.cached_prefix_len,
+                outcome: r.outcome,
                 worker: self.wid,
             });
         }
@@ -566,7 +794,7 @@ mod tests {
     }
 
     fn req(id: u64, prompt: Vec<u8>, max_new: usize) -> GenRequest {
-        GenRequest { id, prompt, max_new_tokens: max_new }
+        GenRequest::new(id, prompt, max_new)
     }
 
     /// Shorthand for the shared idle-pool invariant check.
@@ -582,11 +810,14 @@ mod tests {
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].tokens.len(), 4);
         assert_eq!(rs[0].per_token_ms.len(), 4);
-        assert!(rs[0].ttft_ms >= rs[0].queue_wait_ms);
+        assert_eq!(rs[0].outcome, GenOutcome::Completed);
+        assert!(rs[0].ttft_ms.unwrap() >= rs[0].queue_wait_ms);
         assert_eq!(rs[0].cached_prefix_len, 0, "cold cache cannot hit");
         assert_no_leak(&mut s);
         assert_eq!(s.metrics().requests(), 1);
         assert_eq!(s.metrics().per_token.count(), 4);
+        assert_eq!(s.metrics().completed, 1);
+        assert_eq!(s.metrics().terminals(), 1);
     }
 
     #[test]
@@ -627,6 +858,7 @@ mod tests {
         }
         assert_eq!(rs.len(), 8);
         assert!(rs.iter().all(|r| r.tokens.len() == 3));
+        assert!(rs.iter().all(|r| r.outcome == GenOutcome::Completed));
         assert_no_leak(&mut s);
     }
 
@@ -689,27 +921,34 @@ mod tests {
         s.submit(req(0, vec![5, 6], 4));
         let rs = s.run_until_idle();
         assert!(rs[0].tokens.is_empty(), "EOS should suppress generation");
+        assert_eq!(rs[0].outcome, GenOutcome::Completed, "EOS-first is a legit completion");
+        assert_eq!(rs[0].ttft_ms, None, "no token, no TTFT sample");
+        assert_eq!(s.metrics().ttft.count(), 0);
+        assert_eq!(s.metrics().no_token_requests, 1);
         assert_no_leak(&mut s);
     }
 
     #[test]
-    fn zero_max_tokens_and_empty_prompt_complete() {
+    fn zero_max_tokens_and_empty_prompt_get_immediate_outcomes() {
+        // satellite: validation at submit, with documented semantics —
+        // neither request takes a slot, pool pages, or a prefill pass
         let mut s = sched(SchedulerConfig::default());
         s.submit(req(0, vec![1, 2], 0));
         s.submit(req(1, vec![], 2));
+        assert!(!s.is_idle(), "pending terminal responses keep the scheduler live");
         let rs = s.run_until_idle();
         assert_eq!(rs.len(), 2);
         let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
-        assert!(by_id(0).tokens.is_empty());
-        assert_eq!(by_id(1).tokens.len(), 2);
-        // the sequential path's empty-prompt behavior: first token is 0
-        assert_eq!(by_id(1).tokens[0], 0);
-        // 0-token prefill: queue-wait and TTFT accounting must survive
-        // a request that never enters the prefill loop
-        assert_eq!(by_id(1).cached_prefix_len, 0);
-        assert!(by_id(1).ttft_ms >= by_id(1).queue_wait_ms);
-        assert_eq!(s.metrics().requests(), 2);
-        assert_eq!(s.metrics().ttft.count(), 1, "only the emitting request samples TTFT");
+        assert_eq!(by_id(0).outcome, GenOutcome::Completed, "zero tokens = vacuously done");
+        assert_eq!(by_id(1).outcome, GenOutcome::Rejected, "empty prompt has no logits");
+        assert!(by_id(0).tokens.is_empty() && by_id(1).tokens.is_empty());
+        assert_eq!(by_id(0).ttft_ms, None);
+        assert_eq!(s.metrics().requests(), 0, "neither request was admitted");
+        assert_eq!(s.metrics().ttft.count(), 0, "no 0.0 sentinel in TTFT");
+        assert_eq!(s.metrics().completed, 1);
+        assert_eq!(s.metrics().rejected, 1);
+        assert_eq!(s.metrics().no_token_requests, 1);
+        assert_eq!(s.metrics().terminals(), 2);
         assert_no_leak(&mut s);
     }
 
@@ -720,6 +959,7 @@ mod tests {
         s.submit(req(0, vec![1; 30], 30));
         let rs = s.run_until_idle();
         assert_eq!(rs[0].tokens.len(), 1);
+        assert_eq!(rs[0].outcome, GenOutcome::Completed);
     }
 
     #[test]
@@ -741,7 +981,7 @@ mod tests {
         let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
         assert_eq!(by_id(1).cached_prefix_len, 5, "capped at plen − 1");
         assert_eq!(by_id(0).tokens, by_id(1).tokens);
-        assert!(by_id(1).ttft_ms > 0.0);
+        assert!(by_id(1).ttft_ms.unwrap() > 0.0);
         assert_eq!(s.metrics().ttft.count(), 2);
         assert_eq!(s.metrics().queue_wait.count(), 2);
         assert_eq!(s.metrics().prefill.count(), 2, "prefill recorded even when mostly skipped");
@@ -783,5 +1023,185 @@ mod tests {
             rs.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(true), run(false), "prefix cache changed generated tokens");
+    }
+
+    #[test]
+    fn interactive_admitted_before_earlier_batch() {
+        // Batch arrives FIRST, but with one slot the Interactive request
+        // must still be admitted (and finish) first — strict priority
+        let mut s = sched(SchedulerConfig { max_batch: 1, ..Default::default() });
+        s.submit(req(0, vec![1, 2], 3).with_priority(Class::Batch));
+        s.submit(req(1, vec![3, 4], 3).with_priority(Class::Interactive));
+        let rs = s.run_until_idle();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].id, 1, "interactive must finish before the earlier batch request");
+        assert!(rs.iter().all(|r| r.outcome == GenOutcome::Completed));
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn preemption_prefers_batch_victim() {
+        // both classes running concurrently in a pool too small for both:
+        // the Batch sequence must be the one preempted, so Interactive
+        // finishes first even though Batch was submitted first
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            pool_pages: 4,
+            page_size: 2,
+            prefill_chunk: 2,
+            prefix_cache: false,
+            ..Default::default()
+        };
+        let mut s = sched(cfg);
+        s.submit(req(0, vec![2, 7, 1], 4).with_priority(Class::Batch));
+        s.submit(req(1, vec![3, 1, 4], 4).with_priority(Class::Interactive));
+        let mut steps = 0;
+        let mut rs = Vec::new();
+        while !s.is_idle() {
+            rs.extend(s.step());
+            steps += 1;
+            assert!(steps < 10_000, "deadlock under priority preemption");
+        }
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].id, 1, "batch should have been the preemption victim");
+        assert!(s.preemptions() > 0, "the tiny pool must have forced preemption");
+        assert!(rs.iter().all(|r| r.tokens.len() == 4 && r.outcome == GenOutcome::Completed));
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn queue_bound_sheds_batch_at_submit() {
+        let cfg = SchedulerConfig { max_queue_batch: 1, ..Default::default() };
+        let mut s = sched(cfg);
+        s.submit(req(0, vec![1, 2], 2).with_priority(Class::Batch));
+        s.submit(req(1, vec![3, 4], 2).with_priority(Class::Batch)); // over the bound
+        s.submit(req(2, vec![5, 6], 2).with_priority(Class::Interactive)); // unaffected
+        let rs = s.run_until_idle();
+        assert_eq!(rs.len(), 3);
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).outcome, GenOutcome::Completed);
+        assert_eq!(by_id(1).outcome, GenOutcome::Rejected, "second batch submit is over the bound");
+        assert_eq!(by_id(2).outcome, GenOutcome::Completed, "interactive bound is separate");
+        assert_eq!(s.metrics().rejected, 1);
+        assert!((s.metrics().shed_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn expired_ttft_deadline_sheds_from_queue() {
+        let mut s = sched(SchedulerConfig::default());
+        // a deadline of 0 ms has always already passed: shed on the
+        // first tick, before any pool pages are touched
+        s.submit(req(0, vec![1, 2, 3], 4).with_ttft_deadline_ms(0.0));
+        s.submit(req(1, vec![1, 2, 3], 4)); // no deadline: completes
+        let rs = s.run_until_idle();
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).outcome, GenOutcome::TimedOut);
+        assert!(by_id(0).tokens.is_empty());
+        assert_eq!(by_id(0).ttft_ms, None);
+        assert_eq!(by_id(1).outcome, GenOutcome::Completed);
+        assert_eq!(by_id(1).tokens.len(), 4);
+        assert_eq!(s.metrics().timed_out, 1);
+        assert_eq!(s.metrics().ttft.count(), 1, "shed request contributes no TTFT sample");
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn running_past_total_deadline_times_out_with_partial_tokens() {
+        // admit first (no deadline check passes yet — 1 hour), then use
+        // the injected per-tick delay to blow a deadline we shrink by
+        // hand: simplest deterministic path is a 0 ms deadline submitted
+        // AFTER one step has already admitted... instead, use the delay
+        // fault so wall-clock reliably crosses a small real deadline.
+        let cfg = SchedulerConfig {
+            prefill_chunk: 1,
+            faults: FaultConfig { step_delay: Some((1, 4)), ..FaultConfig::off() },
+            ..Default::default()
+        };
+        let mut s = sched(cfg);
+        // 4 ms sleep per tick vs a 2 ms total budget: admitted on tick 1
+        // (0 ms elapsed at the shed check of a fresh submit is < 2 only
+        // if the clock hasn't moved — either way the OUTCOME must be
+        // TimedOut, from the queue or mid-run; both paths reclaim pages)
+        s.submit(req(0, vec![1, 2, 3, 4], 64).with_deadline_ms(2.0));
+        let mut steps = 0;
+        let mut rs = Vec::new();
+        while !s.is_idle() {
+            rs.extend(s.step());
+            steps += 1;
+            assert!(steps < 1_000, "timeout failed to terminate the request");
+        }
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].outcome, GenOutcome::TimedOut);
+        assert!(rs[0].tokens.len() < 64, "deadline must cut generation short");
+        assert_eq!(s.metrics().timed_out, 1);
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn cancel_queued_and_running() {
+        // queued cancel: max_batch 1 keeps id 1 in the queue
+        let mut s = sched(SchedulerConfig { max_batch: 1, ..Default::default() });
+        s.submit(req(0, vec![1, 2], 6));
+        s.submit(req(1, vec![3, 4], 6));
+        assert!(s.cancel(1), "queued request must be cancellable");
+        assert!(!s.cancel(99), "unknown id is a no-op");
+        let rs = s.run_until_idle();
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).outcome, GenOutcome::Completed);
+        assert_eq!(by_id(1).outcome, GenOutcome::Cancelled);
+        assert!(by_id(1).tokens.is_empty());
+        assert!(!s.cancel(1), "a finished id must never get a second terminal response");
+        assert_eq!(s.metrics().cancelled, 1);
+        assert_no_leak(&mut s);
+
+        // running cancel: step a few times, then cancel mid-generation
+        let mut s = sched(SchedulerConfig { prefill_chunk: 1, ..Default::default() });
+        s.submit(req(7, vec![1, 2], 64));
+        for _ in 0..6 {
+            s.step();
+        }
+        assert_eq!(s.in_flight(), 1);
+        assert!(s.cancel(7));
+        let rs = s.run_until_idle();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].outcome, GenOutcome::Cancelled);
+        assert!(rs[0].tokens.len() < 64, "cancel must stop generation early");
+        assert_no_leak(&mut s);
+    }
+
+    #[test]
+    fn injected_reserve_failures_keep_token_parity() {
+        // forced reserve failures churn preemption without real pool
+        // pressure; greedy decode must still produce the exact tokens of
+        // a fault-free run, and nothing may leak
+        let run = |faults: FaultConfig| {
+            let cfg = SchedulerConfig {
+                max_batch: 4,
+                pool_pages: 16,
+                page_size: 2,
+                prefill_chunk: 2,
+                faults,
+                ..Default::default()
+            };
+            let mut s = sched(cfg);
+            for i in 0..6 {
+                s.submit(req(i, vec![(i as u8) + 1, 2, 5], 3));
+            }
+            let mut steps = 0;
+            let mut rs = Vec::new();
+            while !s.is_idle() {
+                rs.extend(s.step());
+                steps += 1;
+                assert!(steps < 100_000, "injected failures deadlocked the scheduler");
+            }
+            rs.sort_by_key(|r| r.id);
+            assert!(rs.iter().all(|r| r.outcome == GenOutcome::Completed));
+            assert_no_leak(&mut s);
+            rs.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let clean = run(FaultConfig::off());
+        let faulty = run(FaultConfig { seed: 11, reserve_fail_p: 0.25, ..FaultConfig::off() });
+        assert_eq!(clean, faulty, "injected backpressure changed generated tokens");
     }
 }

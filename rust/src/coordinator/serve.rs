@@ -19,6 +19,26 @@
 //! sub-step decodes each packed word once per batch on the active ISA,
 //! and batch-1 decode uses the register-tiled layout when the model was
 //! loaded under a SIMD ISA (DESIGN.md §Kernels).
+//!
+//! **Request lifecycle (DESIGN.md §Robustness).** Every submitted
+//! request gets EXACTLY ONE terminal [`GenResponse`], tagged with a
+//! [`GenOutcome`]: `Completed` (possibly with zero tokens), `Rejected`
+//! (validation or admission-time load shedding), `TimedOut` (TTFT or
+//! total deadline missed), `Cancelled` (cooperative [`Server::cancel`]),
+//! or `Failed` (the request exhausted its worker-crash retry budget).
+//! Requests carry a priority [`Class`] and optional deadlines; the
+//! scheduler sheds by class bound and deadline (see
+//! `coordinator::scheduler`).
+//!
+//! **Fault isolation.** Worker loops wrap every scheduler tick in
+//! `catch_unwind`; a panicking worker reports itself dead and exits with
+//! its metrics intact. The server reaps the thread and re-routes that
+//! worker's outstanding requests to survivors with a bounded retry
+//! budget ([`MAX_WORKER_DEATHS`]): greedy decode is deterministic, so a
+//! replayed request reproduces its tokens, and a request that has killed
+//! two workers is answered `Failed` instead of being retried forever.
+//! [`Server::submit`]/[`Server::recv`] return typed [`ServeError`]s
+//! instead of panicking when no worker is left.
 
 use crate::coordinator::metrics::ServeMetrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
@@ -27,20 +47,134 @@ use crate::eval::{perplexity, perplexity_artifact};
 use crate::model::{Checkpoint, CpuModel};
 use crate::runtime::Runtime;
 use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// A generation request.
+/// Request priority class. `Interactive` is admitted first and is the
+/// last to be preempted or shed; `Batch` absorbs overload (its queue
+/// bound is meant to be the smaller one, and it is the preferred
+/// preemption victim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Class {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Class {
+    pub const COUNT: usize = 2;
+
+    /// Dense index for per-class tables (queues, counters).
+    pub fn idx(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "interactive" => Some(Class::Interactive),
+            "batch" => Some(Class::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// The one terminal state every submitted request reaches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GenOutcome {
+    /// ran to its stop condition (max tokens, EOS, length cap) — the
+    /// token stream may legitimately be empty (EOS as the first pick,
+    /// or `max_new_tokens == 0`)
+    Completed,
+    /// never admitted: failed validation (empty prompt) or shed at
+    /// admission by a full per-class queue bound
+    Rejected,
+    /// missed a deadline: shed from the queue past its TTFT/total
+    /// deadline, or stopped mid-generation past its total deadline
+    /// (partial tokens are returned)
+    TimedOut,
+    /// cooperatively cancelled by id (partial tokens are returned)
+    Cancelled,
+    /// exhausted the worker-crash retry budget (killed two workers) or
+    /// no worker was left to retry on
+    Failed,
+}
+
+impl GenOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            GenOutcome::Completed => "completed",
+            GenOutcome::Rejected => "rejected",
+            GenOutcome::TimedOut => "timed_out",
+            GenOutcome::Cancelled => "cancelled",
+            GenOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// A generation request. Construct with [`GenRequest::new`] + the
+/// builder methods — new lifecycle fields default to "no constraint"
+/// (`Interactive`, no deadlines), which reproduces the pre-lifecycle
+/// behavior exactly.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<u8>,
     pub max_new_tokens: usize,
+    /// admission/preemption/shedding class (default `Interactive`)
+    pub priority: Class,
+    /// submit → first token budget, ms: a queued request that can no
+    /// longer meet it is shed as `TimedOut` instead of occupying pool
+    /// pages for an answer nobody is waiting for
+    pub ttft_deadline_ms: Option<f64>,
+    /// submit → last token budget, ms: checked per tick; a running
+    /// request past it is stopped (`TimedOut`), its pages reclaimed,
+    /// and its partial tokens returned
+    pub deadline_ms: Option<f64>,
 }
 
-/// A completed generation.
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<u8>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            priority: Class::Interactive,
+            ttft_deadline_ms: None,
+            deadline_ms: None,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: Class) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_ttft_deadline_ms(mut self, ms: f64) -> Self {
+        self.ttft_deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, ms: f64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+}
+
+/// A terminal response (exactly one per submitted request).
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
@@ -50,17 +184,51 @@ pub struct GenResponse {
     /// generation metric)
     pub per_token_ms: Vec<f64>,
     pub prefill_ms: f64,
-    /// submit → admitted to a scheduler slot, ms
+    /// submit → admitted to a scheduler slot, ms (for a request shed
+    /// from the queue: submit → shed)
     pub queue_wait_ms: f64,
-    /// submit → first generated token available, ms (0 when the request
-    /// emitted no token: `max_new_tokens` 0 or EOS as the first pick)
-    pub ttft_ms: f64,
+    /// submit → first generated token available, ms; `None` when the
+    /// request emitted no token (`max_new_tokens` 0, EOS as the first
+    /// pick, or a pre-first-token shed) — the old API reported a 0.0
+    /// sentinel here, which polluted TTFT percentiles downstream
+    pub ttft_ms: Option<f64>,
     /// prompt tokens whose KV was forked from the worker's prefix cache
     /// at admission instead of being prefilled (0 = fully cold prompt,
     /// or `scheduler.prefix_cache` disabled)
     pub cached_prefix_len: usize,
+    /// how this request terminated (see [`GenOutcome`])
+    pub outcome: GenOutcome,
     pub worker: usize,
 }
+
+/// Typed server errors — the old API called `.expect("worker died")`
+/// here and took the whole process down with the first worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// every worker thread has died; the server cannot accept new work
+    NoWorkers,
+    /// all workers have exited and no response is pending — nothing
+    /// will ever arrive
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::NoWorkers => write!(f, "no live workers: cannot accept new requests"),
+            ServeError::Disconnected => {
+                write!(f, "all workers exited and no response is pending")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Worker-crash retry budget: a request that has been on this many dead
+/// workers is answered `Failed` instead of being retried forever (it is
+/// probably what is killing them).
+pub const MAX_WORKER_DEATHS: u32 = 2;
 
 /// Server shape: worker count plus each worker's scheduler knobs
 /// (`scheduler.max_batch`, `scheduler.pool_pages`, … — see
@@ -80,16 +248,40 @@ impl Default for ServerConfig {
 
 enum Job {
     Gen(GenRequest),
+    Cancel(u64),
     Stop,
 }
 
-/// Multi-worker generation server with least-loaded routing.
+/// What workers stream back on the shared response channel. mpsc
+/// preserves per-sender order, so a worker's `Done`s are always
+/// processed before its own `Died` — a completed request is never
+/// double-answered by the re-route path.
+enum Event {
+    Done(GenResponse),
+    /// the worker's scheduler panicked mid-tick; the thread is exiting
+    /// (its metrics are recovered by joining the handle)
+    Died { wid: usize },
+}
+
+/// Multi-worker generation server with least-loaded routing, worker
+/// fault isolation, and bounded crash retries (see the module docs).
 pub struct Server {
-    senders: Vec<Sender<Job>>,
-    resp_rx: Receiver<GenResponse>,
+    /// per-worker job channels; `None` = reaped (dead) worker
+    senders: Vec<Option<Sender<Job>>>,
+    resp_rx: Receiver<Event>,
     inflight: Vec<Arc<AtomicUsize>>,
-    handles: Vec<JoinHandle<ServeMetrics>>,
-    submitted: u64,
+    handles: Vec<Option<JoinHandle<ServeMetrics>>>,
+    /// submitted-but-unanswered requests: id → (request copy for
+    /// replay, worker it is currently routed to)
+    outstanding: HashMap<u64, (GenRequest, usize)>,
+    /// worker deaths each outstanding request has survived (the retry
+    /// budget, [`MAX_WORKER_DEATHS`])
+    deaths: HashMap<u64, u32>,
+    /// responses ready to hand out: drained worker completions plus
+    /// synthesized `Failed` answers
+    ready: VecDeque<GenResponse>,
+    /// metrics recovered from reaped (panicked) workers
+    reaped: ServeMetrics,
 }
 
 impl Server {
@@ -99,7 +291,7 @@ impl Server {
     where
         F: Fn(usize) -> CpuModel,
     {
-        let (resp_tx, resp_rx) = channel::<GenResponse>();
+        let (resp_tx, resp_rx) = channel::<Event>();
         let mut senders = Vec::new();
         let mut inflight = Vec::new();
         let mut handles = Vec::new();
@@ -110,52 +302,189 @@ impl Server {
             let count = Arc::new(AtomicUsize::new(0));
             let count_w = count.clone();
             let scfg = cfg.scheduler.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(Some(std::thread::spawn(move || {
                 worker_loop(wid, model, rx, resp_tx, count_w, scfg)
-            }));
-            senders.push(tx);
+            })));
+            senders.push(Some(tx));
             inflight.push(count);
         }
-        Self { senders, resp_rx, inflight, handles, submitted: 0 }
+        // the original `resp_tx` drops here: a disconnect on `resp_rx`
+        // then means every worker has exited
+        Self {
+            senders,
+            resp_rx,
+            inflight,
+            handles,
+            outstanding: HashMap::new(),
+            deaths: HashMap::new(),
+            ready: VecDeque::new(),
+            reaped: ServeMetrics::new(),
+        }
     }
 
-    /// Route a request to the least-loaded worker. Returns the worker id.
-    pub fn submit(&mut self, req: GenRequest) -> usize {
-        let wid = self
-            .inflight
+    /// Workers still accepting jobs.
+    pub fn live_workers(&self) -> usize {
+        self.senders.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Route a request to the least-loaded live worker. Returns the
+    /// worker id, or [`ServeError::NoWorkers`] when every worker has
+    /// died — the old API panicked here.
+    pub fn submit(&mut self, req: GenRequest) -> std::result::Result<usize, ServeError> {
+        self.drain_events();
+        let wid = self.least_loaded().ok_or(ServeError::NoWorkers)?;
+        self.route(req, wid);
+        Ok(wid)
+    }
+
+    fn least_loaded(&self) -> Option<usize> {
+        self.senders
             .iter()
             .enumerate()
-            .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+            .filter(|(_, s)| s.is_some())
+            .min_by_key(|&(i, _)| self.inflight[i].load(Ordering::Relaxed))
             .map(|(i, _)| i)
-            .unwrap();
-        self.inflight[wid].fetch_add(1, Ordering::Relaxed);
-        self.submitted += 1;
-        self.senders[wid].send(Job::Gen(req)).expect("worker died");
-        wid
     }
 
-    /// Block for the next completed response.
-    pub fn recv(&self) -> GenResponse {
-        self.resp_rx.recv().expect("all workers died")
+    fn route(&mut self, req: GenRequest, wid: usize) {
+        self.inflight[wid].fetch_add(1, Ordering::Relaxed);
+        self.outstanding.insert(req.id, (req.clone(), wid));
+        if let Some(tx) = &self.senders[wid] {
+            // a send error means the worker died after `least_loaded`
+            // looked: its `Died` event is already in flight and will
+            // re-route this request when processed
+            let _ = tx.send(Job::Gen(req));
+        }
+    }
+
+    /// Request cooperative cancellation of `id` (best-effort: a request
+    /// that already completed is unaffected; a cancelled one is answered
+    /// `Cancelled` with whatever tokens it had generated).
+    pub fn cancel(&mut self, id: u64) {
+        self.drain_events();
+        if let Some((_, wid)) = self.outstanding.get(&id) {
+            let wid = *wid;
+            if let Some(tx) = &self.senders[wid] {
+                let _ = tx.send(Job::Cancel(id));
+            }
+        }
+    }
+
+    /// Block for the next terminal response. `Err(Disconnected)` only
+    /// when every worker has exited and nothing is pending — the old
+    /// API panicked ("all workers died") instead.
+    pub fn recv(&mut self) -> std::result::Result<GenResponse, ServeError> {
+        loop {
+            if let Some(r) = self.ready.pop_front() {
+                return Ok(r);
+            }
+            match self.resp_rx.recv() {
+                Ok(ev) => self.handle_event(ev),
+                Err(_) => {
+                    // every worker exited (each held a resp_tx clone).
+                    // Reaching here with requests still outstanding means
+                    // they died with their workers before a Died event
+                    // could be sent — answer them Failed, never hang.
+                    if self.outstanding.is_empty() {
+                        return Err(ServeError::Disconnected);
+                    }
+                    let mut ids: Vec<u64> = self.outstanding.keys().copied().collect();
+                    ids.sort_unstable();
+                    for id in ids {
+                        let (req, wid) = self.outstanding.remove(&id).unwrap();
+                        self.reaped.record_outcome(GenOutcome::Failed);
+                        self.ready.push_back(failed_response(&req, wid));
+                    }
+                }
+            }
+        }
     }
 
     /// Drain exactly `n` responses.
-    pub fn collect(&self, n: usize) -> Vec<GenResponse> {
+    pub fn collect(&mut self, n: usize) -> std::result::Result<Vec<GenResponse>, ServeError> {
         (0..n).map(|_| self.recv()).collect()
     }
 
-    /// Stop workers and return their merged serving metrics.
-    pub fn shutdown(self) -> ServeMetrics {
-        for tx in &self.senders {
+    fn drain_events(&mut self) {
+        while let Ok(ev) = self.resp_rx.try_recv() {
+            self.handle_event(ev);
+        }
+    }
+
+    fn handle_event(&mut self, ev: Event) {
+        match ev {
+            Event::Done(resp) => {
+                self.outstanding.remove(&resp.id);
+                self.deaths.remove(&resp.id);
+                self.ready.push_back(resp);
+            }
+            Event::Died { wid } => self.reap(wid),
+        }
+    }
+
+    /// A worker panicked: reap its thread (recovering its metrics), then
+    /// re-route everything still routed to it. Each orphan's death count
+    /// is bumped; one that has now killed [`MAX_WORKER_DEATHS`] workers
+    /// — or has no survivor to run on — is answered `Failed`.
+    fn reap(&mut self, wid: usize) {
+        self.senders[wid] = None;
+        if let Some(h) = self.handles[wid].take() {
+            if let Ok(m) = h.join() {
+                self.reaped.merge(&m);
+            }
+        }
+        let mut orphans: Vec<u64> = self
+            .outstanding
+            .iter()
+            .filter(|(_, (_, w))| *w == wid)
+            .map(|(id, _)| *id)
+            .collect();
+        orphans.sort_unstable();
+        for id in orphans {
+            let (req, _) = self.outstanding.remove(&id).unwrap();
+            let survived = self.deaths.entry(id).or_insert(0);
+            *survived += 1;
+            let over_budget = *survived >= MAX_WORKER_DEATHS;
+            match (over_budget, self.least_loaded()) {
+                (false, Some(next)) => self.route(req, next),
+                _ => {
+                    self.deaths.remove(&id);
+                    self.reaped.record_outcome(GenOutcome::Failed);
+                    self.ready.push_back(failed_response(&req, wid));
+                }
+            }
+        }
+    }
+
+    /// Stop workers and return their merged serving metrics (including
+    /// metrics recovered from workers that crashed earlier).
+    pub fn shutdown(mut self) -> ServeMetrics {
+        for tx in self.senders.iter().flatten() {
             let _ = tx.send(Job::Stop);
         }
-        let mut metrics = ServeMetrics::new();
-        for h in self.handles {
-            if let Ok(m) = h.join() {
-                metrics.merge(&m);
+        let mut metrics = std::mem::take(&mut self.reaped);
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
+                if let Ok(m) = h.join() {
+                    metrics.merge(&m);
+                }
             }
         }
         metrics
+    }
+}
+
+fn failed_response(req: &GenRequest, wid: usize) -> GenResponse {
+    GenResponse {
+        id: req.id,
+        tokens: Vec::new(),
+        per_token_ms: Vec::new(),
+        prefill_ms: 0.0,
+        queue_wait_ms: 0.0,
+        ttft_ms: None,
+        cached_prefix_len: 0,
+        outcome: GenOutcome::Failed,
+        worker: wid,
     }
 }
 
@@ -189,11 +518,18 @@ pub fn verify_parity(
 /// completions back. On `Stop`, everything already submitted drains to
 /// completion before the worker exits (the channel is FIFO, so every
 /// `Gen` sent before the `Stop` has been admitted by then).
+///
+/// Every tick runs under `catch_unwind`: a panic (a real bug, or an
+/// injected `GPTQ_FAULTS` panic) reports `Died` on the response channel
+/// and exits with the scheduler's metrics — the process, the other
+/// workers, and the panicking worker's requests (replayed elsewhere by
+/// the server) all survive. Injected panics fire at the tick boundary
+/// before any state changes, so a replay starts from a clean slate.
 fn worker_loop(
     wid: usize,
     model: CpuModel,
     rx: Receiver<Job>,
-    resp_tx: Sender<GenResponse>,
+    resp_tx: Sender<Event>,
     inflight: Arc<AtomicUsize>,
     scfg: SchedulerConfig,
 ) -> ServeMetrics {
@@ -204,6 +540,9 @@ fn worker_loop(
         if !stopping && sched.is_idle() {
             match rx.recv() {
                 Ok(Job::Gen(r)) => sched.submit(r),
+                Ok(Job::Cancel(id)) => {
+                    sched.cancel(id);
+                }
                 Ok(Job::Stop) | Err(_) => stopping = true,
             }
         }
@@ -213,6 +552,9 @@ fn worker_loop(
             loop {
                 match rx.try_recv() {
                     Ok(Job::Gen(r)) => sched.submit(r),
+                    Ok(Job::Cancel(id)) => {
+                        sched.cancel(id);
+                    }
                     Ok(Job::Stop) => {
                         stopping = true;
                         break;
@@ -227,9 +569,20 @@ fn worker_loop(
             }
             continue;
         }
-        for resp in sched.step() {
-            inflight.fetch_sub(1, Ordering::Relaxed);
-            let _ = resp_tx.send(resp);
+        match catch_unwind(AssertUnwindSafe(|| sched.step())) {
+            Ok(responses) => {
+                for resp in responses {
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    let _ = resp_tx.send(Event::Done(resp));
+                }
+            }
+            Err(_) => {
+                // the tick panicked: report the death (the server
+                // re-routes everything still routed here) and exit with
+                // whatever metrics the scheduler had accumulated
+                let _ = resp_tx.send(Event::Died { wid });
+                return sched.into_metrics();
+            }
         }
     }
     sched.into_metrics()
@@ -239,6 +592,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::model::testkit::tiny_checkpoint;
+    use crate::util::faultinject::FaultConfig;
 
     fn server(n_workers: usize) -> Server {
         let cfg = ServerConfig {
@@ -251,16 +605,18 @@ mod tests {
     #[test]
     fn serves_one_request() {
         let mut s = server(1);
-        s.submit(GenRequest { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 });
-        let r = s.recv();
+        s.submit(GenRequest::new(1, vec![1, 2, 3], 4)).unwrap();
+        let r = s.recv().unwrap();
         assert_eq!(r.id, 1);
         assert_eq!(r.tokens.len(), 4);
         assert_eq!(r.per_token_ms.len(), 4);
-        assert!(r.ttft_ms >= 0.0 && r.queue_wait_ms >= 0.0);
+        assert_eq!(r.outcome, GenOutcome::Completed);
+        assert!(r.ttft_ms.unwrap() >= 0.0 && r.queue_wait_ms >= 0.0);
         let m = s.shutdown();
         assert_eq!(m.per_token.count(), 4);
         assert_eq!(m.requests(), 1);
         assert_eq!(m.ttft.count(), 1);
+        assert_eq!(m.completed, 1);
     }
 
     #[test]
@@ -268,9 +624,11 @@ mod tests {
         let mut s = server(3);
         let n = 20;
         for i in 0..n {
-            s.submit(GenRequest { id: i, prompt: vec![(i % 16) as u8], max_new_tokens: 2 });
+            s.submit(GenRequest::new(i, vec![(i % 16) as u8], 2)).unwrap();
         }
-        let mut ids: Vec<u64> = s.collect(n as usize).into_iter().map(|r| r.id).collect();
+        let rs = s.collect(n as usize).unwrap();
+        assert!(rs.iter().all(|r| r.outcome == GenOutcome::Completed));
+        let mut ids: Vec<u64> = rs.into_iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..n).collect::<Vec<_>>());
         s.shutdown();
@@ -281,10 +639,10 @@ mod tests {
         let mut s = server(2);
         let n = 8;
         for i in 0..n {
-            s.submit(GenRequest { id: i, prompt: vec![0], max_new_tokens: 1 });
+            s.submit(GenRequest::new(i, vec![0], 1)).unwrap();
         }
         let workers: std::collections::HashSet<usize> =
-            s.collect(n as usize).into_iter().map(|r| r.worker).collect();
+            s.collect(n as usize).unwrap().into_iter().map(|r| r.worker).collect();
         assert!(workers.len() >= 2, "all requests went to one worker");
         s.shutdown();
     }
@@ -292,12 +650,12 @@ mod tests {
     #[test]
     fn generation_deterministic() {
         let mut s1 = server(1);
-        s1.submit(GenRequest { id: 0, prompt: vec![5, 6], max_new_tokens: 6 });
-        let r1 = s1.recv();
+        s1.submit(GenRequest::new(0, vec![5, 6], 6)).unwrap();
+        let r1 = s1.recv().unwrap();
         s1.shutdown();
         let mut s2 = server(1);
-        s2.submit(GenRequest { id: 0, prompt: vec![5, 6], max_new_tokens: 6 });
-        let r2 = s2.recv();
+        s2.submit(GenRequest::new(0, vec![5, 6], 6)).unwrap();
+        let r2 = s2.recv().unwrap();
         s2.shutdown();
         assert_eq!(r1.tokens, r2.tokens);
     }
@@ -306,10 +664,31 @@ mod tests {
     fn respects_max_seq() {
         let mut s = server(1);
         // prompt + generation longer than max_seq (16) must truncate safely
-        s.submit(GenRequest { id: 9, prompt: vec![1; 30], max_new_tokens: 30 });
-        let r = s.recv();
+        s.submit(GenRequest::new(9, vec![1; 30], 30)).unwrap();
+        let r = s.recv().unwrap();
         assert!(r.tokens.len() < 16);
+        assert_eq!(r.outcome, GenOutcome::Completed);
         s.shutdown();
+    }
+
+    #[test]
+    fn validation_outcomes_at_submit() {
+        // satellite: empty prompt and max_new_tokens == 0 get explicit
+        // immediate outcomes instead of implicit scheduler behavior
+        let mut s = server(1);
+        s.submit(GenRequest::new(0, vec![1, 2], 0)).unwrap();
+        s.submit(GenRequest::new(1, vec![], 3)).unwrap();
+        let rs = s.collect(2).unwrap();
+        let by_id = |id: u64| rs.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).outcome, GenOutcome::Completed, "empty generation is vacuously done");
+        assert_eq!(by_id(1).outcome, GenOutcome::Rejected, "no logits exist for an empty prompt");
+        assert!(by_id(0).tokens.is_empty() && by_id(1).tokens.is_empty());
+        assert_eq!(by_id(0).ttft_ms, None);
+        let m = s.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.ttft.count(), 0, "no 0.0 TTFT sentinel from token-less requests");
+        assert_eq!(m.no_token_requests, 1);
     }
 
     #[test]
@@ -329,9 +708,9 @@ mod tests {
             Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
         let n = 10;
         for i in 0..n {
-            s.submit(GenRequest { id: i, prompt: vec![2, 7, 1], max_new_tokens: 3 });
+            s.submit(GenRequest::new(i, vec![2, 7, 1], 3)).unwrap();
         }
-        let rs = s.collect(n as usize);
+        let rs = s.collect(n as usize).unwrap();
         assert!(rs.iter().all(|r| r.tokens.len() == 3));
         let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -349,10 +728,10 @@ mod tests {
             Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
         // sequential same-prompt requests: the second must fork the
         // first's pages (prompt 6 tokens = 3 full pages, capped to 5)
-        s.submit(GenRequest { id: 0, prompt: vec![4, 5, 6, 7, 8, 9], max_new_tokens: 2 });
-        let r0 = s.recv();
-        s.submit(GenRequest { id: 1, prompt: vec![4, 5, 6, 7, 8, 9], max_new_tokens: 2 });
-        let r1 = s.recv();
+        s.submit(GenRequest::new(0, vec![4, 5, 6, 7, 8, 9], 2)).unwrap();
+        let r0 = s.recv().unwrap();
+        s.submit(GenRequest::new(1, vec![4, 5, 6, 7, 8, 9], 2)).unwrap();
+        let r1 = s.recv().unwrap();
         assert_eq!(r0.cached_prefix_len, 0);
         assert_eq!(r1.cached_prefix_len, 5);
         assert_eq!(r0.tokens, r1.tokens, "prefix sharing changed greedy decode");
@@ -361,6 +740,83 @@ mod tests {
         assert_eq!(m.prefix_hits, 1);
         assert_eq!(m.prefill_tokens_saved, 5);
         assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_panic_loses_no_requests() {
+        // worker 0 panics at its 2nd tick; every request routed to it
+        // must be replayed on worker 1 and complete with full output
+        let cfg = ServerConfig {
+            n_workers: 2,
+            scheduler: SchedulerConfig {
+                max_batch: 2,
+                faults: FaultConfig { panic_at: vec![(0, 2)], ..FaultConfig::off() },
+                ..Default::default()
+            },
+        };
+        let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+        let n = 20u64;
+        for i in 0..n {
+            s.submit(GenRequest::new(i, vec![(i % 16) as u8, 3], 4)).unwrap();
+        }
+        let rs = s.collect(n as usize).unwrap();
+        assert!(rs.iter().all(|r| r.outcome == GenOutcome::Completed), "a worker panic must not fail requests");
+        assert!(rs.iter().all(|r| r.tokens.len() == 4), "replayed requests must produce full output");
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "worker panic lost or duplicated requests");
+        assert_eq!(s.live_workers(), 1, "the panicked worker must be reaped");
+        s.shutdown();
+    }
+
+    #[test]
+    fn all_workers_dead_fails_requests_and_errors_typed() {
+        // both workers panic on their first tick: every request exhausts
+        // the retry budget (or has no survivor) and is answered Failed;
+        // submit/recv then return typed errors instead of panicking
+        let cfg = ServerConfig {
+            n_workers: 2,
+            scheduler: SchedulerConfig {
+                max_batch: 2,
+                faults: FaultConfig { panic_at: vec![(0, 1), (1, 1)], ..FaultConfig::off() },
+                ..Default::default()
+            },
+        };
+        let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+        let n = 6u64;
+        for i in 0..n {
+            s.submit(GenRequest::new(i, vec![1, 2], 3)).unwrap();
+        }
+        let rs = s.collect(n as usize).unwrap();
+        assert!(rs.iter().all(|r| r.outcome == GenOutcome::Failed));
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "every request still got a terminal answer");
+        assert_eq!(s.live_workers(), 0);
+        assert_eq!(
+            s.submit(GenRequest::new(99, vec![1], 1)).unwrap_err(),
+            ServeError::NoWorkers
+        );
+        assert_eq!(s.recv().unwrap_err(), ServeError::Disconnected);
+        let m = s.shutdown();
+        assert_eq!(m.failed, n as usize);
+    }
+
+    #[test]
+    fn cancel_is_terminal_exactly_once() {
+        let mut s = server(1);
+        s.submit(GenRequest::new(5, vec![1, 2, 3], 12)).unwrap();
+        s.cancel(5);
+        let r = s.recv().unwrap();
+        assert_eq!(r.id, 5);
+        // the race between completion and cancellation is inherent; both
+        // are valid single terminal outcomes
+        assert!(
+            r.outcome == GenOutcome::Cancelled || r.outcome == GenOutcome::Completed,
+            "{:?}",
+            r.outcome
+        );
+        s.shutdown();
     }
 
     #[test]

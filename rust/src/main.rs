@@ -14,8 +14,8 @@
 //! AOT artifact tree (`make artifacts`); Python never executes here.
 
 use gptq_rs::coordinator::{
-    verify_parity, GenRequest, PipelineConfig, QuantEngine, QuantPipeline, SchedulerConfig, Server,
-    ServerConfig,
+    verify_parity, Class, GenOutcome, GenRequest, PipelineConfig, QuantEngine, QuantPipeline,
+    SchedulerConfig, Server, ServerConfig,
 };
 use gptq_rs::data::{load_tasks, CorpusFile};
 use gptq_rs::eval::{eval_choice, eval_cloze, perplexity, perplexity_artifact};
@@ -32,7 +32,10 @@ const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [-
   eval     --size S [--quantized F] [--segments N] [--via cpu|artifact]
   serve    --size S [--quantized F] [--workers N] [--requests N] [--gen-tokens N]
            [--max-batch N] [--pool-pages N] [--page-size N] [--prefill-chunk N]
-           [--kv-dtype f32|q8] [--skip-parity]";
+           [--kv-dtype f32|q8] [--skip-parity]
+           [--priority interactive|batch] [--ttft-deadline-ms MS] [--deadline-ms MS]
+           [--max-queue-interactive N] [--max-queue-batch N]
+           (GPTQ_FAULTS arms the deterministic fault-injection harness; see DESIGN.md)";
 
 fn parse_engine(s: &str) -> Result<QuantEngine> {
     Ok(match s {
@@ -217,6 +220,15 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown --kv-dtype {s:?} (f32|q8)"))?,
         None => gptq_rs::model::KvDtype::from_env(),
     };
+    // request lifecycle knobs (DESIGN.md §Robustness): class + deadlines
+    // apply to every request this CLI run submits
+    let priority = match args.get("priority") {
+        Some(s) => Class::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --priority {s:?} (interactive|batch)"))?,
+        None => Class::Interactive,
+    };
+    let ttft_deadline_ms = parse_ms(args.get("ttft-deadline-ms"), "--ttft-deadline-ms")?;
+    let deadline_ms = parse_ms(args.get("deadline-ms"), "--deadline-ms")?;
     let artifacts = artifacts.to_path_buf();
     let cfg = ServerConfig {
         n_workers: workers,
@@ -230,6 +242,12 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             // cache); bit-identical outputs either way under greedy decode
             prefix_cache: !args.flag("no-prefix-cache"),
             kv_dtype,
+            // per-class admission bounds: overload sheds (Rejected) at
+            // submit instead of queueing unboundedly
+            max_queue_interactive: args.usize_or("max-queue-interactive", usize::MAX),
+            max_queue_batch: args.usize_or("max-queue-batch", usize::MAX),
+            // deterministic chaos hooks; off unless GPTQ_FAULTS is set
+            faults: gptq_rs::util::faultinject::FaultConfig::from_env(),
         },
     };
     println!(
@@ -244,23 +262,46 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     let t0 = Instant::now();
     for i in 0..requests {
         let start = (i * 131) % (corpus.len() - 32);
-        server.submit(GenRequest {
-            id: i as u64,
-            prompt: corpus.bytes[start..start + 16].to_vec(),
-            max_new_tokens: gen_tokens,
-        });
+        let mut req = GenRequest::new(
+            i as u64,
+            corpus.bytes[start..start + 16].to_vec(),
+            gen_tokens,
+        )
+        .with_priority(priority);
+        if let Some(ms) = ttft_deadline_ms {
+            req = req.with_ttft_deadline_ms(ms);
+        }
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        }
+        server.submit(req)?;
     }
-    let responses = server.collect(requests);
+    let responses = server.collect(requests)?;
     let wall_s = t0.elapsed().as_secs_f64();
     let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let ok = responses.iter().filter(|r| r.outcome == GenOutcome::Completed).count();
     let metrics = server.shutdown();
     println!(
-        "served {requests} requests / {total_tokens} tokens on {workers} worker(s) in {wall_s:.2}s \
-         ({:.1} tokens/s aggregate, wall-clock)",
+        "served {requests} requests ({ok} completed, {} shed/failed) / {total_tokens} tokens on \
+         {workers} worker(s) in {wall_s:.2}s ({:.1} tokens/s aggregate, wall-clock)",
+        requests - ok,
         total_tokens as f64 / wall_s.max(1e-9)
     );
     println!("{}", metrics.summary());
     Ok(())
+}
+
+/// Parse an optional millisecond flag value.
+fn parse_ms(v: Option<&str>, flag: &str) -> Result<Option<f64>> {
+    match v {
+        Some(s) => {
+            let ms: f64 =
+                s.parse().map_err(|_| anyhow::anyhow!("{flag} wants milliseconds, got {s:?}"))?;
+            anyhow::ensure!(ms >= 0.0 && ms.is_finite(), "{flag} must be a finite, non-negative number");
+            Ok(Some(ms))
+        }
+        None => Ok(None),
+    }
 }
 
 fn build_model(

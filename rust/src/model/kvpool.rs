@@ -252,6 +252,16 @@ impl KvPool {
         self.free.len()
     }
 
+    /// Fraction of pages in use (live sequences + cache holds), in
+    /// [0, 1] — the saturation signal the serving overload bench and the
+    /// SLO docs report. A zero-page pool reads as fully utilized.
+    pub fn utilization(&self) -> f64 {
+        if self.n_pages == 0 {
+            return 1.0;
+        }
+        1.0 - self.free.len() as f64 / self.n_pages as f64
+    }
+
     /// Holder count of `page` (0 = free). Exposed for the prefix cache's
     /// eviction policy and the refcount property tests.
     pub fn refcount(&self, page: u32) -> u32 {
@@ -610,6 +620,19 @@ mod tests {
         assert!(p.reserve(&mut b, 3));
         p.release(&mut b);
         assert_eq!(p.free_pages(), 3, "page leak");
+    }
+
+    #[test]
+    fn utilization_tracks_reserve_and_release() {
+        let mut p = pool(4, 2);
+        assert_eq!(p.utilization(), 0.0);
+        let mut s = SeqCache::new();
+        assert!(p.reserve(&mut s, 3)); // 2 of 4 pages
+        assert!((p.utilization() - 0.5).abs() < 1e-12);
+        assert!(p.reserve(&mut s, 8)); // all 4
+        assert_eq!(p.utilization(), 1.0);
+        p.release(&mut s);
+        assert_eq!(p.utilization(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Deterministic fault injection for the serving tier (chaos testing).
+//!
+//! Production serving must survive pool exhaustion, stuck ticks, and
+//! worker crashes — but those conditions are rare and timing-dependent,
+//! so tests that wait for them organically are flaky and slow. This
+//! module makes faults *schedulable*: a seeded [`FaultConfig`] names the
+//! injection points (forced `KvPool::reserve` failure, worker panic at
+//! tick N, artificial per-tick delay) and a per-scheduler
+//! [`FaultInjector`] fires them from counters, not wall-clock, so the
+//! same seed always produces the same injected schedule and a chaos
+//! trace is exactly replayable (`tests/chaos.rs`).
+//!
+//! Off by default and zero-cost when off: every hook early-returns on a
+//! disabled config, and `FaultConfig::off()` is what
+//! `SchedulerConfig::default()` carries unless `GPTQ_FAULTS` is set —
+//! the determinism contracts (threads=N ≡ 1, cache-on ≡ off, f32
+//! bit-identity) are untouched when no faults are injected.
+//!
+//! `GPTQ_FAULTS` grammar (comma-separated `key=value`, `panic`
+//! repeatable):
+//!
+//! ```text
+//! GPTQ_FAULTS="seed=7,reserve=0.1,panic=0@5,panic=1@9,delay=3@2"
+//!              |      |           |                   +- sleep 2 ms before every 3rd tick
+//!              |      |           +- worker 0 panics at its 5th tick (and worker 1 at its 9th)
+//!              |      +- each reserve attempt fails with probability 0.1
+//!              +- seed for the counter-based reserve-failure schedule
+//! ```
+
+use std::time::Duration;
+
+/// Which faults to inject, and where. `Default`/[`FaultConfig::off`] is
+/// the no-faults configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultConfig {
+    /// seed for the counter-based reserve-failure schedule: same seed ⇒
+    /// same injected schedule (per worker id)
+    pub seed: u64,
+    /// probability in [0, 1] that any one `KvPool::reserve` attempt is
+    /// forced to fail (exercises eviction/preemption without real pool
+    /// pressure); 0.0 = never
+    pub reserve_fail_p: f64,
+    /// (worker id, tick) pairs: that worker's scheduler panics at the
+    /// top of its tick-th `step()` call (1-based), before touching any
+    /// state — so a re-routed request replays from a clean slate
+    pub panic_at: Vec<(usize, u64)>,
+    /// (every_n, ms): sleep `ms` milliseconds before every `every_n`-th
+    /// tick — an artificial slow step, for exercising deadline timeouts
+    pub step_delay: Option<(u64, u64)>,
+}
+
+impl FaultConfig {
+    /// No faults (the production configuration).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Whether any injection point is armed.
+    pub fn enabled(&self) -> bool {
+        self.reserve_fail_p > 0.0 || !self.panic_at.is_empty() || self.step_delay.is_some()
+    }
+
+    /// Read `GPTQ_FAULTS` (see the module docs for the grammar). Unset
+    /// or empty = no faults. A malformed spec panics: silently dropping
+    /// faults would make a chaos run vacuously green.
+    pub fn from_env() -> Self {
+        match std::env::var("GPTQ_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => {
+                Self::parse(&s).unwrap_or_else(|e| panic!("GPTQ_FAULTS: {e}"))
+            }
+            _ => Self::off(),
+        }
+    }
+
+    /// Parse the `GPTQ_FAULTS` grammar.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut cfg = Self::off();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            match k.trim() {
+                "seed" => {
+                    cfg.seed = v.parse().map_err(|_| format!("bad seed {v:?}"))?;
+                }
+                "reserve" => {
+                    let p: f64 = v.parse().map_err(|_| format!("bad reserve probability {v:?}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("reserve probability {p} outside [0, 1]"));
+                    }
+                    cfg.reserve_fail_p = p;
+                }
+                "panic" => {
+                    let (w, t) = v
+                        .split_once('@')
+                        .ok_or_else(|| format!("panic wants WID@TICK, got {v:?}"))?;
+                    let wid = w.parse().map_err(|_| format!("bad panic worker id {w:?}"))?;
+                    let tick = t.parse().map_err(|_| format!("bad panic tick {t:?}"))?;
+                    cfg.panic_at.push((wid, tick));
+                }
+                "delay" => {
+                    let (n, ms) = v
+                        .split_once('@')
+                        .ok_or_else(|| format!("delay wants EVERY_N@MS, got {v:?}"))?;
+                    let every: u64 = n.parse().map_err(|_| format!("bad delay period {n:?}"))?;
+                    if every == 0 {
+                        return Err("delay period must be >= 1".into());
+                    }
+                    let ms = ms.parse().map_err(|_| format!("bad delay ms {ms:?}"))?;
+                    cfg.step_delay = Some((every, ms));
+                }
+                other => {
+                    return Err(format!("unknown fault key {other:?} (seed|reserve|panic|delay)"));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Per-scheduler fault state: counters (tick, reserve attempts) that the
+/// injection decisions hash from. Same `FaultConfig` + same worker id +
+/// same call sequence ⇒ same injected schedule.
+#[derive(Debug)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    wid: usize,
+    ticks: u64,
+    reserves: u64,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig, wid: usize) -> Self {
+        Self { cfg, wid, ticks: 0, reserves: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Ticks observed so far (1-based after the first `on_tick`).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Tick-boundary hook, called at the top of every `Scheduler::step`
+    /// BEFORE any state changes: fires the artificial delay and the
+    /// scheduled worker panic. Zero-cost when no faults are armed.
+    pub fn on_tick(&mut self) {
+        if !self.enabled() {
+            return;
+        }
+        self.ticks += 1;
+        if let Some((every, ms)) = self.cfg.step_delay {
+            if self.ticks % every == 0 {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        if self.cfg.panic_at.iter().any(|&(w, t)| w == self.wid && t == self.ticks) {
+            panic!("injected worker panic (wid {}, tick {})", self.wid, self.ticks);
+        }
+    }
+
+    /// Reserve-site hook: whether THIS reserve attempt is forced to
+    /// fail. Counter-based (splitmix64 over seed ⊕ wid ⊕ attempt
+    /// counter), so the failure schedule is a pure function of the
+    /// config and the call sequence — never of wall-clock.
+    pub fn inject_reserve_failure(&mut self) -> bool {
+        if self.cfg.reserve_fail_p <= 0.0 {
+            return false;
+        }
+        self.reserves += 1;
+        let h = splitmix64(
+            self.cfg
+                .seed
+                .wrapping_add((self.wid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add(self.reserves.wrapping_mul(0xBF58_476D_1CE4_E5B9)),
+        );
+        // top 53 bits as a uniform fraction in [0, 1)
+        (h >> 11) as f64 / (1u64 << 53) as f64 < self.cfg.reserve_fail_p
+    }
+}
+
+/// SplitMix64 finalizer — the standard 64-bit avalanche mix.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_is_disabled_and_injects_nothing() {
+        let mut inj = FaultInjector::new(FaultConfig::off(), 0);
+        assert!(!inj.enabled());
+        inj.on_tick(); // must not count, sleep, or panic
+        assert_eq!(inj.ticks(), 0);
+        for _ in 0..1000 {
+            assert!(!inj.inject_reserve_failure());
+        }
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let cfg = FaultConfig::parse("seed=7, reserve=0.1, panic=0@5, panic=1@9, delay=3@2").unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert!((cfg.reserve_fail_p - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.panic_at, vec![(0, 5), (1, 9)]);
+        assert_eq!(cfg.step_delay, Some((3, 2)));
+        assert!(cfg.enabled());
+        // empty / missing spec is the off config
+        assert_eq!(FaultConfig::parse("").unwrap(), FaultConfig::off());
+        assert!(!FaultConfig::off().enabled());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultConfig::parse("reserve").is_err());
+        assert!(FaultConfig::parse("reserve=1.5").is_err());
+        assert!(FaultConfig::parse("panic=3").is_err());
+        assert!(FaultConfig::parse("delay=0@5").is_err());
+        assert!(FaultConfig::parse("bogus=1").is_err());
+    }
+
+    #[test]
+    fn reserve_schedule_is_seed_deterministic() {
+        let cfg = FaultConfig { seed: 42, reserve_fail_p: 0.3, ..FaultConfig::off() };
+        let run = |cfg: &FaultConfig, wid: usize| -> Vec<bool> {
+            let mut inj = FaultInjector::new(cfg.clone(), wid);
+            (0..200).map(|_| inj.inject_reserve_failure()).collect()
+        };
+        let a = run(&cfg, 0);
+        assert_eq!(a, run(&cfg, 0), "same seed+wid must replay identically");
+        assert_ne!(a, run(&cfg, 1), "worker id must decorrelate the schedules");
+        let other = FaultConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(a, run(&other, 0), "seed must change the schedule");
+        // the empirical rate is in the right ballpark for p=0.3
+        let hits = a.iter().filter(|&&b| b).count();
+        assert!((30..=90).contains(&hits), "200 draws at p=0.3 hit {hits} times");
+    }
+
+    #[test]
+    fn panic_fires_at_the_scheduled_tick_only() {
+        let cfg = FaultConfig { panic_at: vec![(2, 3)], ..FaultConfig::off() };
+        let mut inj = FaultInjector::new(cfg.clone(), 2);
+        inj.on_tick();
+        inj.on_tick();
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| inj.on_tick()));
+        assert!(boom.is_err(), "tick 3 must panic for wid 2");
+        // a different worker never fires
+        let mut other = FaultInjector::new(cfg, 0);
+        for _ in 0..10 {
+            other.on_tick();
+        }
+        assert_eq!(other.ticks(), 10);
+    }
+
+    #[test]
+    fn delay_ticks_without_panicking() {
+        let cfg = FaultConfig { step_delay: Some((2, 1)), ..FaultConfig::off() };
+        let mut inj = FaultInjector::new(cfg, 0);
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            inj.on_tick(); // sleeps 1 ms on ticks 2 and 4
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+        assert_eq!(inj.ticks(), 4);
+    }
+}

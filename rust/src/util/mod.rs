@@ -1,10 +1,12 @@
 //! Self-contained substrate the offline environment forces us to carry:
 //! a JSON parser/writer ([`json`]), a small CLI argument parser ([`cli`]),
-//! a criterion-style micro-benchmark harness ([`bench`]), and a scoped
-//! thread pool ([`par`], the rayon stand-in).
+//! a criterion-style micro-benchmark harness ([`bench`]), a scoped
+//! thread pool ([`par`], the rayon stand-in), and the deterministic
+//! fault-injection harness for chaos testing ([`faultinject`]).
 
 pub mod bench;
 pub mod cli;
+pub mod faultinject;
 pub mod json;
 pub mod par;
 

@@ -27,8 +27,8 @@ fn serve_tick() -> (Vec<u8>, f64) {
     };
     let m = CpuModel::from_checkpoint(&tiny_checkpoint(7));
     let mut server = Server::start(cfg, move |_| m.clone());
-    server.submit(GenRequest { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 });
-    let responses = server.collect(1);
+    server.submit(GenRequest::new(1, vec![1, 2, 3], 4)).unwrap();
+    let responses = server.collect(1).unwrap();
     let metrics = server.shutdown();
     (responses[0].tokens.clone(), metrics.ttft.percentile(50.0))
 }

@@ -1,0 +1,283 @@
+//! Chaos suite (DESIGN.md §Robustness): seeded fault injection driven
+//! through the scheduler and the server, asserting the lifecycle
+//! contract under duress — every submitted request reaches EXACTLY ONE
+//! terminal [`GenOutcome`], no KV page leaks, no deadlock, and the
+//! same fault seed replays the identical terminal sequence.
+//!
+//! The deterministic trace test drives a bare `Scheduler` (no worker
+//! threads, no wall-clock deadlines except the always-expired
+//! `ttft_deadline_ms = 0.0`), so the full (id, outcome, tokens)
+//! sequence is a pure function of the seeds. The server-level tests
+//! cover the nondeterministic layer — worker panics, re-routing, slow
+//! ticks — where only the outcome census is asserted, never ordering.
+//!
+//! `make -C rust check` runs this suite across the ISA × threads × KV
+//! dtype matrix; `make -C rust soak` adds the `#[ignore]`d 500-request
+//! version.
+
+use gptq_rs::coordinator::{
+    Class, GenOutcome, GenRequest, Scheduler, SchedulerConfig, ServeError, Server, ServerConfig,
+};
+use gptq_rs::data::Rng;
+use gptq_rs::model::testkit::tiny_checkpoint;
+use gptq_rs::model::CpuModel;
+use gptq_rs::util::faultinject::FaultConfig;
+use std::collections::{HashMap, HashSet};
+
+/// One deterministic chaos schedule: a mixed request population (zero
+/// max_new, empty prompts, always-expired TTFT deadlines, Batch and
+/// Interactive classes, sprinkled cancellations) against a small pool
+/// with seeded reserve-failure injection. Returns the terminal
+/// sequence in arrival-at-terminal order plus the step count — both
+/// must be identical across runs at the same seeds.
+fn run_chaos_schedule(n: u64) -> (Vec<(u64, GenOutcome, Vec<u8>)>, usize) {
+    let cfg = SchedulerConfig {
+        max_batch: 4,
+        pool_pages: 8,
+        page_size: 2,
+        prefill_chunk: 2,
+        max_queue_batch: 3,
+        faults: FaultConfig { seed: 7, reserve_fail_p: 0.2, ..FaultConfig::off() },
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(7)), cfg);
+    let mut rng = Rng::new(99);
+    let mut trace = Vec::new();
+    let mut submitted = 0u64;
+    let mut steps = 0usize;
+    while submitted < n || !sched.is_idle() {
+        // up to two arrivals per tick, kinds cycling through the
+        // degenerate and deadline-carrying populations
+        for _ in 0..2 {
+            if submitted >= n {
+                break;
+            }
+            let id = submitted;
+            let plen = 1 + rng.below(6);
+            let prompt: Vec<u8> = (0..plen).map(|_| rng.below(16) as u8).collect();
+            let req = match id % 8 {
+                0 => GenRequest::new(id, prompt, 0), // immediate zero-token Completed
+                1 => GenRequest::new(id, vec![], 3), // immediate Rejected
+                2 => GenRequest::new(id, prompt, 4).with_ttft_deadline_ms(0.0), // shed
+                3 | 4 => GenRequest::new(id, prompt, 3 + (id % 3) as usize)
+                    .with_priority(Class::Batch),
+                _ => GenRequest::new(id, prompt, 2 + (id % 4) as usize),
+            };
+            sched.submit(req);
+            submitted += 1;
+            if id % 7 == 3 {
+                // cancel a recent id: queued/running → Cancelled, already
+                // terminal → no-op (never a second terminal response)
+                sched.cancel(id - 1);
+            }
+        }
+        trace.extend(sched.step().into_iter().map(|r| (r.id, r.outcome, r.tokens)));
+        steps += 1;
+        assert!(steps < 10_000, "chaos schedule deadlocked at {} terminals", trace.len());
+    }
+    sched.assert_no_page_leak();
+    (trace, steps)
+}
+
+/// ids 0..n each appear exactly once in the terminal sequence.
+fn assert_census(trace: &[(u64, GenOutcome, Vec<u8>)], n: u64) {
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    for (id, _, _) in trace {
+        *seen.entry(*id).or_insert(0) += 1;
+    }
+    for id in 0..n {
+        assert_eq!(
+            seen.get(&id).copied().unwrap_or(0),
+            1,
+            "request {id} must get exactly one terminal response"
+        );
+    }
+    assert_eq!(trace.len() as u64, n, "stray terminal responses beyond ids 0..{n}");
+}
+
+#[test]
+fn chaos_schedule_census_and_seeded_replay() {
+    let n = 40u64;
+    let (trace, steps) = run_chaos_schedule(n);
+    assert_census(&trace, n);
+    // the population exercises every shed/cancel path at least once
+    let outcomes: HashSet<GenOutcome> = trace.iter().map(|(_, o, _)| *o).collect();
+    for want in [
+        GenOutcome::Completed,
+        GenOutcome::Rejected,
+        GenOutcome::TimedOut,
+        GenOutcome::Cancelled,
+    ] {
+        assert!(outcomes.contains(&want), "chaos trace never produced {}", want.name());
+    }
+    // same seeds ⇒ bit-identical terminal sequence and step count: the
+    // injected fault schedule is counter-based, never wall-clock
+    let (replay, replay_steps) = run_chaos_schedule(n);
+    assert_eq!(trace, replay, "chaos trace is not seed-deterministic");
+    assert_eq!(steps, replay_steps);
+}
+
+#[test]
+fn worker_panic_reroutes_full_mixed_load() {
+    // worker 0 dies at its 3rd tick mid-soak: everything routed there
+    // must be replayed on the survivor and the census must stay exact
+    let cfg = ServerConfig {
+        n_workers: 2,
+        scheduler: SchedulerConfig {
+            max_batch: 2,
+            faults: FaultConfig { panic_at: vec![(0, 3)], ..FaultConfig::off() },
+            ..Default::default()
+        },
+    };
+    let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+    let n = 24u64;
+    for i in 0..n {
+        let class = if i % 3 == 0 { Class::Batch } else { Class::Interactive };
+        s.submit(GenRequest::new(i, vec![(i % 16) as u8, 5], 3).with_priority(class))
+            .unwrap();
+    }
+    let rs = s.collect(n as usize).unwrap();
+    assert!(
+        rs.iter().all(|r| r.outcome == GenOutcome::Completed && r.tokens.len() == 3),
+        "a single worker death must not lose or truncate requests"
+    );
+    let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>());
+    assert_eq!(s.live_workers(), 1);
+    let m = s.shutdown();
+    assert_eq!(m.completed, n as usize);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn total_worker_loss_fails_accepted_requests_with_typed_errors() {
+    // both workers panic on their first tick. Submission races the
+    // deaths by design: every ACCEPTED request must still be answered
+    // (Failed — the retry budget has no survivor), and once the pool is
+    // gone submit/recv return typed errors instead of panicking.
+    let cfg = ServerConfig {
+        n_workers: 2,
+        scheduler: SchedulerConfig {
+            max_batch: 2,
+            faults: FaultConfig { panic_at: vec![(0, 1), (1, 1)], ..FaultConfig::off() },
+            ..Default::default()
+        },
+    };
+    let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+    let mut accepted = Vec::new();
+    for i in 0..8u64 {
+        match s.submit(GenRequest::new(i, vec![1, 2], 3)) {
+            Ok(_) => accepted.push(i),
+            Err(e) => {
+                assert_eq!(e, ServeError::NoWorkers);
+                break;
+            }
+        }
+    }
+    assert!(!accepted.is_empty(), "the first submit must precede any death");
+    let rs = s.collect(accepted.len()).unwrap();
+    assert!(rs.iter().all(|r| r.outcome == GenOutcome::Failed));
+    let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, accepted, "every accepted request still got a terminal answer");
+    assert_eq!(s.live_workers(), 0);
+    assert_eq!(s.submit(GenRequest::new(99, vec![1], 1)).unwrap_err(), ServeError::NoWorkers);
+    assert_eq!(s.recv().unwrap_err(), ServeError::Disconnected);
+    let m = s.shutdown();
+    assert_eq!(m.failed, rs.len());
+}
+
+#[test]
+fn slow_ticks_past_deadline_time_out_then_recover() {
+    // a 5 ms injected delay on every tick makes any 2 ms total deadline
+    // unmeetable: the request must come back TimedOut (shed from the
+    // queue or stopped mid-generation — wall-clock decides which), its
+    // pages must be reclaimed, and a deadline-free request afterwards
+    // must complete normally on the same worker
+    let cfg = ServerConfig {
+        n_workers: 1,
+        scheduler: SchedulerConfig {
+            max_batch: 2,
+            faults: FaultConfig { step_delay: Some((1, 5)), ..FaultConfig::off() },
+            ..Default::default()
+        },
+    };
+    let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+    s.submit(GenRequest::new(0, vec![1, 2, 3], 8).with_deadline_ms(2.0)).unwrap();
+    let r = s.recv().unwrap();
+    assert_eq!(r.id, 0);
+    assert_eq!(r.outcome, GenOutcome::TimedOut);
+    assert!(r.tokens.len() < 8, "a timed-out request must not run to completion");
+    s.submit(GenRequest::new(1, vec![1, 2, 3], 2)).unwrap();
+    let r = s.recv().unwrap();
+    assert_eq!((r.id, r.outcome), (1, GenOutcome::Completed));
+    assert_eq!(r.tokens.len(), 2, "the worker must be healthy after a timeout");
+    let m = s.shutdown();
+    assert_eq!(m.timed_out, 1);
+    assert_eq!(m.completed, 1);
+}
+
+/// The `make soak` version: 500 mixed requests against 3 workers with a
+/// mid-run worker panic AND seeded reserve failures on a starved pool.
+/// Census only (the server layer is nondeterministic): exactly one
+/// terminal per accepted id, plain requests complete, counters add up.
+#[test]
+#[ignore] // minutes-long: `cargo test --release --test chaos -- --ignored`
+fn chaos_soak_500_requests() {
+    let cfg = ServerConfig {
+        n_workers: 3,
+        scheduler: SchedulerConfig {
+            max_batch: 4,
+            pool_pages: 16,
+            page_size: 4,
+            faults: FaultConfig {
+                seed: 13,
+                reserve_fail_p: 0.1,
+                panic_at: vec![(1, 40)],
+                ..FaultConfig::off()
+            },
+            ..Default::default()
+        },
+    };
+    let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+    let mut rng = Rng::new(2024);
+    let n = 500u64;
+    for i in 0..n {
+        let plen = 1 + rng.below(6);
+        let prompt: Vec<u8> = (0..plen).map(|_| rng.below(16) as u8).collect();
+        let req = match i % 16 {
+            0 => GenRequest::new(i, prompt, 0),
+            1 => GenRequest::new(i, vec![], 3),
+            2 => GenRequest::new(i, prompt, 4).with_ttft_deadline_ms(0.0),
+            3 | 7 | 11 => GenRequest::new(i, prompt, 1 + (i % 4) as usize)
+                .with_priority(Class::Batch),
+            _ => GenRequest::new(i, prompt, 1 + (i % 4) as usize),
+        };
+        s.submit(req).unwrap();
+        if i % 16 == 11 {
+            s.cancel(i - 3); // whatever state it's in — never double-answers
+        }
+    }
+    let rs = s.collect(n as usize).unwrap();
+    let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "soak lost or duplicated requests");
+    for r in &rs {
+        match r.id % 16 {
+            1 => assert_eq!(r.outcome, GenOutcome::Rejected, "id {}", r.id),
+            2 => assert_eq!(r.outcome, GenOutcome::TimedOut, "id {}", r.id),
+            0 => assert_eq!(r.outcome, GenOutcome::Completed, "id {}", r.id),
+            _ => assert!(
+                r.outcome == GenOutcome::Completed || r.outcome == GenOutcome::Cancelled,
+                "id {} got {}",
+                r.id,
+                r.outcome.name()
+            ),
+        }
+    }
+    assert_eq!(s.live_workers(), 2, "the scheduled panic must have fired");
+    let m = s.shutdown();
+    assert_eq!(m.terminals(), n as usize, "terminal counters must cover every request");
+    assert_eq!(m.failed, 0, "one worker death is inside every retry budget");
+}

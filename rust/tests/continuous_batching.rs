@@ -225,7 +225,7 @@ fn requests(n: usize, seed: u64) -> Vec<GenRequest> {
     ragged_streams(n, seed)
         .into_iter()
         .enumerate()
-        .map(|(i, prompt)| GenRequest { id: i as u64, prompt, max_new_tokens: 1 + i % 5 })
+        .map(|(i, prompt)| GenRequest::new(i as u64, prompt, 1 + i % 5))
         .collect()
 }
 
@@ -280,10 +280,8 @@ fn pool_exhaustion_backpressures_and_completes() {
     };
     let mut model = CpuModel::from_checkpoint(&tiny_checkpoint(73));
     let reqs: Vec<GenRequest> = (0..16u64)
-        .map(|i| GenRequest {
-            id: i,
-            prompt: vec![(i % 32) as u8, (i * 7 % 32) as u8, (i * 13 % 32) as u8],
-            max_new_tokens: 5,
+        .map(|i| {
+            GenRequest::new(i, vec![(i % 32) as u8, (i * 7 % 32) as u8, (i * 13 % 32) as u8], 5)
         })
         .collect();
     let want: Vec<Vec<u8>> = reqs
@@ -383,11 +381,10 @@ fn soak_trace(name: &str, total: usize, seed: u64, shared_prefixes: usize) {
                     }
                     p
                 };
-                sched.submit(GenRequest {
-                    id: submitted as u64,
-                    prompt,
-                    max_new_tokens: rng.below(9),
-                });
+                // max_new_tokens can be 0: those resolve immediately as
+                // zero-token Completed responses and must still show up
+                // exactly once in the id census below
+                sched.submit(GenRequest::new(submitted as u64, prompt, rng.below(9)));
                 submitted += 1;
             }
         }

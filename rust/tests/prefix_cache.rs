@@ -174,11 +174,7 @@ fn shared_prefix_requests(k: usize, per: usize) -> Vec<GenRequest> {
             let mut prompt: Vec<u8> = (0..6).map(|i| ((p * 7 + i * 3) % 32) as u8).collect();
             prompt.push(((s * 11 + p) % 32) as u8); // distinct suffix head
             prompt.push((s % 32) as u8);
-            reqs.push(GenRequest {
-                id: (s * k + p) as u64,
-                prompt,
-                max_new_tokens: 3,
-            });
+            reqs.push(GenRequest::new((s * k + p) as u64, prompt, 3));
         }
     }
     reqs
@@ -193,6 +189,7 @@ fn run_sched(model: CpuModel, prefix_cache: bool, max_batch: usize, reqs: &[GenR
         eos: None,
         prefix_cache,
         kv_dtype: KvDtype::from_env(),
+        ..Default::default()
     };
     let mut sched = Scheduler::new(0, model, cfg);
     for r in reqs {
@@ -239,6 +236,7 @@ fn k_distinct_prefixes_k_cold_prefills() {
         eos: None,
         prefix_cache: true,
         kv_dtype: KvDtype::from_env(),
+        ..Default::default()
     };
     let mut sched = Scheduler::new(0, CpuModel::from_checkpoint(&tiny_checkpoint(41)), cfg);
     for r in &reqs {
