@@ -148,6 +148,14 @@ pub struct ServeMetrics {
     /// prompt tokens whose prefill was skipped by forking cached KV
     /// pages — the cross-request work the prefix cache saved
     pub prefill_tokens_saved: usize,
+    /// speculative rounds run (draft propose + one batched target
+    /// verify); 0 whenever `--spec-decode` / `GPTQ_SPEC` is off
+    pub spec_rounds: usize,
+    /// draft tokens proposed across all rounds (≤ k per round)
+    pub spec_proposed: usize,
+    /// proposals the target accepted — `spec_accepted / spec_proposed`
+    /// is the acceptance rate the speedup model hinges on
+    pub spec_accepted: usize,
 }
 
 impl ServeMetrics {
@@ -214,6 +222,15 @@ impl ServeMetrics {
         self.prefix_hits as f64 / self.prefix_lookups as f64
     }
 
+    /// Fraction of draft proposals the target accepted (0.0 before any
+    /// proposal, i.e. whenever speculation is off).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
+    }
+
     pub fn merge(&mut self, other: &ServeMetrics) {
         self.per_token.merge(&other.per_token);
         self.prefill.merge(&other.prefill);
@@ -230,6 +247,9 @@ impl ServeMetrics {
         self.prefix_lookups += other.prefix_lookups;
         self.prefix_hits += other.prefix_hits;
         self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.spec_rounds += other.spec_rounds;
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
     }
 
     pub fn summary(&self) -> String {
@@ -239,7 +259,8 @@ impl ServeMetrics {
         let queue = self.queue_wait.percentiles(&[50.0, 99.0]);
         format!(
             "per-token {} | ttft p50={:.3}ms p99={:.3}ms | queue-wait p50={:.3}ms p99={:.3}ms | \
-             prefix-cache hit-rate={:.2} saved={} tokens | outcomes completed={} rejected={} \
+             prefix-cache hit-rate={:.2} saved={} tokens | spec rounds={} accept-rate={:.2} | \
+             outcomes completed={} rejected={} \
              timed-out={} cancelled={} failed={} (shed-rate={:.2}, no-token={})",
             self.per_token.summary(),
             ttft[0],
@@ -248,6 +269,8 @@ impl ServeMetrics {
             queue[1],
             self.cache_hit_rate(),
             self.prefill_tokens_saved,
+            self.spec_rounds,
+            self.spec_accept_rate(),
             self.completed,
             self.rejected,
             self.timed_out,
@@ -393,6 +416,9 @@ mod tests {
         a.prefix_lookups = 4;
         a.prefix_hits = 1;
         a.prefill_tokens_saved = 32;
+        a.spec_rounds = 3;
+        a.spec_proposed = 12;
+        a.spec_accepted = 9;
         let mut b = ServeMetrics::new();
         b.per_token.record_ms(3.0);
         b.ttft.record_ms(20.0);
@@ -401,6 +427,9 @@ mod tests {
         b.prefix_lookups = 2;
         b.prefix_hits = 2;
         b.prefill_tokens_saved = 10;
+        b.spec_rounds = 1;
+        b.spec_proposed = 4;
+        b.spec_accepted = 3;
         a.merge(&b);
         assert_eq!(a.per_token.count(), 2);
         assert_eq!(a.requests(), 2);
@@ -411,6 +440,18 @@ mod tests {
         assert_eq!(a.prefix_hits, 3);
         assert_eq!(a.prefill_tokens_saved, 42);
         assert!((a.cache_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(a.spec_rounds, 4);
+        assert_eq!(a.spec_proposed, 16);
+        assert_eq!(a.spec_accepted, 12);
+        assert!((a.spec_accept_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_accept_rate_safe_when_spec_off() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.spec_accept_rate(), 0.0);
+        let s = m.summary();
+        assert!(s.contains("spec rounds=0"), "{s}");
     }
 
     #[test]

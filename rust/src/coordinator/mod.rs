@@ -24,16 +24,25 @@
 //!   page-granular token-prefix trie over the KV pool, so requests
 //!   sharing a system/few-shot prefix fork already-computed pages
 //!   instead of re-running prefill (DESIGN.md §Prefix cache).
+//! * [`sampling`] — per-request seeded sampling (counter-based RNG so
+//!   preempt-and-rerun replays bitwise; greedy stays frozen through
+//!   `argmax`) and the self-speculative decoding config: the same
+//!   checkpoint repacked at 2–3 bits drafts k tokens the target model
+//!   verifies in one batched pass (DESIGN.md §Sampling & Speculative
+//!   decoding).
 //! * [`metrics`] — latency/throughput accounting (per-token, TTFT,
-//!   queue wait, prefix-cache hit rate and prefill tokens saved).
+//!   queue wait, prefix-cache hit rate and prefill tokens saved,
+//!   speculative proposal/accept counters).
 
 pub mod metrics;
 pub mod pipeline;
 pub mod prefixcache;
+pub mod sampling;
 pub mod scheduler;
 pub mod serve;
 
 pub use metrics::{LatencyStats, ServeMetrics};
+pub use sampling::{SamplingParams, SpecConfig};
 pub use pipeline::{QuantEngine, QuantPipeline, PipelineConfig, PipelineReport};
 pub use prefixcache::PrefixCache;
 pub use scheduler::{Scheduler, SchedulerConfig};

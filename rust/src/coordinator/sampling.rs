@@ -1,0 +1,459 @@
+//! Seeded sampling + self-speculative decoding policy (ROADMAP item 4).
+//!
+//! Two contracts live here, both load-bearing for the scheduler's
+//! preempt-and-rerun guarantee (DESIGN.md §Sampling & Speculative
+//! decoding):
+//!
+//! **Counter-based RNG.** Every random draw is a pure function of
+//! `(seed, position, stream)` — no mutable generator state anywhere in
+//! the serving stack. `position` is the KV row the drawn token will be
+//! consumed at (`seq.len` at pick time), so a preempted request that is
+//! re-admitted and re-prefilled replays the exact draw sequence
+//! bit-identically: the draws never depend on batch composition, pool
+//! state, or how many times the request was rerun. `stream` separates
+//! the independent draws speculative decoding needs at one position
+//! (proposal pick / accept test / residual resample).
+//!
+//! **Greedy is frozen.** `temperature == 0.0` routes through [`argmax`]
+//! — the same tie-breaking comparison the pre-sampling scheduler used —
+//! and never touches the RNG, so every pre-existing bitwise parity
+//! contract (batched vs sequential, prefix cache on/off, preemption
+//! replay) is untouched by default.
+//!
+//! [`SpecConfig`] is the knob for self-speculative decoding: the SAME
+//! checkpoint repacked at 2–3 bits proposes `k` tokens per round and the
+//! target verifies them in one batched pass (scheduler::spec_round). In
+//! greedy mode acceptance is accept-iff-equal, so spec-on ≡ spec-off
+//! bit-identically; in sampled mode standard rejection sampling keeps
+//! the output distribution exactly the target's.
+
+/// Stream id for the token pick at a position (also the draft's
+/// proposal pick in speculative mode — the draft reuses the stream the
+/// target would have drawn from).
+pub const STREAM_PICK: u64 = 0;
+/// Stream id for the speculative accept test at a position.
+pub const STREAM_ACCEPT: u64 = 1;
+/// Stream id for the residual resample after a speculative rejection.
+pub const STREAM_RESIDUAL: u64 = 2;
+
+/// Per-request sampling policy, carried on `GenRequest`. The default is
+/// greedy (`temperature` 0), which is bitwise-frozen: it routes through
+/// [`argmax`] and draws nothing from the RNG.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax (the frozen default); > 0 divides the logits
+    /// before the softmax
+    pub temperature: f32,
+    /// keep only the `top_k` highest-probability tokens (0 = no cap)
+    pub top_k: usize,
+    /// nucleus: keep the smallest prefix of probability-sorted tokens
+    /// whose mass reaches `top_p` (1.0 = no cap)
+    pub top_p: f32,
+    /// RNG seed; draws are pure functions of (seed, position, stream)
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// Parse `"greedy"` or a comma list of `key=value` pairs:
+    /// `"temp=0.8,top_k=40,top_p=0.95,seed=7"` (`temperature` is an
+    /// accepted alias for `temp`). Returns `None` on unknown keys or
+    /// out-of-range values.
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut p = Self::default();
+        let s = s.trim();
+        if s.is_empty() || s == "greedy" {
+            return Some(p);
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=')?;
+            let v = v.trim();
+            match k.trim() {
+                "temp" | "temperature" => p.temperature = v.parse().ok()?,
+                "top_k" => p.top_k = v.parse().ok()?,
+                "top_p" => p.top_p = v.parse().ok()?,
+                "seed" => p.seed = v.parse().ok()?,
+                _ => return None,
+            }
+        }
+        if !p.temperature.is_finite() || p.temperature < 0.0 {
+            return None;
+        }
+        if !p.top_p.is_finite() || p.top_p <= 0.0 || p.top_p > 1.0 {
+            return None;
+        }
+        Some(p)
+    }
+}
+
+/// splitmix64 finalizer (same avalanche the fault-injection harness
+/// uses): full 64-bit diffusion, so adjacent (position, stream) keys
+/// decorrelate completely.
+fn avalanche(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Counter-based uniform draw in [0, 1): a pure function of
+/// `(seed, position, stream)`. The top 53 bits of the avalanche become
+/// the mantissa, so the value is exact in f64 and identical on every
+/// ISA/thread configuration.
+pub fn uniform(seed: u64, position: usize, stream: u64) -> f64 {
+    let key = seed
+        .wrapping_add((position as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(stream.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    (avalanche(key) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Deterministic argmax over the vocab logits — the single production
+/// copy of the greedy pick (the sequential oracle in
+/// tests/continuous_batching.rs replicates it deliberately). Ties break
+/// to the HIGHEST index (`max_by` keeps the last maximum), exactly as
+/// the pre-sampling scheduler did, so greedy streams stay bitwise
+/// frozen.
+///
+/// Panics on an empty slice: the old `unwrap_or(0)` silently emitted
+/// token 0, which is indistinguishable from a real pick. `i as u8` is
+/// safe because model construction validates `vocab <= 256`
+/// (`ModelBuildError::VocabTooLarge`).
+pub fn argmax(logits: &[f32]) -> u8 {
+    let (i, _) = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap_or_else(|| {
+            panic!(
+                "argmax: empty logits slice — the model produced no vocab scores; \
+                 refusing to silently emit token 0 (check vocab/model wiring)"
+            )
+        });
+    debug_assert!(
+        i <= u8::MAX as usize,
+        "argmax: token id {i} does not fit u8 — vocab > 256 must be rejected at model construction"
+    );
+    i as u8
+}
+
+/// The full post-filter token distribution (dense over the vocab,
+/// zeros outside the temperature/top-k/top-p nucleus, sums to 1).
+/// Speculative decoding needs the whole distribution — the accept test
+/// compares target P against draft Q per token and the residual
+/// resample draws from `max(P − Q, 0)` — so this is the one shared
+/// softmax/filter implementation. Greedy params yield a point mass at
+/// the argmax.
+///
+/// All arithmetic is sequential f64 in a fixed order: bit-identical
+/// across threads and ISAs by construction.
+pub fn distribution(logits: &[f32], p: &SamplingParams) -> Vec<f64> {
+    assert!(!logits.is_empty(), "distribution: empty logits slice");
+    let n = logits.len();
+    if p.is_greedy() {
+        let mut d = vec![0.0; n];
+        d[argmax(logits) as usize] = 1.0;
+        return d;
+    }
+    // probability order with index-ascending tie-break: deterministic
+    // under equal logits, NaN-total ordering so sort never panics
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
+    let keep = if p.top_k > 0 { p.top_k.min(n) } else { n };
+    let t = p.temperature as f64;
+    let mx = logits[order[0]] as f64 / t;
+    let mut w = vec![0.0f64; n];
+    let mut total = 0.0;
+    for &i in &order[..keep] {
+        let e = (logits[i] as f64 / t - mx).exp();
+        w[i] = e;
+        total += e;
+    }
+    if p.top_p < 1.0 {
+        // nucleus cut in probability order; always keeps >= 1 token
+        let target = p.top_p as f64 * total;
+        let mut cum = 0.0;
+        let mut cut = keep;
+        for (rank, &i) in order[..keep].iter().enumerate() {
+            cum += w[i];
+            if cum >= target {
+                cut = rank + 1;
+                break;
+            }
+        }
+        total = 0.0;
+        for (rank, &i) in order[..keep].iter().enumerate() {
+            if rank >= cut {
+                w[i] = 0.0;
+            } else {
+                total += w[i];
+            }
+        }
+    }
+    for v in &mut w {
+        *v /= total;
+    }
+    w
+}
+
+/// Invert the CDF of a dense distribution at `u ∈ [0, 1)`: the first
+/// token whose cumulative mass exceeds `u`, walking in index order.
+/// Round-off that leaves `u` past the final cumulative sum clamps to
+/// the last positive-mass token.
+pub fn pick(dist: &[f64], u: f64) -> u8 {
+    let mut cum = 0.0;
+    let mut last = 0usize;
+    for (i, &w) in dist.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        cum += w;
+        last = i;
+        if u < cum {
+            return i as u8;
+        }
+    }
+    last as u8
+}
+
+/// The scheduler's token pick for the token to be consumed at
+/// `position`: greedy routes through [`argmax`] (no RNG), anything else
+/// draws `uniform(seed, position, STREAM_PICK)` against the filtered
+/// distribution.
+pub fn sample(logits: &[f32], p: &SamplingParams, position: usize) -> u8 {
+    if p.is_greedy() {
+        return argmax(logits);
+    }
+    let d = distribution(logits, p);
+    pick(&d, uniform(p.seed, position, STREAM_PICK))
+}
+
+/// Self-speculative decoding config: `k` draft proposals per round from
+/// the SAME checkpoint repacked at `draft_bits` (2–3 bits is the
+/// paper's extreme-quant regime — cheap enough to be a draft, accurate
+/// enough to agree with the target most steps). `k == 0` disables
+/// speculation entirely (the scheduler never builds a draft model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// draft proposals per round; 0 = off
+    pub k: usize,
+    /// bit width the draft repack uses (2..=8)
+    pub draft_bits: u32,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl SpecConfig {
+    pub const fn off() -> Self {
+        Self { k: 0, draft_bits: 3 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.k > 0
+    }
+
+    /// Parse `"off"`, `"kN"` (3-bit draft), or `"kNbB"` (explicit draft
+    /// bits), e.g. `"k4"`, `"k4b2"`; a bare `"N"` is accepted as `"kN"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        if s == "off" || s == "0" {
+            return Some(Self::off());
+        }
+        let body = s.strip_prefix('k').unwrap_or(s);
+        let (ks, bits) = match body.split_once('b') {
+            Some((ks, bs)) => (ks, bs.parse::<u32>().ok()?),
+            None => (body, 3),
+        };
+        let k = ks.parse::<usize>().ok()?;
+        if k == 0 {
+            return Some(Self::off());
+        }
+        if !(2..=8).contains(&bits) {
+            return None;
+        }
+        Some(Self { k, draft_bits: bits })
+    }
+
+    /// `GPTQ_SPEC` env knob (the determinism matrix's `off`/`k4` rows);
+    /// unset = off, unrecognized values panic loudly like
+    /// `KvDtype::from_env`.
+    pub fn from_env() -> Self {
+        match std::env::var("GPTQ_SPEC") {
+            Ok(s) => Self::parse(&s)
+                .unwrap_or_else(|| panic!("GPTQ_SPEC={s:?} unrecognized (off|kN|kNbB)")),
+            Err(_) => Self::off(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        if self.enabled() {
+            format!("k{}b{}", self.k, self.draft_bits)
+        } else {
+            "off".into()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_greedy() {
+        let p = SamplingParams::default();
+        assert!(p.is_greedy());
+        assert_eq!(p, SamplingParams::greedy());
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        let p = SamplingParams::parse("temp=0.8,top_k=40,top_p=0.95,seed=7").unwrap();
+        assert_eq!(p.temperature, 0.8);
+        assert_eq!(p.top_k, 40);
+        assert_eq!(p.top_p, 0.95);
+        assert_eq!(p.seed, 7);
+        assert!(SamplingParams::parse("greedy").unwrap().is_greedy());
+        assert!(SamplingParams::parse("temperature=1.0").is_some());
+        assert!(SamplingParams::parse("bogus=1").is_none());
+        assert!(SamplingParams::parse("temp=-1").is_none());
+        assert!(SamplingParams::parse("top_p=0").is_none());
+        assert!(SamplingParams::parse("top_p=1.5").is_none());
+    }
+
+    #[test]
+    fn uniform_is_a_pure_function_of_its_key() {
+        // same key → same draw (the replay contract), distinct keys →
+        // distinct draws, everything in [0, 1)
+        let a = uniform(7, 3, STREAM_PICK);
+        assert_eq!(a, uniform(7, 3, STREAM_PICK));
+        assert_ne!(a, uniform(7, 4, STREAM_PICK));
+        assert_ne!(a, uniform(8, 3, STREAM_PICK));
+        assert_ne!(a, uniform(7, 3, STREAM_ACCEPT));
+        for pos in 0..100 {
+            for stream in [STREAM_PICK, STREAM_ACCEPT, STREAM_RESIDUAL] {
+                let u = uniform(42, pos, stream);
+                assert!((0.0..1.0).contains(&u), "u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_matches_frozen_tie_break() {
+        assert_eq!(argmax(&[0.0, 3.0, 1.0]), 1);
+        // ties break to the highest index — max_by keeps the last max
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty logits")]
+    fn argmax_panics_on_empty_slice() {
+        // the old code returned token 0 via unwrap_or(0) — silently wrong
+        argmax(&[]);
+    }
+
+    #[test]
+    fn greedy_sample_never_draws() {
+        // greedy must equal argmax regardless of seed/position
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        for pos in 0..10 {
+            assert_eq!(sample(&logits, &SamplingParams::greedy(), pos), 1);
+        }
+    }
+
+    #[test]
+    fn distribution_sums_to_one_and_respects_filters() {
+        let logits = [1.0, 3.0, 2.0, 0.5, -1.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 };
+        let d = distribution(&logits, &p);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d.iter().all(|&w| w > 0.0));
+        // top_k=2 keeps exactly the two highest logits (indices 1, 2)
+        let d = distribution(&logits, &SamplingParams { top_k: 2, ..p });
+        assert!(d[1] > 0.0 && d[2] > 0.0);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[3], 0.0);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // tight top_p keeps only the single highest
+        let d = distribution(&logits, &SamplingParams { top_p: 0.1, ..p });
+        assert_eq!(d[1], 1.0);
+        assert_eq!(d.iter().filter(|&&w| w > 0.0).count(), 1);
+        // greedy params → point mass at argmax
+        let d = distribution(&logits, &SamplingParams::greedy());
+        assert_eq!(d[1], 1.0);
+    }
+
+    #[test]
+    fn temperature_sharpens_and_flattens() {
+        let logits = [1.0, 2.0];
+        let base = SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 };
+        let hot = distribution(&logits, &SamplingParams { temperature: 4.0, ..base });
+        let cold = distribution(&logits, &SamplingParams { temperature: 0.25, ..base });
+        let mid = distribution(&logits, &base);
+        assert!(cold[1] > mid[1] && mid[1] > hot[1]);
+        assert!(hot[1] > 0.5, "winner stays the winner at any temperature");
+    }
+
+    #[test]
+    fn pick_inverts_the_cdf() {
+        let d = [0.25, 0.0, 0.5, 0.25];
+        assert_eq!(pick(&d, 0.0), 0);
+        assert_eq!(pick(&d, 0.24), 0);
+        assert_eq!(pick(&d, 0.26), 2);
+        assert_eq!(pick(&d, 0.74), 2);
+        assert_eq!(pick(&d, 0.76), 3);
+        // u at/past the total mass clamps to the last positive token
+        assert_eq!(pick(&d, 1.0), 3);
+    }
+
+    #[test]
+    fn sampled_pick_is_deterministic_and_seed_sensitive() {
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let p = SamplingParams { temperature: 0.9, top_k: 8, top_p: 0.95, seed: 1 };
+        let a: Vec<u8> = (0..64).map(|pos| sample(&logits, &p, pos)).collect();
+        let b: Vec<u8> = (0..64).map(|pos| sample(&logits, &p, pos)).collect();
+        assert_eq!(a, b, "same (seed, position) must replay bitwise");
+        let other: Vec<u8> =
+            (0..64).map(|pos| sample(&logits, &SamplingParams { seed: 2, ..p }, pos)).collect();
+        assert_ne!(a, other, "different seeds must diverge somewhere");
+        // every pick lands inside the top_k nucleus
+        let d = distribution(&logits, &p);
+        for &t in &a {
+            assert!(d[t as usize] > 0.0, "token {t} picked outside the nucleus");
+        }
+    }
+
+    #[test]
+    fn spec_config_parses_and_gates() {
+        assert_eq!(SpecConfig::parse("off"), Some(SpecConfig::off()));
+        assert_eq!(SpecConfig::parse("0"), Some(SpecConfig::off()));
+        assert_eq!(SpecConfig::parse("k4"), Some(SpecConfig { k: 4, draft_bits: 3 }));
+        assert_eq!(SpecConfig::parse("4"), Some(SpecConfig { k: 4, draft_bits: 3 }));
+        assert_eq!(SpecConfig::parse("k2b2"), Some(SpecConfig { k: 2, draft_bits: 2 }));
+        assert_eq!(SpecConfig::parse("k4b1"), None, "1-bit draft rejected");
+        assert_eq!(SpecConfig::parse("nope"), None);
+        assert!(!SpecConfig::off().enabled());
+        assert!(SpecConfig { k: 4, draft_bits: 3 }.enabled());
+        assert_eq!(SpecConfig { k: 4, draft_bits: 3 }.name(), "k4b3");
+        assert_eq!(SpecConfig::off().name(), "off");
+    }
+}

@@ -6,8 +6,11 @@
 //! — see `coordinator::scheduler`), with per-request latency metrics.
 //!
 //! Each worker owns one [`CpuModel`] instance (dense = the FP16-baseline
-//! analog, packed = the GPTQ-deployed model). Generation is greedy
-//! decode; N in-flight sequences advance one token per scheduler
+//! analog, packed = the GPTQ-deployed model). Generation follows each
+//! request's [`SamplingParams`] — greedy by default, seeded sampling
+//! otherwise, both replay-deterministic (`coordinator::sampling`), and
+//! optionally accelerated by self-speculative decoding
+//! (`scheduler.spec`); N in-flight sequences advance one token per scheduler
 //! iteration against shared weight reads — the multi-user form of the
 //! autoregressive, matvec-bound regime the paper targets (§Practical
 //! Speedups). Each worker additionally shares prompt-prefix KV across
@@ -34,13 +37,19 @@
 //! `catch_unwind`; a panicking worker reports itself dead and exits with
 //! its metrics intact. The server reaps the thread and re-routes that
 //! worker's outstanding requests to survivors with a bounded retry
-//! budget ([`MAX_WORKER_DEATHS`]): greedy decode is deterministic, so a
-//! replayed request reproduces its tokens, and a request that has killed
-//! two workers is answered `Failed` instead of being retried forever.
+//! budget ([`MAX_WORKER_DEATHS`]): token selection is deterministic for
+//! greedy AND seeded sampling (picks are pure functions of
+//! `(seed, position)`), so a replayed request reproduces its tokens,
+//! and a request that has killed two workers is answered `Failed`
+//! instead of being retried forever.
 //! [`Server::submit`]/[`Server::recv`] return typed [`ServeError`]s
-//! instead of panicking when no worker is left.
+//! instead of panicking when no worker is left; a submit reusing an
+//! in-flight id is rejected as [`ServeError::DuplicateId`] (the
+//! outstanding table is keyed by id, so a silent overwrite would leak
+//! the first request's terminal response).
 
 use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::sampling::SamplingParams;
 use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use crate::data::CorpusFile;
 use crate::eval::{perplexity, perplexity_artifact};
@@ -144,6 +153,11 @@ pub struct GenRequest {
     /// request past it is stopped (`TimedOut`), its pages reclaimed,
     /// and its partial tokens returned
     pub deadline_ms: Option<f64>,
+    /// token-selection parameters (default: greedy, temperature 0 —
+    /// bitwise the pre-sampling behavior); seeded sampling draws from a
+    /// counter-based RNG keyed by `(seed, position)` so preemption and
+    /// worker-crash replays reproduce the same tokens
+    pub sampling: SamplingParams,
 }
 
 impl GenRequest {
@@ -155,6 +169,7 @@ impl GenRequest {
             priority: Class::Interactive,
             ttft_deadline_ms: None,
             deadline_ms: None,
+            sampling: SamplingParams::greedy(),
         }
     }
 
@@ -170,6 +185,11 @@ impl GenRequest {
 
     pub fn with_deadline_ms(mut self, ms: f64) -> Self {
         self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
         self
     }
 }
@@ -210,6 +230,11 @@ pub enum ServeError {
     /// all workers have exited and no response is pending — nothing
     /// will ever arrive
     Disconnected,
+    /// the submitted id is already in flight: the outstanding table is
+    /// keyed by id, so accepting the duplicate would silently overwrite
+    /// the first request's replay copy and leak its terminal response
+    /// (the old code did exactly that)
+    DuplicateId(u64),
 }
 
 impl std::fmt::Display for ServeError {
@@ -218,6 +243,9 @@ impl std::fmt::Display for ServeError {
             ServeError::NoWorkers => write!(f, "no live workers: cannot accept new requests"),
             ServeError::Disconnected => {
                 write!(f, "all workers exited and no response is pending")
+            }
+            ServeError::DuplicateId(id) => {
+                write!(f, "request id {id} is already in flight: ids must be unique until answered")
             }
         }
     }
@@ -328,10 +356,15 @@ impl Server {
     }
 
     /// Route a request to the least-loaded live worker. Returns the
-    /// worker id, or [`ServeError::NoWorkers`] when every worker has
-    /// died — the old API panicked here.
+    /// worker id, [`ServeError::NoWorkers`] when every worker has died
+    /// (the old API panicked here), or [`ServeError::DuplicateId`] when
+    /// `req.id` is still in flight — an id is reusable only after its
+    /// terminal response has been issued.
     pub fn submit(&mut self, req: GenRequest) -> std::result::Result<usize, ServeError> {
         self.drain_events();
+        if self.outstanding.contains_key(&req.id) {
+            return Err(ServeError::DuplicateId(req.id));
+        }
         let wid = self.least_loaded().ok_or(ServeError::NoWorkers)?;
         self.route(req, wid);
         Ok(wid)
@@ -391,7 +424,18 @@ impl Server {
                     let mut ids: Vec<u64> = self.outstanding.keys().copied().collect();
                     ids.sort_unstable();
                     for id in ids {
-                        let (req, wid) = self.outstanding.remove(&id).unwrap();
+                        // tolerant remove: the id came from the table one
+                        // statement ago, but a missing entry must degrade
+                        // to a skipped replay, not a router panic — the
+                        // old `.unwrap()` here could take down the whole
+                        // server over one bookkeeping miss
+                        let Some((req, wid)) = self.outstanding.remove(&id) else {
+                            eprintln!(
+                                "serve: request {id} vanished from the outstanding table \
+                                 during the final drain — skipping"
+                            );
+                            continue;
+                        };
                         self.reaped.record_outcome(GenOutcome::Failed);
                         self.ready.push_back(failed_response(&req, wid));
                     }
@@ -441,7 +485,16 @@ impl Server {
             .collect();
         orphans.sort_unstable();
         for id in orphans {
-            let (req, _) = self.outstanding.remove(&id).unwrap();
+            // tolerant remove, same rationale as the final-drain path:
+            // losing one replay beats panicking the router that every
+            // other request depends on
+            let Some((req, _)) = self.outstanding.remove(&id) else {
+                eprintln!(
+                    "serve: orphan {id} of dead worker {wid} vanished from the \
+                     outstanding table — skipping replay"
+                );
+                continue;
+            };
             let survived = self.deaths.entry(id).or_insert(0);
             *survived += 1;
             let over_budget = *survived >= MAX_WORKER_DEATHS;
@@ -800,6 +853,58 @@ mod tests {
         assert_eq!(s.recv().unwrap_err(), ServeError::Disconnected);
         let m = s.shutdown();
         assert_eq!(m.failed, n as usize);
+    }
+
+    #[test]
+    fn duplicate_in_flight_id_rejected_typed() {
+        // satellite bugfix: reusing an in-flight id used to silently
+        // overwrite the outstanding entry (leaking the first request's
+        // terminal response); now it is a typed error and the original
+        // request is unaffected
+        let mut s = server(1);
+        s.submit(GenRequest::new(7, vec![1, 2, 3], 4)).unwrap();
+        let err = s.submit(GenRequest::new(7, vec![9, 9], 1)).unwrap_err();
+        assert_eq!(err, ServeError::DuplicateId(7));
+        assert!(err.to_string().contains("already in flight"), "{err}");
+        let r = s.recv().unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tokens.len(), 4, "original request must complete untouched");
+        // the id is free again once answered: resubmitting is legal
+        s.submit(GenRequest::new(7, vec![1, 2, 3], 2)).unwrap();
+        assert_eq!(s.recv().unwrap().tokens.len(), 2);
+        let m = s.shutdown();
+        assert_eq!(m.completed, 2, "the duplicate must not produce a terminal outcome");
+    }
+
+    #[test]
+    fn seeded_sampling_survives_worker_crash_replay() {
+        // a sampled request replayed on a surviving worker must
+        // reproduce the exact tokens of a crash-free run — picks are
+        // pure functions of (seed, position), not of which worker runs
+        let run = |faults: FaultConfig| {
+            let cfg = ServerConfig {
+                n_workers: 2,
+                scheduler: SchedulerConfig { max_batch: 2, faults, ..Default::default() },
+            };
+            let mut s = Server::start(cfg, |_| CpuModel::from_checkpoint(&tiny_checkpoint(7)));
+            let n = 8u64;
+            for i in 0..n {
+                s.submit(
+                    GenRequest::new(i, vec![(i % 16) as u8, 3], 4).with_sampling(
+                        SamplingParams { temperature: 1.2, top_k: 0, top_p: 0.95, seed: 100 + i },
+                    ),
+                )
+                .unwrap();
+            }
+            let mut rs = s.collect(n as usize).unwrap();
+            assert!(rs.iter().all(|r| r.outcome == GenOutcome::Completed));
+            s.shutdown();
+            rs.sort_by_key(|r| r.id);
+            rs.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let clean = run(FaultConfig::off());
+        let crashy = run(FaultConfig { panic_at: vec![(0, 2)], ..FaultConfig::off() });
+        assert_eq!(clean, crashy, "worker-crash replay changed sampled tokens");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use gptq_rs::coordinator::{
     verify_parity, Class, GenOutcome, GenRequest, PipelineConfig, QuantEngine, QuantPipeline,
-    SchedulerConfig, Server, ServerConfig,
+    SamplingParams, SchedulerConfig, Server, ServerConfig, SpecConfig,
 };
 use gptq_rs::data::{load_tasks, CorpusFile};
 use gptq_rs::eval::{eval_choice, eval_cloze, perplexity, perplexity_artifact};
@@ -35,7 +35,9 @@ const USAGE: &str = "usage: gptq [--artifacts DIR] [--backend reference|pjrt] [-
            [--kv-dtype f32|q8] [--skip-parity]
            [--priority interactive|batch] [--ttft-deadline-ms MS] [--deadline-ms MS]
            [--max-queue-interactive N] [--max-queue-batch N]
-           (GPTQ_FAULTS arms the deterministic fault-injection harness; see DESIGN.md)";
+           [--sampling greedy|temp=T,top_k=K,top_p=P,seed=S]
+           [--spec-decode off|K|KbB]  (e.g. 4 or k4b3: draft K tokens at B bits)
+           (GPTQ_FAULTS arms the fault-injection harness, GPTQ_SPEC speculation; see DESIGN.md)";
 
 fn parse_engine(s: &str) -> Result<QuantEngine> {
     Ok(match s {
@@ -229,6 +231,22 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
     };
     let ttft_deadline_ms = parse_ms(args.get("ttft-deadline-ms"), "--ttft-deadline-ms")?;
     let deadline_ms = parse_ms(args.get("deadline-ms"), "--deadline-ms")?;
+    // per-request token selection: greedy (temperature 0) unless asked
+    // otherwise; seeded sampling replays bit-identically (DESIGN.md
+    // §Sampling & Speculative decoding)
+    let sampling = match args.get("sampling") {
+        Some(s) => SamplingParams::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --sampling {s:?} (greedy|temp=T,top_k=K,top_p=P,seed=S)")
+        })?,
+        None => SamplingParams::greedy(),
+    };
+    // self-speculative decoding: --spec-decode beats GPTQ_SPEC; off by
+    // default, and greedy output is bit-identical either way
+    let spec = match args.get("spec-decode") {
+        Some(s) => SpecConfig::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --spec-decode {s:?} (off|K|kKbB)"))?,
+        None => SpecConfig::from_env(),
+    };
     let artifacts = artifacts.to_path_buf();
     let cfg = ServerConfig {
         n_workers: workers,
@@ -248,13 +266,15 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             max_queue_batch: args.usize_or("max-queue-batch", usize::MAX),
             // deterministic chaos hooks; off unless GPTQ_FAULTS is set
             faults: gptq_rs::util::faultinject::FaultConfig::from_env(),
+            spec,
         },
     };
     println!(
-        "kernel ISA: {} (threads {}, kv-dtype {})",
+        "kernel ISA: {} (threads {}, kv-dtype {}, spec {})",
         gptq_rs::model::kernels::isa(),
         gptq_rs::util::par::threads(),
-        kv_dtype.name()
+        kv_dtype.name(),
+        spec.name()
     );
     let mut server = Server::start(cfg, |_| {
         build_model(&artifacts, &entry, quantized.as_deref()).expect("model build")
@@ -267,7 +287,8 @@ fn serve(artifacts: &Path, backend: &str, args: &Args) -> Result<()> {
             corpus.bytes[start..start + 16].to_vec(),
             gen_tokens,
         )
-        .with_priority(priority);
+        .with_priority(priority)
+        .with_sampling(sampling);
         if let Some(ms) = ttft_deadline_ms {
             req = req.with_ttft_deadline_ms(ms);
         }

@@ -439,9 +439,132 @@ fn batched_attention(
     });
 }
 
+/// Causal attention for `n_span` consecutive positions of ONE sequence
+/// (the speculative-verify pass of `decode_span`): lane `j` sits at
+/// position `base + j` and attends rows `0..=base + j` of the
+/// sequence's pages — every row it needs, including the span rows below
+/// it, was written before this call. The per-lane loops are copied from
+/// [`batched_attention`] verbatim (same buffers, same accumulation
+/// order), so each lane's output is bit-identical to the sequential
+/// single-token step at the same position; Q8 pools take the same
+/// dequant-to-scratch path.
+#[allow(clippy::too_many_arguments)]
+fn span_attention(
+    pool: &KvPool,
+    seq: &SeqCache,
+    base: usize,
+    n_span: usize,
+    qkvs: &[f32],
+    d: usize,
+    h: usize,
+    hd: usize,
+    layer: usize,
+    attns: &mut [f32],
+    serial: bool,
+) {
+    let maxpos = base + n_span;
+    let tp = if serial || n_span * d * maxpos < MATVEC_PAR_MIN_ELEMS {
+        Pool::serial()
+    } else {
+        Pool::global()
+    };
+    par::for_rows_mut(&tp, attns, n_span, d, |range, chunk| {
+        let mut att_buf: Vec<f32> = Vec::new();
+        let mut kbuf: Vec<f32> = Vec::new();
+        let mut vbuf: Vec<f32> = Vec::new();
+        for (jj, out_all) in chunk.chunks_exact_mut(d).enumerate() {
+            let j = range.start + jj;
+            let pos = base + j;
+            let q = &qkvs[j * 3 * d..j * 3 * d + d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            if att_buf.len() < pos + 1 {
+                att_buf.resize(pos + 1, 0.0);
+            }
+            let att = &mut att_buf[..pos + 1];
+            let rows = match pool.dtype() {
+                KvDtype::F32 => KvRows::Pool { pool, sc: seq, layer },
+                KvDtype::Q8 => {
+                    if kbuf.len() < (pos + 1) * d {
+                        kbuf.resize((pos + 1) * d, 0.0);
+                        vbuf.resize((pos + 1) * d, 0.0);
+                    }
+                    for p in 0..=pos {
+                        pool.read_k_row(seq, layer, p, &mut kbuf[p * d..(p + 1) * d]);
+                        pool.read_v_row(seq, layer, p, &mut vbuf[p * d..(p + 1) * d]);
+                    }
+                    KvRows::Buf { k: &kbuf, v: &vbuf, d }
+                }
+            };
+            for head in 0..h {
+                let qh = &q[head * hd..(head + 1) * hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for (p, av) in att.iter_mut().enumerate() {
+                    let kh = &rows.k(p)[head * hd..(head + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for i in 0..hd {
+                        dot += qh[i] * kh[i];
+                    }
+                    *av = dot * scale;
+                    maxv = maxv.max(*av);
+                }
+                let mut denom = 0.0f32;
+                for av in att.iter_mut() {
+                    *av = (*av - maxv).exp();
+                    denom += *av;
+                }
+                let out = &mut out_all[head * hd..(head + 1) * hd];
+                out.fill(0.0);
+                for (p, &av) in att.iter().enumerate() {
+                    let wgt = av / denom;
+                    let vh = &rows.v(p)[head * hd..(head + 1) * hd];
+                    for i in 0..hd {
+                        out[i] += wgt * vh[i];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Typed construction failure for [`CpuModel`]. The serving stack hands
+/// token ids around as `u8` (KV pages, request prompts, the sampling
+/// pick), so a vocab that cannot round-trip through `u8` must be
+/// rejected HERE, once — the old failure mode was `argmax` silently
+/// truncating `i as u8` per token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelBuildError {
+    /// vocab exceeds the u8 token-id domain (max 256)
+    VocabTooLarge { vocab: usize },
+    /// vocab of zero produces empty logits — nothing to sample
+    EmptyVocab,
+}
+
+impl std::fmt::Display for ModelBuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelBuildError::VocabTooLarge { vocab } => write!(
+                f,
+                "vocab {vocab} exceeds the u8 token-id domain (256): the serving stack would \
+                 silently truncate token ids"
+            ),
+            ModelBuildError::EmptyVocab => write!(f, "vocab 0: the model can emit no tokens"),
+        }
+    }
+}
+
+impl std::error::Error for ModelBuildError {}
+
 impl CpuModel {
-    /// Build with dense f32 weights (the FP16-baseline analog).
+    /// Build with dense f32 weights (the FP16-baseline analog). Panics
+    /// on an invalid config; [`CpuModel::try_from_checkpoint`] is the
+    /// fallible twin.
     pub fn from_checkpoint(ckpt: &Checkpoint) -> Self {
+        Self::try_from_checkpoint(ckpt).unwrap_or_else(|e| panic!("from_checkpoint: {e}"))
+    }
+
+    /// Fallible build from a dense checkpoint: validates the config
+    /// (vocab must fit the u8 token-id domain) before touching weights.
+    pub fn try_from_checkpoint(ckpt: &Checkpoint) -> Result<Self, ModelBuildError> {
         let cfg = ckpt.config.clone();
         let blocks = (0..cfg.n_layers)
             .map(|l| {
@@ -478,7 +601,15 @@ impl CpuModel {
     }
 
     /// Build with packed quantized linears (the GPTQ-deployed model).
+    /// Panics on an invalid config; [`CpuModel::try_from_quantized`] is
+    /// the fallible twin.
     pub fn from_quantized(q: &QuantizedCheckpoint) -> Self {
+        Self::try_from_quantized(q).unwrap_or_else(|e| panic!("from_quantized: {e}"))
+    }
+
+    /// Fallible build from a quantized checkpoint (same vocab
+    /// validation as [`CpuModel::try_from_checkpoint`]).
+    pub fn try_from_quantized(q: &QuantizedCheckpoint) -> Result<Self, ModelBuildError> {
         let cfg = q.config.clone();
         let blocks = (0..cfg.n_layers)
             .map(|l| {
@@ -517,6 +648,10 @@ impl CpuModel {
         )
     }
 
+    /// The single construction funnel: every `CpuModel` passes through
+    /// here, so the vocab-fits-u8 invariant holds for every instance —
+    /// `argmax`'s `i as u8` and the u8 prompt/KV plumbing are safe by
+    /// construction afterwards.
     #[allow(clippy::too_many_arguments)]
     fn assemble(
         config: ModelConfig,
@@ -526,7 +661,13 @@ impl CpuModel {
         lnf_b: Vec<f32>,
         unembed: Vec<f32>,
         blocks: Vec<BlockWeights>,
-    ) -> Self {
+    ) -> Result<Self, ModelBuildError> {
+        if config.vocab == 0 {
+            return Err(ModelBuildError::EmptyVocab);
+        }
+        if config.vocab > 256 {
+            return Err(ModelBuildError::VocabTooLarge { vocab: config.vocab });
+        }
         let d = config.d_model;
         let scratch = Scratch {
             x: vec![0.0; d],
@@ -538,7 +679,7 @@ impl CpuModel {
             logits: vec![0.0; config.vocab],
             att_w: vec![0.0; config.max_seq],
         };
-        Self {
+        Ok(Self {
             config,
             embed,
             pos,
@@ -549,7 +690,7 @@ impl CpuModel {
             scratch,
             bscratch: BatchScratch::default(),
             serial_kernels: false,
-        }
+        })
     }
 
     fn ensure_batch_scratch(&mut self, n: usize) {
@@ -825,6 +966,177 @@ impl CpuModel {
         out
     }
 
+    /// Advance ONE sequence by `tokens.len()` consecutive positions in a
+    /// single pass over the weights — the speculative-decoding verify
+    /// kernel (DESIGN.md §Sampling & Speculative decoding). Lane `j`
+    /// consumes `tokens[j]` at position `seq.len + j`; every linear runs
+    /// as one batched matmul over the span (the same `apply_batch`
+    /// kernels as [`CpuModel::decode_steps`], so each weight row is read
+    /// once for all k+1 verify lanes), and each layer writes ALL span
+    /// K/V rows before attention so lane `j` attends the rows its own
+    /// pass produced for positions below it.
+    ///
+    /// Parity contract (`decode_span_matches_sequential_decode_bitwise`):
+    /// lane `j`'s logits are bit-identical to feeding the same tokens
+    /// one at a time through [`CpuModel::decode_steps`] — per-lane
+    /// arithmetic never depends on the span width, and the K/V rows a
+    /// lane reads are exactly the rows the sequential steps would have
+    /// written (Q8 pools quantize once at write either way). This is
+    /// what makes greedy spec-on ≡ spec-off bitwise: the scheduler
+    /// verifies draft proposals against these logits, keeps the accepted
+    /// prefix's rows (they ARE the target's canonical rows), and rolls
+    /// `seq.len` back over the rejected tail.
+    ///
+    /// The caller must have reserved capacity for the whole span
+    /// (`pool.reserve(seq, seq.len + tokens.len())`). On return
+    /// `seq.len` has advanced by the span; returns sequence-major
+    /// (tokens.len() × vocab) logits, one row per consumed token.
+    pub fn decode_span(
+        &mut self,
+        pool: &mut KvPool,
+        seq: &mut SeqCache,
+        tokens: &[u8],
+    ) -> Vec<f32> {
+        let n = tokens.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.config;
+        let (d, h, hd, ff, vocab) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.d_ff, cfg.vocab);
+        let base = seq.len;
+        assert!(base + n <= cfg.max_seq, "decode_span: sequence overflow");
+        assert!(pool.capacity_of(seq) >= base + n, "decode_span: reserve the whole span first");
+        self.ensure_batch_scratch(n);
+        let serial = self.serial_kernels;
+        let s = &mut self.bscratch;
+
+        // embedding + positional, per lane
+        for (j, &tok) in tokens.iter().enumerate() {
+            let x = &mut s.xs[j * d..(j + 1) * d];
+            for i in 0..d {
+                x[i] = self.embed[tok as usize * d + i] + self.pos[(base + j) * d + i];
+            }
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            for j in 0..n {
+                layer_norm(
+                    &s.xs[j * d..(j + 1) * d],
+                    &blk.ln1_g,
+                    &blk.ln1_b,
+                    &mut s.x1s[j * d..(j + 1) * d],
+                );
+            }
+            let qkv_rm = &mut s.rm[..3 * d * n];
+            blk.wqkv.apply_batch(&s.x1s[..n * d], &blk.wqkv_b, n, qkv_rm, serial);
+            transpose_rows(qkv_rm, 3 * d, n, &mut s.qkvs[..n * 3 * d]);
+            // ALL span rows land before attention: lane j's walk over
+            // positions base..=base+j reads rows this very pass wrote
+            for j in 0..n {
+                let kv = &s.qkvs[j * 3 * d + d..(j + 1) * 3 * d];
+                let (k_new, v_new) = kv.split_at(d);
+                pool.write_row(seq, l, base + j, k_new, v_new);
+            }
+            span_attention(pool, seq, base, n, &s.qkvs[..n * 3 * d], d, h, hd, l, &mut s.attns[..n * d], serial);
+            let proj_rm = &mut s.rm[..d * n];
+            blk.wo.apply_batch(&s.attns[..n * d], &blk.wo_b, n, proj_rm, serial);
+            for j in 0..n {
+                for i in 0..d {
+                    s.xs[j * d + i] += proj_rm[i * n + j];
+                }
+            }
+            for j in 0..n {
+                layer_norm(
+                    &s.xs[j * d..(j + 1) * d],
+                    &blk.ln2_g,
+                    &blk.ln2_b,
+                    &mut s.x1s[j * d..(j + 1) * d],
+                );
+            }
+            let up_rm = &mut s.rm[..ff * n];
+            blk.wup.apply_batch(&s.x1s[..n * d], &blk.wup_b, n, up_rm, serial);
+            for j in 0..n {
+                for r in 0..ff {
+                    s.hiddens[j * ff + r] = gelu(up_rm[r * n + j]);
+                }
+            }
+            let dn_rm = &mut s.rm[..d * n];
+            blk.wdn.apply_batch(&s.hiddens[..n * ff], &blk.wdn_b, n, dn_rm, serial);
+            for j in 0..n {
+                for i in 0..d {
+                    s.xs[j * d + i] += dn_rm[i * n + j];
+                }
+            }
+        }
+
+        for j in 0..n {
+            layer_norm(
+                &s.xs[j * d..(j + 1) * d],
+                &self.lnf_g,
+                &self.lnf_b,
+                &mut s.x1s[j * d..(j + 1) * d],
+            );
+        }
+        let head_rm = &mut s.rm[..vocab * n];
+        let x1s = &s.x1s[..n * d];
+        let tp = if serial || vocab * d < MATVEC_PAR_MIN_ELEMS {
+            Pool::serial()
+        } else {
+            Pool::global()
+        };
+        par::for_rows_mut(&tp, head_rm, vocab, n, |rows, chunk| {
+            for (i, yrow) in chunk.chunks_exact_mut(n).enumerate() {
+                let v = rows.start + i;
+                let row = &self.unembed[v * d..(v + 1) * d];
+                for (j, yv) in yrow.iter_mut().enumerate() {
+                    let x1 = &x1s[j * d..(j + 1) * d];
+                    let mut acc = 0.0f32;
+                    for k in 0..d {
+                        acc += row[k] * x1[k];
+                    }
+                    *yv = acc;
+                }
+            }
+        });
+        let mut out = vec![0.0f32; n * vocab];
+        transpose_rows(head_rm, vocab, n, &mut out);
+        seq.len = base + n;
+        out
+    }
+
+    /// Repack this model's quantizable linears at `bits` with
+    /// round-to-nearest over their dequantized weights — the
+    /// self-speculative draft (the paper's extreme-quant regime: the
+    /// SAME checkpoint at 2–3 bits is cheap enough to propose tokens the
+    /// full-precision/4-bit target verifies). Everything else — embed,
+    /// positions, norms, biases, the unembed head, the model config and
+    /// therefore the KV-page layout — is shared verbatim, so draft and
+    /// target decode over the same pool pages interchangeably. 2:4
+    /// sparse linears are already in a compressed serving form and are
+    /// kept as-is.
+    pub fn to_draft(&self, bits: u32) -> CpuModel {
+        use crate::quant::rtn_quantize;
+        let requant = |w: &LinearWeight| -> LinearWeight {
+            let (dense, drow, dcol) = match w {
+                LinearWeight::Dense { w, drow, dcol } => (w.clone(), *drow, *dcol),
+                LinearWeight::Packed(pl) => {
+                    (pl.packed.dequantize(), pl.packed.drow, pl.packed.dcol)
+                }
+                LinearWeight::Sparse24(sl) => return LinearWeight::Sparse24(sl.clone()),
+            };
+            let r = rtn_quantize(&dense, drow, dcol, bits, 0);
+            LinearWeight::packed(PackedMatrix::from_result(&r))
+        };
+        let mut m = self.clone();
+        for blk in &mut m.blocks {
+            blk.wqkv = requant(&blk.wqkv);
+            blk.wo = requant(&blk.wo);
+            blk.wup = requant(&blk.wup);
+            blk.wdn = requant(&blk.wdn);
+        }
+        m
+    }
+
     /// Next-token logits for every position of `tokens` (teacher-forced) —
     /// the perplexity-evaluation path. Returns (seq × vocab) row-major.
     pub fn logits_all(&mut self, tokens: &[u8]) -> Vec<f32> {
@@ -967,6 +1279,114 @@ mod tests {
         pool.release(&mut a);
         pool.release(&mut b);
         assert_eq!(pool.free_pages(), 16, "page leak after fork");
+    }
+
+    #[test]
+    fn decode_span_matches_sequential_decode_bitwise() {
+        use crate::model::kvpool::{KvPool, SeqCache};
+        let ckpt = tiny_checkpoint(11);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let vocab = m.config.vocab;
+        let toks: [u8; 6] = [3, 14, 15, 9, 2, 6];
+        // sequential reference: one decode_steps call per token
+        let mut pool = KvPool::new(&m.config, 8, 2);
+        let mut a = SeqCache::new();
+        let mut want: Vec<f32> = Vec::new();
+        for (t, &tok) in toks.iter().enumerate() {
+            assert!(pool.reserve(&mut a, t + 1));
+            let mut refs = vec![&mut a];
+            want.extend(m.decode_steps(&mut pool, &mut refs, &[tok]));
+        }
+        // span path: 2 sequential steps, then the remaining 4 in ONE pass
+        let mut b = SeqCache::new();
+        for (t, &tok) in toks.iter().enumerate().take(2) {
+            assert!(pool.reserve(&mut b, t + 1));
+            let mut refs = vec![&mut b];
+            m.decode_steps(&mut pool, &mut refs, &[tok]);
+        }
+        assert!(pool.reserve(&mut b, toks.len()));
+        let got = m.decode_span(&mut pool, &mut b, &toks[2..]);
+        assert_eq!(b.len, toks.len());
+        assert_eq!(got.len(), 4 * vocab);
+        for (i, (x, y)) in got.iter().zip(&want[2 * vocab..]).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "span lane {} diverged", i / vocab);
+        }
+        // rollback contract: truncate len over the span tail, then a
+        // plain step overwrites the dead rows and reproduces the
+        // sequential logits bitwise — the scheduler's rejection path
+        b.len = 3;
+        let mut refs = vec![&mut b];
+        let redo = m.decode_steps(&mut pool, &mut refs, &[toks[3]]);
+        for (x, y) in redo.iter().zip(&want[3 * vocab..4 * vocab]) {
+            assert_eq!(x.to_bits(), y.to_bits(), "post-rollback step diverged");
+        }
+        pool.release(&mut a);
+        pool.release(&mut b);
+        assert_eq!(pool.free_pages(), 8, "page leak");
+    }
+
+    #[test]
+    fn draft_repack_shrinks_traffic_and_shares_kv_layout() {
+        use crate::model::kvpool::{KvPool, SeqCache};
+        let ckpt = tiny_checkpoint(12);
+        let mut m = CpuModel::from_checkpoint(&ckpt);
+        let mut draft = m.to_draft(3);
+        assert_eq!(draft.config, m.config, "draft must share the target's config/KV layout");
+        assert!(
+            draft.traffic_bytes_per_token() * 3 < m.traffic_bytes_per_token(),
+            "3-bit draft should stream >3x fewer weight bytes"
+        );
+        // draft decodes over the SAME pool/sequence the target uses:
+        // propose on shared pages, roll back, target overwrites
+        let mut pool = KvPool::new(&m.config, 8, 2);
+        let mut s = SeqCache::new();
+        assert!(pool.reserve(&mut s, 1));
+        let mut refs = vec![&mut s];
+        let ld = draft.decode_steps(&mut pool, &mut refs, &[5]);
+        assert_eq!(ld.len(), m.config.vocab);
+        assert!(ld.iter().all(|v| v.is_finite()));
+        s.len = 0; // reject the provisional draft row
+        let mut refs = vec![&mut s];
+        let lt = m.decode_steps(&mut pool, &mut refs, &[5]);
+        assert!(lt.iter().all(|v| v.is_finite()));
+        // a 2-bit draft packs too (the extreme end of the regime)
+        let d2 = m.to_draft(2);
+        assert!(d2.traffic_bytes_per_token() < draft.traffic_bytes_per_token());
+        pool.release(&mut s);
+        assert_eq!(pool.free_pages(), 8, "page leak");
+    }
+
+    #[test]
+    fn vocab_validation_rejects_untruncatable_token_ids() {
+        let base = tiny_checkpoint(1);
+        assert!(CpuModel::try_from_checkpoint(&base).is_ok());
+        // the construction funnel rejects vocab > 256 with a typed error
+        // (the old argmax truncated `i as u8` silently at serve time)
+        let mut cfg = base.config.clone();
+        cfg.vocab = 300;
+        let err = CpuModel::assemble(cfg, vec![], vec![], vec![], vec![], vec![], Vec::new())
+            .unwrap_err();
+        assert_eq!(err, ModelBuildError::VocabTooLarge { vocab: 300 });
+        assert!(err.to_string().contains("truncate"), "{err}");
+        let mut cfg0 = base.config.clone();
+        cfg0.vocab = 0;
+        let err = CpuModel::assemble(cfg0, vec![], vec![], vec![], vec![], vec![], Vec::new())
+            .unwrap_err();
+        assert_eq!(err, ModelBuildError::EmptyVocab);
+        // 256 exactly still fits the u8 domain
+        let mut cfg256 = base.config.clone();
+        cfg256.vocab = 256;
+        let d = cfg256.d_model;
+        assert!(CpuModel::assemble(
+            cfg256.clone(),
+            vec![0.0; 256 * d],
+            vec![0.0; cfg256.max_seq * d],
+            vec![1.0; d],
+            vec![0.0; d],
+            vec![0.0; 256 * d],
+            Vec::new(),
+        )
+        .is_ok());
     }
 
     #[test]

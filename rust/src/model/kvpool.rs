@@ -38,6 +38,20 @@
 //! that it only ever mutates owned pages, which is the invariant the
 //! `tests/kvpool_refcount.rs` property suite fuzzes.
 //!
+//! **Speculative rollback.** Self-speculative decoding leans on the
+//! page-granular layout for free rollback: the draft model writes
+//! provisional rows at positions `len..len+k`, and discarding them is
+//! just truncating `SeqCache::len` back — the pages stay reserved and
+//! the target's verify pass overwrites the same positions with its own
+//! canonical rows. This re-write-after-rollback is safe because rows
+//! past a fork's shared prefix were written (and CoW'd if needed) by
+//! this sequence, so their pages are owned, and readers only ever
+//! touch positions `< len`, so a provisional row is never observed
+//! once the rollback lands. Under Q8 the roll-forward rewrite
+//! re-quantizes at the same position; all subsequent reads see only
+//! the final (target) write, so the once-per-surviving-row error
+//! argument is unchanged.
+//!
 //! **KV precision.** Pages store rows in one of two dtypes
 //! ([`KvDtype`], fixed at pool construction): `F32` keeps today's exact
 //! f32 rows, `Q8` stores u8 codes plus per-position **per-head**

@@ -22,7 +22,7 @@ pub mod testkit;
 
 pub use checkpoint::{Checkpoint, QuantizedCheckpoint};
 pub use config::ModelConfig;
-pub use forward::{CpuModel, KvCache, LinearWeight, PackedLinear, Sparse24Linear};
+pub use forward::{CpuModel, KvCache, LinearWeight, ModelBuildError, PackedLinear, Sparse24Linear};
 pub use kernels::{Isa, Sparse24Tiled, TiledPacked};
 pub use kvpool::{KvDtype, KvPool, SeqCache};
 pub use tensor::Tensor;

@@ -5,6 +5,13 @@
 //! Little-endian field packing, `⌊32/bits⌋` codes per word:
 //! 4-bit → 8/word, 3-bit → 10/word (2 pad bits, 3.2 effective bits),
 //! 2-bit → 16/word, 8-bit → 4/word (the near-lossless serving baseline).
+//!
+//! The 2–3-bit widths also back **self-speculative decoding**
+//! (`CpuModel::to_draft`, DESIGN.md §Sampling & Speculative decoding):
+//! the serving checkpoint's linears are dequantized and RTN-repacked at
+//! draft precision, trading accuracy the verify pass will reclaim for
+//! the extreme-quant bandwidth win — a 3-bit draft moves ~⅓ the weight
+//! bytes of a 4-bit-plus target per proposed token.
 
 use super::gptq::QuantResult;
 
@@ -215,6 +222,34 @@ mod tests {
                         "bits={bits} g={groupsize} row={row}: packed {a} vs dense {b}"
                     );
                 }
+            }
+        }
+    }
+
+    /// The draft-repack path (`to_draft`) round-trips packed weights
+    /// through dequantize → RTN at fewer bits → repack. The second
+    /// quantization must stand on its own: strictly smaller storage,
+    /// and a dequantized matrix whose codes all fit the narrower grid.
+    #[test]
+    fn requantizing_packed_weights_to_fewer_bits_shrinks_storage() {
+        let w: Vec<f32> = (0..64 * 64).map(|i| ((i * 37 % 113) as f32 - 56.0) / 64.0).collect();
+        let four = PackedMatrix::from_result(&rtn_quantize(&w, 64, 64, 4, 0));
+        for bits in [3u32, 2] {
+            let dense4 = four.dequantize();
+            let redone = PackedMatrix::from_result(&rtn_quantize(&dense4, 64, 64, bits, 0));
+            assert_eq!(redone.bits, bits);
+            assert!(
+                redone.storage_bytes() < four.storage_bytes(),
+                "{bits}-bit repack must shrink traffic: {} vs {}",
+                redone.storage_bytes(),
+                four.storage_bytes()
+            );
+            // the repack is still a faithful quantizer of the 4-bit
+            // dense view: error bounded by half a step per weight
+            let dq = redone.dequantize();
+            let max_scale = redone.scales.iter().cloned().fold(0.0f32, f32::max);
+            for (a, b) in dq.iter().zip(&dense4) {
+                assert!((a - b).abs() <= max_scale * 0.5 + 1e-6, "{a} vs {b}");
             }
         }
     }

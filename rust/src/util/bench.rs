@@ -262,6 +262,13 @@ pub fn default_specs(bench: &str) -> Vec<MetricSpec> {
             MetricSpec::new("overload*_ttft_p99_ms_*", Lower, 0.35),
             MetricSpec::new("overload*_shed_rate_*", Lower, 0.15),
             MetricSpec::new("overload*_completed_rate", Higher, 0.10),
+            // spec-decode phase: tokens/s is wall-clock (wide band); the
+            // modeled speedup baseline is 1.35x, so a 0.11 band gates at
+            // >=1.2x (the acceptance floor); acceptance rate is a
+            // draft-quality signal, not timing, so it gets a tight band
+            MetricSpec::new("spec_k4_tokens_per_s", Higher, 0.25),
+            MetricSpec::new("spec_k4_speedup_vs_greedy", Higher, 0.11),
+            MetricSpec::new("spec_k4_accept_rate", Higher, 0.15),
         ],
         _ => Vec::new(),
     }
@@ -666,6 +673,18 @@ mod tests {
         assert!(compare(&base, &ok, &specs).passed());
         // 1.25x is below the ~1.3x floor -> regression
         let slow = doc("kernels", "avx2", &[("sparse24_speedup_4bit_b1_avx2_over_dense", 1.25)]);
+        assert_eq!(compare(&base, &slow, &specs).regressions(), 1);
+    }
+
+    #[test]
+    fn spec_decode_specs_gate_the_12x_floor() {
+        let specs = default_specs("serve");
+        let base = doc("serve", "avx2", &[("spec_k4_speedup_vs_greedy", 1.35)]);
+        // 1.21x is within the 0.11 band of the 1.35 modeled baseline
+        let ok = doc("serve", "avx2", &[("spec_k4_speedup_vs_greedy", 1.21)]);
+        assert!(compare(&base, &ok, &specs).passed());
+        // 1.15x is below the ~1.2x acceptance floor -> regression
+        let slow = doc("serve", "avx2", &[("spec_k4_speedup_vs_greedy", 1.15)]);
         assert_eq!(compare(&base, &slow, &specs).regressions(), 1);
     }
 

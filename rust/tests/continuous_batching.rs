@@ -18,13 +18,21 @@
 //!   `decode_steps` over a q8 pool), pinning scheduler ≡ sequential
 //!   WITHIN the q8 numeric mode. The explicit f32 pools built by the
 //!   parity tests are deliberately env-independent.
+//! * The matrix also runs the suite under `GPTQ_SPEC=k4`: the
+//!   scheduler's default config flips self-speculative decoding on,
+//!   and because greedy acceptance is accept-iff-equal, every
+//!   scheduler-vs-oracle assertion in this file must keep passing
+//!   BIT-IDENTICALLY with the spec-free oracle. The explicit-config
+//!   tests below additionally pin spec-on ≡ oracle and seeded-sampling
+//!   replay without needing the env var.
 //! * Soak coverage: a seeded, bounded 60-request trace runs in the
 //!   default suite (`make -C rust check`); the long 500-request trace
 //!   and a shared-prefix variant (prefix-cache churn under a tight
 //!   pool) stay `#[ignore]`d behind `make -C rust soak`. All assert
 //!   zero dropped/duplicated responses and zero leaked pages.
 
-use gptq_rs::coordinator::{GenRequest, Scheduler, SchedulerConfig};
+use gptq_rs::coordinator::{GenRequest, SamplingParams, Scheduler, SchedulerConfig, SpecConfig};
+use gptq_rs::coordinator::sampling::sample;
 use gptq_rs::data::Rng;
 use gptq_rs::model::checkpoint::quantizable_keys;
 use gptq_rs::model::testkit::tiny_checkpoint;
@@ -263,6 +271,130 @@ fn scheduler_n8_matches_sequential_generate_dense_and_packed() {
         }
         assert_eq!(sched.free_pages(), sched.total_pages(), "page leak (packed={packed})");
     }
+}
+
+/// The sampled-decode oracle: the same sequential loop as
+/// [`generate_sequential`], but picking through the production
+/// `sampling::sample` with the position key the scheduler uses (the
+/// sequence length AFTER the step that produced the logits). Pins the
+/// scheduler's sampling WIRING — position keys, replay across
+/// preemption — while `sampling`'s own unit tests pin the math.
+fn generate_sequential_sampled(
+    model: &mut CpuModel,
+    prompt: &[u8],
+    max_new: usize,
+    params: &SamplingParams,
+) -> Vec<u8> {
+    let max_seq = model.config.max_seq;
+    let dtype = KvDtype::from_env();
+    let mut pool = KvPool::new_with_dtype(&model.config, (max_seq + 1) / 2, 2, dtype);
+    let mut seq = SeqCache::new();
+    let mut cache = KvCache::new(&model.config);
+    let mut step = |model: &mut CpuModel, pool: &mut KvPool, seq: &mut SeqCache, b: u8| {
+        match dtype {
+            KvDtype::F32 => model.decode_step(&mut cache, b).to_vec(),
+            KvDtype::Q8 => {
+                assert!(pool.reserve(seq, seq.len + 1), "oracle pool sized too small");
+                let mut refs = [&mut *seq];
+                model.decode_steps(pool, &mut refs, &[b])
+            }
+        }
+    };
+    let mut len = 0usize;
+    let mut logits: Vec<f32> = Vec::new();
+    for &b in prompt.iter().take(max_seq.saturating_sub(1)) {
+        logits = step(model, &mut pool, &mut seq, b);
+        len += 1;
+    }
+    let mut tokens = Vec::new();
+    for _ in 0..max_new {
+        if len >= max_seq {
+            break;
+        }
+        let next = sample(&logits, params, len);
+        logits = step(model, &mut pool, &mut seq, next);
+        len += 1;
+        tokens.push(next);
+    }
+    pool.release(&mut seq);
+    tokens
+}
+
+#[test]
+fn scheduler_spec_on_matches_sequential_oracle_explicitly() {
+    // env-independent version of the GPTQ_SPEC=k4 matrix rows: with
+    // speculation explicitly on, greedy accept-iff-equal must keep the
+    // scheduler bit-identical to the SPEC-FREE sequential oracle, for
+    // both draft precisions and under a tight pool
+    for spec in [SpecConfig { k: 4, draft_bits: 3 }, SpecConfig { k: 2, draft_bits: 2 }] {
+        let mut model = CpuModel::from_checkpoint(&tiny_checkpoint(67));
+        let reqs = requests(8, 71);
+        let want: Vec<Vec<u8>> = reqs
+            .iter()
+            .map(|r| generate_sequential(&mut model, &r.prompt, r.max_new_tokens))
+            .collect();
+        let cfg = SchedulerConfig { max_batch: 8, spec, ..Default::default() };
+        let mut sched = Scheduler::new(0, model, cfg);
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let mut got = sched.run_until_idle();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), 8);
+        for (r, w) in got.iter().zip(&want) {
+            assert_eq!(&r.tokens, w, "spec={spec:?} id={}", r.id);
+        }
+        assert_no_leak(&mut sched);
+    }
+}
+
+#[test]
+fn seeded_sampling_matches_sequential_oracle_under_preemption() {
+    // the tentpole replay contract, end to end: sampled picks are keyed
+    // by (seed, position), so a tight pool full of preempt-and-rerun
+    // churn must emit the exact tokens of the undisturbed sequential
+    // loop. Speculation is explicitly OFF: sampled spec draws from
+    // different RNG streams by design, so its contract is replay
+    // determinism (scheduler unit tests), not oracle equality.
+    let params =
+        SamplingParams { temperature: 1.3, top_k: 0, top_p: 0.9, seed: 0 };
+    let mut model = CpuModel::from_checkpoint(&tiny_checkpoint(73));
+    let reqs: Vec<GenRequest> = (0..16u64)
+        .map(|i| {
+            GenRequest::new(i, vec![(i % 32) as u8, (i * 7 % 32) as u8, (i * 13 % 32) as u8], 5)
+                .with_sampling(SamplingParams { seed: 1000 + i, ..params })
+        })
+        .collect();
+    let want: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| generate_sequential_sampled(&mut model, &r.prompt, r.max_new_tokens, &r.sampling))
+        .collect();
+    let cfg = SchedulerConfig {
+        max_batch: 8,
+        pool_pages: 6,
+        page_size: 2,
+        prefill_chunk: 3,
+        spec: SpecConfig::off(),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(0, model, cfg);
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut steps = 0;
+    let mut got = Vec::new();
+    while !sched.is_idle() {
+        got.extend(sched.step());
+        steps += 1;
+        assert!(steps < 100_000, "sampled run deadlocked under pool exhaustion");
+    }
+    assert!(sched.preemptions() > 0, "pool never backpressured — replay path unexercised");
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 16, "dropped responses");
+    for (r, w) in got.iter().zip(&want) {
+        assert_eq!(&r.tokens, w, "id={}: preemption replay changed sampled tokens", r.id);
+    }
+    assert_no_leak(&mut sched);
 }
 
 #[test]
